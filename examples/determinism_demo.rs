@@ -1,0 +1,33 @@
+//! Determinism demo — paper §4.1's headline system property and the
+//! punchline of Tab. 4: with randomness deferred to executors, HTS-RL
+//! produces *bit-identical* trajectories no matter how many asynchronous
+//! actors serve inference, and across reruns.
+
+use hts_rl::algo::{Algo, AlgoConfig};
+use hts_rl::coordinator::{run, Method, RunConfig, StopCond};
+use hts_rl::envs::EnvSpec;
+
+fn main() -> anyhow::Result<()> {
+    let mut sigs = Vec::new();
+    for n_actors in [1usize, 2, 4] {
+        let spec = EnvSpec::by_name("catch")?;
+        let mut cfg = RunConfig::new(spec, AlgoConfig::a2c(Algo::A2cDelayed));
+        cfg.n_envs = 16;
+        cfg.n_actors = n_actors;
+        cfg.seed = 42;
+        cfg.stop = StopCond::updates(10);
+        let r = run(Method::Hts, &cfg)?;
+        println!(
+            "actors={n_actors}: {} steps, signature {:016x}",
+            r.steps, r.signature
+        );
+        sigs.push(r.signature);
+    }
+    assert!(
+        sigs.windows(2).all(|w| w[0] == w[1]),
+        "determinism violated!"
+    );
+    println!("\nall trajectory signatures identical — fully deterministic ✓");
+    println!("(compare: the async IMPALA-style driver has no such guarantee)");
+    Ok(())
+}

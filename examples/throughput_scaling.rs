@@ -1,0 +1,31 @@
+//! Fig. 4(right) in miniature: SPS vs number of environments on the
+//! slowest, most variable scenario (`counterattack_hard`), HTS-RL(PPO)
+//! against the step-synchronous PPO baseline.
+
+use hts_rl::algo::AlgoConfig;
+use hts_rl::coordinator::{run, Method, RunConfig, StopCond};
+use hts_rl::envs::EnvSpec;
+
+fn main() -> anyhow::Result<()> {
+    println!("{:>6}  {:>12}  {:>12}  {:>8}", "#envs", "HTS-PPO SPS",
+             "sync SPS", "speedup");
+    for n_envs in [2usize, 4, 8, 16] {
+        let spec = EnvSpec::by_name("football/counterattack_hard")?;
+        let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
+        cfg.n_envs = n_envs;
+        cfg.n_actors = 2;
+        cfg.stop = StopCond::steps(150 * n_envs as u64);
+        let hts = run(Method::Hts, &cfg)?;
+        let sync = run(Method::Sync, &cfg)?;
+        println!(
+            "{:>6}  {:>12.0}  {:>12.0}  {:>7.2}x",
+            n_envs,
+            hts.sps(),
+            sync.sps(),
+            hts.sps() / sync.sps()
+        );
+    }
+    println!("\nHTS-RL throughput scales ~linearly in #envs; the per-step-\n\
+              synchronized baseline pays E[max] every step (paper Claim 1).");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Train HTS-RL(PPO) on a football academy scenario and report the
+//! paper's *required time metric* (time to reach eval score 0.4 / 0.8).
+//!
+//! Usage: cargo run --release --example train_football [-- <scenario>]
+//! (default scenario: empty_goal; see `hts-rl list` for all 11.)
+
+use hts_rl::algo::AlgoConfig;
+use hts_rl::coordinator::{run, Method, RunConfig, StopCond};
+use hts_rl::envs::EnvSpec;
+
+fn main() -> anyhow::Result<()> {
+    let scenario = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "empty_goal".to_string());
+    let spec = EnvSpec::by_name(&format!("football/{scenario}"))?;
+    println!(
+        "scenario {scenario}: step-time mean {:.0}µs CoV² {:.2}",
+        spec.steptime.mean_us(),
+        spec.steptime.cov_squared()
+    );
+    let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
+    cfg.n_envs = 16;
+    cfg.n_actors = 2;
+    cfg.seed = 3;
+    cfg.eval_every = 4;
+    cfg.eval_episodes = 10;
+    cfg.stop = StopCond::steps(20_000);
+
+    let r = run(Method::Hts, &cfg)?;
+    println!(
+        "trained {} steps in {:.1}s ({:.0} SPS), final metric {:.3}",
+        r.steps,
+        r.wall_s,
+        r.sps(),
+        r.final_metric()
+    );
+    for target in [0.4, 0.8] {
+        match r.required_time(target) {
+            Some(t) => println!(
+                "required time to score {target}: {:.2} min", t / 60.0),
+            None => println!(
+                "score {target} not reached within the step budget ('-')"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+"""AOT compiler: lower every jitted entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in --out-dir, default ``artifacts/``):
+  init_{m}.hlo.txt                      (seed u32[2]) -> params f32[P]
+  fwd_{m}_b{B}.hlo.txt                  (params, obs[B,D]) -> (logits, value)
+  train_{kind}_{m}_T{T}B{B}.hlo.txt     see model.train_step
+  manifest.json                         shapes / layouts / artifact index
+  golden.json                           replayable input->output vectors for
+                                        the Rust cross-language test
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--models tiny,..]
+"""
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import HYPER_LAYOUT, METRICS_LAYOUT, MODELS
+from .model import make_fwd_fn, make_init_fn, make_train_fn
+
+DEFAULT_HYPER = np.array(
+    [7e-4, 0.99, 1.0, 0.01, 0.5, 1.0, 0.99, 1e-5], dtype=np.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arr_meta(name, x):
+    return {"name": name, "dtype": str(x.dtype), "shape": list(x.shape)}
+
+
+def _write(out_dir, fname, text):
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def _golden_io(fn, args, n_outputs_hint=None):
+    """Run fn on concrete args; record full inputs and outputs as lists."""
+    outs = fn(*args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return (
+        [np.asarray(a).reshape(-1).tolist() for a in args],
+        [np.asarray(o).reshape(-1).tolist() for o in outs],
+        [list(np.asarray(o).shape) for o in outs],
+    )
+
+
+def build(out_dir, model_names, golden_models):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "hyper_layout": list(HYPER_LAYOUT),
+        "metrics_layout": list(METRICS_LAYOUT),
+        "default_hyper": DEFAULT_HYPER.tolist(),
+        "models": {},
+        "artifacts": [],
+    }
+    golden = {"cases": []}
+    rng = np.random.RandomState(12345)
+
+    for name in model_names:
+        cfg = MODELS[name]
+        p_cnt = cfg.param_count
+        manifest["models"][name] = {
+            "obs_dim": cfg.obs_dim,
+            "act_dim": cfg.act_dim,
+            "hidden": list(cfg.hidden),
+            "unroll": cfg.unroll,
+            "n_envs": cfg.n_envs,
+            "param_count": p_cnt,
+            "fwd_buckets": list(cfg.fwd_buckets),
+            "train_kinds": list(cfg.train_kinds),
+            "train_batches": list(cfg.batches()),
+            "torso_act": cfg.torso_act,
+            "layer_dims": [list(d) for d in cfg.layer_dims()],
+        }
+        want_golden = name in golden_models
+
+        # ---- init ----
+        init_fn = make_init_fn(cfg)
+        seed_spec = _spec((2,), jnp.uint32)
+        fname = f"init_{name}.hlo.txt"
+        sha = _write(out_dir, fname,
+                     to_hlo_text(jax.jit(init_fn).lower(seed_spec)))
+        manifest["artifacts"].append({
+            "file": fname, "kind": "init", "model": name, "sha": sha,
+            "inputs": [{"name": "seed", "dtype": "uint32", "shape": [2]}],
+            "outputs": [{"name": "params", "dtype": "float32",
+                         "shape": [p_cnt]}],
+        })
+        seed = np.array([7, 11], dtype=np.uint32)
+        params = np.asarray(init_fn(seed))
+        if want_golden:
+            ins, outs, oshapes = _golden_io(init_fn, (seed,))
+            golden["cases"].append({
+                "artifact": fname, "inputs": ins, "outputs": outs,
+                "out_shapes": oshapes, "in_dtypes": ["uint32"],
+            })
+        print(f"  {fname}")
+
+        # ---- fwd buckets ----
+        fwd_fn = make_fwd_fn(cfg)
+        for bucket in cfg.fwd_buckets:
+            fname = f"fwd_{name}_b{bucket}.hlo.txt"
+            lowered = jax.jit(fwd_fn).lower(
+                _spec((p_cnt,)), _spec((bucket, cfg.obs_dim)))
+            sha = _write(out_dir, fname, to_hlo_text(lowered))
+            manifest["artifacts"].append({
+                "file": fname, "kind": "fwd", "model": name,
+                "bucket": bucket, "sha": sha,
+                "inputs": [
+                    {"name": "params", "dtype": "float32", "shape": [p_cnt]},
+                    {"name": "obs", "dtype": "float32",
+                     "shape": [bucket, cfg.obs_dim]},
+                ],
+                "outputs": [
+                    {"name": "logits", "dtype": "float32",
+                     "shape": [bucket, cfg.act_dim]},
+                    {"name": "value", "dtype": "float32", "shape": [bucket]},
+                ],
+            })
+            if want_golden or bucket == 1:
+                obs = rng.randn(bucket, cfg.obs_dim).astype(np.float32)
+                ins, outs, oshapes = _golden_io(fwd_fn, (params, obs))
+                golden["cases"].append({
+                    "artifact": fname, "inputs": ins, "outputs": outs,
+                    "out_shapes": oshapes,
+                    "in_dtypes": ["float32", "float32"],
+                })
+            print(f"  {fname}")
+
+        # ---- train steps (per kind × per compiled batch size) ----
+        t_len = cfg.unroll
+        for kind, bsz in [(k, b) for k in cfg.train_kinds
+                          for b in cfg.batches()]:
+            train_fn = make_train_fn(cfg, kind)
+            fname = f"train_{kind}_{name}_T{t_len}B{bsz}.hlo.txt"
+            specs = (
+                _spec((p_cnt,)), _spec((p_cnt,)), _spec((p_cnt,)),
+                _spec((t_len, bsz, cfg.obs_dim)),
+                _spec((t_len, bsz), jnp.int32),
+                _spec((t_len, bsz)), _spec((t_len, bsz)),
+                _spec((bsz, cfg.obs_dim)), _spec((8,)),
+            )
+            sha = _write(out_dir, fname,
+                         to_hlo_text(jax.jit(train_fn).lower(*specs)))
+            manifest["artifacts"].append({
+                "file": fname, "kind": "train", "train_kind": kind,
+                "model": name, "unroll": t_len, "batch": bsz, "sha": sha,
+                "inputs": [
+                    {"name": "target_params", "dtype": "float32",
+                     "shape": [p_cnt]},
+                    {"name": "behavior_params", "dtype": "float32",
+                     "shape": [p_cnt]},
+                    {"name": "opt_sq", "dtype": "float32", "shape": [p_cnt]},
+                    {"name": "obs", "dtype": "float32",
+                     "shape": [t_len, bsz, cfg.obs_dim]},
+                    {"name": "act", "dtype": "int32",
+                     "shape": [t_len, bsz]},
+                    {"name": "rew", "dtype": "float32",
+                     "shape": [t_len, bsz]},
+                    {"name": "done", "dtype": "float32",
+                     "shape": [t_len, bsz]},
+                    {"name": "last_obs", "dtype": "float32",
+                     "shape": [bsz, cfg.obs_dim]},
+                    {"name": "hyper", "dtype": "float32", "shape": [8]},
+                ],
+                "outputs": [
+                    {"name": "new_params", "dtype": "float32",
+                     "shape": [p_cnt]},
+                    {"name": "new_opt_sq", "dtype": "float32",
+                     "shape": [p_cnt]},
+                    {"name": "metrics", "dtype": "float32", "shape": [8]},
+                ],
+            })
+            if want_golden:
+                args = (
+                    params, params * 0.999, np.zeros(p_cnt, np.float32),
+                    rng.randn(t_len, bsz, cfg.obs_dim).astype(np.float32),
+                    rng.randint(0, cfg.act_dim, (t_len, bsz)).astype(np.int32),
+                    rng.randn(t_len, bsz).astype(np.float32),
+                    (rng.rand(t_len, bsz) < 0.1).astype(np.float32),
+                    rng.randn(bsz, cfg.obs_dim).astype(np.float32),
+                    DEFAULT_HYPER,
+                )
+                ins, outs, oshapes = _golden_io(train_fn, args)
+                golden["cases"].append({
+                    "artifact": fname, "inputs": ins, "outputs": outs,
+                    "out_shapes": oshapes,
+                    "in_dtypes": ["float32", "float32", "float32", "float32",
+                                  "int32", "float32", "float32", "float32",
+                                  "float32"],
+                })
+            print(f"  {fname}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"wrote manifest ({len(manifest['artifacts'])} artifacts) "
+          f"and golden ({len(golden['cases'])} cases)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma-separated subset, or 'all'")
+    ap.add_argument("--golden-models", default="tiny",
+                    help="models to record full golden IO vectors for")
+    args = ap.parse_args()
+    names = (list(MODELS) if args.models == "all"
+             else args.models.split(","))
+    build(args.out_dir, names, set(args.golden_models.split(",")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Named model configurations shared between the AOT compiler and Rust.
+
+Each config pins the static shapes an HLO artifact is compiled for. The
+observation/action dimensions must match the Rust environment substrate
+(``rust/src/envs``) exactly — the manifest carries them so Rust can verify
+at load time.
+
+``T`` is the unroll (paper Tab. A3: 5 for A2C; Tab. A6 uses 128 for PPO —
+we compile 16 to keep interpret-mode HLO tractable and note the substitution
+in DESIGN.md). ``B`` is the number of parallel environments (paper: 16).
+"""
+from dataclasses import dataclass, field
+from typing import Tuple
+
+TRAIN_KINDS = ("a2c_delayed", "a2c_nocorr", "a2c_tis", "vtrace", "ppo")
+
+# Layout of the runtime hyper-parameter vector (f32[8]) fed to train steps.
+HYPER_LAYOUT = (
+    "lr", "gamma", "lam", "entropy_coef", "value_coef", "clip",
+    "rms_alpha", "rms_eps",
+)
+
+# Layout of the metrics vector (f32[8]) returned by train steps.
+METRICS_LAYOUT = (
+    "total_loss", "pi_loss", "v_loss", "entropy", "grad_norm",
+    "mean_ratio", "mean_adv", "mean_ret",
+)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    obs_dim: int
+    act_dim: int
+    hidden: Tuple[int, ...]
+    unroll: int                      # T
+    n_envs: int                      # B
+    fwd_buckets: Tuple[int, ...]
+    train_kinds: Tuple[str, ...]
+    torso_act: str = "tanh"
+    # Batch sizes to compile train artifacts for. Defaults to (n_envs,).
+    # football also compiles B=12 so the multi-agent Tab. 3 setup
+    # (4 envs × 3 agents) has a matching artifact.
+    train_batches: Tuple[int, ...] = ()
+
+    def batches(self):
+        return self.train_batches or (self.n_envs,)
+
+    def layer_dims(self):
+        """[(in, out), ...] for torso layers then policy head then value head."""
+        dims = []
+        d = self.obs_dim
+        for h in self.hidden:
+            dims.append((d, h))
+            d = h
+        dims.append((d, self.act_dim))  # policy head
+        dims.append((d, 1))             # value head
+        return dims
+
+    @property
+    def param_count(self):
+        return sum(i * o + o for i, o in self.layer_dims())
+
+
+MODELS = {
+    "tiny": ModelConfig(
+        "tiny", obs_dim=16, act_dim=4, hidden=(32, 32), unroll=5, n_envs=4,
+        fwd_buckets=(1, 2, 4), train_kinds=TRAIN_KINDS,
+    ),
+    "catch": ModelConfig(
+        "catch", obs_dim=50, act_dim=3, hidden=(128, 128), unroll=5,
+        n_envs=16, fwd_buckets=(1, 2, 4, 8, 16),
+        train_kinds=("a2c_delayed", "a2c_nocorr", "a2c_tis", "vtrace"),
+    ),
+    "gridworld": ModelConfig(
+        "gridworld", obs_dim=66, act_dim=4, hidden=(64, 64), unroll=5,
+        n_envs=16, fwd_buckets=(1, 2, 4, 8, 16),
+        train_kinds=("a2c_delayed", "a2c_nocorr", "a2c_tis", "vtrace"),
+    ),
+    "cartpole": ModelConfig(
+        "cartpole", obs_dim=4, act_dim=2, hidden=(64, 64), unroll=5,
+        n_envs=16, fwd_buckets=(1, 2, 4, 8, 16),
+        train_kinds=("a2c_delayed", "vtrace"),
+    ),
+    "football": ModelConfig(
+        "football", obs_dim=32, act_dim=8, hidden=(128, 128), unroll=16,
+        n_envs=16, fwd_buckets=(1, 2, 4, 8, 16),
+        train_kinds=("a2c_delayed", "ppo", "vtrace"),
+        # 12 = Tab. 3 multi-agent (4 envs × 3 agents); 2..8 = the Fig. 4
+        # SPS-vs-#envs scaling sweep.
+        train_batches=(16, 12, 8, 4, 2),
+    ),
+}

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for HTS-RL.
+
+All kernels are authored for TPU-shaped tiling (VMEM-resident blocks, MXU
+friendly matmul tiles) but are lowered with ``interpret=True`` so the AOT
+HLO executes on the CPU PJRT client (real-TPU Mosaic custom-calls cannot run
+there — see DESIGN.md §Hardware-Adaptation).
+"""
+from .fused_linear import fused_linear, matmul
+from .returns import gae_advantages
+
+__all__ = ["fused_linear", "matmul", "gae_advantages"]

@@ -1,0 +1,148 @@
+"""Fused dense layer (matmul + bias + activation) as a Pallas kernel.
+
+This is the compute hot-spot of HTS-RL's actor-critic network: every dense
+layer of the torso and both heads, in the rollout forward pass (actors) and
+the train step (learner), goes through this kernel.
+
+TPU adaptation of the paper's GPU GEMMs (DESIGN.md §Hardware-Adaptation):
+the grid tiles the output ``[B, H]`` into MXU-friendly blocks while the full
+contraction dimension ``D`` stays VMEM resident; bias-add and activation are
+fused into the same kernel visit, avoiding an HBM round-trip for the
+pre-activation. ``interpret=True`` everywhere — CPU PJRT cannot execute
+Mosaic custom-calls.
+
+``fused_linear`` carries a custom VJP whose backward pass is also Pallas
+(``dX = dPre·Wᵀ``, ``dW = Xᵀ·dPre`` via the generic ``matmul`` kernel, with
+the activation derivative fused into ``dPre``), because Pallas kernels are
+not reverse-mode differentiable by themselves.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# CPU PJRT can only run interpret-mode Pallas. Flipping this to False is the
+# real-TPU build (compile-only target in this repo).
+INTERPRET = True
+
+_ACTS = ("id", "relu", "tanh")
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _tile(n: int, preferred: int = 128, align: int = 8) -> int:
+    """Pick a block edge: full (8-aligned) extent for small dims, 128 for
+    MXU-sized ones."""
+    return preferred if n >= preferred else _ceil_to(n, align)
+
+
+def _apply_act(pre, act):
+    if act == "relu":
+        return jnp.maximum(pre, 0.0)
+    if act == "tanh":
+        return jnp.tanh(pre)
+    return pre
+
+
+def _act_grad(pre, act):
+    if act == "relu":
+        return (pre > 0.0).astype(pre.dtype)
+    if act == "tanh":
+        t = jnp.tanh(pre)
+        return 1.0 - t * t
+    return jnp.ones_like(pre)
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, pre_ref, *, act):
+    pre = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    pre_ref[...] = pre
+    o_ref[...] = _apply_act(pre, act)
+
+
+def _fused_linear_impl(x, w, b, act):
+    """Returns (out, pre). Shapes: x[B,D] @ w[D,H] + b[H]."""
+    assert act in _ACTS, act
+    bsz, d = x.shape
+    h = w.shape[1]
+    bm, bh = _tile(bsz), _tile(h)
+    bp, hp = _ceil_to(bsz, bm), _ceil_to(h, bh)
+    xp = jnp.pad(x, ((0, bp - bsz), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, hp - h)))
+    b2 = jnp.pad(b, (0, hp - h)).reshape(1, hp)
+    out, pre = pl.pallas_call(
+        functools.partial(_fused_linear_kernel, act=act),
+        grid=(bp // bm, hp // bh),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bh), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bh), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, hp), jnp.float32),
+            jax.ShapeDtypeStruct((bp, hp), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(xp, wp, b2)
+    return out[:bsz, :h], pre[:bsz, :h]
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(a, b):
+    """Generic Pallas-tiled ``a[M,K] @ b[K,N]`` used by the backward pass."""
+    m, k = a.shape
+    n = b.shape[1]
+    bm, bn = _tile(m), _tile(n)
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    ap = jnp.pad(a, ((0, mp - m), (0, 0)))
+    bp_ = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(ap, bp_)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act="relu"):
+    """``act(x @ w + b)`` with fwd + bwd both as Pallas kernels."""
+    out, _ = _fused_linear_impl(x, w, b, act)
+    return out
+
+
+def _fused_linear_fwd(x, w, b, act):
+    out, pre = _fused_linear_impl(x, w, b, act)
+    return out, (x, w, pre)
+
+
+def _fused_linear_bwd(act, res, dy):
+    x, w, pre = res
+    dpre = dy * _act_grad(pre, act)
+    dx = matmul(dpre, w.T)
+    dw = matmul(x.T, dpre)
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,59 @@
+"""Pure-jnp / pure-python oracles for the Pallas kernels.
+
+These are the correctness contract: pytest (with hypothesis sweeps) asserts
+``allclose`` between every kernel and its oracle across shapes, activations
+and discount settings. Keep them boring and obviously correct.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def fused_linear_ref(x, w, b, act="relu"):
+    pre = x @ w + b
+    if act == "relu":
+        return jnp.maximum(pre, 0.0)
+    if act == "tanh":
+        return jnp.tanh(pre)
+    return pre
+
+
+def gae_ref(rew, done, values, bootstrap, gamma, lam):
+    """Naive reverse python loop over numpy arrays. Returns (adv, ret)."""
+    rew = np.asarray(rew, np.float64)
+    done = np.asarray(done, np.float64)
+    values = np.asarray(values, np.float64)
+    t_len, bsz = rew.shape
+    adv = np.zeros((t_len, bsz))
+    next_val = np.asarray(bootstrap, np.float64).copy()
+    next_adv = np.zeros(bsz)
+    for t in range(t_len - 1, -1, -1):
+        nd = 1.0 - done[t]
+        delta = rew[t] + gamma * nd * next_val - values[t]
+        adv[t] = delta + gamma * lam * nd * next_adv
+        next_val = values[t].copy()
+        next_adv = adv[t].copy()
+    return adv.astype(np.float32), (adv + values).astype(np.float32)
+
+
+def vtrace_ref(log_rhos, rew, done, values, bootstrap, gamma, rho_bar, c_bar):
+    """Naive V-trace (IMPALA) reference. Returns (vs, pg_adv)."""
+    log_rhos = np.asarray(log_rhos, np.float64)
+    rew = np.asarray(rew, np.float64)
+    done = np.asarray(done, np.float64)
+    values = np.asarray(values, np.float64)
+    boot = np.asarray(bootstrap, np.float64)
+    t_len, bsz = rew.shape
+    rhos = np.minimum(rho_bar, np.exp(log_rhos))
+    cs = np.minimum(c_bar, np.exp(log_rhos))
+    vs = np.zeros((t_len, bsz))
+    next_vs = boot.copy()
+    next_val = boot.copy()
+    for t in range(t_len - 1, -1, -1):
+        nd = 1.0 - done[t]
+        delta = rhos[t] * (rew[t] + gamma * nd * next_val - values[t])
+        vs[t] = values[t] + delta + gamma * nd * cs[t] * (next_vs - next_val)
+        next_vs = vs[t].copy()
+        next_val = values[t].copy()
+    vs_next = np.concatenate([vs[1:], boot[None]], axis=0)
+    pg_adv = rhos * (rew + gamma * (1.0 - done) * vs_next - values)
+    return vs.astype(np.float32), pg_adv.astype(np.float32)

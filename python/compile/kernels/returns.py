@@ -1,0 +1,77 @@
+"""Discounted-return / GAE reverse-scan as a Pallas kernel.
+
+Computes generalized advantage estimates over a ``[T, B]`` rollout:
+
+    delta_t = r_t + γ·(1-d_t)·V_{t+1} - V_t
+    adv_t   = delta_t + γλ·(1-d_t)·adv_{t+1}
+
+with ``V_T = bootstrap``. ``λ = 1`` recovers the paper's n-step truncated
+return used by A2C (``adv_t + V_t = R_t^{(n)}``); PPO uses ``λ < 1``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the recursion is sequential in
+T but embarrassingly parallel in B, so the grid tiles B (parallel, one
+``[T, bt]`` slab resident in VMEM per visit) and the kernel walks T in
+reverse with a ``fori_loop``. γ and λ arrive as a tiny ``f32[2]`` operand so
+they stay runtime-configurable in the AOT artifact.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import INTERPRET, _ceil_to, _tile
+
+
+def _gae_kernel(rew_ref, done_ref, val_ref, boot_ref, sc_ref, adv_ref):
+    t_len = rew_ref.shape[0]
+    gamma = sc_ref[0, 0]
+    lam = sc_ref[0, 1]
+
+    def body(i, carry):
+        t = t_len - 1 - i
+        next_val, next_adv = carry
+        rew = pl.load(rew_ref, (pl.dslice(t, 1), slice(None)))
+        done = pl.load(done_ref, (pl.dslice(t, 1), slice(None)))
+        val = pl.load(val_ref, (pl.dslice(t, 1), slice(None)))
+        nd = 1.0 - done
+        delta = rew + gamma * nd * next_val - val
+        adv = delta + gamma * lam * nd * next_adv
+        pl.store(adv_ref, (pl.dslice(t, 1), slice(None)), adv)
+        return val, adv
+
+    boot = boot_ref[...].reshape(1, -1)
+    jax.lax.fori_loop(0, t_len, body, (boot, jnp.zeros_like(boot)))
+
+
+def gae_advantages(rew, done, values, bootstrap, gamma, lam):
+    """Returns ``(adv[T,B], ret[T,B])`` with ``ret = adv + values``.
+
+    ``gamma``/``lam`` are scalars (python or traced); ``done`` is f32 0/1.
+    """
+    t_len, bsz = rew.shape
+    bt = _tile(bsz)
+    bp = _ceil_to(bsz, bt)
+    pad = ((0, 0), (0, bp - bsz))
+    scal = jnp.stack([jnp.asarray(gamma, jnp.float32),
+                      jnp.asarray(lam, jnp.float32)]).reshape(1, 2)
+    adv = pl.pallas_call(
+        _gae_kernel,
+        grid=(bp // bt,),
+        in_specs=[
+            pl.BlockSpec((t_len, bt), lambda j: (0, j)),
+            pl.BlockSpec((t_len, bt), lambda j: (0, j)),
+            pl.BlockSpec((t_len, bt), lambda j: (0, j)),
+            pl.BlockSpec((bt,), lambda j: (j,)),
+            pl.BlockSpec((1, 2), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_len, bt), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((t_len, bp), jnp.float32),
+        interpret=INTERPRET,
+    )(
+        jnp.pad(rew, pad),
+        jnp.pad(done, pad),
+        jnp.pad(values, pad),
+        jnp.pad(bootstrap, (0, bp - bsz)),
+        scal,
+    )
+    adv = adv[:, :bsz]
+    return adv, adv + values

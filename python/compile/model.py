@@ -1,0 +1,312 @@
+"""Layer-2: the HTS-RL actor-critic model, losses and optimizer in JAX.
+
+Everything here is build-time only: ``aot.py`` lowers the jitted entry
+points to HLO text; the Rust coordinator executes them via PJRT. Parameters
+live as a single flat ``f32[P]`` vector (layout = ``ModelConfig.layer_dims``
+order, each layer ``W`` row-major then ``b``) so the Rust side never needs
+to understand the pytree.
+
+Train-step semantics (paper Eq. 6, the one-step delayed gradient):
+
+    θ_{j+1} = θ_j + η ∇_{θ_{j-1}} Ĵ(θ_{j-1}, D^{θ_{j-1}})
+
+Each train step receives both ``target_params`` (θ_j, the parameters the
+update is applied to) and ``behavior_params`` (θ_{j-1}, the parameters that
+collected the rollout in the read-storage). ``a2c_delayed`` differentiates
+at θ_{j-1} — on-policy, no correction needed. The ablation/baseline modes
+(``a2c_nocorr``, ``a2c_tis``, ``vtrace``, ``ppo``) differentiate at θ_j and
+optionally correct with importance weights, exactly the comparisons in
+paper Tab. A1 and the IMPALA baseline.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import fused_linear, gae_advantages
+
+# ---------------------------------------------------------------------------
+# Parameter pytree <-> flat vector
+# ---------------------------------------------------------------------------
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    """flat f32[P] -> [(W, b), ...] following cfg.layer_dims()."""
+    layers = []
+    off = 0
+    for fan_in, fan_out in cfg.layer_dims():
+        w = flat[off:off + fan_in * fan_out].reshape(fan_in, fan_out)
+        off += fan_in * fan_out
+        b = flat[off:off + fan_out]
+        off += fan_out
+        layers.append((w, b))
+    return layers
+
+
+def flatten_params(layers):
+    parts = []
+    for w, b in layers:
+        parts.append(w.reshape(-1))
+        parts.append(b)
+    return jnp.concatenate(parts)
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Orthogonal-free init: scaled-uniform fan-in (PyTorch Linear default),
+    with the policy head scaled down 100x so the initial policy is near
+    uniform (standard A2C practice). ``seed`` is u32[2] raw key data."""
+    key = jax.random.wrap_key_data(
+        jnp.asarray(seed, jnp.uint32), impl="threefry2x32")
+    layers = []
+    dims = cfg.layer_dims()
+    n_torso = len(cfg.hidden)
+    for i, (fan_in, fan_out) in enumerate(dims):
+        key, kw, kb = jax.random.split(key, 3)
+        bound = 1.0 / jnp.sqrt(jnp.asarray(float(fan_in)))
+        scale = 0.01 if i == n_torso else 1.0  # policy head is dims[n_torso]
+        w = jax.random.uniform(kw, (fan_in, fan_out), jnp.float32,
+                               -bound, bound) * scale
+        b = jnp.zeros((fan_out,), jnp.float32)
+        layers.append((w, b))
+    return flatten_params(layers)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (all dense layers go through the Pallas fused_linear kernel)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, flat_params, obs):
+    """obs f32[B, D] -> (logits f32[B, A], value f32[B])."""
+    layers = unflatten_params(cfg, flat_params)
+    n_torso = len(cfg.hidden)
+    h = obs
+    for w, b in layers[:n_torso]:
+        h = fused_linear(h, w, b, cfg.torso_act)
+    wp, bp = layers[n_torso]
+    logits = fused_linear(h, wp, bp, "id")
+    wv, bv = layers[n_torso + 1]
+    value = fused_linear(h, wv, bv, "id")[:, 0]
+    return logits, value
+
+
+def log_softmax(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    s = logits - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def entropy(logits):
+    logp = log_softmax(logits)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def action_logp(logits, actions):
+    logp = log_softmax(logits)
+    return jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# RMSProp (paper Tabs. A3/A6: momentum 0, so state is just the sq average)
+# ---------------------------------------------------------------------------
+
+
+def rmsprop_update(params, grads, sq_avg, lr, alpha, eps):
+    sq = alpha * sq_avg + (1.0 - alpha) * grads * grads
+    new_params = params - lr * grads / (jnp.sqrt(sq) + eps)
+    return new_params, sq
+
+
+# ---------------------------------------------------------------------------
+# Losses. ``hyper`` layout: see configs.HYPER_LAYOUT.
+# ---------------------------------------------------------------------------
+
+
+def _batched_forward(cfg, params, obs_tb):
+    """obs f32[T,B,D] -> (logits[T,B,A], values[T,B]) via one flat fwd."""
+    t_len, bsz, d = obs_tb.shape
+    logits, values = forward(cfg, params, obs_tb.reshape(t_len * bsz, d))
+    return (logits.reshape(t_len, bsz, cfg.act_dim),
+            values.reshape(t_len, bsz))
+
+
+def a2c_loss(cfg, params, behavior_params, batch, hyper, mode):
+    """A2C loss at ``params``; ``mode`` in {delayed, nocorr, tis}.
+
+    delayed: params == θ_{j-1} (on-policy; importance weight 1).
+    nocorr : params == θ_j on θ_{j-1}'s data with no correction (unstable).
+    tis    : like nocorr but the policy term is weighted by the truncated
+             importance ratio min(ρ̄, π_θ/π_{θ_{j-1}}).
+    """
+    obs, act, rew, done, last_obs = batch
+    gamma, lam = hyper[1], hyper[2]
+    ent_c, val_c, clip = hyper[3], hyper[4], hyper[5]
+
+    logits, values = _batched_forward(cfg, params, obs)
+    _, boot = forward(cfg, jax.lax.stop_gradient(behavior_params), last_obs)
+    adv, ret = gae_advantages(
+        rew, done, jax.lax.stop_gradient(values),
+        jax.lax.stop_gradient(boot), gamma, lam)
+    adv = jax.lax.stop_gradient(adv)
+    ret = jax.lax.stop_gradient(ret)
+
+    logp = action_logp(logits, act)
+    if mode == "tis":
+        b_logits, _ = _batched_forward(
+            cfg, jax.lax.stop_gradient(behavior_params), obs)
+        ratio = jnp.exp(logp - action_logp(b_logits, act))
+        weight = jax.lax.stop_gradient(jnp.minimum(clip, ratio))
+        mean_ratio = jnp.mean(ratio)
+    else:
+        weight = 1.0
+        mean_ratio = jnp.float32(1.0)
+
+    pi_loss = -jnp.mean(weight * logp * adv)
+    v_loss = jnp.mean((ret - values) ** 2)
+    ent = jnp.mean(entropy(logits))
+    total = pi_loss + val_c * v_loss - ent_c * ent
+    stats = (pi_loss, v_loss, ent, mean_ratio, jnp.mean(adv), jnp.mean(ret))
+    return total, stats
+
+
+def vtrace_loss(cfg, params, behavior_params, batch, hyper):
+    """IMPALA V-trace loss at the target parameters (the async baseline's
+    off-policy correction). ρ̄ comes in via hyper[5]; c̄ = min(ρ̄, 1)."""
+    obs, act, rew, done, last_obs = batch
+    gamma = hyper[1]
+    ent_c, val_c, rho_bar = hyper[3], hyper[4], hyper[5]
+    c_bar = jnp.minimum(rho_bar, 1.0)
+
+    logits, values = _batched_forward(cfg, params, obs)
+    b_logits, _ = _batched_forward(
+        cfg, jax.lax.stop_gradient(behavior_params), obs)
+    _, boot = forward(cfg, params, last_obs)
+    boot = jax.lax.stop_gradient(boot)
+
+    logp = action_logp(logits, act)
+    b_logp = action_logp(b_logits, act)
+    log_rhos = jax.lax.stop_gradient(logp - b_logp)
+    rhos = jnp.minimum(rho_bar, jnp.exp(log_rhos))
+    cs = jnp.minimum(c_bar, jnp.exp(log_rhos))
+
+    values_sg = jax.lax.stop_gradient(values)
+    nd = 1.0 - done
+    next_val = jnp.concatenate([values_sg[1:], boot[None]], axis=0)
+
+    deltas = rhos * (rew + gamma * nd * next_val - values_sg)
+
+    # vs_t - V_t = delta_t + gamma*nd_t*c_t*(vs_{t+1} - V_{t+1})
+    _, vs_minus_v = jax.lax.scan(
+        lambda carry, xs: (
+            xs[0] + gamma * xs[2] * xs[1] * carry,
+            xs[0] + gamma * xs[2] * xs[1] * carry,
+        ),
+        jnp.zeros_like(boot), (deltas, cs, nd), reverse=True)
+    vs = vs_minus_v + values_sg
+    vs_next = jnp.concatenate([vs[1:], boot[None]], axis=0)
+    pg_adv = jax.lax.stop_gradient(
+        rhos * (rew + gamma * nd * vs_next - values_sg))
+
+    pi_loss = -jnp.mean(logp * pg_adv)
+    v_loss = jnp.mean((jax.lax.stop_gradient(vs) - values) ** 2)
+    ent = jnp.mean(entropy(logits))
+    total = pi_loss + val_c * v_loss - ent_c * ent
+    stats = (pi_loss, v_loss, ent, jnp.mean(rhos),
+             jnp.mean(pg_adv), jnp.mean(vs))
+    return total, stats
+
+
+def ppo_loss(cfg, params, behavior_params, batch, hyper):
+    """Clipped-surrogate PPO at ``params``; old log-probs recomputed from
+    ``behavior_params`` (θ_{j-1}). Rust drives the epoch loop by feeding the
+    evolving params back in while keeping behavior_params fixed."""
+    obs, act, rew, done, last_obs = batch
+    gamma, lam = hyper[1], hyper[2]
+    ent_c, val_c, clip = hyper[3], hyper[4], hyper[5]
+
+    logits, values = _batched_forward(cfg, params, obs)
+    bp = jax.lax.stop_gradient(behavior_params)
+    b_logits, b_values = _batched_forward(cfg, bp, obs)
+    _, boot = forward(cfg, bp, last_obs)
+
+    adv, ret = gae_advantages(rew, done, b_values, boot, gamma, lam)
+    adv = jax.lax.stop_gradient(adv)
+    ret = jax.lax.stop_gradient(ret)
+    adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+
+    logp = action_logp(logits, act)
+    old_logp = action_logp(b_logits, act)
+    ratio = jnp.exp(logp - old_logp)
+    surr1 = ratio * adv
+    surr2 = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    pi_loss = -jnp.mean(jnp.minimum(surr1, surr2))
+    v_loss = jnp.mean((ret - values) ** 2)
+    ent = jnp.mean(entropy(logits))
+    total = pi_loss + val_c * v_loss - ent_c * ent
+    stats = (pi_loss, v_loss, ent, jnp.mean(ratio),
+             jnp.mean(adv), jnp.mean(ret))
+    return total, stats
+
+
+# ---------------------------------------------------------------------------
+# Train-step entry points (the lowered artifacts)
+# ---------------------------------------------------------------------------
+
+
+def train_step(cfg: ModelConfig, kind, target_params, behavior_params,
+               opt_sq, obs, act, rew, done, last_obs, hyper):
+    """One gradient step. Returns (new_params, new_opt_sq, metrics f32[8]).
+
+    a2c_delayed differentiates at behavior_params (θ_{j-1}) and applies the
+    update to target_params (θ_j) — paper Eq. 6. All other kinds
+    differentiate at target_params.
+    """
+    batch = (obs, act, rew, done, last_obs)
+    lr, alpha, eps = hyper[0], hyper[6], hyper[7]
+
+    if kind == "a2c_delayed":
+        def loss_fn(p):
+            return a2c_loss(cfg, p, behavior_params, batch, hyper, "delayed")
+        grad_at = behavior_params
+    elif kind == "a2c_nocorr":
+        def loss_fn(p):
+            return a2c_loss(cfg, p, behavior_params, batch, hyper, "nocorr")
+        grad_at = target_params
+    elif kind == "a2c_tis":
+        def loss_fn(p):
+            return a2c_loss(cfg, p, behavior_params, batch, hyper, "tis")
+        grad_at = target_params
+    elif kind == "vtrace":
+        def loss_fn(p):
+            return vtrace_loss(cfg, p, behavior_params, batch, hyper)
+        grad_at = target_params
+    elif kind == "ppo":
+        def loss_fn(p):
+            return ppo_loss(cfg, p, behavior_params, batch, hyper)
+        grad_at = target_params
+    else:
+        raise ValueError(kind)
+
+    (total, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(grad_at)
+    grad_norm = jnp.sqrt(jnp.sum(grads * grads))
+    # Global-norm clip at 40 (TorchBeast default) for stability parity.
+    grads = grads * jnp.minimum(1.0, 40.0 / (grad_norm + 1e-12))
+    new_params, new_sq = rmsprop_update(
+        target_params, grads, opt_sq, lr, alpha, eps)
+    pi_loss, v_loss, ent, mean_ratio, mean_adv, mean_ret = stats
+    metrics = jnp.stack([total, pi_loss, v_loss, ent, grad_norm,
+                         mean_ratio, mean_adv, mean_ret])
+    return new_params, new_sq, metrics
+
+
+def make_train_fn(cfg: ModelConfig, kind):
+    return functools.partial(train_step, cfg, kind)
+
+
+def make_fwd_fn(cfg: ModelConfig):
+    return functools.partial(forward, cfg)
+
+
+def make_init_fn(cfg: ModelConfig):
+    return functools.partial(init_params, cfg)

@@ -1,0 +1,122 @@
+//! Component micro-benchmarks (criterion is not in the offline vendor
+//! set; this is a `harness = false` bench binary with manual timing).
+//! These are the numbers the §Perf pass in EXPERIMENTS.md starts from:
+//! per-call latency of every hot-path building block.
+
+use std::time::Instant;
+
+use hts_rl::algo::returns::gae;
+use hts_rl::algo::sampling::sample_action;
+use hts_rl::buffers::{BlockingQueue, RolloutStorage};
+use hts_rl::model::manifest::Manifest;
+use hts_rl::rng::SplitMix64;
+use hts_rl::runtime::{ForwardPool, ModelRuntime, Trainer};
+use hts_rl::util::json::Json;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.3} µs/op", per * 1e6);
+    per
+}
+
+fn main() {
+    println!("== component micro-benchmarks ==");
+
+    // RNG + sampling
+    let mut rng = SplitMix64::new(1);
+    bench("splitmix64::next_u64", 1_000_000, || {
+        std::hint::black_box(rng.next_u64());
+    });
+    let logits: Vec<f32> = (0..19).map(|i| (i as f32) * 0.1).collect();
+    let mut seed = 0u64;
+    bench("gumbel sample (19 actions)", 200_000, || {
+        seed += 1;
+        std::hint::black_box(sample_action(&logits, seed));
+    });
+
+    // queue
+    let q: BlockingQueue<u64> = BlockingQueue::new();
+    bench("blocking queue push+pop", 200_000, || {
+        q.push(1);
+        std::hint::black_box(q.try_pop());
+    });
+
+    // storage
+    let mut st = RolloutStorage::new(5, 16, 50);
+    let obs = vec![0.5f32; 50];
+    let mut col = 0usize;
+    let mut filled = 0usize;
+    bench("storage push (50-dim obs)", 200_000, || {
+        if filled == 5 * 16 {
+            st.clear();
+            filled = 0;
+        }
+        st.push(col % 16, &obs, 1, 0.0, false);
+        col += 1;
+        filled += 1;
+    });
+
+    // returns oracle
+    let rew = vec![0.1f32; 5 * 16];
+    let done = vec![0.0f32; 5 * 16];
+    let values = vec![0.2f32; 5 * 16];
+    let boot = vec![0.3f32; 16];
+    bench("rust GAE (T=5, B=16)", 100_000, || {
+        std::hint::black_box(gae(&rew, &done, &values, &boot, 5, 16, 0.99,
+                                 1.0));
+    });
+
+    // json
+    let manifest_text = std::fs::read_to_string(
+        hts_rl::coordinator::common::default_artifacts_dir()
+            .join("manifest.json"),
+    )
+    .ok();
+    if let Some(text) = &manifest_text {
+        bench("json parse (manifest)", 200, || {
+            std::hint::black_box(Json::parse(text).unwrap());
+        });
+    }
+
+    // PJRT runtime hot path
+    let art = hts_rl::coordinator::common::default_artifacts_dir();
+    if art.join("manifest.json").exists() {
+        let manifest = Manifest::load(&art).unwrap();
+        let rt = ModelRuntime::new(manifest).unwrap();
+        let pool = ForwardPool::new(&rt, "catch").unwrap();
+        let params = rt.init_params("catch", 1).unwrap();
+        for n in [1usize, 4, 16] {
+            let obs = vec![0.1f32; n * 50];
+            bench(&format!("PJRT forward catch (batch {n})"), 300, || {
+                std::hint::black_box(
+                    pool.forward(&params, &obs, n).unwrap());
+            });
+        }
+        let cfg = hts_rl::algo::AlgoConfig::a2c(
+            hts_rl::algo::Algo::A2cDelayed);
+        let mut trainer =
+            Trainer::new(&rt, "catch", cfg, params.clone(), 16).unwrap();
+        let mut storage = RolloutStorage::new(5, 16, 50);
+        for col in 0..16 {
+            for _t in 0..5 {
+                storage.push(col, &vec![0.1f32; 50], 1, 0.1, false);
+            }
+            storage.set_last_obs(col, &vec![0.1f32; 50]);
+        }
+        let behavior = params.clone();
+        bench("PJRT train step a2c (T=5, B=16)", 100, || {
+            std::hint::black_box(
+                trainer.step_chunk(&storage, 0, &behavior).unwrap());
+        });
+    } else {
+        println!("(artifacts missing — PJRT benches skipped)");
+    }
+}

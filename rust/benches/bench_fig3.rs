@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 3(a,b,c) — analytic Eq. 7 / M/M/1 vs
+//! discrete-event simulation — and time the simulators.
+
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("results/bench");
+    std::fs::create_dir_all(&out)?;
+    for id in ["fig3a", "fig3b", "fig3c"] {
+        let t0 = Instant::now();
+        hts_rl::experiments::run(id, &out, true)?;
+        println!("[{id}] regenerated in {:.2}s\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

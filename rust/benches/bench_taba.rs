@@ -1,0 +1,15 @@
+//! Bench: regenerate the paper results covered by this binary (quick
+//! budgets) and report wall time per experiment.
+
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("results/bench");
+    std::fs::create_dir_all(&out)?;
+    for id in ["taba1", "taba2"] {
+        let t0 = Instant::now();
+        hts_rl::experiments::run(id, &out, true)?;
+        println!("[{id}] regenerated in {:.2}s\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Algorithm + hyper-parameter configuration, defaulting to the paper's
+//! Tab. A3 (Atari / A2C) and Tab. A6 (GFootball / PPO) settings.
+
+use anyhow::{bail, Result};
+
+/// Which train-step artifact the learner executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// HTS-RL's one-step delayed gradient (paper Eq. 6) — ours.
+    A2cDelayed,
+    /// Stale data, no correction (GA3C-without-ε ablation, Tab. A1).
+    A2cNoCorrection,
+    /// Truncated importance sampling ablation (Tab. A1).
+    A2cTruncatedIs,
+    /// IMPALA's V-trace (the async baseline's correction).
+    Vtrace,
+    /// Clipped-surrogate PPO (Tab. A6).
+    Ppo,
+}
+
+impl Algo {
+    pub fn train_kind(&self) -> &'static str {
+        match self {
+            Algo::A2cDelayed => "a2c_delayed",
+            Algo::A2cNoCorrection => "a2c_nocorr",
+            Algo::A2cTruncatedIs => "a2c_tis",
+            Algo::Vtrace => "vtrace",
+            Algo::Ppo => "ppo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "a2c" | "a2c_delayed" | "hts-a2c" => Algo::A2cDelayed,
+            "a2c_nocorr" => Algo::A2cNoCorrection,
+            "a2c_tis" => Algo::A2cTruncatedIs,
+            "vtrace" | "impala" => Algo::Vtrace,
+            "ppo" | "hts-ppo" => Algo::Ppo,
+            other => bail!("unknown algo '{other}'"),
+        })
+    }
+}
+
+/// Runtime hyper-parameters, laid out to match `configs.HYPER_LAYOUT`
+/// (f32[8] artifact input): [lr, γ, λ, entropy, value, clip/ρ̄, rms_α,
+/// rms_ε].
+#[derive(Debug, Clone, Copy)]
+pub struct AlgoConfig {
+    pub algo: Algo,
+    pub lr: f32,
+    pub gamma: f32,
+    pub lam: f32,
+    pub entropy_coef: f32,
+    pub value_coef: f32,
+    /// PPO clip ε, or ρ̄ for V-trace/TIS (unused by delayed/nocorr).
+    pub clip: f32,
+    pub rms_alpha: f32,
+    pub rms_eps: f32,
+    /// PPO epochs per storage (1 for everything else).
+    pub epochs: usize,
+}
+
+impl AlgoConfig {
+    /// Paper Tab. A3 — A2C family on the Atari-sim suite.
+    pub fn a2c(algo: Algo) -> AlgoConfig {
+        AlgoConfig {
+            algo,
+            lr: 7e-4,
+            gamma: 0.99,
+            lam: 1.0, // n-step truncated return
+            entropy_coef: 0.01,
+            value_coef: 0.5,
+            clip: 1.0, // ρ̄ = 1 for vtrace/tis
+            rms_alpha: 0.99,
+            rms_eps: 1e-5,
+            epochs: 1,
+        }
+    }
+
+    /// Paper Tab. A6 — PPO on the football suite.
+    pub fn ppo() -> AlgoConfig {
+        AlgoConfig {
+            algo: Algo::Ppo,
+            lr: 3.43e-4,
+            gamma: 0.993,
+            lam: 0.95,
+            entropy_coef: 0.003,
+            value_coef: 0.5,
+            clip: 0.27,
+            rms_alpha: 0.99,
+            rms_eps: 1e-5,
+            epochs: 2,
+        }
+    }
+
+    pub fn for_algo(algo: Algo) -> AlgoConfig {
+        match algo {
+            Algo::Ppo => AlgoConfig::ppo(),
+            a => AlgoConfig::a2c(a),
+        }
+    }
+
+    /// Serialize into the artifact's f32[8] hyper vector.
+    pub fn hyper_vec(&self) -> [f32; 8] {
+        [
+            self.lr,
+            self.gamma,
+            self.lam,
+            self.entropy_coef,
+            self.value_coef,
+            self.clip,
+            self.rms_alpha,
+            self.rms_eps,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Algo::parse("impala").unwrap(), Algo::Vtrace);
+        assert_eq!(Algo::parse("hts-a2c").unwrap(), Algo::A2cDelayed);
+        assert!(Algo::parse("dqn").is_err());
+    }
+
+    #[test]
+    fn hyper_vec_layout() {
+        let c = AlgoConfig::a2c(Algo::A2cDelayed);
+        let h = c.hyper_vec();
+        assert_eq!(h[0], 7e-4); // lr
+        assert_eq!(h[1], 0.99); // gamma
+        assert_eq!(h[7], 1e-5); // rms_eps
+    }
+
+    #[test]
+    fn train_kind_matches_artifact_names() {
+        for (algo, kind) in [
+            (Algo::A2cDelayed, "a2c_delayed"),
+            (Algo::Vtrace, "vtrace"),
+            (Algo::Ppo, "ppo"),
+        ] {
+            assert_eq!(algo.train_kind(), kind);
+        }
+    }
+
+    #[test]
+    fn ppo_uses_multiple_epochs() {
+        assert!(AlgoConfig::ppo().epochs > 1);
+        assert_eq!(AlgoConfig::a2c(Algo::A2cDelayed).epochs, 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Algorithm-side utilities owned by the coordinator: action sampling,
+//! a Rust-side returns oracle (cross-checks the Pallas kernel and serves
+//! tests), and the algorithm/hyper-parameter configuration taken from the
+//! paper's Tabs. A3/A6.
+
+pub mod config;
+pub mod returns;
+pub mod sampling;
+
+pub use config::{Algo, AlgoConfig};

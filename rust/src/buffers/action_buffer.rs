@@ -1,0 +1,111 @@
+//! Action buffer (paper Fig. 1e): per-slot mailboxes. An actor posts the
+//! sampled action for a slot; the slot's executor blocks on its own
+//! mailbox. Per-slot (rather than a shared queue) because each executor
+//! only ever consumes its own actions — this keeps wakeups targeted.
+
+use std::sync::{Condvar, Mutex};
+
+struct Mailbox {
+    m: Mutex<Option<usize>>,
+    cv: Condvar,
+}
+
+pub struct ActionBuffer {
+    boxes: Vec<Mailbox>,
+    closed: Mutex<bool>,
+}
+
+impl ActionBuffer {
+    pub fn new(n_slots: usize) -> ActionBuffer {
+        ActionBuffer {
+            boxes: (0..n_slots)
+                .map(|_| Mailbox { m: Mutex::new(None), cv: Condvar::new() })
+                .collect(),
+            closed: Mutex::new(false),
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.boxes.len()
+    }
+
+    /// Actor-side: deliver the action for `slot`.
+    pub fn post(&self, slot: usize, action: usize) {
+        let mb = &self.boxes[slot];
+        let mut g = mb.m.lock().unwrap();
+        debug_assert!(g.is_none(), "double post to slot {slot}");
+        *g = Some(action);
+        drop(g);
+        mb.cv.notify_all();
+    }
+
+    /// Executor-side: block until the action for `slot` arrives.
+    /// Returns None on shutdown.
+    pub fn take(&self, slot: usize) -> Option<usize> {
+        let mb = &self.boxes[slot];
+        let mut g = mb.m.lock().unwrap();
+        loop {
+            if let Some(a) = g.take() {
+                return Some(a);
+            }
+            if *self.closed.lock().unwrap() {
+                return None;
+            }
+            let (ng, timeout) = mb
+                .cv
+                .wait_timeout(g, std::time::Duration::from_millis(50))
+                .unwrap();
+            g = ng;
+            let _ = timeout;
+        }
+    }
+
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        for mb in &self.boxes {
+            mb.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn post_take_roundtrip() {
+        let ab = ActionBuffer::new(3);
+        ab.post(1, 7);
+        assert_eq!(ab.take(1), Some(7));
+    }
+
+    #[test]
+    fn take_blocks_until_posted() {
+        let ab = Arc::new(ActionBuffer::new(2));
+        let ab2 = ab.clone();
+        let h = std::thread::spawn(move || ab2.take(0));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        ab.post(0, 3);
+        assert_eq!(h.join().unwrap(), Some(3));
+    }
+
+    #[test]
+    fn close_unblocks() {
+        let ab = Arc::new(ActionBuffer::new(1));
+        let ab2 = ab.clone();
+        let h = std::thread::spawn(move || ab2.take(0));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        ab.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let ab = ActionBuffer::new(4);
+        ab.post(2, 9);
+        ab.post(0, 1);
+        assert_eq!(ab.take(0), Some(1));
+        assert_eq!(ab.take(2), Some(9));
+    }
+}

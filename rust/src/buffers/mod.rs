@@ -1,0 +1,16 @@
+//! The paper's Fig. 1(e) data plumbing: the state buffer and action buffer
+//! that decouple executors from actors, the `[T, B]` rollout storage, and
+//! the double-storage pair whose swap barrier realizes "concurrent rollout
+//! and learning" with a guaranteed policy lag of one.
+
+pub mod action_buffer;
+pub mod double;
+pub mod queue;
+pub mod state_buffer;
+pub mod storage;
+
+pub use action_buffer::ActionBuffer;
+pub use double::DoublePair;
+pub use queue::BlockingQueue;
+pub use state_buffer::{ObsMsg, StateBuffer};
+pub use storage::RolloutStorage;

@@ -1,0 +1,173 @@
+//! Blocking MPMC queue (Mutex + Condvar; crossbeam-channel is not in the
+//! offline vendor set). Supports batch draining — the HTS-RL actor's
+//! "grab all available observations at once" — and graceful shutdown.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct BlockingQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for BlockingQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> BlockingQueue<T> {
+    pub fn new() -> Self {
+        BlockingQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Push; returns false if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Pop one item, blocking. Returns None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Block until at least one item is available (or closed), then drain
+    /// up to `max` items. Returns an empty vec only when closed+empty.
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let n = g.items.len().min(max);
+                return g.items.drain(..n).collect();
+            }
+            if g.closed {
+                return Vec::new();
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: wakes all blocked consumers; subsequent pushes are dropped.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BlockingQueue::new();
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn pop_batch_drains_up_to_max() {
+        let q = BlockingQueue::new();
+        for i in 0..10 {
+            q.push(i);
+        }
+        let batch = q.pop_batch(4);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn close_unblocks_and_rejects() {
+        let q: Arc<BlockingQueue<u32>> = Arc::new(BlockingQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+        assert!(!q.push(1));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let q: Arc<BlockingQueue<usize>> = Arc::new(BlockingQueue::new());
+        let n_items = 2000;
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..2)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n_items / 2 {
+                        q.push(p * (n_items / 2) + i);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        // wait for drain, then close
+        while !q.is_empty() {
+            std::thread::yield_now();
+        }
+        q.close();
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_items).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,155 @@
+//! `[T, B]` rollout storage matching the train-step artifact's input
+//! layout exactly (row-major `[T, B, D]` obs, `[T, B]` act/rew/done,
+//! `[B, D]` bootstrap obs), so the learner hands buffers straight to PJRT
+//! with no reshuffling.
+
+#[derive(Debug, Clone)]
+pub struct RolloutStorage {
+    pub t_len: usize,
+    pub b: usize,
+    pub obs_dim: usize,
+    pub obs: Vec<f32>,      // [T, B, D]
+    pub act: Vec<i32>,      // [T, B]
+    pub rew: Vec<f32>,      // [T, B]
+    pub done: Vec<f32>,     // [T, B]
+    pub last_obs: Vec<f32>, // [B, D]
+    filled: Vec<usize>,     // per-column step count
+}
+
+impl RolloutStorage {
+    pub fn new(t_len: usize, b: usize, obs_dim: usize) -> RolloutStorage {
+        RolloutStorage {
+            t_len,
+            b,
+            obs_dim,
+            obs: vec![0.0; t_len * b * obs_dim],
+            act: vec![0; t_len * b],
+            rew: vec![0.0; t_len * b],
+            done: vec![0.0; t_len * b],
+            last_obs: vec![0.0; b * obs_dim],
+            filled: vec![0; b],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.filled.iter_mut().for_each(|f| *f = 0);
+    }
+
+    /// Write one transition into column `col` at its next row. Returns the
+    /// row index written.
+    pub fn push(
+        &mut self,
+        col: usize,
+        obs: &[f32],
+        act: usize,
+        rew: f32,
+        done: bool,
+    ) -> usize {
+        let t = self.filled[col];
+        assert!(t < self.t_len, "column {col} overflow");
+        assert_eq!(obs.len(), self.obs_dim);
+        let o0 = (t * self.b + col) * self.obs_dim;
+        self.obs[o0..o0 + self.obs_dim].copy_from_slice(obs);
+        let idx = t * self.b + col;
+        self.act[idx] = act as i32;
+        self.rew[idx] = rew;
+        self.done[idx] = if done { 1.0 } else { 0.0 };
+        self.filled[col] = t + 1;
+        t
+    }
+
+    /// Record the observation after the column's final step (bootstrap).
+    pub fn set_last_obs(&mut self, col: usize, obs: &[f32]) {
+        assert_eq!(obs.len(), self.obs_dim);
+        let o0 = col * self.obs_dim;
+        self.last_obs[o0..o0 + self.obs_dim].copy_from_slice(obs);
+    }
+
+    pub fn column_full(&self, col: usize) -> bool {
+        self.filled[col] == self.t_len
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.filled.iter().all(|&f| f == self.t_len)
+    }
+
+    pub fn rows_filled(&self, col: usize) -> usize {
+        self.filled[col]
+    }
+
+    /// Sum of rewards currently stored (test/metrics convenience).
+    pub fn total_reward(&self) -> f32 {
+        self.rew.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn layout_is_time_major() {
+        let mut s = RolloutStorage::new(2, 3, 2);
+        s.push(1, &[1.0, 2.0], 5, 0.5, false);
+        s.push(1, &[3.0, 4.0], 6, -0.5, true);
+        // t=0,col=1 at obs[(0*3+1)*2..]
+        assert_eq!(&s.obs[2..4], &[1.0, 2.0]);
+        // t=1,col=1 at obs[(1*3+1)*2..]
+        assert_eq!(&s.obs[8..10], &[3.0, 4.0]);
+        assert_eq!(s.act[1], 5);
+        assert_eq!(s.act[4], 6);
+        assert_eq!(s.done[4], 1.0);
+    }
+
+    #[test]
+    fn fill_tracking() {
+        let mut s = RolloutStorage::new(2, 2, 1);
+        assert!(!s.is_full());
+        for col in 0..2 {
+            for _ in 0..2 {
+                s.push(col, &[0.0], 0, 0.0, false);
+            }
+            assert!(s.column_full(col));
+        }
+        assert!(s.is_full());
+        s.clear();
+        assert!(!s.is_full());
+        assert_eq!(s.rows_filled(0), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let mut s = RolloutStorage::new(1, 1, 1);
+        s.push(0, &[0.0], 0, 0.0, false);
+        s.push(0, &[0.0], 0, 0.0, false);
+    }
+
+    #[test]
+    fn prop_push_roundtrip() {
+        prop::check("storage-roundtrip", 64, |g| {
+            let t_len = g.usize_in(1, 6);
+            let b = g.usize_in(1, 8);
+            let d = g.usize_in(1, 5);
+            let mut s = RolloutStorage::new(t_len, b, d);
+            let mut expect = vec![];
+            for col in 0..b {
+                for t in 0..t_len {
+                    let obs = g.vec_f32(d);
+                    let act = g.usize_in(0, 7);
+                    let rew = g.f32_std();
+                    s.push(col, &obs, act, rew, false);
+                    expect.push((t, col, obs, act, rew));
+                }
+            }
+            assert!(s.is_full());
+            for (t, col, obs, act, rew) in expect {
+                let o0 = (t * b + col) * d;
+                assert_eq!(&s.obs[o0..o0 + d], &obs[..]);
+                assert_eq!(s.act[t * b + col], act as i32);
+                assert_eq!(s.rew[t * b + col], rew);
+            }
+        });
+    }
+}

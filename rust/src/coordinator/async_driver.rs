@@ -1,0 +1,277 @@
+//! The asynchronous IMPALA/GA3C-style baseline (paper Fig. 1b,c / Fig. 2b).
+//!
+//! Executors run free (no barrier): each collects a T-step trajectory,
+//! stamps it with the parameter version in effect when it started, and
+//! pushes it into a **non-blocking queue**. The learner drains the queue
+//! into `[T, B]` batches and trains — by the time it does, the data is
+//! stale: the measured per-trajectory policy lag (`learner version −
+//! behavior version`) is reported in `TrainReport::staleness` and is the
+//! empirical side of the paper's Claim 2 (`E[L] = nρ₀/(1−nρ₀)`).
+//!
+//! Off-policy correction is selected by `cfg.algo`: `Vtrace` reproduces
+//! IMPALA; `A2cNoCorrection` reproduces uncorrected GA3C (Tab. A1).
+//! Approximation note (DESIGN.md §8): the train artifact takes a single
+//! behavior-parameter vector per batch, so ratios use the *oldest* version
+//! in the batch; trajectories whose unroll spans a publish use their
+//! start-of-unroll version.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::common::{spawn_actors, EvalWorker, Fnv, RunConfig};
+use crate::buffers::{ActionBuffer, BlockingQueue, ObsMsg, RolloutStorage,
+                     StateBuffer};
+use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch, TrainReport};
+use crate::model::manifest::Manifest;
+use crate::model::ParamStore;
+use crate::rng::SplitMix64;
+use crate::runtime::{ModelRuntime, Trainer};
+
+/// One executor-local trajectory (all agent columns of one env).
+struct Traj {
+    /// producing env replica (diagnostics only since the learner
+    /// assigns columns by batch slot)
+    _env: usize,
+    version: u64,
+    /// [T][agent] tuples
+    obs: Vec<Vec<Vec<f32>>>,
+    act: Vec<Vec<usize>>,
+    rew: Vec<f32>,
+    done: Vec<f32>,
+    last_obs: Vec<Vec<f32>>,
+}
+
+pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let info = manifest.model(&cfg.spec.model)?.clone();
+    let b_cols = cfg.batch_columns();
+    let n_agents = cfg.spec.n_agents;
+    let t_len = info.unroll;
+
+    let rt = ModelRuntime::new(manifest.clone())?;
+    let init = rt.init_params(&cfg.spec.model, cfg.seed)?;
+    let mut trainer =
+        Trainer::new(&rt, &cfg.spec.model, cfg.algo, init.clone(), b_cols)?;
+
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(b_cols));
+    let params = Arc::new(ParamStore::with_history(init.clone(), 256));
+    let traj_q: Arc<BlockingQueue<Traj>> = Arc::new(BlockingQueue::new());
+    let sps = Arc::new(SpsMeter::new());
+    let stop_flag = Arc::new(AtomicBool::new(false));
+    let episodes: Arc<Mutex<Vec<EpisodePoint>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let signatures = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let watch = Stopwatch::new();
+
+    // ---- free-running executors -------------------------------------------
+    let mut exec_handles = Vec::new();
+    for e in 0..cfg.n_envs {
+        let spec = cfg.spec.clone();
+        let state_buf = state_buf.clone();
+        let act_buf = act_buf.clone();
+        let traj_q = traj_q.clone();
+        let params = params.clone();
+        let sps = sps.clone();
+        let stop_flag = stop_flag.clone();
+        let episodes = episodes.clone();
+        let signatures = signatures.clone();
+        let seed = cfg.seed;
+        exec_handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
+            let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
+            let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
+            let mut env = spec.build()?;
+            let mut obs = env.reset(&mut env_rng);
+            let mut ep_reward = 0.0f64;
+            let mut sig = Fnv::default();
+            sig.update(e as u64);
+            let watch = Stopwatch::new();
+            'outer: while !stop_flag.load(Ordering::Relaxed) {
+                let version = params.version();
+                let mut traj = Traj {
+                    _env: e,
+                    version,
+                    obs: Vec::with_capacity(t_len),
+                    act: Vec::with_capacity(t_len),
+                    rew: Vec::with_capacity(t_len),
+                    done: Vec::with_capacity(t_len),
+                    last_obs: Vec::new(),
+                };
+                for _t in 0..t_len {
+                    for a in 0..n_agents {
+                        state_buf.push(ObsMsg {
+                            slot: e * n_agents + a,
+                            obs: obs[a].clone(),
+                            seed: seed_rng.next_u64(),
+                        });
+                    }
+                    let mut actions = Vec::with_capacity(n_agents);
+                    for a in 0..n_agents {
+                        match act_buf.take(e * n_agents + a) {
+                            Some(act) => actions.push(act),
+                            None => break 'outer,
+                        }
+                    }
+                    spec.steptime.sleep(&mut delay_rng);
+                    let step = env.step(&actions, &mut env_rng);
+                    traj.obs.push(obs.clone());
+                    traj.act.push(actions.clone());
+                    traj.rew.push(step.reward);
+                    traj.done.push(if step.done { 1.0 } else { 0.0 });
+                    let gsteps = sps.add(1);
+                    for &a in &actions {
+                        sig.update(a as u64);
+                    }
+                    sig.update(step.reward.to_bits() as u64);
+                    ep_reward += step.reward as f64;
+                    if step.done {
+                        episodes.lock().unwrap().push(EpisodePoint {
+                            steps: gsteps,
+                            wall_s: watch.elapsed_s(),
+                            reward: ep_reward,
+                        });
+                        ep_reward = 0.0;
+                        obs = env.reset(&mut env_rng);
+                    } else {
+                        obs = step.obs;
+                    }
+                }
+                traj.last_obs = obs.clone();
+                // non-blocking send: the queue is unbounded, exactly the
+                // GA3C/IMPALA design whose length IS the policy lag.
+                traj_q.push(traj);
+            }
+            signatures.fetch_xor(sig.finish(), Ordering::Relaxed);
+            Ok(())
+        }));
+    }
+
+    // ---- actors -------------------------------------------------------------
+    let actor_handles = spawn_actors(
+        cfg.n_actors,
+        cfg.spec.model.clone(),
+        cfg.artifacts.clone(),
+        state_buf.clone(),
+        act_buf.clone(),
+        params.clone(),
+        b_cols,
+    );
+
+    let eval = if cfg.eval_every > 0 {
+        Some(EvalWorker::spawn(
+            cfg.artifacts.clone(),
+            cfg.spec.clone(),
+            cfg.eval_episodes,
+            cfg.seed ^ 0xe7a1,
+        ))
+    } else {
+        None
+    };
+
+    // ---- learner (this thread) -----------------------------------------------
+    let mut storage = RolloutStorage::new(t_len, b_cols, info.obs_dim);
+    let mut staleness: Vec<f64> = Vec::new();
+    let mut last_out = Default::default();
+    'learn: loop {
+        // Gather enough trajectories (in arrival order) to fill all B
+        // columns. Trajectories are NOT necessarily from distinct envs —
+        // a fast replica can contribute twice while a slow one lags, so
+        // columns are assigned by batch slot, exactly like IMPALA's
+        // learner batches.
+        storage.clear();
+        let n_traj = b_cols / n_agents;
+        let mut batch: Vec<Traj> = Vec::with_capacity(n_traj);
+        while batch.len() < n_traj {
+            match traj_q.pop() {
+                Some(t) => batch.push(t),
+                None => break 'learn,
+            }
+        }
+        let cur_version = params.version();
+        let oldest = batch.iter().map(|t| t.version).min().unwrap();
+        for t in &batch {
+            staleness.push((cur_version - t.version) as f64);
+        }
+        for (slot, traj) in batch.iter().enumerate() {
+            for t in 0..t_len {
+                for a in 0..n_agents {
+                    storage.push(
+                        slot * n_agents + a,
+                        &traj.obs[t][a],
+                        traj.act[t][a],
+                        traj.rew[t],
+                        traj.done[t] > 0.5,
+                    );
+                }
+            }
+            for a in 0..n_agents {
+                storage.set_last_obs(
+                    slot * n_agents + a,
+                    &traj.last_obs[a],
+                );
+            }
+        }
+        let behavior = params.get(oldest).data;
+        last_out = trainer.step(&storage, &behavior)?;
+        // async: publish immediately (no barrier) — the stale-policy source
+        params.publish(trainer.params.clone());
+        if let Some(ev) = &eval {
+            if trainer.updates % cfg.eval_every.max(1) == 0 {
+                ev.submit(
+                    trainer.updates,
+                    sps.steps(),
+                    &watch,
+                    Arc::new(trainer.params.clone()),
+                );
+            }
+        }
+        if cfg.stop.done(sps.steps(), watch.elapsed_s(), trainer.updates) {
+            break;
+        }
+    }
+
+    stop_flag.store(true, Ordering::Relaxed);
+    state_buf.close();
+    act_buf.close();
+    traj_q.close();
+    for h in exec_handles {
+        h.join().expect("executor panicked")?;
+    }
+    for h in actor_handles {
+        h.join().expect("actor panicked")?;
+    }
+    let evals = match eval {
+        Some(ev) => {
+            ev.submit(
+                trainer.updates,
+                sps.steps(),
+                &watch,
+                Arc::new(trainer.params.clone()),
+            );
+            ev.finish()?
+        }
+        None => Vec::new(),
+    };
+    let mut episodes = Arc::try_unwrap(episodes)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default();
+    episodes.sort_by_key(|e| e.steps);
+
+    Ok(TrainReport {
+        method: "async".into(),
+        env: cfg.spec.name.clone(),
+        seed: cfg.seed,
+        steps: sps.steps(),
+        updates: trainer.updates,
+        wall_s: watch.elapsed_s(),
+        episodes,
+        evals,
+        signature: signatures.load(Ordering::Relaxed),
+        staleness,
+        final_loss: last_out.total_loss,
+        final_entropy: last_out.entropy,
+    })
+}

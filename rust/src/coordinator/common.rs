@@ -1,0 +1,377 @@
+//! Shared driver infrastructure: run configuration, stop conditions, the
+//! actor pool (used by HTS and the async baseline), the evaluation worker
+//! thread, and the FNV trajectory signature.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::algo::sampling::sample_action;
+use crate::algo::AlgoConfig;
+use crate::buffers::{ActionBuffer, StateBuffer};
+use crate::envs::EnvSpec;
+use crate::metrics::report::{EvalPoint, Stopwatch};
+use crate::model::manifest::Manifest;
+use crate::model::ParamStore;
+use crate::runtime::{ForwardPool, ModelRuntime};
+
+/// Which driver runs the training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// HTS-RL (ours).
+    Hts,
+    /// Step-synchronous A2C/PPO baseline.
+    Sync,
+    /// IMPALA/GA3C-style asynchronous baseline.
+    Async,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "hts" => Method::Hts,
+            "sync" => Method::Sync,
+            "async" | "impala" => Method::Async,
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Hts => "hts",
+            Method::Sync => "sync",
+            Method::Async => "async",
+        }
+    }
+}
+
+/// Training stop condition — whichever budget triggers first. This is how
+/// the paper's two time metrics are produced: the final-time metric caps
+/// `max_wall_s`; the required-time metric caps `max_steps` and reads the
+/// crossing time from the eval log.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StopCond {
+    pub max_steps: Option<u64>,
+    pub max_wall_s: Option<f64>,
+    pub max_updates: Option<u64>,
+}
+
+impl StopCond {
+    pub fn steps(n: u64) -> StopCond {
+        StopCond { max_steps: Some(n), ..Default::default() }
+    }
+
+    pub fn wall_s(s: f64) -> StopCond {
+        StopCond { max_wall_s: Some(s), ..Default::default() }
+    }
+
+    pub fn updates(n: u64) -> StopCond {
+        StopCond { max_updates: Some(n), ..Default::default() }
+    }
+
+    pub fn done(&self, steps: u64, wall_s: f64, updates: u64) -> bool {
+        self.max_steps.map_or(false, |m| steps >= m)
+            || self.max_wall_s.map_or(false, |m| wall_s >= m)
+            || self.max_updates.map_or(false, |m| updates >= m)
+    }
+}
+
+/// One training run's full configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub spec: EnvSpec,
+    pub algo: AlgoConfig,
+    /// Environment replicas (executor threads).
+    pub n_envs: usize,
+    /// Inference actor threads (paper default: 4, fewer than executors).
+    pub n_actors: usize,
+    /// Batch-synchronization interval α, in env steps per iteration.
+    /// Must be a multiple of the artifact unroll T. 0 ⇒ use T.
+    pub sync_interval: usize,
+    pub seed: u64,
+    pub stop: StopCond,
+    /// Updates between evaluation snapshots (0 disables in-run eval).
+    pub eval_every: u64,
+    pub eval_episodes: usize,
+    pub artifacts: PathBuf,
+}
+
+impl RunConfig {
+    pub fn new(spec: EnvSpec, algo: AlgoConfig) -> RunConfig {
+        RunConfig {
+            spec,
+            algo,
+            n_envs: 16,
+            n_actors: 4,
+            sync_interval: 0,
+            seed: 1,
+            stop: StopCond::updates(50),
+            eval_every: 0,
+            eval_episodes: 10,
+            artifacts: default_artifacts_dir(),
+        }
+    }
+
+    /// Total batch columns = env replicas × controlled agents.
+    pub fn batch_columns(&self) -> usize {
+        self.n_envs * self.spec.n_agents
+    }
+
+    /// Effective α (validated against the artifact unroll by drivers).
+    pub fn alpha(&self, unroll: usize) -> usize {
+        if self.sync_interval == 0 {
+            unroll
+        } else {
+            self.sync_interval
+        }
+    }
+}
+
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("HTS_RL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// FNV-1a trajectory hasher — cheap, order-sensitive, and stable across
+/// runs; XOR-combining per-executor hashes makes the run signature
+/// independent of executor thread interleaving.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+}
+
+impl Fnv {
+    pub fn update(&mut self, x: u64) {
+        for i in 0..8 {
+            self.0 ^= (x >> (8 * i)) & 0xff;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Spawn the HTS-RL actor pool: each actor owns its own PJRT runtime,
+/// batch-grabs observations, forwards once per batch, and posts actions
+/// sampled with the executor-provided seeds.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_actors(
+    n_actors: usize,
+    model: String,
+    artifacts: PathBuf,
+    state_buf: Arc<StateBuffer>,
+    act_buf: Arc<ActionBuffer>,
+    params: Arc<ParamStore>,
+    max_grab: usize,
+) -> Vec<JoinHandle<Result<()>>> {
+    (0..n_actors)
+        .map(|_| {
+            let model = model.clone();
+            let artifacts = artifacts.clone();
+            let state_buf = state_buf.clone();
+            let act_buf = act_buf.clone();
+            let params = params.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let manifest = Manifest::load(&artifacts)?;
+                let rt = ModelRuntime::new(manifest)?;
+                let pool = ForwardPool::new(&rt, &model)?;
+                let d = pool.info.obs_dim;
+                let a_dim = pool.info.act_dim;
+                let grab = max_grab.min(pool.max_batch());
+                // §Perf: cache the parameter literal per published version
+                // (rebuilding it per batch showed up in the profile).
+                let mut cached: Option<(u64, xla::Literal)> = None;
+                let (mut fwd_s, mut n_calls, mut n_obs) = (0.0f64, 0u64, 0u64);
+                let stats = std::env::var("HTS_RL_ACTOR_STATS").is_ok();
+                loop {
+                    let mut batch = state_buf.grab(grab);
+                    if batch.is_empty() {
+                        if stats && n_calls > 0 {
+                            eprintln!(
+                                "[actor] {n_obs} obs / {n_calls} calls \
+                                 (avg batch {:.1}), fwd {:.1} ms avg",
+                                n_obs as f64 / n_calls as f64,
+                                1e3 * fwd_s / n_calls as f64
+                            );
+                        }
+                        return Ok(()); // shutdown
+                    }
+                    // §Perf note: we deliberately do NOT wait to grow the
+                    // batch. Executors block on their action mailbox, so
+                    // any accumulation delay sits on the critical path; the
+                    // state buffer is self-balancing — when the actor falls
+                    // behind, arrivals queue up and the next grab is
+                    // naturally larger (measured in EXPERIMENTS.md §Perf:
+                    // a 1.2 ms window cost 29% SPS).
+                    state_buf.grab_more(&mut batch, grab);
+                    let pv = params.latest();
+                    let lit = match &cached {
+                        Some((v, l)) if *v == pv.version => l,
+                        _ => {
+                            cached = Some((
+                                pv.version,
+                                pool.params_literal(&pv.data),
+                            ));
+                            &cached.as_ref().unwrap().1
+                        }
+                    };
+                    let mut flat = Vec::with_capacity(batch.len() * d);
+                    for m in &batch {
+                        flat.extend_from_slice(&m.obs);
+                    }
+                    let t0 = std::time::Instant::now();
+                    let (logits, _values) =
+                        pool.forward_lit(lit, &flat, batch.len())?;
+                    fwd_s += t0.elapsed().as_secs_f64();
+                    n_calls += 1;
+                    n_obs += batch.len() as u64;
+                    for (i, m) in batch.iter().enumerate() {
+                        let a = sample_action(
+                            &logits[i * a_dim..(i + 1) * a_dim],
+                            m.seed,
+                        );
+                        act_buf.post(m.slot, a);
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+/// Evaluation job submitted by learners.
+pub struct EvalJob {
+    pub update: u64,
+    pub steps: u64,
+    pub wall_s: f64,
+    pub params: Arc<Vec<f32>>,
+}
+
+/// Background evaluation worker with its own PJRT runtime. Snapshots queue
+/// up if evaluation is slower than training; timestamps are taken at
+/// submission, so the metrics are unaffected.
+pub struct EvalWorker {
+    q: Arc<crate::buffers::BlockingQueue<EvalJob>>,
+    results: Arc<Mutex<Vec<EvalPoint>>>,
+    handle: JoinHandle<Result<()>>,
+}
+
+impl EvalWorker {
+    pub fn spawn(
+        artifacts: PathBuf,
+        spec: EnvSpec,
+        n_episodes: usize,
+        seed: u64,
+    ) -> EvalWorker {
+        let q: Arc<crate::buffers::BlockingQueue<EvalJob>> =
+            Arc::new(crate::buffers::BlockingQueue::new());
+        let results: Arc<Mutex<Vec<EvalPoint>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let (q2, r2) = (q.clone(), results.clone());
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let manifest = Manifest::load(&artifacts)?;
+            let rt = ModelRuntime::new(manifest)?;
+            let pool = ForwardPool::new(&rt, &spec.model)?;
+            while let Some(job) = q2.pop() {
+                let scores = crate::metrics::evaluate_params(
+                    &pool,
+                    &job.params,
+                    &spec,
+                    n_episodes,
+                    seed ^ job.update,
+                )?;
+                r2.lock().unwrap().push(EvalPoint {
+                    steps: job.steps,
+                    wall_s: job.wall_s,
+                    update: job.update,
+                    scores,
+                });
+            }
+            Ok(())
+        });
+        EvalWorker { q, results, handle }
+    }
+
+    pub fn submit(
+        &self,
+        update: u64,
+        steps: u64,
+        watch: &Stopwatch,
+        params: Arc<Vec<f32>>,
+    ) {
+        self.q.push(EvalJob {
+            update,
+            steps,
+            wall_s: watch.elapsed_s(),
+            params,
+        });
+    }
+
+    /// Close the queue, wait for all pending evaluations, return results
+    /// sorted by submission time.
+    pub fn finish(self) -> Result<Vec<EvalPoint>> {
+        self.q.close();
+        self.handle.join().expect("eval worker panicked")?;
+        let mut out =
+            std::mem::take(&mut *self.results.lock().unwrap());
+        out.sort_by(|a, b| a.wall_s.partial_cmp(&b.wall_s).unwrap());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_cond_any_trigger() {
+        let s = StopCond {
+            max_steps: Some(100),
+            max_wall_s: Some(5.0),
+            max_updates: None,
+        };
+        assert!(!s.done(50, 1.0, 10));
+        assert!(s.done(100, 1.0, 10));
+        assert!(s.done(50, 5.0, 10));
+        assert!(!StopCond::default().done(u64::MAX - 1, 1e12, 1));
+    }
+
+    #[test]
+    fn fnv_order_sensitive_xor_combinable() {
+        let mut a = Fnv::default();
+        a.update(1);
+        a.update(2);
+        let mut b = Fnv::default();
+        b.update(2);
+        b.update(1);
+        assert_ne!(a.finish(), b.finish());
+        // xor of two executor hashes is independent of combine order
+        assert_eq!(a.finish() ^ b.finish(), b.finish() ^ a.finish());
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("impala").unwrap(), Method::Async);
+        assert!(Method::parse("x").is_err());
+    }
+
+    #[test]
+    fn alpha_defaults_to_unroll() {
+        let spec = EnvSpec::by_name("catch").unwrap();
+        let mut cfg = RunConfig::new(
+            spec, AlgoConfig::a2c(crate::algo::Algo::A2cDelayed));
+        assert_eq!(cfg.alpha(5), 5);
+        cfg.sync_interval = 20;
+        assert_eq!(cfg.alpha(5), 20);
+    }
+}

@@ -1,0 +1,257 @@
+//! **HTS-RL** — the paper's system (§4.1, Fig. 1e, Fig. 2d).
+//!
+//! Topology per run:
+//!   * `n_envs` executor threads, each owning one environment replica and
+//!     three private PRNG streams (env dynamics, sampling seeds, step-time
+//!     delays). Executors push `(obs, slot, seed)` to the state buffer,
+//!     block on their action mailbox, apply the action, and write the
+//!     transition into the current write storage.
+//!   * `n_actors` actor threads (usually fewer than executors): batch-grab
+//!     observations, forward once per batch on their private PJRT runtime,
+//!     sample with the executor-provided seeds, post actions back.
+//!   * one learner (this thread): trains on the *read* storage — data
+//!     collected last iteration with θ_{j-1} — computing the gradient at
+//!     θ_{j-1} and applying it to θ_j (Eq. 6), concurrently with the
+//!     executors filling the write storage.
+//!
+//! The swap barrier is two-phase (see `buffers::double`): parameter
+//! publication happens while all executors are parked, which upholds the
+//! full-determinism guarantee for any actor count (paper Tab. 4).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::common::{spawn_actors, EvalWorker, Fnv, RunConfig};
+use crate::buffers::{ActionBuffer, DoublePair, ObsMsg, StateBuffer};
+use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch, TrainReport};
+use crate::model::manifest::Manifest;
+use crate::model::ParamStore;
+use crate::rng::SplitMix64;
+use crate::runtime::{ModelRuntime, Trainer};
+
+pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let info = manifest.model(&cfg.spec.model)?.clone();
+    let b_cols = cfg.batch_columns();
+    let alpha = cfg.alpha(info.unroll);
+    anyhow::ensure!(
+        alpha % info.unroll == 0,
+        "sync interval {alpha} must be a multiple of unroll {}",
+        info.unroll
+    );
+
+    // Learner-side runtime, initial parameters, trainer.
+    let rt = ModelRuntime::new(manifest.clone())?;
+    let init = rt.init_params(&cfg.spec.model, cfg.seed)?;
+    let mut trainer =
+        Trainer::new(&rt, &cfg.spec.model, cfg.algo, init.clone(), b_cols)?;
+
+    // Shared system state.
+    let dp = Arc::new(DoublePair::new(alpha, b_cols, info.obs_dim,
+                                      cfg.n_envs));
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(b_cols));
+    let params = Arc::new(ParamStore::new(init.clone()));
+    let sps = Arc::new(SpsMeter::new());
+    let episodes: Arc<Mutex<Vec<EpisodePoint>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let signatures = Arc::new(AtomicU64::new(0));
+    let watch = Stopwatch::new();
+
+    // ---- executors -------------------------------------------------------
+    let mut exec_handles = Vec::new();
+    for e in 0..cfg.n_envs {
+        let spec = cfg.spec.clone();
+        let dp = dp.clone();
+        let state_buf = state_buf.clone();
+        let act_buf = act_buf.clone();
+        let sps = sps.clone();
+        let episodes = episodes.clone();
+        let signatures = signatures.clone();
+        let seed = cfg.seed;
+        let n_agents = spec.n_agents;
+        exec_handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
+            let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
+            let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
+            let mut env = spec.build()?;
+            let mut obs = env.reset(&mut env_rng);
+            let mut ep_reward = 0.0f64;
+            let mut sig = Fnv::default();
+            sig.update(e as u64);
+            let mut it = 0u64;
+            let watch = Stopwatch::new();
+            'outer: loop {
+                for _t in 0..alpha {
+                    // 1. publish observations with executor-drawn seeds
+                    for a in 0..n_agents {
+                        state_buf.push(ObsMsg {
+                            slot: e * n_agents + a,
+                            obs: obs[a].clone(),
+                            seed: seed_rng.next_u64(),
+                        });
+                    }
+                    // 2. await actions from whichever actor served us
+                    let mut actions = Vec::with_capacity(n_agents);
+                    for a in 0..n_agents {
+                        match act_buf.take(e * n_agents + a) {
+                            Some(act) => actions.push(act),
+                            None => break 'outer, // shutdown
+                        }
+                    }
+                    // 3. simulated engine latency + real env step
+                    spec.steptime.sleep(&mut delay_rng);
+                    let step = env.step(&actions, &mut env_rng);
+                    // 4. record the transition (per agent column)
+                    {
+                        let mut st = dp.write_storage(it).lock().unwrap();
+                        for a in 0..n_agents {
+                            st.push(
+                                e * n_agents + a,
+                                &obs[a],
+                                actions[a],
+                                step.reward,
+                                step.done,
+                            );
+                        }
+                    }
+                    let gsteps = sps.add(1);
+                    for (a, &act) in actions.iter().enumerate() {
+                        sig.update(((a as u64) << 32) | act as u64);
+                    }
+                    sig.update(step.reward.to_bits() as u64);
+                    sig.update(step.done as u64);
+                    ep_reward += step.reward as f64;
+                    if step.done {
+                        episodes.lock().unwrap().push(EpisodePoint {
+                            steps: gsteps,
+                            wall_s: watch.elapsed_s(),
+                            reward: ep_reward,
+                        });
+                        ep_reward = 0.0;
+                        obs = env.reset(&mut env_rng);
+                    } else {
+                        obs = step.obs;
+                    }
+                }
+                // 5. bootstrap observations, then rendezvous
+                {
+                    let mut st = dp.write_storage(it).lock().unwrap();
+                    for a in 0..n_agents {
+                        st.set_last_obs(e * n_agents + a, &obs[a]);
+                    }
+                }
+                match dp.executor_arrive(it) {
+                    Some(next) => it = next,
+                    None => break,
+                }
+            }
+            signatures.fetch_xor(sig.finish(), Ordering::Relaxed);
+            Ok(())
+        }));
+    }
+
+    // ---- actors ------------------------------------------------------------
+    let actor_handles = spawn_actors(
+        cfg.n_actors,
+        cfg.spec.model.clone(),
+        cfg.artifacts.clone(),
+        state_buf.clone(),
+        act_buf.clone(),
+        params.clone(),
+        b_cols,
+    );
+
+    // ---- evaluation worker -------------------------------------------------
+    let eval = if cfg.eval_every > 0 {
+        Some(EvalWorker::spawn(
+            cfg.artifacts.clone(),
+            cfg.spec.clone(),
+            cfg.eval_episodes,
+            cfg.seed ^ 0xe7a1,
+        ))
+    } else {
+        None
+    };
+
+    // ---- learner (this thread) ----------------------------------------------
+    let mut behavior: Arc<Vec<f32>> = Arc::new(init);
+    let mut it = 0u64;
+    let mut last_out = Default::default();
+    loop {
+        if it >= 1 {
+            let st = dp.read_storage(it).lock().unwrap();
+            last_out = trainer.step(&st, &behavior)?;
+            if let Some(ev) = &eval {
+                if trainer.updates % cfg.eval_every.max(1) == 0 {
+                    ev.submit(
+                        trainer.updates,
+                        sps.steps(),
+                        &watch,
+                        Arc::new(trainer.params.clone()),
+                    );
+                }
+            }
+        }
+        // Phase 1: wait for executors to park (all obs answered, no
+        // in-flight inference).
+        if !dp.learner_arrive(it) {
+            break;
+        }
+        // Exclusive publication window: remember the parameters that
+        // collected the storage we will read next iteration (θ_{j-1}), then
+        // publish θ_j for the executors' next iteration.
+        behavior = params.latest().data.clone();
+        params.publish(trainer.params.clone());
+        if cfg.stop.done(sps.steps(), watch.elapsed_s(), trainer.updates) {
+            dp.shutdown();
+            state_buf.close();
+            act_buf.close();
+            break;
+        }
+        it = dp.learner_release(it);
+    }
+
+    for h in exec_handles {
+        h.join().expect("executor panicked")?;
+    }
+    for h in actor_handles {
+        h.join().expect("actor panicked")?;
+    }
+
+    let evals = match eval {
+        Some(ev) => {
+            // final snapshot for the last policy
+            ev.submit(
+                trainer.updates,
+                sps.steps(),
+                &watch,
+                Arc::new(trainer.params.clone()),
+            );
+            ev.finish()?
+        }
+        None => Vec::new(),
+    };
+
+    let mut episodes = Arc::try_unwrap(episodes)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default();
+    episodes.sort_by_key(|e| e.steps);
+
+    Ok(TrainReport {
+        method: "hts".into(),
+        env: cfg.spec.name.clone(),
+        seed: cfg.seed,
+        steps: sps.steps(),
+        updates: trainer.updates,
+        wall_s: watch.elapsed_s(),
+        episodes,
+        evals,
+        signature: signatures.load(Ordering::Relaxed),
+        staleness: vec![1.0], // guaranteed lag of one (paper §4.1)
+        final_loss: last_out.total_loss,
+        final_entropy: last_out.entropy,
+    })
+}

@@ -1,0 +1,30 @@
+//! Layer-3 drivers — the paper's contribution and its baselines.
+//!
+//! * [`hts`] — **HTS-RL** (ours): executors/actors/learner with double
+//!   storage, batch synchronization every α steps, one-step delayed
+//!   gradient, deferred randomness (paper §4.1, Fig. 1e / Fig. 2d).
+//! * [`sync_driver`] — the A2C/PPO baseline: per-step synchronization and
+//!   strictly alternating rollout/learning (Fig. 1d / Fig. 2c).
+//! * [`async_driver`] — the IMPALA/GA3C-style baseline: free-running
+//!   executors feeding a non-blocking trajectory queue; the learner
+//!   consumes stale data and corrects with V-trace. Policy lag is
+//!   *measured* and reported (paper Claim 2 / Fig. 3c).
+
+pub mod async_driver;
+pub mod common;
+pub mod hts;
+pub mod sync_driver;
+
+pub use common::{Method, RunConfig, StopCond};
+
+use crate::metrics::TrainReport;
+use crate::Result;
+
+/// Dispatch a training run by method.
+pub fn run(method: Method, cfg: &RunConfig) -> Result<TrainReport> {
+    match method {
+        Method::Hts => hts::run_hts(cfg),
+        Method::Sync => sync_driver::run_sync(cfg),
+        Method::Async => async_driver::run_async(cfg),
+    }
+}

@@ -1,0 +1,247 @@
+//! The synchronous A2C/PPO baseline (paper Fig. 1d / Fig. 2c).
+//!
+//! Faithful to what the paper compares against (Kostrikov's A2C):
+//!   * **per-step synchronization** (α = 1): at every timestep the driver
+//!     batch-forwards all B observations, distributes actions, and waits
+//!     for the *slowest* environment to finish its step before proceeding;
+//!   * **strictly alternating** rollout and learning: after T steps the
+//!     driver trains while all executors idle.
+//!
+//! Under step-time variance this pays `E[max_j X_j]` every step — the
+//! quantity HTS-RL's batch synchronization amortizes (Claim 1) — so the
+//! Fig. 4 speedups come out of exactly this structural difference.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::{EvalWorker, Fnv, RunConfig};
+use crate::algo::sampling::sample_action;
+use crate::buffers::{BlockingQueue, RolloutStorage};
+use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch, TrainReport};
+use crate::model::manifest::Manifest;
+use crate::rng::SplitMix64;
+use crate::runtime::{ForwardPool, ModelRuntime, Trainer};
+
+/// Message to an executor: apply this action vector for this step.
+struct StepCmd {
+    actions: Vec<usize>,
+}
+
+/// Executor reply: resulting observations (post-reset on done).
+struct StepRes {
+    env: usize,
+    obs: Vec<Vec<f32>>,
+    reward: f32,
+    done: bool,
+}
+
+pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let info = manifest.model(&cfg.spec.model)?.clone();
+    let b_cols = cfg.batch_columns();
+    let n_agents = cfg.spec.n_agents;
+    let t_len = info.unroll;
+
+    let rt = ModelRuntime::new(manifest.clone())?;
+    let init = rt.init_params(&cfg.spec.model, cfg.seed)?;
+    let mut trainer =
+        Trainer::new(&rt, &cfg.spec.model, cfg.algo, init.clone(), b_cols)?;
+    let pool = ForwardPool::new(&rt, &cfg.spec.model)?;
+
+    let sps = Arc::new(SpsMeter::new());
+    let stop_flag = Arc::new(AtomicBool::new(false));
+    let results: Arc<BlockingQueue<StepRes>> = Arc::new(BlockingQueue::new());
+    let watch = Stopwatch::new();
+
+    // Per-env command mailboxes (the per-step barrier: the driver sends B
+    // commands, then blocks until B results return).
+    let cmds: Vec<Arc<BlockingQueue<StepCmd>>> =
+        (0..cfg.n_envs).map(|_| Arc::new(BlockingQueue::new())).collect();
+
+    let mut handles = Vec::new();
+    for e in 0..cfg.n_envs {
+        let spec = cfg.spec.clone();
+        let cmd = cmds[e].clone();
+        let results = results.clone();
+        let seed = cfg.seed;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
+            let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
+            let mut env = spec.build()?;
+            let obs = env.reset(&mut env_rng);
+            results.push(StepRes { env: e, obs, reward: 0.0, done: false });
+            while let Some(c) = cmd.pop() {
+                spec.steptime.sleep(&mut delay_rng);
+                let step = env.step(&c.actions, &mut env_rng);
+                let obs = if step.done {
+                    env.reset(&mut env_rng)
+                } else {
+                    step.obs.clone()
+                };
+                results.push(StepRes {
+                    env: e,
+                    obs,
+                    reward: step.reward,
+                    done: step.done,
+                });
+            }
+            Ok(())
+        }));
+    }
+
+    // collect initial observations
+    let mut cur_obs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); cfg.n_envs];
+    for _ in 0..cfg.n_envs {
+        let r = results.pop().expect("executor died");
+        cur_obs[r.env] = r.obs;
+    }
+
+    let eval = if cfg.eval_every > 0 {
+        Some(EvalWorker::spawn(
+            cfg.artifacts.clone(),
+            cfg.spec.clone(),
+            cfg.eval_episodes,
+            cfg.seed ^ 0xe7a1,
+        ))
+    } else {
+        None
+    };
+
+    let mut seed_rngs: Vec<SplitMix64> = (0..cfg.n_envs)
+        .map(|e| SplitMix64::stream(cfg.seed, 2_000 + e as u64))
+        .collect();
+    let mut storage = RolloutStorage::new(t_len, b_cols, info.obs_dim);
+    let mut episodes: Vec<EpisodePoint> = Vec::new();
+    let mut ep_rewards = vec![0.0f64; cfg.n_envs];
+    let mut sig = Fnv::default();
+    let mut last_out: crate::runtime::TrainOutput = Default::default();
+    let _ = &last_out;
+
+    'outer: loop {
+        storage.clear();
+        for _t in 0..t_len {
+            // one batched forward over all B columns
+            let mut flat = Vec::with_capacity(b_cols * info.obs_dim);
+            for obs in &cur_obs {
+                for o in obs {
+                    flat.extend_from_slice(o);
+                }
+            }
+            let (logits, _v) =
+                pool.forward(&trainer.params, &flat, b_cols)?;
+            // distribute actions; every env steps; wait for ALL (α = 1)
+            let mut actions: Vec<Vec<usize>> = Vec::with_capacity(cfg.n_envs);
+            for e in 0..cfg.n_envs {
+                let acts: Vec<usize> = (0..n_agents)
+                    .map(|a| {
+                        let col = e * n_agents + a;
+                        sample_action(
+                            &logits[col * info.act_dim
+                                ..(col + 1) * info.act_dim],
+                            seed_rngs[e].next_u64(),
+                        )
+                    })
+                    .collect();
+                cmds[e].push(StepCmd { actions: acts.clone() });
+                actions.push(acts);
+            }
+            // Barrier: collect all replies first, then process in env
+            // order so telemetry (signature, episode log) is independent
+            // of OS scheduling — the baseline must stay deterministic.
+            let mut replies: Vec<Option<StepRes>> =
+                (0..cfg.n_envs).map(|_| None).collect();
+            for _ in 0..cfg.n_envs {
+                let r = results.pop().expect("executor died");
+                let env = r.env;
+                replies[env] = Some(r);
+            }
+            for e in 0..cfg.n_envs {
+                let r = replies[e].take().unwrap();
+                for a in 0..n_agents {
+                    storage.push(
+                        e * n_agents + a,
+                        &cur_obs[e][a],
+                        actions[e][a],
+                        r.reward,
+                        r.done,
+                    );
+                    sig.update(actions[e][a] as u64);
+                }
+                sig.update(r.reward.to_bits() as u64);
+                let gsteps = sps.add(1);
+                ep_rewards[e] += r.reward as f64;
+                if r.done {
+                    episodes.push(EpisodePoint {
+                        steps: gsteps,
+                        wall_s: watch.elapsed_s(),
+                        reward: ep_rewards[e],
+                    });
+                    ep_rewards[e] = 0.0;
+                }
+                cur_obs[e] = r.obs;
+            }
+        }
+        for e in 0..cfg.n_envs {
+            for a in 0..n_agents {
+                storage.set_last_obs(e * n_agents + a, &cur_obs[e][a]);
+            }
+        }
+        // alternating phase: learn while all executors idle.
+        // On-policy: behavior == target (λ-lag 0); the a2c_delayed artifact
+        // degrades to plain A2C in that case (python test asserts this).
+        let behavior = trainer.params.clone();
+        last_out = trainer.step(&storage, &behavior)?;
+        if let Some(ev) = &eval {
+            if trainer.updates % cfg.eval_every.max(1) == 0 {
+                ev.submit(
+                    trainer.updates,
+                    sps.steps(),
+                    &watch,
+                    Arc::new(trainer.params.clone()),
+                );
+            }
+        }
+        if cfg.stop.done(sps.steps(), watch.elapsed_s(), trainer.updates) {
+            break 'outer;
+        }
+    }
+
+    stop_flag.store(true, Ordering::Relaxed);
+    for c in &cmds {
+        c.close();
+    }
+    results.close();
+    for h in handles {
+        h.join().expect("executor panicked")?;
+    }
+    let evals = match eval {
+        Some(ev) => {
+            ev.submit(
+                trainer.updates,
+                sps.steps(),
+                &watch,
+                Arc::new(trainer.params.clone()),
+            );
+            ev.finish()?
+        }
+        None => Vec::new(),
+    };
+    episodes.sort_by_key(|e| e.steps);
+
+    Ok(TrainReport {
+        method: "sync".into(),
+        env: cfg.spec.name.clone(),
+        seed: cfg.seed,
+        steps: sps.steps(),
+        updates: trainer.updates,
+        wall_s: watch.elapsed_s(),
+        episodes,
+        evals,
+        signature: sig.finish(),
+        staleness: vec![0.0], // fully on-policy
+        final_loss: last_out.total_loss,
+        final_entropy: last_out.entropy,
+    })
+}

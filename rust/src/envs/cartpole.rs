@@ -1,0 +1,149 @@
+//! CartPole-v0 dynamics (Barto–Sutton–Anderson / OpenAI Gym constants),
+//! standing in for a dense-reward Atari title. The `noise` variant
+//! perturbs the force to add stochasticity.
+
+use super::{Env, Step};
+use crate::rng::SplitMix64;
+
+const GRAVITY: f32 = 9.8;
+const MASS_CART: f32 = 1.0;
+const MASS_POLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+const LENGTH: f32 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_LIMIT: f32 = 2.4;
+pub const MAX_STEPS: usize = 200;
+
+pub struct CartPole {
+    state: [f32; 4],
+    t: usize,
+    noise: f64,
+}
+
+impl CartPole {
+    pub fn new(noise: f64) -> CartPole {
+        CartPole { state: [0.0; 4], t: 0, noise }
+    }
+
+    fn obs(&self) -> Vec<Vec<f32>> {
+        vec![self.state.to_vec()]
+    }
+}
+
+impl Env for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>> {
+        for v in self.state.iter_mut() {
+            *v = (rng.next_f64() * 0.1 - 0.05) as f32;
+        }
+        self.t = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, actions: &[usize], rng: &mut SplitMix64) -> Step {
+        let mut force = if actions[0] == 1 { FORCE_MAG } else { -FORCE_MAG };
+        if self.noise > 0.0 {
+            force += (rng.normal() * self.noise) as f32 * FORCE_MAG;
+        }
+        let [x, x_dot, theta, theta_dot] = self.state;
+        let cos = theta.cos();
+        let sin = theta.sin();
+        let temp =
+            (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin)
+                / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin - cos * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos * cos / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos / TOTAL_MASS;
+        self.state = [
+            x + TAU * x_dot,
+            x_dot + TAU * x_acc,
+            theta + TAU * theta_dot,
+            theta_dot + TAU * theta_acc,
+        ];
+        self.t += 1;
+        let fell = self.state[0].abs() > X_LIMIT
+            || self.state[2].abs() > THETA_LIMIT;
+        let done = fell || self.t >= MAX_STEPS;
+        Step { obs: self.obs(), reward: 1.0, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pole_falls_under_constant_action() {
+        let mut rng = SplitMix64::new(1);
+        let mut env = CartPole::new(0.0);
+        env.reset(&mut rng);
+        let mut steps = 0;
+        loop {
+            let s = env.step(&[1], &mut rng);
+            steps += 1;
+            if s.done {
+                break;
+            }
+        }
+        assert!(steps < MAX_STEPS, "constant push should fail, got {steps}");
+    }
+
+    #[test]
+    fn balancing_heuristic_survives_longer_than_constant() {
+        let run = |heuristic: bool| -> usize {
+            let mut rng = SplitMix64::new(2);
+            let mut env = CartPole::new(0.0);
+            let mut obs = env.reset(&mut rng);
+            let mut steps = 0;
+            loop {
+                let a = if heuristic {
+                    // push in the direction the pole is falling
+                    usize::from(obs[0][2] + obs[0][3] > 0.0)
+                } else {
+                    1
+                };
+                let s = env.step(&[a], &mut rng);
+                obs = s.obs;
+                steps += 1;
+                if s.done {
+                    return steps;
+                }
+            }
+        };
+        assert!(run(true) > 3 * run(false));
+    }
+
+    #[test]
+    fn caps_at_max_steps() {
+        let mut rng = SplitMix64::new(3);
+        let mut env = CartPole::new(0.0);
+        let mut obs = env.reset(&mut rng);
+        for t in 1..=MAX_STEPS {
+            let a = usize::from(obs[0][2] + obs[0][3] > 0.0);
+            let s = env.step(&[a], &mut rng);
+            obs = s.obs;
+            if s.done {
+                assert!(t > 50, "heuristic died too early at {t}");
+                return;
+            }
+        }
+    }
+
+    #[test]
+    fn reward_is_one_per_step() {
+        let mut rng = SplitMix64::new(4);
+        let mut env = CartPole::new(0.0);
+        env.reset(&mut rng);
+        assert_eq!(env.step(&[0], &mut rng).reward, 1.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Catch — the classic DeepMind toy game, standing in for an Atari title
+//! (DESIGN.md §3): a ball falls from a random column of a 10×5 grid, the
+//! paddle on the bottom row moves {left, stay, right}; ±1 reward when the
+//! ball reaches the bottom. Quickly learnable by A2C, which is exactly what
+//! the final-time-metric experiments need.
+
+use super::{Env, Step};
+use crate::rng::SplitMix64;
+
+pub const HEIGHT: usize = 10;
+pub const WIDTH: usize = 5;
+pub const OBS_DIM: usize = HEIGHT * WIDTH; // 50, matches `catch` model cfg
+
+pub struct Catch {
+    /// windy: ball drifts sideways with p=0.2 per step (stochastic variant)
+    windy: bool,
+    /// narrow: paddle must match the column exactly even on drift-heavy
+    /// episodes; (kept for a second difficulty tier in the Atari suite)
+    narrow: bool,
+    ball_row: usize,
+    ball_col: usize,
+    paddle_col: usize,
+}
+
+impl Catch {
+    pub fn new(windy: bool, narrow: bool) -> Catch {
+        Catch { windy, narrow, ball_row: 0, ball_col: 0, paddle_col: 0 }
+    }
+
+    fn obs(&self) -> Vec<Vec<f32>> {
+        let mut o = vec![0.0f32; OBS_DIM];
+        o[self.ball_row * WIDTH + self.ball_col] = 1.0;
+        o[(HEIGHT - 1) * WIDTH + self.paddle_col] = -1.0;
+        vec![o]
+    }
+}
+
+impl Env for Catch {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        3
+    }
+
+    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>> {
+        self.ball_row = 0;
+        self.ball_col = rng.below(WIDTH as u64) as usize;
+        self.paddle_col = WIDTH / 2;
+        self.obs()
+    }
+
+    fn step(&mut self, actions: &[usize], rng: &mut SplitMix64) -> Step {
+        match actions[0] {
+            0 => self.paddle_col = self.paddle_col.saturating_sub(1),
+            2 => self.paddle_col = (self.paddle_col + 1).min(WIDTH - 1),
+            _ => {}
+        }
+        self.ball_row += 1;
+        if self.windy && rng.next_f64() < 0.2 {
+            if rng.next_f64() < 0.5 {
+                self.ball_col = self.ball_col.saturating_sub(1);
+            } else {
+                self.ball_col = (self.ball_col + 1).min(WIDTH - 1);
+            }
+        }
+        if self.ball_row == HEIGHT - 1 {
+            let caught = if self.narrow {
+                self.ball_col == self.paddle_col
+            } else {
+                self.ball_col.abs_diff(self.paddle_col) == 0
+            };
+            let reward = if caught { 1.0 } else { -1.0 };
+            return Step { obs: self.obs(), reward, done: true };
+        }
+        Step { obs: self.obs(), reward: 0.0, done: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_is_nine_steps() {
+        let mut rng = SplitMix64::new(1);
+        let mut env = Catch::new(false, false);
+        env.reset(&mut rng);
+        for i in 0..HEIGHT - 1 {
+            let s = env.step(&[1], &mut rng);
+            assert_eq!(s.done, i == HEIGHT - 2, "step {i}");
+        }
+    }
+
+    #[test]
+    fn tracking_policy_always_catches() {
+        let mut rng = SplitMix64::new(2);
+        let mut env = Catch::new(false, false);
+        for _ in 0..50 {
+            env.reset(&mut rng);
+            loop {
+                let act = match env.ball_col.cmp(&env.paddle_col) {
+                    std::cmp::Ordering::Less => 0,
+                    std::cmp::Ordering::Equal => 1,
+                    std::cmp::Ordering::Greater => 2,
+                };
+                let s = env.step(&[act], &mut rng);
+                if s.done {
+                    assert_eq!(s.reward, 1.0);
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn obs_encodes_ball_and_paddle() {
+        let mut rng = SplitMix64::new(3);
+        let mut env = Catch::new(false, false);
+        let obs = env.reset(&mut rng);
+        let o = &obs[0];
+        assert_eq!(o.iter().filter(|&&v| v == 1.0).count(), 1);
+        assert_eq!(o.iter().filter(|&&v| v == -1.0).count(), 1);
+        assert_eq!(o.iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn windy_variant_uses_rng() {
+        // Same seed, same trajectory; the windy env must consume rng draws.
+        let mut r1 = SplitMix64::new(4);
+        let mut r2 = SplitMix64::new(4);
+        let mut e1 = Catch::new(true, false);
+        let mut e2 = Catch::new(true, false);
+        e1.reset(&mut r1);
+        e2.reset(&mut r2);
+        for _ in 0..8 {
+            let s1 = e1.step(&[1], &mut r1);
+            let s2 = e2.step(&[1], &mut r2);
+            assert_eq!(s1.obs, s2.obs);
+        }
+    }
+}

@@ -1,0 +1,564 @@
+//! FootballSim — a 2-D football micro-simulator standing in for the Google
+//! Research Football academy (DESIGN.md §3).
+//!
+//! The pitch is the unit square with the attacking goal centered at
+//! (1.0, 0.5). All 11 academy scenarios are reproduced by name with graded
+//! difficulty (start distance, keeper, defender count/speed), the same
+//! ends-on-goal scoring (goal = +1, miss/tackle/timeout = 0) and the same
+//! step-time character: `counterattack_hard` has the longest and most
+//! variable engine step time (paper §5), encoded in
+//! [`scenario_steptime`].
+//!
+//! Control model: in single-agent mode the policy controls the ball
+//! carrier (other attackers make simple forward runs); in multi-agent mode
+//! (paper Tab. 3) the first `n_agents` attackers are each controlled with
+//! their own observation. All stochasticity (pass/shot/tackle dice) comes
+//! from the caller's RNG stream — executor-side, per the determinism
+//! design.
+
+use super::{steptime::StepTimeModel, Env, Step};
+use crate::rng::SplitMix64;
+use anyhow::{bail, Result};
+
+pub const OBS_DIM: usize = 32; // matches `football` model config
+pub const ACT_DIM: usize = 8;
+
+/// Actions.
+pub const UP: usize = 0;
+pub const DOWN: usize = 1;
+pub const LEFT: usize = 2;
+pub const RIGHT: usize = 3;
+pub const SPRINT: usize = 4;
+pub const PASS: usize = 5;
+pub const SHOOT: usize = 6;
+pub const IDLE: usize = 7;
+
+const MOVE: f32 = 0.02;
+const SPRINT_MOVE: f32 = 0.035;
+const TACKLE_RADIUS: f32 = 0.035;
+const GOAL: (f32, f32) = (1.0, 0.5);
+
+#[derive(Debug, Clone)]
+struct Scenario {
+    attackers: Vec<(f32, f32)>,
+    defenders: Vec<(f32, f32)>,
+    defender_speed: f32,
+    keeper: bool,
+    max_steps: usize,
+    tackle_prob: f64,
+}
+
+pub const SCENARIOS: [&str; 11] = [
+    "empty_goal_close",
+    "empty_goal",
+    "run_to_score",
+    "run_to_score_with_keeper",
+    "pass_and_shoot_with_keeper",
+    "run_pass_and_shoot_with_keeper",
+    "3_vs_1_with_keeper",
+    "corner",
+    "counterattack_easy",
+    "counterattack_hard",
+    "11_vs_11_with_lazy_opponents",
+];
+
+fn scenario(name: &str) -> Result<Scenario> {
+    let s = match name {
+        "empty_goal_close" => Scenario {
+            attackers: vec![(0.80, 0.5)],
+            defenders: vec![],
+            defender_speed: 0.0,
+            keeper: false,
+            max_steps: 40,
+            tackle_prob: 0.0,
+        },
+        "empty_goal" => Scenario {
+            attackers: vec![(0.50, 0.5)],
+            defenders: vec![],
+            defender_speed: 0.0,
+            keeper: false,
+            max_steps: 80,
+            tackle_prob: 0.0,
+        },
+        "run_to_score" => Scenario {
+            attackers: vec![(0.25, 0.5)],
+            defenders: vec![(0.05, 0.3), (0.05, 0.5), (0.05, 0.7)],
+            defender_speed: 0.016,
+            keeper: false,
+            max_steps: 120,
+            tackle_prob: 0.25,
+        },
+        "run_to_score_with_keeper" => Scenario {
+            attackers: vec![(0.25, 0.5)],
+            defenders: vec![(0.05, 0.4), (0.05, 0.6)],
+            defender_speed: 0.017,
+            keeper: true,
+            max_steps: 120,
+            tackle_prob: 0.3,
+        },
+        "pass_and_shoot_with_keeper" => Scenario {
+            attackers: vec![(0.70, 0.30), (0.70, 0.70)],
+            defenders: vec![(0.78, 0.30)],
+            defender_speed: 0.015,
+            keeper: true,
+            max_steps: 80,
+            tackle_prob: 0.35,
+        },
+        "run_pass_and_shoot_with_keeper" => Scenario {
+            attackers: vec![(0.55, 0.35), (0.60, 0.65)],
+            defenders: vec![(0.70, 0.35)],
+            defender_speed: 0.018,
+            keeper: true,
+            max_steps: 100,
+            tackle_prob: 0.35,
+        },
+        "3_vs_1_with_keeper" => Scenario {
+            attackers: vec![(0.60, 0.30), (0.60, 0.50), (0.60, 0.70)],
+            defenders: vec![(0.75, 0.50)],
+            defender_speed: 0.016,
+            keeper: true,
+            max_steps: 80,
+            tackle_prob: 0.3,
+        },
+        "corner" => Scenario {
+            attackers: vec![(0.95, 0.05), (0.85, 0.35)],
+            defenders: vec![(0.92, 0.45), (0.90, 0.55), (0.94, 0.40),
+                            (0.88, 0.50)],
+            defender_speed: 0.018,
+            keeper: true,
+            max_steps: 60,
+            tackle_prob: 0.45,
+        },
+        "counterattack_easy" => Scenario {
+            attackers: vec![(0.40, 0.40), (0.40, 0.60)],
+            defenders: vec![(0.70, 0.50)],
+            defender_speed: 0.015,
+            keeper: true,
+            max_steps: 150,
+            tackle_prob: 0.3,
+        },
+        "counterattack_hard" => Scenario {
+            attackers: vec![(0.40, 0.40), (0.40, 0.60)],
+            defenders: vec![(0.65, 0.40), (0.65, 0.60)],
+            defender_speed: 0.017,
+            keeper: true,
+            max_steps: 150,
+            tackle_prob: 0.35,
+        },
+        "11_vs_11_with_lazy_opponents" => Scenario {
+            attackers: vec![(0.10, 0.50), (0.15, 0.30), (0.15, 0.70),
+                            (0.05, 0.50)],
+            defenders: vec![(0.50, 0.30), (0.50, 0.50), (0.50, 0.70),
+                            (0.70, 0.40), (0.70, 0.60)],
+            defender_speed: 0.002, // lazy
+            keeper: true,
+            max_steps: 250,
+            tackle_prob: 0.15,
+        },
+        other => bail!("unknown football scenario '{other}'"),
+    };
+    Ok(s)
+}
+
+/// Per-scenario engine step-time model (µs). The paper's own measurement
+/// ("an actor generates about λ₀ = 100 frames per second", §4.2) puts the
+/// real GFootball engine at ~10 ms/step on the simple scenarios; these
+/// models track that scale, and `counterattack_hard` has the longest mean
+/// and the fattest tail, mirroring the paper's observation that it
+/// dominates GFootball step-time variance.
+pub fn scenario_steptime(name: &str) -> Result<StepTimeModel> {
+    scenario(name)?; // validate name
+    Ok(match name {
+        "empty_goal_close" => {
+            StepTimeModel::Gamma { shape: 8.0, mean_us: 2_500.0 }
+        }
+        "empty_goal" => StepTimeModel::Gamma { shape: 8.0, mean_us: 3_000.0 },
+        "run_to_score" => {
+            StepTimeModel::Gamma { shape: 6.0, mean_us: 4_000.0 }
+        }
+        "run_to_score_with_keeper" => {
+            StepTimeModel::Gamma { shape: 6.0, mean_us: 4_500.0 }
+        }
+        "pass_and_shoot_with_keeper" => {
+            StepTimeModel::Gamma { shape: 5.0, mean_us: 5_000.0 }
+        }
+        "run_pass_and_shoot_with_keeper" => {
+            StepTimeModel::Gamma { shape: 5.0, mean_us: 5_500.0 }
+        }
+        "3_vs_1_with_keeper" => {
+            StepTimeModel::Gamma { shape: 4.0, mean_us: 6_000.0 }
+        }
+        "corner" => StepTimeModel::Gamma { shape: 3.0, mean_us: 8_000.0 },
+        "counterattack_easy" => {
+            StepTimeModel::Gamma { shape: 2.0, mean_us: 12_000.0 }
+        }
+        "counterattack_hard" => {
+            StepTimeModel::Gamma { shape: 1.5, mean_us: 20_000.0 }
+        }
+        "11_vs_11_with_lazy_opponents" => {
+            StepTimeModel::Gamma { shape: 3.0, mean_us: 15_000.0 }
+        }
+        _ => unreachable!(),
+    })
+}
+
+pub struct Football {
+    sc: Scenario,
+    name: String,
+    n_ctrl: usize,
+    attackers: Vec<(f32, f32)>,
+    defenders: Vec<(f32, f32)>,
+    keeper: Option<(f32, f32)>,
+    carrier: usize,
+    t: usize,
+}
+
+impl Football {
+    pub fn new(scenario_name: &str, n_agents: usize) -> Result<Football> {
+        let sc = scenario(scenario_name)?;
+        let n_ctrl = n_agents.max(1).min(sc.attackers.len());
+        Ok(Football {
+            name: scenario_name.to_string(),
+            attackers: sc.attackers.clone(),
+            defenders: sc.defenders.clone(),
+            keeper: if sc.keeper { Some((0.97, 0.5)) } else { None },
+            carrier: 0,
+            t: 0,
+            sc,
+            n_ctrl,
+        })
+    }
+
+    pub fn scenario_name(&self) -> &str {
+        &self.name
+    }
+
+    fn dist(a: (f32, f32), b: (f32, f32)) -> f32 {
+        ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+    }
+
+    /// Probability a shot from `pos` scores, given keeper/defender state.
+    fn shot_prob(&self, pos: (f32, f32)) -> f64 {
+        let d = Self::dist(pos, GOAL) as f64;
+        let mut p = 0.95 - 1.4 * d;
+        if let Some(k) = self.keeper {
+            // keeper blocks proportionally to alignment with the shot line
+            let dy = (k.1 - pos.1).abs() as f64;
+            p -= 0.45 * (-dy * dy / 0.02).exp();
+        }
+        let pressure = self
+            .defenders
+            .iter()
+            .filter(|&&def| Self::dist(def, pos) < 0.08)
+            .count() as f64;
+        p -= 0.2 * pressure;
+        p.clamp(0.02, 0.98)
+    }
+
+    fn move_agent(pos: &mut (f32, f32), action: usize) {
+        match action {
+            UP => pos.1 = (pos.1 - MOVE).max(0.0),
+            DOWN => pos.1 = (pos.1 + MOVE).min(1.0),
+            LEFT => pos.0 = (pos.0 - MOVE).max(0.0),
+            RIGHT => pos.0 = (pos.0 + MOVE).min(1.0),
+            SPRINT => pos.0 = (pos.0 + SPRINT_MOVE).min(1.0),
+            _ => {}
+        }
+    }
+
+    fn obs_for(&self, agent: usize) -> Vec<f32> {
+        let me = self.attackers[agent];
+        let ball = self.attackers[self.carrier];
+        let mut o = vec![0.0f32; OBS_DIM];
+        o[0] = me.0;
+        o[1] = me.1;
+        o[2] = ball.0;
+        o[3] = ball.1;
+        o[4] = if self.carrier == agent { 1.0 } else { 0.0 };
+        o[5] = GOAL.0 - me.0;
+        o[6] = GOAL.1 - me.1;
+        if let Some(k) = self.keeper {
+            o[7] = k.0 - me.0;
+            o[8] = k.1 - me.1;
+            o[9] = 1.0;
+        }
+        for (i, &d) in self.defenders.iter().take(3).enumerate() {
+            o[10 + 2 * i] = d.0 - me.0;
+            o[11 + 2 * i] = d.1 - me.1;
+        }
+        o[16] = self.defenders.len() as f32 / 5.0;
+        let mut mates = 0;
+        for (i, &a) in self.attackers.iter().enumerate() {
+            if i != agent && mates < 2 {
+                o[17 + 2 * mates] = a.0 - me.0;
+                o[18 + 2 * mates] = a.1 - me.1;
+                mates += 1;
+            }
+        }
+        o[21] = self.t as f32 / self.sc.max_steps as f32;
+        o[22] = Self::dist(me, GOAL);
+        o[23] = self.shot_prob(ball) as f32;
+        o[24] = self.carrier as f32 / self.attackers.len() as f32;
+        o
+    }
+
+    /// Attacker index controlled by agent slot `a`. In single-agent mode
+    /// the policy controls the *active player* — the ball carrier — so
+    /// control follows passes (GFootball's active-player switching). In
+    /// multi-agent mode each agent is pinned to its own attacker (Tab. 3).
+    fn ctrl_idx(&self, a: usize) -> usize {
+        if self.n_ctrl == 1 {
+            self.carrier
+        } else {
+            a
+        }
+    }
+
+    fn all_obs(&self) -> Vec<Vec<f32>> {
+        (0..self.n_ctrl).map(|i| self.obs_for(self.ctrl_idx(i))).collect()
+    }
+
+    fn finish(&self, reward: f32) -> Step {
+        Step { obs: self.all_obs(), reward, done: true }
+    }
+}
+
+impl Env for Football {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n_ctrl
+    }
+
+    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>> {
+        self.attackers = self.sc.attackers.clone();
+        self.defenders = self.sc.defenders.clone();
+        // small positional jitter so episodes differ (seeded)
+        for p in self.attackers.iter_mut().chain(self.defenders.iter_mut()) {
+            p.0 = (p.0 + (rng.next_f32() - 0.5) * 0.02).clamp(0.0, 1.0);
+            p.1 = (p.1 + (rng.next_f32() - 0.5) * 0.02).clamp(0.0, 1.0);
+        }
+        self.keeper = if self.sc.keeper { Some((0.97, 0.5)) } else { None };
+        self.carrier = 0;
+        self.t = 0;
+        self.all_obs()
+    }
+
+    fn step(&mut self, actions: &[usize], rng: &mut SplitMix64) -> Step {
+        assert_eq!(actions.len(), self.n_ctrl);
+        self.t += 1;
+
+        // 1. controlled agents act (carrier action may end the episode)
+        let controlled: Vec<usize> =
+            (0..self.n_ctrl).map(|a| self.ctrl_idx(a)).collect();
+        for (a, &act) in actions.iter().enumerate() {
+            let i = controlled[a];
+            if i == self.carrier {
+                match act {
+                    SHOOT => {
+                        let p = self.shot_prob(self.attackers[i]);
+                        let scored = rng.next_f64() < p;
+                        return self.finish(if scored { 1.0 } else { 0.0 });
+                    }
+                    PASS => {
+                        // pass to the teammate closest to goal; 10% turnover
+                        if self.attackers.len() > 1 {
+                            if rng.next_f64() < 0.1 {
+                                return self.finish(0.0);
+                            }
+                            let target = (0..self.attackers.len())
+                                .filter(|&j| j != i)
+                                .min_by(|&a, &b| {
+                                    Self::dist(self.attackers[a], GOAL)
+                                        .partial_cmp(&Self::dist(
+                                            self.attackers[b],
+                                            GOAL,
+                                        ))
+                                        .unwrap()
+                                })
+                                .unwrap();
+                            self.carrier = target;
+                        }
+                    }
+                    a => Self::move_agent(&mut self.attackers[i], a),
+                }
+            } else {
+                Self::move_agent(&mut self.attackers[i], act);
+            }
+        }
+        // uncontrolled attackers make forward runs; an uncontrolled
+        // carrier (possible in partial multi-agent control) advances too
+        for i in 0..self.attackers.len() {
+            if !controlled.contains(&i) {
+                self.attackers[i].0 = (self.attackers[i].0 + 0.012).min(0.9);
+            }
+        }
+
+        // 2. defenders chase the carrier; tackle chance when close
+        let carrier_pos = self.attackers[self.carrier];
+        for d in self.defenders.iter_mut() {
+            let dx = carrier_pos.0 - d.0;
+            let dy = carrier_pos.1 - d.1;
+            let n = (dx * dx + dy * dy).sqrt().max(1e-6);
+            d.0 += self.sc.defender_speed * dx / n;
+            d.1 += self.sc.defender_speed * dy / n;
+        }
+        for d in self.defenders.clone() {
+            if Self::dist(d, carrier_pos) < TACKLE_RADIUS
+                && rng.next_f64() < self.sc.tackle_prob
+            {
+                return self.finish(0.0);
+            }
+        }
+
+        // 3. keeper tracks ball y on the goal line
+        if let Some(k) = self.keeper.as_mut() {
+            let dy = carrier_pos.1 - k.1;
+            k.1 = (k.1 + dy.clamp(-0.012, 0.012)).clamp(0.35, 0.65);
+        }
+
+        // 4. walking the ball in always counts as a goal
+        if carrier_pos.0 > 0.985 && (carrier_pos.1 - 0.5).abs() < 0.1 {
+            let blocked = self.keeper.map_or(false, |k| {
+                Self::dist(k, carrier_pos) < 0.03
+            });
+            return self.finish(if blocked { 0.0 } else { 1.0 });
+        }
+
+        if self.t >= self.sc.max_steps {
+            return self.finish(0.0);
+        }
+        Step { obs: self.all_obs(), reward: 0.0, done: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_scenarios_construct() {
+        for name in SCENARIOS {
+            let env = Football::new(name, 1).unwrap();
+            assert_eq!(env.obs_dim(), OBS_DIM);
+            scenario_steptime(name).unwrap();
+        }
+    }
+
+    fn run_policy(
+        name: &str,
+        episodes: usize,
+        seed: u64,
+        policy: impl Fn(&Football, &[f32]) -> usize,
+    ) -> f64 {
+        let mut rng = SplitMix64::new(seed);
+        let mut total = 0.0;
+        for _ in 0..episodes {
+            let mut env = Football::new(name, 1).unwrap();
+            let mut obs = env.reset(&mut rng);
+            loop {
+                let act = policy(&env, &obs[0]);
+                let s = env.step(&[act], &mut rng);
+                obs = s.obs;
+                if s.done {
+                    total += s.reward as f64;
+                    break;
+                }
+            }
+        }
+        total / episodes as f64
+    }
+
+    /// sprint toward goal, dodge a defender closing in, shoot when the
+    /// estimated shot probability is high enough
+    fn decent(env: &Football, obs: &[f32]) -> usize {
+        let _ = env;
+        if obs[23] > 0.9 {
+            return SHOOT;
+        }
+        // nearest defender (relative coords at obs[10..12]); teammate at
+        // obs[17..19]
+        let (dx, dy) = (obs[10], obs[11]);
+        let dist = (dx * dx + dy * dy).sqrt();
+        let defender_present = dx != 0.0 || dy != 0.0;
+        let teammate_present = obs[17] != 0.0 || obs[18] != 0.0;
+        if defender_present && dist < 0.10 && dx > -0.02 {
+            if teammate_present {
+                return PASS; // offload under pressure
+            }
+            // dodge vertically away from the defender
+            return if dy > 0.0 { UP } else { DOWN };
+        }
+        SPRINT
+    }
+
+    fn random_policy(_: &Football, obs: &[f32]) -> usize {
+        // pseudo-random but deterministic from obs
+        (obs[0].to_bits() as usize) % ACT_DIM
+    }
+
+    #[test]
+    fn easy_scenarios_beatable_by_heuristic() {
+        assert!(run_policy("empty_goal_close", 50, 1, decent) > 0.8);
+        assert!(run_policy("empty_goal", 50, 2, decent) > 0.7);
+    }
+
+    #[test]
+    fn difficulty_ordering_holds() {
+        let easy = run_policy("empty_goal_close", 60, 3, decent);
+        let mid = run_policy("3_vs_1_with_keeper", 60, 3, decent);
+        let hard = run_policy("corner", 60, 3, decent);
+        assert!(easy > mid, "easy={easy} mid={mid}");
+        assert!(mid >= hard, "mid={mid} hard={hard}");
+    }
+
+    #[test]
+    fn heuristic_beats_random() {
+        for name in ["empty_goal", "counterattack_easy"] {
+            let h = run_policy(name, 50, 4, decent);
+            let r = run_policy(name, 50, 4, random_policy);
+            assert!(h > r, "{name}: heuristic={h} random={r}");
+        }
+    }
+
+    #[test]
+    fn multi_agent_shapes() {
+        let mut rng = SplitMix64::new(5);
+        let mut env = Football::new("3_vs_1_with_keeper", 3).unwrap();
+        let obs = env.reset(&mut rng);
+        assert_eq!(obs.len(), 3);
+        let s = env.step(&[SPRINT, SPRINT, SPRINT], &mut rng);
+        assert_eq!(s.obs.len(), 3);
+    }
+
+    #[test]
+    fn pass_transfers_carrier() {
+        let mut rng = SplitMix64::new(6);
+        let mut env = Football::new("pass_and_shoot_with_keeper", 1).unwrap();
+        env.reset(&mut rng);
+        assert_eq!(env.carrier, 0);
+        // try until the 10% turnover dice doesn't fire
+        for _ in 0..20 {
+            let s = env.step(&[PASS], &mut rng);
+            if s.done {
+                env.reset(&mut rng);
+                continue;
+            }
+            break;
+        }
+        assert_eq!(env.carrier, 1);
+    }
+
+    #[test]
+    fn steptime_ordering_counterattack_hard_is_slowest() {
+        let mean = |name: &str| scenario_steptime(name).unwrap().mean_us();
+        assert!(mean("counterattack_hard") > mean("empty_goal_close") * 5.0);
+        assert!(mean("counterattack_hard") >= mean("counterattack_easy"));
+    }
+}

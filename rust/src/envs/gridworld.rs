@@ -1,0 +1,147 @@
+//! 8×8 GridWorld with a per-episode random goal: one-hot agent position
+//! (64) + normalized goal offset (2) = 66 observation features. Dense
+//! step penalty, +1 at the goal. The `sparse` variant removes the shaping
+//! penalty, making credit assignment harder (second difficulty tier).
+
+use super::{Env, Step};
+use crate::rng::SplitMix64;
+
+pub const N: usize = 8;
+pub const OBS_DIM: usize = N * N + 2; // 66, matches `gridworld` model cfg
+pub const MAX_STEPS: usize = 64;
+
+pub struct GridWorld {
+    sparse: bool,
+    agent: (usize, usize),
+    goal: (usize, usize),
+    t: usize,
+}
+
+impl GridWorld {
+    pub fn new(sparse: bool) -> GridWorld {
+        GridWorld { sparse, agent: (0, 0), goal: (N - 1, N - 1), t: 0 }
+    }
+
+    fn obs(&self) -> Vec<Vec<f32>> {
+        let mut o = vec![0.0f32; OBS_DIM];
+        o[self.agent.0 * N + self.agent.1] = 1.0;
+        o[N * N] = (self.goal.0 as f32 - self.agent.0 as f32) / N as f32;
+        o[N * N + 1] = (self.goal.1 as f32 - self.agent.1 as f32) / N as f32;
+        vec![o]
+    }
+}
+
+impl Env for GridWorld {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        4
+    }
+
+    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>> {
+        self.agent =
+            ((rng.below(N as u64)) as usize, (rng.below(N as u64)) as usize);
+        loop {
+            self.goal = (
+                (rng.below(N as u64)) as usize,
+                (rng.below(N as u64)) as usize,
+            );
+            if self.goal != self.agent {
+                break;
+            }
+        }
+        self.t = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, actions: &[usize], _rng: &mut SplitMix64) -> Step {
+        let (r, c) = self.agent;
+        self.agent = match actions[0] {
+            0 => (r.saturating_sub(1), c),
+            1 => ((r + 1).min(N - 1), c),
+            2 => (r, c.saturating_sub(1)),
+            _ => (r, (c + 1).min(N - 1)),
+        };
+        self.t += 1;
+        if self.agent == self.goal {
+            return Step { obs: self.obs(), reward: 1.0, done: true };
+        }
+        let reward = if self.sparse { 0.0 } else { -0.01 };
+        Step { obs: self.obs(), reward, done: self.t >= MAX_STEPS }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_policy_reaches_goal() {
+        let mut rng = SplitMix64::new(1);
+        let mut env = GridWorld::new(false);
+        for _ in 0..30 {
+            env.reset(&mut rng);
+            let mut total = 0.0;
+            loop {
+                let act = if env.agent.0 < env.goal.0 {
+                    1
+                } else if env.agent.0 > env.goal.0 {
+                    0
+                } else if env.agent.1 < env.goal.1 {
+                    3
+                } else {
+                    2
+                };
+                let s = env.step(&[act], &mut rng);
+                total += s.reward;
+                if s.done {
+                    break;
+                }
+            }
+            assert!(total > 0.8, "greedy total={total}");
+        }
+    }
+
+    #[test]
+    fn timeout_after_max_steps() {
+        let mut rng = SplitMix64::new(2);
+        let mut env = GridWorld::new(false);
+        env.reset(&mut rng);
+        env.goal = (7, 7);
+        env.agent = (0, 0);
+        let mut n = 0;
+        loop {
+            // bounce between two cells, never reach goal
+            let act = if n % 2 == 0 { 0 } else { 1 };
+            n += 1;
+            if env.step(&[act], &mut rng).done {
+                break;
+            }
+        }
+        assert_eq!(n, MAX_STEPS);
+    }
+
+    #[test]
+    fn goal_never_equals_start() {
+        let mut rng = SplitMix64::new(3);
+        let mut env = GridWorld::new(false);
+        for _ in 0..200 {
+            env.reset(&mut rng);
+            assert_ne!(env.agent, env.goal);
+        }
+    }
+
+    #[test]
+    fn obs_one_hot_plus_offset() {
+        let mut rng = SplitMix64::new(4);
+        let mut env = GridWorld::new(false);
+        let o = env.reset(&mut rng);
+        assert_eq!(o[0].len(), OBS_DIM);
+        assert_eq!(
+            o[0][..N * N].iter().filter(|&&v| v == 1.0).count(),
+            1
+        );
+    }
+}

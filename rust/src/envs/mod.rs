@@ -1,0 +1,198 @@
+//! Environment substrate.
+//!
+//! The paper evaluates on Atari (ALE) and Google Research Football —
+//! neither is available here, so per the substitution rule (DESIGN.md §3)
+//! we build synthetic-but-genuinely-learnable replacements that preserve
+//! what the paper's *systems* claims depend on: episodic structure,
+//! actor-critic learnability, multi-agent support, and — critically — a
+//! configurable per-step wall-time distribution ([`steptime`]), since the
+//! paper's throughput story is entirely about step-time variance.
+//!
+//! All environment stochasticity flows through the `&mut SplitMix64`
+//! passed by the caller (the executor), never internal state — this is
+//! what lets HTS-RL defer *all* randomness to executors and stay fully
+//! deterministic under asynchronous actor scheduling.
+
+pub mod cartpole;
+pub mod catch;
+pub mod football;
+pub mod gridworld;
+pub mod steptime;
+pub mod suite;
+
+use crate::rng::SplitMix64;
+use anyhow::{bail, Result};
+pub use steptime::StepTimeModel;
+
+/// Result of a single environment step (for one agent slot the obs is
+/// per-agent; reward/done are per-environment).
+#[derive(Debug, Clone)]
+pub struct Step {
+    /// One observation per controlled agent, each `obs_dim` long.
+    pub obs: Vec<Vec<f32>>,
+    pub reward: f32,
+    pub done: bool,
+}
+
+/// A (possibly multi-agent) episodic environment.
+///
+/// `reset`/`step` take the caller's RNG stream so that trajectories are a
+/// pure function of that stream — the determinism backbone of HTS-RL.
+pub trait Env: Send {
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// Number of controlled agents (observations/actions per step).
+    fn n_agents(&self) -> usize {
+        1
+    }
+    /// Reset and return initial per-agent observations.
+    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>>;
+    /// Apply one action per agent.
+    fn step(&mut self, actions: &[usize], rng: &mut SplitMix64) -> Step;
+}
+
+/// Everything needed to (re)create an environment instance — specs are
+/// cheap to clone and are the unit the registry, evaluator, and all
+/// drivers share.
+#[derive(Debug, Clone)]
+pub struct EnvSpec {
+    pub name: String,
+    /// Model-config name in the artifact manifest (obs/act dims).
+    pub model: String,
+    pub n_agents: usize,
+    pub steptime: StepTimeModel,
+}
+
+impl EnvSpec {
+    pub fn by_name(name: &str) -> Result<EnvSpec> {
+        let (model, default_steptime) = match name {
+            "catch" | "catch_windy" | "catch_narrow" => {
+                ("catch", StepTimeModel::None)
+            }
+            "gridworld" | "gridworld_sparse" => {
+                ("gridworld", StepTimeModel::None)
+            }
+            "cartpole" | "cartpole_noisy" => ("cartpole", StepTimeModel::None),
+            n if n.starts_with("football/") => {
+                ("football", football::scenario_steptime(
+                    n.trim_start_matches("football/"))?)
+            }
+            _ => bail!("unknown env '{name}'"),
+        };
+        Ok(EnvSpec {
+            name: name.to_string(),
+            model: model.to_string(),
+            n_agents: 1,
+            steptime: default_steptime,
+        })
+    }
+
+    pub fn with_agents(mut self, n: usize) -> EnvSpec {
+        self.n_agents = n;
+        self
+    }
+
+    pub fn with_steptime(mut self, st: StepTimeModel) -> EnvSpec {
+        self.steptime = st;
+        self
+    }
+
+    /// Instantiate a fresh environment replica.
+    pub fn build(&self) -> Result<Box<dyn Env>> {
+        Ok(match self.name.as_str() {
+            "catch" => Box::new(catch::Catch::new(false, false)),
+            "catch_windy" => Box::new(catch::Catch::new(true, false)),
+            "catch_narrow" => Box::new(catch::Catch::new(false, true)),
+            "gridworld" => Box::new(gridworld::GridWorld::new(false)),
+            "gridworld_sparse" => Box::new(gridworld::GridWorld::new(true)),
+            "cartpole" => Box::new(cartpole::CartPole::new(0.0)),
+            "cartpole_noisy" => Box::new(cartpole::CartPole::new(0.05)),
+            n if n.starts_with("football/") => Box::new(
+                football::Football::new(
+                    n.trim_start_matches("football/"),
+                    self.n_agents,
+                )?,
+            ),
+            other => bail!("unknown env '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roll(spec: &EnvSpec, seed: u64, steps: usize) -> Vec<(usize, f32, bool)> {
+        let mut rng = SplitMix64::stream(seed, 0);
+        let mut env = spec.build().unwrap();
+        let mut obs = env.reset(&mut rng);
+        let mut out = Vec::new();
+        for _ in 0..steps {
+            let acts: Vec<usize> = obs
+                .iter()
+                .map(|_| rng.below(env.act_dim() as u64) as usize)
+                .collect();
+            let s = env.step(&acts, &mut rng);
+            out.push((acts[0], s.reward, s.done));
+            obs = if s.done { env.reset(&mut rng) } else { s.obs };
+        }
+        out
+    }
+
+    #[test]
+    fn all_envs_build_and_step() {
+        for name in suite::ALL_ENVS {
+            let spec = EnvSpec::by_name(name).unwrap();
+            let mut rng = SplitMix64::new(1);
+            let mut env = spec.build().unwrap();
+            let obs = env.reset(&mut rng);
+            assert_eq!(obs.len(), env.n_agents(), "{name}");
+            assert!(obs.iter().all(|o| o.len() == env.obs_dim()), "{name}");
+            for _ in 0..50 {
+                let acts = vec![0usize; env.n_agents()];
+                let s = env.step(&acts, &mut rng);
+                assert!(s.obs.iter().all(|o| o.len() == env.obs_dim()));
+                assert!(s.reward.is_finite());
+                if s.done {
+                    env.reset(&mut rng);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trajectories_deterministic_in_stream() {
+        for name in ["catch", "gridworld", "cartpole", "football/3_vs_1_with_keeper"] {
+            let spec = EnvSpec::by_name(name).unwrap();
+            assert_eq!(roll(&spec, 42, 200), roll(&spec, 42, 200), "{name}");
+            assert_ne!(roll(&spec, 42, 200), roll(&spec, 43, 200), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_env_rejected() {
+        assert!(EnvSpec::by_name("nope").is_err());
+        assert!(EnvSpec::by_name("football/nope").is_err());
+    }
+
+    #[test]
+    fn episodes_terminate() {
+        for name in suite::ALL_ENVS {
+            let spec = EnvSpec::by_name(name).unwrap();
+            let mut rng = SplitMix64::new(3);
+            let mut env = spec.build().unwrap();
+            env.reset(&mut rng);
+            let mut done_seen = false;
+            for _ in 0..3000 {
+                let acts: Vec<usize> = (0..env.n_agents())
+                    .map(|_| rng.below(env.act_dim() as u64) as usize)
+                    .collect();
+                if env.step(&acts, &mut rng).done {
+                    done_seen = true;
+                    break;
+                }
+            }
+            assert!(done_seen, "{name} never terminates");
+        }
+    }
+}

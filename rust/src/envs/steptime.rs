@@ -1,0 +1,132 @@
+//! Environment step-time models.
+//!
+//! The paper's throughput analysis (Claim 1 / Eq. 7, Fig. 3, Fig. 4-left)
+//! is parameterized entirely by the distribution of the per-step wall
+//! time. Real ALE/GFootball engines are substituted (DESIGN.md §3) by
+//! injecting sampled delays in the executor, so the relative throughput
+//! comparisons between drivers see exactly the variance profile the paper
+//! studies — at µs scale so experiments fit the testbed.
+
+use crate::rng::SplitMix64;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepTimeModel {
+    /// No injected delay (pure-compute envs).
+    None,
+    /// Fixed delay in microseconds (zero variance).
+    Constant { us: f64 },
+    /// Exponential with the given mean (CoV² = 1).
+    Exponential { mean_us: f64 },
+    /// Gamma with `shape` and mean (CoV² = 1/shape): the paper's model.
+    Gamma { shape: f64, mean_us: f64 },
+}
+
+impl StepTimeModel {
+    /// Sample a step duration in microseconds.
+    pub fn sample_us(&self, rng: &mut SplitMix64) -> f64 {
+        match *self {
+            StepTimeModel::None => 0.0,
+            StepTimeModel::Constant { us } => us,
+            StepTimeModel::Exponential { mean_us } => {
+                rng.exponential(1.0 / mean_us)
+            }
+            StepTimeModel::Gamma { shape, mean_us } => {
+                // Gamma(α, β) has mean α/β ⇒ β = α/mean.
+                rng.gamma(shape, shape / mean_us)
+            }
+        }
+    }
+
+    /// Sample and actually sleep for that duration.
+    pub fn sleep(&self, rng: &mut SplitMix64) -> f64 {
+        let us = self.sample_us(rng);
+        if us > 0.0 {
+            std::thread::sleep(std::time::Duration::from_nanos(
+                (us * 1000.0) as u64,
+            ));
+        }
+        us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        match *self {
+            StepTimeModel::None => 0.0,
+            StepTimeModel::Constant { us } => us,
+            StepTimeModel::Exponential { mean_us } => mean_us,
+            StepTimeModel::Gamma { mean_us, .. } => mean_us,
+        }
+    }
+
+    /// Squared coefficient of variation — the paper's variance axis.
+    pub fn cov_squared(&self) -> f64 {
+        match *self {
+            StepTimeModel::None | StepTimeModel::Constant { .. } => 0.0,
+            StepTimeModel::Exponential { .. } => 1.0,
+            StepTimeModel::Gamma { shape, .. } => 1.0 / shape,
+        }
+    }
+
+    /// Scale the mean (used by throughput sweeps).
+    pub fn scaled(&self, factor: f64) -> StepTimeModel {
+        match *self {
+            StepTimeModel::None => StepTimeModel::None,
+            StepTimeModel::Constant { us } => {
+                StepTimeModel::Constant { us: us * factor }
+            }
+            StepTimeModel::Exponential { mean_us } => {
+                StepTimeModel::Exponential { mean_us: mean_us * factor }
+            }
+            StepTimeModel::Gamma { shape, mean_us } => {
+                StepTimeModel::Gamma { shape, mean_us: mean_us * factor }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::describe;
+
+    #[test]
+    fn sample_means_match() {
+        let models = [
+            StepTimeModel::Constant { us: 100.0 },
+            StepTimeModel::Exponential { mean_us: 100.0 },
+            StepTimeModel::Gamma { shape: 4.0, mean_us: 100.0 },
+        ];
+        for m in models {
+            let mut rng = SplitMix64::new(1);
+            let xs: Vec<f64> =
+                (0..20000).map(|_| m.sample_us(&mut rng)).collect();
+            let mean = describe::mean(&xs);
+            assert!(
+                (mean - 100.0).abs() < 3.0,
+                "{m:?} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn cov_squared_matches_samples() {
+        let m = StepTimeModel::Gamma { shape: 2.0, mean_us: 50.0 };
+        let mut rng = SplitMix64::new(2);
+        let xs: Vec<f64> = (0..30000).map(|_| m.sample_us(&mut rng)).collect();
+        assert!((describe::cov_squared(&xs) - 0.5).abs() < 0.05);
+        assert_eq!(m.cov_squared(), 0.5);
+    }
+
+    #[test]
+    fn none_is_free() {
+        let mut rng = SplitMix64::new(3);
+        assert_eq!(StepTimeModel::None.sample_us(&mut rng), 0.0);
+        assert_eq!(StepTimeModel::None.cov_squared(), 0.0);
+    }
+
+    #[test]
+    fn scaling() {
+        let m = StepTimeModel::Gamma { shape: 4.0, mean_us: 100.0 };
+        assert_eq!(m.scaled(2.0).mean_us(), 200.0);
+        assert_eq!(m.scaled(2.0).cov_squared(), m.cov_squared());
+    }
+}

@@ -1,0 +1,62 @@
+//! Named experiment suites mapping the paper's evaluation workloads onto
+//! the synthetic substrate (see DESIGN.md §3 for the substitution table).
+
+use super::EnvSpec;
+use anyhow::Result;
+
+/// All registered single-env names (football scenarios use the
+/// `football/<scenario>` form).
+pub const ALL_ENVS: [&str; 7] = [
+    "catch",
+    "catch_windy",
+    "catch_narrow",
+    "gridworld",
+    "gridworld_sparse",
+    "cartpole",
+    "cartpole_noisy",
+];
+
+/// The 6-game "Atari-sim" suite used for Tab. 1 (final-time metric).
+pub const ATARI_SUITE: [&str; 6] = [
+    "catch",
+    "catch_windy",
+    "catch_narrow",
+    "gridworld",
+    "gridworld_sparse",
+    "cartpole",
+];
+
+/// All 11 academy scenarios for Tab. 2 (required-time metric).
+pub fn football_suite() -> Vec<String> {
+    super::football::SCENARIOS
+        .iter()
+        .map(|s| format!("football/{s}"))
+        .collect()
+}
+
+pub fn specs(names: &[&str]) -> Result<Vec<EnvSpec>> {
+    names.iter().map(|n| EnvSpec::by_name(n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_resolve() {
+        specs(&ATARI_SUITE).unwrap();
+        for name in football_suite() {
+            EnvSpec::by_name(&name).unwrap();
+        }
+    }
+
+    #[test]
+    fn atari_suite_covers_three_model_configs() {
+        let models: std::collections::BTreeSet<String> = specs(&ATARI_SUITE)
+            .unwrap()
+            .into_iter()
+            .map(|s| s.model)
+            .collect();
+        assert_eq!(models.len(), 3);
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig. 3 — the paper's analytic claims overlaid on simulation.
+//!
+//! (a) expected runtime vs step-time variance 1/β² at α = 4;
+//! (b) expected runtime vs sync interval α at β = 2;
+//! (c) expected policy lag vs number of actors (M/M/1, λ₀=100, µ=4000).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::simulator::{claim1, claim2};
+use crate::util::csv::{markdown_table, CsvWriter};
+
+const K: u64 = 4096;
+const N_ENVS: usize = 16;
+const ACTOR_C: f64 = 0.001;
+
+pub fn fig3a(out: &Path) -> Result<()> {
+    let mut w = CsvWriter::create(
+        out.join("fig3a.csv"),
+        &["inv_beta_sq", "beta", "analytic", "simulated"],
+    )?;
+    let mut rows = Vec::new();
+    for &beta in &[4.0f64, 2.83, 2.0, 1.41, 1.15, 1.0, 0.82, 0.71] {
+        let analytic = claim1::expected_runtime(K as f64, N_ENVS, 4, beta,
+                                                ACTOR_C);
+        let sim =
+            claim1::simulate_runtime_mean(K, N_ENVS, 4, beta, ACTOR_C, 30, 7);
+        let var = 1.0 / (beta * beta);
+        w.row(&[var, beta, analytic, sim])?;
+        rows.push(vec![
+            format!("{var:.3}"),
+            format!("{analytic:.1}"),
+            format!("{sim:.1}"),
+            format!("{:+.1}%", 100.0 * (analytic - sim) / sim),
+        ]);
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(
+            &["1/β² (variance)", "Eq.7", "simulated", "err"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+pub fn fig3b(out: &Path) -> Result<()> {
+    let mut w = CsvWriter::create(
+        out.join("fig3b.csv"),
+        &["alpha", "analytic", "simulated"],
+    )?;
+    let mut rows = Vec::new();
+    for &alpha in &[1usize, 2, 4, 8, 16, 32, 64] {
+        let analytic =
+            claim1::expected_runtime(K as f64, N_ENVS, alpha, 2.0, ACTOR_C);
+        let sim = claim1::simulate_runtime_mean(
+            K, N_ENVS, alpha, 2.0, ACTOR_C, 30, 11);
+        w.row(&[alpha as f64, analytic, sim])?;
+        rows.push(vec![
+            alpha.to_string(),
+            format!("{analytic:.1}"),
+            format!("{sim:.1}"),
+        ]);
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(&["α", "Eq.7", "simulated"], &rows)
+    );
+    Ok(())
+}
+
+pub fn fig3c(out: &Path) -> Result<()> {
+    let (lambda0, mu) = (100.0, 4000.0);
+    let mut w = CsvWriter::create(
+        out.join("fig3c.csv"),
+        &["n_actors", "analytic", "simulated"],
+    )?;
+    let mut rows = Vec::new();
+    for n in [1usize, 4, 8, 16, 24, 32, 36, 38] {
+        let analytic = claim2::expected_latency(n, lambda0, mu).unwrap();
+        let sim = claim2::simulate_latency(n, lambda0, mu, 3000.0, 13);
+        w.row(&[n as f64, analytic, sim])?;
+        rows.push(vec![
+            n.to_string(),
+            format!("{analytic:.2}"),
+            format!("{sim:.2}"),
+        ]);
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(
+            &["n actors", "E[L] (M/M/1)", "simulated"],
+            &rows
+        )
+    );
+    println!("(HTS-RL latency is 1 by construction, independent of n)");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Fig. 4 — system-level throughput on the real (substituted) stack.
+//!
+//! Left: speedup of HTS-RL over the synchronous baseline as a function of
+//! env step-time variance, across football scenarios of increasing engine
+//! cost (paper: RTS → 3v1 → CA-hard).
+//! Right: steps-per-second vs number of environments on
+//! `counterattack_hard` — HTS-PPO scales ~linearly, sync-PPO marginally.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::algo::{Algo, AlgoConfig};
+use crate::coordinator::{run, Method, RunConfig, StopCond};
+use crate::envs::EnvSpec;
+use crate::util::csv::{markdown_table, CsvWriter};
+
+pub fn fig4_left(out: &Path, quick: bool) -> Result<()> {
+    let scenarios = [
+        "football/empty_goal_close",
+        "football/run_to_score",
+        "football/3_vs_1_with_keeper",
+        "football/counterattack_easy",
+        "football/counterattack_hard",
+    ];
+    let steps: u64 = if quick { 1_500 } else { 8_000 };
+    let mut w = CsvWriter::create(
+        out.join("fig4_left.csv"),
+        &["cov_sq", "mean_step_us", "sps_hts", "sps_sync", "speedup"],
+    )?;
+    let mut rows = Vec::new();
+    for name in scenarios {
+        let spec = EnvSpec::by_name(name)?;
+        let mut cfg =
+            RunConfig::new(spec.clone(), AlgoConfig::a2c(Algo::A2cDelayed));
+        // A2C on football uses the a2c_delayed football artifact
+        cfg.stop = StopCond::steps(steps);
+        cfg.n_envs = 16;
+        cfg.n_actors = 1;
+        let hts = run(Method::Hts, &cfg)?;
+        let sync = run(Method::Sync, &cfg)?;
+        let speedup = hts.sps() / sync.sps();
+        w.row(&[
+            spec.steptime.cov_squared(),
+            spec.steptime.mean_us(),
+            hts.sps(),
+            sync.sps(),
+            speedup,
+        ])?;
+        rows.push(vec![
+            name.trim_start_matches("football/").to_string(),
+            format!("{:.2}", spec.steptime.cov_squared()),
+            format!("{:.0}", hts.sps()),
+            format!("{:.0}", sync.sps()),
+            format!("{speedup:.2}x"),
+        ]);
+        println!("fig4l {name}: speedup {speedup:.2}x");
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(
+            &["scenario", "CoV²", "SPS HTS", "SPS sync", "speedup"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+pub fn fig4_right(out: &Path, quick: bool) -> Result<()> {
+    let steps_per_env: u64 = if quick { 120 } else { 500 };
+    let mut w = CsvWriter::create(
+        out.join("fig4_right.csv"),
+        &["n_envs", "sps_hts_ppo", "sps_sync_ppo"],
+    )?;
+    let mut rows = Vec::new();
+    for n_envs in [2usize, 4, 8, 16] {
+        let spec = EnvSpec::by_name("football/counterattack_hard")?;
+        let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
+        cfg.n_envs = n_envs;
+        cfg.n_actors = 1;
+        cfg.stop = StopCond::steps(steps_per_env * n_envs as u64);
+        let hts = run(Method::Hts, &cfg)?;
+        let sync = run(Method::Sync, &cfg)?;
+        w.row(&[n_envs as f64, hts.sps(), sync.sps()])?;
+        rows.push(vec![
+            n_envs.to_string(),
+            format!("{:.0}", hts.sps()),
+            format!("{:.0}", sync.sps()),
+        ]);
+        println!(
+            "fig4r n={n_envs}: hts {:.0} sps, sync {:.0} sps",
+            hts.sps(),
+            sync.sps()
+        );
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(&["#envs", "HTS-PPO SPS", "sync-PPO SPS"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Fig. 5 / A3–A6 — training curves: reward vs environment steps (sample
+//! efficiency: HTS ≈ sync ≫ async) and reward vs wall time (HTS wins).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::algo::{Algo, AlgoConfig};
+use crate::coordinator::{run, Method, RunConfig, StopCond};
+use crate::envs::EnvSpec;
+use crate::util::csv::CsvWriter;
+
+use super::tab1::ATARI_STEPTIME;
+
+pub fn fig5(out: &Path, quick: bool) -> Result<()> {
+    let steps: u64 = if quick { 6_000 } else { 30_000 };
+    let env = "catch";
+    let methods = [
+        (Method::Hts, Algo::A2cDelayed, "hts"),
+        (Method::Sync, Algo::A2cDelayed, "sync"),
+        (Method::Async, Algo::Vtrace, "async"),
+    ];
+    let mut w = CsvWriter::create(
+        out.join("fig5_curves.csv"),
+        &["method_idx", "steps", "wall_s", "reward_ma100"],
+    )?;
+    for (mi, (method, algo, label)) in methods.iter().enumerate() {
+        let spec = EnvSpec::by_name(env)?.with_steptime(ATARI_STEPTIME);
+        let mut cfg = RunConfig::new(spec, AlgoConfig::a2c(*algo));
+        cfg.n_envs = 16;
+        cfg.n_actors = 1;
+        cfg.stop = StopCond::steps(steps);
+        let r = run(*method, &cfg)?;
+        let curve = r.curve(60);
+        for (s, t, rew) in &curve {
+            w.row(&[mi as f64, *s as f64, *t, *rew])?;
+        }
+        let last = curve.last().map(|c| c.2).unwrap_or(f64::NAN);
+        println!(
+            "fig5 {label}: {} steps in {:.1}s ({:.0} sps), final MA100 \
+             reward {last:.3}",
+            r.steps,
+            r.wall_s,
+            r.sps()
+        );
+    }
+    w.flush()?;
+    println!("curves written to fig5_curves.csv (method_idx: 0=hts 1=sync 2=async)");
+    Ok(())
+}

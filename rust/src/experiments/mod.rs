@@ -1,0 +1,48 @@
+//! Experiment runners — one per paper table/figure (DESIGN.md §5).
+//! Each runner emits CSV into `results/` plus a markdown table on stdout.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod figa1;
+pub mod tab1;
+pub mod tab2;
+pub mod tab345;
+pub mod taba;
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Run an experiment by id. `quick` shrinks budgets for bench/smoke use.
+pub fn run(id: &str, out_dir: &Path, quick: bool) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    match id {
+        "fig3a" => fig3::fig3a(out_dir),
+        "fig3b" => fig3::fig3b(out_dir),
+        "fig3c" => fig3::fig3c(out_dir),
+        "fig4l" => fig4::fig4_left(out_dir, quick),
+        "fig4r" => fig4::fig4_right(out_dir, quick),
+        "fig5" => fig5::fig5(out_dir, quick),
+        "figa1" => figa1::figa1(out_dir),
+        "tab1" => tab1::tab1(out_dir, quick),
+        "tab2" => tab2::tab2(out_dir, quick),
+        "tab3" => tab345::tab3(out_dir, quick),
+        "tab4" => tab345::tab4(out_dir, quick),
+        "tab5" => tab345::tab5(out_dir, quick),
+        "taba1" => taba::taba1(out_dir, quick),
+        "taba2" => taba::taba2(out_dir, quick),
+        "all" => {
+            for id in ALL_IDS {
+                println!("=== experiment {id} ===");
+                run(id, out_dir, quick)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment id '{other}'"),
+    }
+}
+
+pub const ALL_IDS: [&str; 14] = [
+    "fig3a", "fig3b", "fig3c", "fig4l", "fig4r", "fig5", "figa1", "tab1",
+    "tab2", "tab3", "tab4", "tab5", "taba1", "taba2",
+];

@@ -1,0 +1,97 @@
+//! Tab. 1 / Tab. A7 — the *final time metric* on the Atari-sim suite.
+//!
+//! Protocol (paper §5): run the asynchronous baseline (IMPALA = V-trace)
+//! to its step budget; its wall time becomes the budget for the
+//! synchronous A2C baseline and HTS-RL(A2C). Report the final metric
+//! (mean of the last 100 evaluation episodes) for each method. Expected
+//! shape: Ours ≥ A2C > IMPALA.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::algo::{Algo, AlgoConfig};
+use crate::coordinator::{run, Method, RunConfig, StopCond};
+use crate::envs::{suite::ATARI_SUITE, EnvSpec, StepTimeModel};
+use crate::stats::bootstrap_ci;
+use crate::util::csv::{markdown_table, CsvWriter};
+
+/// Small-variance engine cost standing in for ALE's per-frame time
+/// (frame-skip-4 ALE runs at a few hundred µs–few ms per env step).
+pub const ATARI_STEPTIME: StepTimeModel =
+    StepTimeModel::Gamma { shape: 8.0, mean_us: 2_000.0 };
+
+fn base_cfg(env: &str, algo: Algo, seed: u64) -> Result<RunConfig> {
+    let spec = EnvSpec::by_name(env)?.with_steptime(ATARI_STEPTIME);
+    let mut cfg = RunConfig::new(spec, AlgoConfig::a2c(algo));
+    cfg.n_envs = 16;
+    cfg.n_actors = 1;
+    cfg.seed = seed;
+    cfg.eval_every = 10;
+    cfg.eval_episodes = 10;
+    Ok(cfg)
+}
+
+pub fn tab1(out: &Path, quick: bool) -> Result<()> {
+    let envs: &[&str] = if quick { &ATARI_SUITE[..2] } else { &ATARI_SUITE };
+    let async_steps: u64 = if quick { 4_000 } else { 24_000 };
+    let mut w = CsvWriter::create(
+        out.join("tab1.csv"),
+        &["env_idx", "budget_s", "impala", "impala_lo", "impala_hi", "a2c",
+          "a2c_lo", "a2c_hi", "ours", "ours_lo", "ours_hi"],
+    )?;
+    let mut rows = Vec::new();
+    for (i, env) in envs.iter().enumerate() {
+        // 1. async baseline defines the wall budget
+        let mut cfg = base_cfg(env, Algo::Vtrace, 1)?;
+        cfg.stop = StopCond::steps(async_steps);
+        let impala = run(Method::Async, &cfg)?;
+        let budget = impala.wall_s;
+
+        // 2. both synchronous methods get the same wall budget
+        let mut cfg_sync = base_cfg(env, Algo::A2cDelayed, 1)?;
+        cfg_sync.stop = StopCond::wall_s(budget);
+        let a2c = run(Method::Sync, &cfg_sync)?;
+        let ours = run(Method::Hts, &cfg_sync)?;
+
+        let last100 = |r: &crate::metrics::TrainReport| -> Vec<f64> {
+            r.evals
+                .iter()
+                .rev()
+                .take(10)
+                .flat_map(|e| e.scores.iter().copied())
+                .collect()
+        };
+        let ci = |scores: &[f64]| -> (f64, f64, f64) {
+            if scores.is_empty() {
+                (f64::NAN, f64::NAN, f64::NAN)
+            } else {
+                bootstrap_ci(scores, 10_000, 0.95, 42)
+            }
+        };
+        let (im, ilo, ihi) = ci(&last100(&impala));
+        let (am, alo, ahi) = ci(&last100(&a2c));
+        let (om, olo, ohi) = ci(&last100(&ours));
+        w.row(&[i as f64, budget, im, ilo, ihi, am, alo, ahi, om, olo, ohi])?;
+        rows.push(vec![
+            env.to_string(),
+            format!("{im:.2} [{ilo:.2},{ihi:.2}]"),
+            format!("{am:.2} [{alo:.2},{ahi:.2}]"),
+            format!("{om:.2} [{olo:.2},{ohi:.2}]"),
+        ]);
+        println!(
+            "tab1 {env}: budget {budget:.1}s impala={im:.2} a2c={am:.2} \
+             ours={om:.2} (steps: impala {} a2c {} ours {})",
+            impala.steps, a2c.steps, ours.steps
+        );
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(
+            &["env", "IMPALA (async)", "A2C (sync)", "Ours (HTS-A2C)"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Tab. 2 / Tab. A10 — the *required time metric* on the football suite:
+//! wall-clock minutes until the running 100-episode eval average reaches
+//! 0.4 / 0.8. Expected shape: Ours(PPO) ≪ PPO, IMPALA (often '-').
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::algo::{Algo, AlgoConfig};
+use crate::coordinator::{run, Method, RunConfig, StopCond};
+use crate::envs::{suite::football_suite, EnvSpec};
+use crate::util::csv::{markdown_table, CsvWriter};
+
+fn fmt_rt(t: Option<f64>) -> String {
+    match t {
+        Some(s) => format!("{:.2}", s / 60.0),
+        None => "-".to_string(),
+    }
+}
+
+pub fn tab2(out: &Path, quick: bool) -> Result<()> {
+    let all = football_suite();
+    let scenarios: Vec<String> = if quick {
+        vec![all[0].clone(), all[6].clone()]
+    } else {
+        all
+    };
+    let steps: u64 = if quick { 4_000 } else { 10_000 };
+    let mut w = CsvWriter::create(
+        out.join("tab2.csv"),
+        &["scenario_idx", "impala_04", "impala_08", "ppo_04", "ppo_08",
+          "ours_04", "ours_08"],
+    )?;
+    let mut rows = Vec::new();
+    for (i, scenario) in scenarios.iter().enumerate() {
+        let spec = EnvSpec::by_name(scenario)?;
+        let mk = |algo: AlgoConfig| -> RunConfig {
+            let mut cfg = RunConfig::new(spec.clone(), algo);
+            cfg.n_envs = 16;
+            cfg.n_actors = 1;
+            cfg.eval_every = 4;
+            cfg.eval_episodes = 10;
+            cfg.stop = StopCond::steps(steps);
+            cfg
+        };
+        let impala = run(Method::Async, &mk(AlgoConfig::a2c(Algo::Vtrace)))?;
+        let ppo = run(Method::Sync, &mk(AlgoConfig::ppo()))?;
+        let ours = run(Method::Hts, &mk(AlgoConfig::ppo()))?;
+        let vals = [
+            impala.required_time(0.4),
+            impala.required_time(0.8),
+            ppo.required_time(0.4),
+            ppo.required_time(0.8),
+            ours.required_time(0.4),
+            ours.required_time(0.8),
+        ];
+        w.row(&[
+            i as f64,
+            vals[0].unwrap_or(-1.0),
+            vals[1].unwrap_or(-1.0),
+            vals[2].unwrap_or(-1.0),
+            vals[3].unwrap_or(-1.0),
+            vals[4].unwrap_or(-1.0),
+            vals[5].unwrap_or(-1.0),
+        ])?;
+        rows.push(vec![
+            scenario.trim_start_matches("football/").to_string(),
+            format!("{}/{}", fmt_rt(vals[0]), fmt_rt(vals[1])),
+            format!("{}/{}", fmt_rt(vals[2]), fmt_rt(vals[3])),
+            format!("{}/{}", fmt_rt(vals[4]), fmt_rt(vals[5])),
+        ]);
+        println!(
+            "tab2 {scenario}: ours 0.4@{} 0.8@{} (final {:.2})",
+            fmt_rt(vals[4]),
+            fmt_rt(vals[5]),
+            ours.final_metric()
+        );
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(
+            &["scenario", "IMPALA (min 0.4/0.8)", "PPO", "Ours (HTS-PPO)"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Tab. A1 (correction-method ablation) and Tab. A2 (implementation SPS
+//! comparison).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::algo::{Algo, AlgoConfig};
+use crate::coordinator::{run, Method, RunConfig, StopCond};
+use crate::envs::EnvSpec;
+use crate::util::csv::{markdown_table, CsvWriter};
+
+use super::tab1::ATARI_STEPTIME;
+
+/// Tab. A1 — within HTS-RL, swap the learner's correction strategy:
+/// one-step delayed gradient (ours) vs truncated importance sampling vs
+/// no correction. Same system, same data path; only the train artifact
+/// differs. Expected: delayed ≥ TIS ≥ no-correction.
+pub fn taba1(out: &Path, quick: bool) -> Result<()> {
+    let steps: u64 = if quick { 4_000 } else { 16_000 };
+    let envs: &[&str] =
+        if quick { &["catch"] } else { &["catch", "gridworld", "catch_windy"] };
+    let variants = [
+        ("delayed (ours)", Algo::A2cDelayed),
+        ("truncated IS", Algo::A2cTruncatedIs),
+        ("no correction", Algo::A2cNoCorrection),
+    ];
+    let mut w = CsvWriter::create(
+        out.join("taba1.csv"),
+        &["env_idx", "variant_idx", "final_metric"],
+    )?;
+    let mut rows = Vec::new();
+    for (ei, env) in envs.iter().enumerate() {
+        let mut cells = vec![env.to_string()];
+        for (vi, (label, algo)) in variants.iter().enumerate() {
+            let spec = EnvSpec::by_name(env)?;
+            let mut cfg = RunConfig::new(spec, AlgoConfig::a2c(*algo));
+            cfg.n_envs = 16;
+            cfg.n_actors = 1;
+            cfg.eval_every = 20;
+            cfg.stop = StopCond::steps(steps);
+            let r = run(Method::Hts, &cfg)?;
+            let fm = r.final_metric();
+            w.row(&[ei as f64, vi as f64, fm])?;
+            cells.push(format!("{fm:.3}"));
+            println!("taba1 {env} / {label}: {fm:.3}");
+        }
+        rows.push(cells);
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(
+            &["env", "delayed (ours)", "truncated IS", "no correction"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+/// Tab. A2 — SPS of the different "implementations" available on this
+/// substrate: the step-synchronous A2C baseline, the async (IMPALA-style)
+/// system, and HTS-RL, all on identical envs/model/hardware.
+pub fn taba2(out: &Path, quick: bool) -> Result<()> {
+    let steps: u64 = if quick { 2_000 } else { 10_000 };
+    let envs: &[&str] = if quick { &["catch"] } else { &["catch", "gridworld"] };
+    let mut w = CsvWriter::create(
+        out.join("taba2.csv"),
+        &["env_idx", "sps_sync", "sps_async", "sps_hts"],
+    )?;
+    let mut rows = Vec::new();
+    for (ei, env) in envs.iter().enumerate() {
+        let spec = EnvSpec::by_name(env)?.with_steptime(ATARI_STEPTIME);
+        let mk = |algo: Algo| -> RunConfig {
+            let mut cfg =
+                RunConfig::new(spec.clone(), AlgoConfig::a2c(algo));
+            cfg.n_envs = 16;
+            cfg.n_actors = 1;
+            cfg.stop = StopCond::steps(steps);
+            cfg
+        };
+        let sync = run(Method::Sync, &mk(Algo::A2cDelayed))?;
+        let asyn = run(Method::Async, &mk(Algo::Vtrace))?;
+        let hts = run(Method::Hts, &mk(Algo::A2cDelayed))?;
+        w.row(&[ei as f64, sync.sps(), asyn.sps(), hts.sps()])?;
+        rows.push(vec![
+            env.to_string(),
+            format!("{:.0}", sync.sps()),
+            format!("{:.0}", asyn.sps()),
+            format!("{:.0}", hts.sps()),
+        ]);
+        println!(
+            "taba2 {env}: sync {:.0} / async {:.0} / hts {:.0} sps",
+            sync.sps(),
+            asyn.sps(),
+            hts.sps()
+        );
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(
+            &["env", "sync A2C", "async (IMPALA-style)", "HTS-RL"],
+            &rows
+        )
+    );
+    Ok(())
+}

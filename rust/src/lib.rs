@@ -1,0 +1,37 @@
+//! # HTS-RL: High-Throughput Synchronous Deep RL
+//!
+//! A production-shaped reproduction of *High-Throughput Synchronous Deep
+//! RL* (Liu, Yeh, Schwing — NeurIPS 2020) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the HTS-RL
+//!   coordinator ([`coordinator::hts`]) with batch synchronization,
+//!   concurrent rollout/learning via double storage, a guaranteed
+//!   one-step-delayed gradient, and deterministic asynchronous
+//!   actor/executor interaction — plus the synchronous
+//!   ([`coordinator::sync_driver`]) and asynchronous IMPALA/GA3C-style
+//!   ([`coordinator::async_driver`]) baselines it is evaluated against.
+//! * **Layer 2 / Layer 1** — the actor-critic model and its Pallas kernels
+//!   live in `python/compile/`; they are AOT-lowered to HLO text once
+//!   (`make artifacts`) and executed here through the PJRT CPU client
+//!   ([`runtime`]). Python never runs at training time.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a module and bench.
+
+pub mod algo;
+pub mod buffers;
+pub mod coordinator;
+pub mod envs;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod stats;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is the only error substrate available
+/// in the offline vendor set; see DESIGN.md §3).
+pub type Result<T> = anyhow::Result<T>;

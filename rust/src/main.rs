@@ -1,0 +1,226 @@
+//! `hts-rl` — the launcher.
+//!
+//! Subcommands:
+//!   train        one training run (method/env/algo/stop configurable)
+//!   compare      HTS vs sync vs async on one env, same budget
+//!   exp          regenerate a paper table/figure (`--id tab1`, `--id all`)
+//!   sim          Claim-1/Claim-2 analytic + simulated numbers
+//!   determinism  run the Tab. 4 determinism check
+//!   list         registered envs, algos, experiments
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use hts_rl::algo::{Algo, AlgoConfig};
+use hts_rl::coordinator::{run, Method, RunConfig, StopCond};
+use hts_rl::envs::EnvSpec;
+use hts_rl::experiments;
+use hts_rl::simulator::{claim1, claim2};
+use hts_rl::util::cli::Args;
+
+fn usage() -> &'static str {
+    "usage: hts-rl <train|compare|exp|sim|determinism|list> [flags]\n\
+     train flags: --env catch --method hts|sync|async --algo a2c|ppo|...\n\
+       --steps N | --wall-s S | --updates N   --n-envs 16 --n-actors 4\n\
+       --alpha K --seed 1 --eval-every U --out results/\n\
+     exp flags: --id fig3a|...|all  --quick  --out results/\n\
+     sim flags: --claim 1|2 [--n 16 --alpha 4 --beta 2.0]"
+}
+
+fn build_run_config(a: &Args) -> Result<RunConfig> {
+    let env = a.str_or("env", "catch");
+    let mut spec = EnvSpec::by_name(&env)?;
+    if let Some(n) = a.str_opt("agents") {
+        spec = spec.with_agents(n.parse()?);
+    }
+    let algo = Algo::parse(&a.str_or("algo", "a2c"))?;
+    let mut cfg = RunConfig::new(spec, AlgoConfig::for_algo(algo));
+    cfg.n_envs = a.usize_or("n-envs", 16)?;
+    cfg.n_actors = a.usize_or("n-actors", 4)?;
+    cfg.sync_interval = a.usize_or("alpha", 0)?;
+    cfg.seed = a.u64_or("seed", 1)?;
+    cfg.eval_every = a.u64_or("eval-every", 0)?;
+    cfg.eval_episodes = a.usize_or("eval-episodes", 10)?;
+    if let Some(dir) = a.str_opt("artifacts") {
+        cfg.artifacts = PathBuf::from(dir);
+    }
+    cfg.stop = StopCond {
+        max_steps: a.str_opt("steps").map(|s| s.parse()).transpose()?,
+        max_wall_s: a.str_opt("wall-s").map(|s| s.parse()).transpose()?,
+        max_updates: a.str_opt("updates").map(|s| s.parse()).transpose()?,
+    };
+    if cfg.stop.max_steps.is_none()
+        && cfg.stop.max_wall_s.is_none()
+        && cfg.stop.max_updates.is_none()
+    {
+        cfg.stop = StopCond::updates(100);
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let method = Method::parse(&a.str_or("method", "hts"))?;
+    let cfg = build_run_config(a)?;
+    eprintln!(
+        "training {} on {} ({} envs, {} actors, algo {:?})",
+        method.name(), cfg.spec.name, cfg.n_envs, cfg.n_actors,
+        cfg.algo.algo
+    );
+    let r = run(method, &cfg)?;
+    println!(
+        "done: {} steps, {} updates, {:.1}s wall ({:.0} SPS)",
+        r.steps, r.updates, r.wall_s, r.sps()
+    );
+    println!("trajectory signature: {:016x}", r.signature);
+    if !r.evals.is_empty() {
+        println!("final metric: {:.3}", r.final_metric());
+    }
+    if !r.episodes.is_empty() {
+        let tail: Vec<f64> = r
+            .episodes
+            .iter()
+            .rev()
+            .take(100)
+            .map(|e| e.reward)
+            .collect();
+        println!(
+            "last-100 training episode reward: {:.3}",
+            hts_rl::stats::mean(&tail)
+        );
+    }
+    if let Some(out) = a.str_opt("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let mut w = hts_rl::util::csv::CsvWriter::create(
+            dir.join(format!("curve_{}_{}.csv", method.name(),
+                             cfg.spec.name.replace('/', "_"))),
+            &["steps", "wall_s", "reward_ma100"],
+        )?;
+        for (s, t, rew) in r.curve(200) {
+            w.row(&[s as f64, t, rew])?;
+        }
+        w.flush()?;
+    }
+    Ok(())
+}
+
+fn cmd_compare(a: &Args) -> Result<()> {
+    let cfg = build_run_config(a)?;
+    let mut rows = Vec::new();
+    for method in [Method::Hts, Method::Sync, Method::Async] {
+        let mut c = cfg.clone();
+        if method == Method::Async && c.algo.algo != Algo::Ppo {
+            c.algo = AlgoConfig::a2c(Algo::Vtrace);
+        }
+        let r = run(method, &c)?;
+        rows.push(vec![
+            method.name().to_string(),
+            format!("{:.0}", r.sps()),
+            format!("{}", r.steps),
+            format!("{:.1}", r.wall_s),
+            format!("{:.3}", r.final_metric()),
+            format!("{:.1}", hts_rl::stats::mean(&r.staleness)),
+        ]);
+    }
+    println!(
+        "{}",
+        hts_rl::util::csv::markdown_table(
+            &["method", "SPS", "steps", "wall s", "final metric",
+              "policy lag"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_sim(a: &Args) -> Result<()> {
+    match a.usize_or("claim", 1)? {
+        1 => {
+            let n = a.usize_or("n", 16)?;
+            let alpha = a.usize_or("alpha", 4)?;
+            let beta = a.f64_or("beta", 2.0)?;
+            let k = a.usize_or("k", 4096)? as f64;
+            let analytic = claim1::expected_runtime(k, n, alpha, beta, 0.001);
+            let sim = claim1::simulate_runtime_mean(
+                k as u64, n, alpha, beta, 0.001, 30, 7);
+            println!(
+                "claim 1: n={n} α={alpha} β={beta} K={k}: Eq.7 = \
+                 {analytic:.2}, simulated = {sim:.2}"
+            );
+        }
+        2 => {
+            let n = a.usize_or("n", 16)?;
+            let lambda0 = a.f64_or("lambda0", 100.0)?;
+            let mu = a.f64_or("mu", 4000.0)?;
+            match claim2::expected_latency(n, lambda0, mu) {
+                Some(l) => {
+                    let sim =
+                        claim2::simulate_latency(n, lambda0, mu, 2000.0, 3);
+                    println!(
+                        "claim 2: n={n} λ₀={lambda0} µ={mu}: E[L] = {l:.3}, \
+                         simulated = {sim:.3} (HTS-RL: always 1)"
+                    );
+                }
+                None => println!("claim 2: unstable queue (nρ₀ ≥ 1), lag diverges"),
+            }
+        }
+        c => bail!("unknown claim {c}"),
+    }
+    Ok(())
+}
+
+fn cmd_determinism(a: &Args) -> Result<()> {
+    let mut cfg = build_run_config(a)?;
+    cfg.stop = StopCond::updates(a.u64_or("updates", 8)?);
+    let mut sigs = Vec::new();
+    for n_actors in [1usize, 2, 4] {
+        let mut c = cfg.clone();
+        c.n_actors = n_actors;
+        let r = run(Method::Hts, &c)?;
+        println!("actors={n_actors}: signature {:016x}", r.signature);
+        sigs.push(r.signature);
+    }
+    if sigs.windows(2).all(|s| s[0] == s[1]) {
+        println!("deterministic across actor counts ✓");
+        Ok(())
+    } else {
+        bail!("determinism violated");
+    }
+}
+
+fn cmd_list() {
+    println!("envs:");
+    for e in hts_rl::envs::suite::ALL_ENVS {
+        println!("  {e}");
+    }
+    for s in hts_rl::envs::suite::football_suite() {
+        println!("  {s}");
+    }
+    println!("methods: hts sync async");
+    println!("algos: a2c a2c_nocorr a2c_tis vtrace ppo");
+    println!("experiments: {}", experiments::ALL_IDS.join(" "));
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env()?;
+    match a.subcommand.as_deref() {
+        Some("train") => cmd_train(&a),
+        Some("compare") => cmd_compare(&a),
+        Some("exp") => {
+            let id = a.str_or("id", "all");
+            let out = PathBuf::from(a.str_or("out", "results"));
+            experiments::run(&id, &out, a.bool("quick"))
+        }
+        Some("sim") => cmd_sim(&a),
+        Some("determinism") => cmd_determinism(&a),
+        Some("list") => {
+            cmd_list();
+            Ok(())
+        }
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Policy evaluation: run N episodes with a parameter snapshot.
+//!
+//! Follows the paper's protocol — evaluation-time actions are *sampled*
+//! from the policy with dedicated eval RNG streams, and episode starts are
+//! randomized by the seeded reset (the analogue of Atari's up-to-30 no-op
+//! starts on our synthetic envs; see DESIGN.md §3).
+
+use anyhow::Result;
+
+use crate::algo::sampling::sample_action;
+use crate::envs::EnvSpec;
+use crate::rng::SplitMix64;
+use crate::runtime::ForwardPool;
+
+/// Run `n_episodes` evaluation episodes; returns per-episode total reward.
+/// Deterministic in (`params`, `spec`, `seed`).
+pub fn evaluate_params(
+    pool: &ForwardPool,
+    params: &[f32],
+    spec: &EnvSpec,
+    n_episodes: usize,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    let mut scores = Vec::with_capacity(n_episodes);
+    for ep in 0..n_episodes {
+        let mut rng = SplitMix64::stream(seed, 0x5eed_0000 + ep as u64);
+        let mut env = spec.build()?;
+        let n_agents = env.n_agents();
+        let d = env.obs_dim();
+        let mut obs = env.reset(&mut rng);
+        let mut total = 0.0f64;
+        loop {
+            // batch all agents' observations in one forward
+            let mut flat = Vec::with_capacity(n_agents * d);
+            for o in &obs {
+                flat.extend_from_slice(o);
+            }
+            let (logits, _values) = pool.forward(params, &flat, n_agents)?;
+            let a_dim = pool.info.act_dim;
+            let actions: Vec<usize> = (0..n_agents)
+                .map(|i| {
+                    sample_action(
+                        &logits[i * a_dim..(i + 1) * a_dim],
+                        rng.next_u64(),
+                    )
+                })
+                .collect();
+            let step = env.step(&actions, &mut rng);
+            total += step.reward as f64;
+            if step.done {
+                break;
+            }
+            obs = step.obs;
+        }
+        scores.push(total);
+    }
+    Ok(scores)
+}

@@ -1,0 +1,15 @@
+//! Metrics & evaluation protocol.
+//!
+//! Implements the paper's protocol exactly (§5 "Evaluation protocol"):
+//! the *final metric* averages the last 100 evaluation episodes (10
+//! episodes for each of the last ten policies); the *final time metric*
+//! is the final metric under a wall-clock budget; the *required time
+//! metric* is the wall-clock time until the running average of the most
+//! recent 100 evaluation episodes reaches a target score. CIs use the
+//! 10,000-sample bootstrap.
+
+pub mod eval;
+pub mod report;
+
+pub use eval::evaluate_params;
+pub use report::{EpisodePoint, EvalPoint, SpsMeter, TrainReport};

@@ -1,0 +1,236 @@
+//! Run telemetry: throughput meters, episode/eval logs, and the derived
+//! paper metrics (final / final-time / required-time).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::stats::describe::RunningWindow;
+
+/// Lock-free environment-step counter shared by executors.
+#[derive(Debug, Default)]
+pub struct SpsMeter {
+    steps: AtomicU64,
+}
+
+impl SpsMeter {
+    pub fn new() -> SpsMeter {
+        SpsMeter::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) -> u64 {
+        self.steps.fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+}
+
+/// One completed *training* episode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpisodePoint {
+    pub steps: u64,
+    pub wall_s: f64,
+    pub reward: f64,
+}
+
+/// One evaluation round: `scores` holds the per-episode scores of one
+/// policy snapshot.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub steps: u64,
+    pub wall_s: f64,
+    pub update: u64,
+    pub scores: Vec<f64>,
+}
+
+impl EvalPoint {
+    pub fn mean(&self) -> f64 {
+        crate::stats::describe::mean(&self.scores)
+    }
+}
+
+/// Everything a driver run reports. All three drivers emit the same shape
+/// so experiments compare them uniformly.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub method: String,
+    pub env: String,
+    pub seed: u64,
+    pub steps: u64,
+    pub updates: u64,
+    pub wall_s: f64,
+    pub episodes: Vec<EpisodePoint>,
+    pub evals: Vec<EvalPoint>,
+    /// XOR-combined FNV trajectory hash — byte-equal across runs iff the
+    /// run was deterministic (paper Tab. 4's identical-scores property).
+    pub signature: u64,
+    /// Async driver only: observed policy-lag samples (in updates).
+    pub staleness: Vec<f64>,
+    /// Mean loss metrics of the last few updates (diagnostics).
+    pub final_loss: f32,
+    pub final_entropy: f32,
+}
+
+impl TrainReport {
+    pub fn sps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.steps as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Paper final metric: mean over the last 100 evaluation episodes
+    /// (10 per policy × last 10 policies).
+    pub fn final_metric(&self) -> f64 {
+        let scores: Vec<f64> = self
+            .evals
+            .iter()
+            .rev()
+            .take(10)
+            .flat_map(|e| e.scores.iter().copied())
+            .collect();
+        crate::stats::describe::mean(&scores)
+    }
+
+    /// Required-time metric: first wall-clock second at which the running
+    /// average of the most recent 100 evaluation episodes ≥ `target`.
+    pub fn required_time(&self, target: f64) -> Option<f64> {
+        let mut win = RunningWindow::new(100);
+        for e in &self.evals {
+            for &s in &e.scores {
+                win.push(s);
+            }
+            if win.mean() >= target {
+                return Some(e.wall_s);
+            }
+        }
+        None
+    }
+
+    /// Same, in environment steps (for reward-vs-steps comparisons).
+    pub fn required_steps(&self, target: f64) -> Option<u64> {
+        let mut win = RunningWindow::new(100);
+        for e in &self.evals {
+            for &s in &e.scores {
+                win.push(s);
+            }
+            if win.mean() >= target {
+                return Some(e.steps);
+            }
+        }
+        None
+    }
+
+    /// Running average of training-episode rewards (window 100) sampled at
+    /// `n_points` even intervals — the paper's Fig. 5 training curves.
+    pub fn curve(&self, n_points: usize) -> Vec<(u64, f64, f64)> {
+        if self.episodes.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut win = RunningWindow::new(100);
+        let stride = (self.episodes.len() / n_points.max(1)).max(1);
+        for (i, ep) in self.episodes.iter().enumerate() {
+            win.push(ep.reward);
+            if i % stride == 0 || i + 1 == self.episodes.len() {
+                out.push((ep.steps, ep.wall_s, win.mean()));
+            }
+        }
+        out
+    }
+}
+
+/// Wall-clock helper.
+pub struct Stopwatch(Instant);
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(wall_s: f64, score: f64) -> EvalPoint {
+        EvalPoint { steps: (wall_s * 100.0) as u64, wall_s, update: 0,
+                    scores: vec![score; 10] }
+    }
+
+    #[test]
+    fn sps_meter_accumulates() {
+        let m = SpsMeter::new();
+        m.add(5);
+        m.add(3);
+        assert_eq!(m.steps(), 8);
+    }
+
+    #[test]
+    fn final_metric_uses_last_ten_policies() {
+        let mut r = TrainReport::default();
+        for i in 0..20 {
+            r.evals.push(eval(i as f64, if i < 10 { 0.0 } else { 1.0 }));
+        }
+        assert_eq!(r.final_metric(), 1.0);
+    }
+
+    #[test]
+    fn required_time_finds_first_crossing() {
+        let mut r = TrainReport::default();
+        for i in 0..30 {
+            r.evals.push(eval(i as f64, i as f64 / 30.0));
+        }
+        let t = r.required_time(0.5).unwrap();
+        assert!(t > 10.0 && t < 25.0, "t={t}");
+        assert!(r.required_time(2.0).is_none());
+    }
+
+    #[test]
+    fn required_time_uses_running_window_not_single_point() {
+        // a single spiky eval must not trigger the threshold if the
+        // 100-episode window average stays below it
+        let mut r = TrainReport::default();
+        r.evals.push(eval(1.0, 0.0));
+        r.evals.push(eval(2.0, 0.0));
+        r.evals.push(eval(3.0, 0.0));
+        r.evals.push(eval(4.0, 0.0));
+        r.evals.push(eval(5.0, 0.0));
+        r.evals.push(eval(6.0, 0.0));
+        r.evals.push(eval(7.0, 0.0));
+        r.evals.push(eval(8.0, 0.0));
+        r.evals.push(eval(9.0, 0.0));
+        r.evals.push(eval(10.0, 1.0)); // 10 of last 100 episodes = 0.1 avg
+        assert!(r.required_time(0.5).is_none());
+    }
+
+    #[test]
+    fn curve_is_monotone_in_steps() {
+        let mut r = TrainReport::default();
+        for i in 0..500u64 {
+            r.episodes.push(EpisodePoint {
+                steps: i * 10,
+                wall_s: i as f64,
+                reward: (i as f64 / 500.0),
+            });
+        }
+        let c = r.curve(50);
+        assert!(c.len() >= 50);
+        assert!(c.windows(2).all(|w| w[0].0 <= w[1].0));
+        // running average at the end should be near the recent rewards
+        assert!(c.last().unwrap().2 > 0.8);
+    }
+}

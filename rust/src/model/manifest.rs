@@ -1,0 +1,231 @@
+//! Typed view of `artifacts/manifest.json` — the cross-language contract
+//! with `python/compile/aot.py`. Rust validates environment dims against
+//! it at load time, so a stale artifact build fails loudly, not silently.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: Vec<usize>,
+    pub unroll: usize,
+    pub n_envs: usize,
+    pub param_count: usize,
+    pub fwd_buckets: Vec<usize>,
+    pub train_kinds: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub kind: String,
+    pub model: String,
+    pub bucket: Option<usize>,
+    pub train_kind: Option<String>,
+    pub unroll: Option<usize>,
+    pub batch: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub default_hyper: Vec<f32>,
+    pub hyper_layout: Vec<String>,
+    pub metrics_layout: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!(
+                "reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text)?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    obs_dim: m.get("obs_dim")?.as_usize()?,
+                    act_dim: m.get("act_dim")?.as_usize()?,
+                    hidden: m.get("hidden")?.as_usize_vec()?,
+                    unroll: m.get("unroll")?.as_usize()?,
+                    n_envs: m.get("n_envs")?.as_usize()?,
+                    param_count: m.get("param_count")?.as_usize()?,
+                    fwd_buckets: m.get("fwd_buckets")?.as_usize_vec()?,
+                    train_kinds: m
+                        .get("train_kinds")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_str().map(String::from))
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts")?.as_arr()? {
+            artifacts.push(ArtifactInfo {
+                file: a.get("file")?.as_str()?.to_string(),
+                kind: a.get("kind")?.as_str()?.to_string(),
+                model: a.get("model")?.as_str()?.to_string(),
+                bucket: a.opt("bucket").map(|v| v.as_usize()).transpose()?,
+                train_kind: a
+                    .opt("train_kind")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?,
+                unroll: a.opt("unroll").map(|v| v.as_usize()).transpose()?,
+                batch: a.opt("batch").map(|v| v.as_usize()).transpose()?,
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            models,
+            artifacts,
+            default_hyper: root.get("default_hyper")?.as_f32_vec()?,
+            hyper_layout: str_vec(root.get("hyper_layout")?)?,
+            metrics_layout: str_vec(root.get("metrics_layout")?)?,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    fn find(
+        &self,
+        pred: impl Fn(&&ArtifactInfo) -> bool,
+        what: &str,
+    ) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| pred(a))
+            .ok_or_else(|| anyhow!("no artifact for {what}"))
+    }
+
+    pub fn init_artifact(&self, model: &str) -> Result<&ArtifactInfo> {
+        self.find(|a| a.kind == "init" && a.model == model,
+                  &format!("init/{model}"))
+    }
+
+    pub fn fwd_artifact(&self, model: &str, bucket: usize)
+        -> Result<&ArtifactInfo>
+    {
+        self.find(
+            |a| a.kind == "fwd" && a.model == model
+                && a.bucket == Some(bucket),
+            &format!("fwd/{model}/b{bucket}"),
+        )
+    }
+
+    /// Train artifact for `(model, kind)` compiled at exactly `batch`
+    /// columns (env slots × agents).
+    pub fn train_artifact_b(
+        &self,
+        model: &str,
+        kind: &str,
+        batch: usize,
+    ) -> Result<&ArtifactInfo> {
+        self.find(
+            |a| a.kind == "train" && a.model == model
+                && a.train_kind.as_deref() == Some(kind)
+                && a.batch == Some(batch),
+            &format!("train/{kind}/{model}/B{batch}"),
+        )
+    }
+
+    pub fn train_artifact(&self, model: &str, kind: &str)
+        -> Result<&ArtifactInfo>
+    {
+        let batch = self.model(model)?.n_envs;
+        self.train_artifact_b(model, kind, batch)
+    }
+
+    /// Smallest compiled forward bucket that fits `n` observations.
+    pub fn bucket_for(&self, model: &str, n: usize) -> Result<usize> {
+        let info = self.model(model)?;
+        info.fwd_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow!(
+                "batch {n} exceeds largest fwd bucket for '{model}'"))
+    }
+}
+
+fn str_vec(v: &Json) -> Result<Vec<String>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| x.as_str().map(String::from))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn skip_if_missing() -> Option<Manifest> {
+        Manifest::load(art_dir()).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_models_sane() {
+        let Some(m) = skip_if_missing() else { return };
+        for (name, info) in &m.models {
+            assert!(info.param_count > 0, "{name}");
+            assert!(!info.fwd_buckets.is_empty(), "{name}");
+            assert!(info.fwd_buckets.windows(2).all(|w| w[0] < w[1]));
+        }
+        assert_eq!(m.hyper_layout.len(), 8);
+        assert_eq!(m.metrics_layout.len(), 8);
+    }
+
+    #[test]
+    fn artifact_lookup() {
+        let Some(m) = skip_if_missing() else { return };
+        let tiny = m.model("tiny").unwrap();
+        m.init_artifact("tiny").unwrap();
+        for &b in &tiny.fwd_buckets {
+            m.fwd_artifact("tiny", b).unwrap();
+        }
+        for kind in &tiny.train_kinds {
+            let a = m.train_artifact("tiny", kind).unwrap();
+            assert!(m.artifact_path(&a.file).exists());
+        }
+        assert!(m.fwd_artifact("tiny", 99999).is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = skip_if_missing() else { return };
+        // tiny has buckets [1, 2, 4]
+        assert_eq!(m.bucket_for("tiny", 1).unwrap(), 1);
+        assert_eq!(m.bucket_for("tiny", 3).unwrap(), 4);
+        assert!(m.bucket_for("tiny", 1000).is_err());
+    }
+}

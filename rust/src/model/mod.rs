@@ -1,0 +1,9 @@
+//! Model metadata (the artifact manifest contract with `aot.py`) and the
+//! versioned parameter store that implements the paper's behavior/target
+//! parameter bookkeeping.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo};
+pub use params::{ParamStore, ParamVersion};

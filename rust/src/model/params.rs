@@ -1,0 +1,136 @@
+//! Versioned parameter store — the behavior/target bookkeeping of the
+//! paper's one-step-delayed gradient.
+//!
+//! The learner `publish`es θ_j at the swap barrier; actors `latest()` it
+//! (cheap Arc clone) before each forward batch. Because publication
+//! happens strictly between iterations, every observation of iteration `j`
+//! is served with exactly version `j` — the determinism proof obligation
+//! in DESIGN.md §6.
+
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone)]
+pub struct ParamVersion {
+    pub version: u64,
+    pub data: Arc<Vec<f32>>,
+}
+
+pub struct ParamStore {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    latest: ParamVersion,
+    /// Bounded ring of recent versions, for the async (IMPALA-style)
+    /// driver which must recover the behavior parameters a stale
+    /// trajectory was collected with.
+    history: std::collections::VecDeque<ParamVersion>,
+    history_cap: usize,
+}
+
+impl ParamStore {
+    pub fn new(initial: Vec<f32>) -> ParamStore {
+        Self::with_history(initial, 64)
+    }
+
+    pub fn with_history(initial: Vec<f32>, history_cap: usize) -> ParamStore {
+        let v0 = ParamVersion { version: 0, data: Arc::new(initial) };
+        let mut history = std::collections::VecDeque::new();
+        history.push_back(v0.clone());
+        ParamStore {
+            inner: Mutex::new(Inner { latest: v0, history, history_cap }),
+        }
+    }
+
+    /// Publish a new parameter version; returns its version number.
+    pub fn publish(&self, data: Vec<f32>) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let v = ParamVersion {
+            version: g.latest.version + 1,
+            data: Arc::new(data),
+        };
+        g.latest = v.clone();
+        g.history.push_back(v);
+        if g.history.len() > g.history_cap {
+            g.history.pop_front();
+        }
+        g.latest.version
+    }
+
+    pub fn latest(&self) -> ParamVersion {
+        self.inner.lock().unwrap().latest.clone()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().latest.version
+    }
+
+    /// Fetch a historical version if still retained (falls back to the
+    /// oldest retained version — documented approximation for very stale
+    /// async trajectories).
+    pub fn get(&self, version: u64) -> ParamVersion {
+        let g = self.inner.lock().unwrap();
+        g.history
+            .iter()
+            .find(|p| p.version == version)
+            .cloned()
+            .unwrap_or_else(|| g.history.front().unwrap().clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_bumps_version() {
+        let s = ParamStore::new(vec![0.0]);
+        assert_eq!(s.version(), 0);
+        assert_eq!(s.publish(vec![1.0]), 1);
+        assert_eq!(s.publish(vec![2.0]), 2);
+        let v = s.latest();
+        assert_eq!(v.version, 2);
+        assert_eq!(*v.data, vec![2.0]);
+    }
+
+    #[test]
+    fn latest_is_snapshot() {
+        let s = ParamStore::new(vec![0.0]);
+        let old = s.latest();
+        s.publish(vec![9.0]);
+        assert_eq!(*old.data, vec![0.0], "old snapshots are immutable");
+        assert_eq!(*s.latest().data, vec![9.0]);
+    }
+
+    #[test]
+    fn history_retains_recent_versions() {
+        let s = ParamStore::with_history(vec![0.0], 3);
+        for i in 1..=5 {
+            s.publish(vec![i as f32]);
+        }
+        // cap 3: versions 3,4,5 retained
+        assert_eq!(*s.get(4).data, vec![4.0]);
+        assert_eq!(s.get(4).version, 4);
+        // evicted version falls back to oldest retained
+        let old = s.get(1);
+        assert_eq!(old.version, 3);
+    }
+
+    #[test]
+    fn concurrent_readers_see_monotone_versions() {
+        let s = std::sync::Arc::new(ParamStore::new(vec![0.0]));
+        let s2 = s.clone();
+        let reader = std::thread::spawn(move || {
+            let mut last = 0;
+            for _ in 0..1000 {
+                let v = s2.latest().version;
+                assert!(v >= last);
+                last = v;
+            }
+        });
+        for i in 0..100 {
+            s.publish(vec![i as f32]);
+        }
+        reader.join().unwrap();
+    }
+}

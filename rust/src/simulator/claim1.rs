@@ -1,0 +1,135 @@
+//! Claim 1 — expected runtime of collecting K states with n parallel
+//! environments synchronized every α steps, when per-step times are i.i.d.
+//! and the α-step sums are Gamma(α, β) (paper Eq. 7):
+//!
+//!   E[T] ≈ (K / nα) · ( (γ/β)·(1 + (α−1)/(β·F⁻¹(1−1/n))) + F⁻¹(1−1/n) )
+//!          + K·c/n
+//!
+//! with F⁻¹ the Gamma(α, β) quantile and γ the Euler–Mascheroni constant.
+//! `expected_runtime` evaluates the formula; `simulate_runtime` runs the
+//! actual max-over-envs synchronization process; Fig. 3(a,b) overlays the
+//! two.
+
+use crate::rng::SplitMix64;
+use crate::stats::{gamma_quantile, EULER_MASCHERONI};
+
+/// Paper Eq. 7. `alpha` = sync interval, `beta` = per-step rate, `n` =
+/// parallel envs, `k_states` = total states to collect, `c` = per-step
+/// actor compute time.
+pub fn expected_runtime(
+    k_states: f64,
+    n: usize,
+    alpha: usize,
+    beta: f64,
+    c: f64,
+) -> f64 {
+    assert!(n >= 2, "Eq. 7 needs n >= 2 (F^{{-1}}(1-1/n) > 0)");
+    let a = alpha as f64;
+    let nf = n as f64;
+    let q = gamma_quantile(1.0 - 1.0 / nf, a, beta);
+    let gamma_c = EULER_MASCHERONI;
+    (k_states / (nf * a))
+        * ((gamma_c / beta) * (1.0 + (a - 1.0) / (beta * q)) + q)
+        + k_states * c / nf
+}
+
+/// Discrete-event simulation of the same process: n environments each draw
+/// α i.i.d. Exp(β) step times per synchronization round (their sum is
+/// Gamma(α, β)); a round costs the max over environments plus α·c actor
+/// time; rounds repeat until K states are collected.
+pub fn simulate_runtime(
+    k_states: u64,
+    n: usize,
+    alpha: usize,
+    beta: f64,
+    c: f64,
+    seed: u64,
+) -> f64 {
+    let mut rng = SplitMix64::new(seed);
+    let mut total = 0.0;
+    let mut collected = 0u64;
+    while collected < k_states {
+        let mut round_max: f64 = 0.0;
+        for _env in 0..n {
+            let mut sum = 0.0;
+            for _ in 0..alpha {
+                sum += rng.exponential(beta);
+            }
+            round_max = round_max.max(sum);
+        }
+        total += round_max + alpha as f64 * c;
+        collected += (n * alpha) as u64;
+    }
+    total
+}
+
+/// Mean simulated runtime over `reps` seeds.
+pub fn simulate_runtime_mean(
+    k_states: u64,
+    n: usize,
+    alpha: usize,
+    beta: f64,
+    c: f64,
+    reps: usize,
+    seed: u64,
+) -> f64 {
+    (0..reps)
+        .map(|r| {
+            simulate_runtime(k_states, n, alpha, beta, c, seed + r as u64)
+        })
+        .sum::<f64>()
+        / reps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formula_tracks_simulation_fig3a() {
+        // Fig. 3(a): α = 4 fixed, sweep variance 1/β².
+        for &beta in &[1.0f64, 2.0, 4.0] {
+            let k = 4096;
+            let expect = expected_runtime(k as f64, 16, 4, beta, 0.001);
+            let sim = simulate_runtime_mean(k, 16, 4, beta, 0.001, 20, 7);
+            let rel = (expect - sim).abs() / sim;
+            assert!(rel < 0.15, "β={beta}: formula={expect} sim={sim}");
+        }
+    }
+
+    #[test]
+    fn formula_tracks_simulation_fig3b() {
+        // Fig. 3(b): β = 2 fixed, sweep α.
+        for &alpha in &[1usize, 2, 8, 32] {
+            let k = 4096;
+            let expect = expected_runtime(k as f64, 16, alpha, 2.0, 0.001);
+            let sim =
+                simulate_runtime_mean(k, 16, alpha, 2.0, 0.001, 20, 11);
+            let rel = (expect - sim).abs() / sim;
+            assert!(rel < 0.2, "α={alpha}: formula={expect} sim={sim}");
+        }
+    }
+
+    #[test]
+    fn runtime_increases_with_variance() {
+        // smaller β ⇒ larger 1/β² ⇒ longer runtime (Fig. 3a shape)
+        let r_low = expected_runtime(4096.0, 16, 4, 4.0, 0.0);
+        let r_high = expected_runtime(4096.0, 16, 4, 1.0, 0.0);
+        assert!(r_high > 2.0 * r_low);
+    }
+
+    #[test]
+    fn runtime_decreases_with_alpha() {
+        // batch synchronization amortizes the max (Fig. 3b shape)
+        let r1 = expected_runtime(4096.0, 16, 1, 2.0, 0.0);
+        let r16 = expected_runtime(4096.0, 16, 16, 2.0, 0.0);
+        assert!(r16 < r1, "α=16 {r16} should beat α=1 {r1}");
+    }
+
+    #[test]
+    fn simulation_deterministic_in_seed() {
+        let a = simulate_runtime(1024, 8, 4, 2.0, 0.0, 42);
+        let b = simulate_runtime(1024, 8, 4, 2.0, 0.0, 42);
+        assert_eq!(a, b);
+    }
+}

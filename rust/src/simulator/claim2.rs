@@ -1,0 +1,109 @@
+//! Claim 2 — expected policy lag of asynchronous actor-learner systems
+//! (GA3C/IMPALA): n actors produce at Poisson rate λ₀ each, the learner
+//! consumes at exponential rate µ; the queue is M/M/1 and the expected lag
+//! is E[L] = nρ₀ / (1 − nρ₀) with ρ₀ = λ₀/µ (paper appendix B).
+//!
+//! `expected_latency` is the closed form; `simulate_latency` runs the
+//! actual queue; Fig. 3(c) overlays the two and the async driver's
+//! *measured* staleness gives the system-level data point.
+
+use crate::rng::SplitMix64;
+
+/// E[L] = nρ₀/(1 − nρ₀). Returns None when the queue is unstable
+/// (nρ₀ ≥ 1 — the learner can't keep up, lag diverges).
+pub fn expected_latency(n: usize, lambda0: f64, mu: f64) -> Option<f64> {
+    let rho = n as f64 * lambda0 / mu;
+    if rho >= 1.0 {
+        None
+    } else {
+        Some(rho / (1.0 - rho))
+    }
+}
+
+/// Event-driven M/M/1 simulation: superposed Poisson arrivals (rate nλ₀),
+/// exponential services (rate µ). Returns the time-averaged queue length,
+/// which equals the expected policy lag.
+pub fn simulate_latency(
+    n: usize,
+    lambda0: f64,
+    mu: f64,
+    horizon: f64,
+    seed: u64,
+) -> f64 {
+    let mut rng = SplitMix64::new(seed);
+    let arrival_rate = n as f64 * lambda0;
+    let mut t = 0.0;
+    let mut q_len: u64 = 0;
+    let mut area = 0.0; // ∫ q(t) dt
+    let mut next_arrival = rng.exponential(arrival_rate);
+    let mut next_service = f64::INFINITY;
+    while t < horizon {
+        let (event_t, is_arrival) = if next_arrival <= next_service {
+            (next_arrival, true)
+        } else {
+            (next_service, false)
+        };
+        let event_t = event_t.min(horizon);
+        area += q_len as f64 * (event_t - t);
+        t = event_t;
+        if t >= horizon {
+            break;
+        }
+        if is_arrival {
+            q_len += 1;
+            next_arrival = t + rng.exponential(arrival_rate);
+            if q_len == 1 {
+                next_service = t + rng.exponential(mu);
+            }
+        } else {
+            q_len -= 1;
+            next_service = if q_len > 0 {
+                t + rng.exponential(mu)
+            } else {
+                f64::INFINITY
+            };
+        }
+    }
+    area / horizon
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_mm1_theory() {
+        // paper setting: λ₀ = 100 f/s per actor, µ = 4000 f/s
+        for &n in &[4usize, 16, 32] {
+            let theory = expected_latency(n, 100.0, 4000.0).unwrap();
+            let sim = simulate_latency(n, 100.0, 4000.0, 2000.0, 3);
+            assert!(
+                (sim - theory).abs() < 0.15 * theory.max(0.3),
+                "n={n}: theory={theory} sim={sim}"
+            );
+        }
+    }
+
+    #[test]
+    fn lag_grows_rapidly_near_saturation() {
+        // Fig. 3(c) shape: lag explodes as n approaches µ/λ₀ = 40
+        let l8 = expected_latency(8, 100.0, 4000.0).unwrap();
+        let l36 = expected_latency(36, 100.0, 4000.0).unwrap();
+        assert!(l8 < 0.3);
+        assert!(l36 > 8.0);
+    }
+
+    #[test]
+    fn unstable_queue_detected() {
+        assert!(expected_latency(40, 100.0, 4000.0).is_none());
+        assert!(expected_latency(100, 100.0, 4000.0).is_none());
+    }
+
+    #[test]
+    fn simulation_deterministic() {
+        assert_eq!(
+            simulate_latency(16, 100.0, 4000.0, 100.0, 9),
+            simulate_latency(16, 100.0, 4000.0, 100.0, 9)
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulators and analytic models for the paper's §4.2
+//! analysis: Claim 1 (expected runtime of an α-synchronized rollout
+//! system, Eq. 7) and Claim 2 (expected policy lag of an asynchronous
+//! actor-learner system, M/M/1).
+
+pub mod claim1;
+pub mod claim2;

@@ -1,0 +1,79 @@
+//! Bootstrapped confidence intervals — the paper's evaluation protocol
+//! ("95% confidence interval obtained by using the Facebook Bootstrapped
+//! implementation with 10,000 bootstrap samples").
+
+use crate::rng::SplitMix64;
+use crate::stats::describe::{mean, quantile};
+
+/// Percentile-bootstrap CI of the mean. Returns (mean, lo, hi).
+pub fn bootstrap_ci(
+    xs: &[f64],
+    n_resamples: usize,
+    confidence: f64,
+    seed: u64,
+) -> (f64, f64, f64) {
+    assert!(!xs.is_empty());
+    let m = mean(xs);
+    if xs.len() == 1 {
+        return (m, m, m);
+    }
+    let mut rng = SplitMix64::new(seed);
+    let mut means = Vec::with_capacity(n_resamples);
+    for _ in 0..n_resamples {
+        let mut acc = 0.0;
+        for _ in 0..xs.len() {
+            acc += xs[rng.below(xs.len() as u64) as usize];
+        }
+        means.push(acc / xs.len() as f64);
+    }
+    let alpha = (1.0 - confidence) / 2.0;
+    (m, quantile(&means, alpha), quantile(&means, 1.0 - alpha))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ci_brackets_mean_and_shrinks_with_n() {
+        let mut rng = SplitMix64::new(1);
+        let small: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let large: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let (m_s, lo_s, hi_s) = bootstrap_ci(&small, 2000, 0.95, 7);
+        let (m_l, lo_l, hi_l) = bootstrap_ci(&large, 2000, 0.95, 7);
+        assert!(lo_s <= m_s && m_s <= hi_s);
+        assert!(lo_l <= m_l && m_l <= hi_l);
+        assert!(hi_l - lo_l < hi_s - lo_s, "CI must shrink with n");
+        // true mean 0 should be inside the large-sample CI
+        assert!(lo_l < 0.1 && hi_l > -0.1);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let xs = [1.0, 2.0, 3.0, 10.0];
+        assert_eq!(
+            bootstrap_ci(&xs, 500, 0.95, 42),
+            bootstrap_ci(&xs, 500, 0.95, 42)
+        );
+    }
+
+    #[test]
+    fn prop_ci_ordering() {
+        prop::check("bootstrap-ci-ordering", 32, |g| {
+            let n = g.usize_in(2, 60);
+            let xs: Vec<f64> =
+                (0..n).map(|_| g.f64_in(-5.0, 5.0)).collect();
+            let (m, lo, hi) = bootstrap_ci(&xs, 200, 0.9, g.seed);
+            assert!(lo <= m + 1e-9 && m <= hi + 1e-9);
+            let mn = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(lo >= mn - 1e-9 && hi <= mx + 1e-9);
+        });
+    }
+
+    #[test]
+    fn single_sample_degenerate() {
+        assert_eq!(bootstrap_ci(&[3.0], 100, 0.95, 1), (3.0, 3.0, 3.0));
+    }
+}

@@ -1,0 +1,128 @@
+//! Descriptive statistics used across metrics and experiments.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Coefficient of variation squared — the paper's step-time "variance"
+/// axis in Fig. 4(left) is 1/β² for Gamma-distributed steps; for a general
+/// sample CoV² = var/mean² is the scale-free analogue.
+pub fn cov_squared(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    let s = std_dev(xs);
+    (s / m) * (s / m)
+}
+
+/// Exact quantile via sorting (linear interpolation).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Running average over the most recent `window` values (the paper's
+/// "average evaluation reward is the running average of the most recent
+/// 100 evaluation episodes").
+#[derive(Debug, Clone)]
+pub struct RunningWindow {
+    window: usize,
+    buf: std::collections::VecDeque<f64>,
+    sum: f64,
+}
+
+impl RunningWindow {
+    pub fn new(window: usize) -> Self {
+        RunningWindow { window, buf: Default::default(), sum: 0.0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.buf.push_back(x);
+        self.sum += x;
+        if self.buf.len() > self.window {
+            self.sum -= self.buf.pop_front().unwrap();
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            f64::NAN
+        } else {
+            self.sum / self.buf.len() as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944487358056).abs() < 1e-12);
+        assert!(mean(&[]).is_nan());
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn running_window_evicts() {
+        let mut w = RunningWindow::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.len(), 3);
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!(w.is_full());
+    }
+
+    #[test]
+    fn cov_squared_of_exponential_near_one() {
+        // For Exp(β) samples, CoV² → 1.
+        let mut rng = crate::rng::SplitMix64::new(3);
+        let xs: Vec<f64> = (0..40000).map(|_| rng.exponential(2.0)).collect();
+        assert!((cov_squared(&xs) - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,87 @@
+//! One-sample Kolmogorov–Smirnov goodness-of-fit against a Gamma
+//! distribution — the paper's Fig. A1 empirically validates Claim 1's
+//! "synchronization time is Gamma distributed" assumption with a KS test
+//! (significance 0.05, D-statistic 0.04).
+
+use crate::stats::special::gamma_cdf;
+
+/// KS D-statistic of `xs` against Gamma(shape α, rate β).
+pub fn ks_statistic_gamma(xs: &[f64], alpha: f64, beta: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in v.iter().enumerate() {
+        let cdf = gamma_cdf(x, alpha, beta);
+        let emp_hi = (i as f64 + 1.0) / n;
+        let emp_lo = i as f64 / n;
+        d = d.max((cdf - emp_lo).abs()).max((emp_hi - cdf).abs());
+    }
+    d
+}
+
+/// Asymptotic KS critical value at significance `sig` for n samples:
+/// c(sig)/√n with c(0.05) ≈ 1.3581.
+pub fn ks_critical(n: usize, sig: f64) -> f64 {
+    let c = (-0.5 * (sig / 2.0).ln()).sqrt();
+    c / (n as f64).sqrt()
+}
+
+/// Fit Gamma by moment matching and run the KS test.
+/// Returns (d_statistic, critical_value, alpha_hat, beta_hat, passes).
+pub fn ks_test_gamma(xs: &[f64], sig: f64) -> (f64, f64, f64, f64, bool) {
+    let m = crate::stats::describe::mean(xs);
+    let s = crate::stats::describe::std_dev(xs);
+    let var = (s * s).max(1e-300);
+    // Gamma(α, β): mean α/β, var α/β² ⇒ α = m²/var, β = m/var.
+    let alpha = m * m / var;
+    let beta = m / var;
+    let d = ks_statistic_gamma(xs, alpha, beta);
+    let crit = ks_critical(xs.len(), sig);
+    (d, crit, alpha, beta, d < crit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn gamma_sample_passes_ks() {
+        let mut rng = SplitMix64::new(5);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.gamma(4.0, 2.0)).collect();
+        let (d, crit, a_hat, b_hat, pass) = ks_test_gamma(&xs, 0.05);
+        assert!(pass, "d={d} crit={crit}");
+        assert!((a_hat - 4.0).abs() < 0.6, "α̂={a_hat}");
+        assert!((b_hat - 2.0).abs() < 0.35, "β̂={b_hat}");
+    }
+
+    #[test]
+    fn uniform_sample_fails_gamma_ks() {
+        let mut rng = SplitMix64::new(6);
+        // A bimodal sample is decidedly not Gamma.
+        let xs: Vec<f64> = (0..2000)
+            .map(|i| if i % 2 == 0 { 0.1 + 0.01 * rng.next_f64() }
+                 else { 5.0 + 0.01 * rng.next_f64() })
+            .collect();
+        let (_, _, _, _, pass) = ks_test_gamma(&xs, 0.05);
+        assert!(!pass);
+    }
+
+    #[test]
+    fn ks_statistic_exact_fit_small() {
+        // With the true CDF, D should be O(1/sqrt(n)).
+        let mut rng = SplitMix64::new(7);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.gamma(2.0, 1.0)).collect();
+        let d = ks_statistic_gamma(&xs, 2.0, 1.0);
+        assert!(d < ks_critical(xs.len(), 0.01), "d={d}");
+    }
+
+    #[test]
+    fn critical_values_reasonable() {
+        // classical table: c(0.05) = 1.358, so crit(100, .05) ≈ 0.1358
+        assert!((ks_critical(100, 0.05) - 0.1358).abs() < 1e-3);
+        assert!(ks_critical(10000, 0.05) < ks_critical(100, 0.05));
+    }
+}

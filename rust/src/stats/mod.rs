@@ -1,0 +1,16 @@
+//! Statistics substrate: special functions for the Claim-1 analysis
+//! (Gamma CDF/quantile), descriptive statistics, the paper's bootstrap
+//! confidence intervals, and the Kolmogorov–Smirnov test from Fig. A1.
+
+pub mod bootstrap;
+pub mod describe;
+pub mod ks;
+pub mod special;
+
+pub use bootstrap::bootstrap_ci;
+pub use describe::{mean, std_dev};
+pub use ks::{ks_statistic_gamma, ks_test_gamma};
+pub use special::{gamma_cdf, gamma_quantile, ln_gamma, reg_inc_gamma};
+
+/// Euler–Mascheroni constant (Eq. 7).
+pub const EULER_MASCHERONI: f64 = 0.577_215_664_901_532_9;

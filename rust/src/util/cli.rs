@@ -1,0 +1,125 @@
+//! Tiny `--flag value` argument parser (clap is not in the offline vendor
+//! set). Supports `--key value`, `--key=value`, boolean `--key`, and a
+//! positional subcommand, which covers the whole launcher surface.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    out.flags
+                        .insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".into());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                bail!("unexpected positional argument '{a}'");
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(
+            self.flags.get(key).map(|s| s.as_str()),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&sv(&["train", "--env", "catch", "--n-envs=8",
+                                  "--verbose"]))
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_opt("env"), Some("catch"));
+        assert_eq!(a.usize_or("n-envs", 16).unwrap(), 8);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&["x"])).unwrap();
+        assert_eq!(a.f64_or("lr", 7e-4).unwrap(), 7e-4);
+        assert_eq!(a.str_or("algo", "a2c"), "a2c");
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(Args::parse(&sv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&sv(&["--n", "abc"])).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+}

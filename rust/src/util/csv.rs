@@ -1,0 +1,111 @@
+//! CSV emission for training curves and experiment tables.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, n_cols: header.len() })
+    }
+
+    pub fn row(&mut self, vals: &[f64]) -> Result<()> {
+        assert_eq!(vals.len(), self.n_cols, "csv row arity mismatch");
+        let cells: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, vals: &[String]) -> Result<()> {
+        assert_eq!(vals.len(), self.n_cols, "csv row arity mismatch");
+        writeln!(self.w, "{}", vals.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Render an aligned markdown table (for EXPERIMENTS.md blocks and stdout).
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        format!("| {} |", padded.join(" | "))
+    };
+    let mut out = String::new();
+    out.push_str(&line(
+        &header.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push('\n');
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&line(&sep));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join("htsrl_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_arity_checked() {
+        let dir = std::env::temp_dir().join("htsrl_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a"]).unwrap();
+        let _ = w.row(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn markdown_alignment() {
+        let t = markdown_table(
+            &["name", "v"],
+            &[vec!["x".into(), "1".into()],
+              vec!["longer".into(), "2".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+}

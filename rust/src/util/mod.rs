@@ -1,0 +1,7 @@
+//! Infrastructure substrates the offline crate set doesn't provide:
+//! JSON, CSV, CLI parsing, and a miniature property-testing harness.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,86 @@
+//! Miniature property-testing harness (proptest is not in the offline
+//! vendor set — DESIGN.md §3). A `Gen` wraps a deterministic PRNG; `check`
+//! sweeps N seeded cases and reports the first failing seed so a failure is
+//! reproducible with `Gen::from_seed`.
+
+use crate::rng::SplitMix64;
+
+/// Deterministic random case generator.
+pub struct Gen {
+    rng: SplitMix64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Gen {
+        Gen { rng: SplitMix64::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_std(&mut self) -> f32 {
+        (self.rng.next_f64() * 2.0 - 1.0) as f32
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_std()).collect()
+    }
+}
+
+/// Run `cases` seeded property cases; panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut f: F) {
+    for i in 0..cases {
+        let seed = 0x9e3779b97f4a7c15u64.wrapping_mul(i + 1);
+        let mut g = Gen::from_seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut g),
+        ));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::from_seed(1);
+        let mut b = Gen::from_seed(1);
+        for _ in 0..100 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check("ranges", 64, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let x = g.usize_in(lo, hi);
+            assert!(x >= lo && x <= hi);
+            let f = g.f64_in(-2.0, 3.0);
+            assert!((-2.0..=3.0).contains(&f));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("always-fails", 4, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,148 @@
+//! End-to-end integration: all three drivers run the full stack
+//! (envs → buffers → PJRT inference → storage → PJRT train step) and
+//! HTS-RL actually *learns* on a real workload.
+
+use hts_rl::algo::{Algo, AlgoConfig};
+use hts_rl::coordinator::{run, Method, RunConfig, StopCond};
+use hts_rl::envs::EnvSpec;
+use hts_rl::metrics::evaluate_params;
+
+fn have_artifacts() -> bool {
+    hts_rl::coordinator::common::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+fn base(env: &str, algo: Algo) -> RunConfig {
+    let spec = EnvSpec::by_name(env).unwrap();
+    let mut c = RunConfig::new(spec, AlgoConfig::a2c(algo));
+    c.n_envs = 16;
+    c.n_actors = 2;
+    c.stop = StopCond::updates(5);
+    c
+}
+
+#[test]
+fn all_three_drivers_complete() {
+    if !have_artifacts() {
+        return;
+    }
+    for (method, algo) in [
+        (Method::Hts, Algo::A2cDelayed),
+        (Method::Sync, Algo::A2cDelayed),
+        (Method::Async, Algo::Vtrace),
+    ] {
+        let r = run(method, &base("catch", algo)).unwrap();
+        assert!(r.steps > 0, "{method:?}");
+        assert!(r.updates >= 5, "{method:?}");
+        assert!(r.final_loss.is_finite(), "{method:?}");
+        assert!(r.sps() > 0.0, "{method:?}");
+    }
+}
+
+#[test]
+fn async_driver_tolerates_uneven_producers() {
+    // Regression: a fast env replica can contribute two trajectories to
+    // one learner batch while a slow one contributes none — the learner
+    // must assign storage columns by batch slot, not env id.
+    if !have_artifacts() {
+        return;
+    }
+    let spec = EnvSpec::by_name("catch")
+        .unwrap()
+        // high-variance step times make producer rates very uneven
+        .with_steptime(hts_rl::envs::StepTimeModel::Gamma {
+            shape: 0.5,
+            mean_us: 500.0,
+        });
+    let mut cfg = RunConfig::new(spec, AlgoConfig::a2c(Algo::Vtrace));
+    cfg.n_envs = 16; // must match the train artifact batch
+    cfg.n_actors = 2;
+    cfg.stop = StopCond::updates(12);
+    let r = run(Method::Async, &cfg).unwrap();
+    assert!(r.updates >= 12);
+}
+
+#[test]
+fn async_driver_measures_staleness() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base("catch", Algo::Vtrace);
+    cfg.stop = StopCond::updates(10);
+    let r = run(Method::Async, &cfg).unwrap();
+    assert!(!r.staleness.is_empty());
+    // some trajectories must be at least one update stale
+    assert!(r.staleness.iter().any(|&s| s >= 1.0));
+}
+
+#[test]
+fn multi_agent_columns_work() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = EnvSpec::by_name("football/3_vs_1_with_keeper")
+        .unwrap()
+        .with_agents(3);
+    let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
+    cfg.n_envs = 4; // 4 envs × 3 agents = 12 columns (B=12 artifact)
+    cfg.n_actors = 2;
+    cfg.stop = StopCond::updates(3);
+    let r = run(Method::Hts, &cfg).unwrap();
+    assert!(r.updates >= 3);
+}
+
+#[test]
+fn hts_learns_catch() {
+    // The real E2E check: HTS-RL(A2C) on Catch must clearly beat the
+    // random policy (~0 expected reward; optimal = 1) after a short run.
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base("catch", Algo::A2cDelayed);
+    cfg.seed = 3;
+    cfg.stop = StopCond::steps(25_000);
+    let r = run(Method::Hts, &cfg).unwrap();
+
+    // evaluate the final policy directly
+    let manifest = hts_rl::model::manifest::Manifest::load(&cfg.artifacts)
+        .unwrap();
+    let rt = hts_rl::runtime::ModelRuntime::new(manifest).unwrap();
+    // final params are not exported by the report; use training episodes
+    let _ = rt;
+    let tail: Vec<f64> = r
+        .episodes
+        .iter()
+        .rev()
+        .take(200)
+        .map(|e| e.reward)
+        .collect();
+    let head: Vec<f64> = r.episodes.iter().take(200)
+        .map(|e| e.reward).collect();
+    let tail_mean = hts_rl::stats::mean(&tail);
+    let head_mean = hts_rl::stats::mean(&head);
+    assert!(
+        tail_mean > head_mean + 0.3 && tail_mean > 0.3,
+        "no learning: head {head_mean:.2} → tail {tail_mean:.2}"
+    );
+}
+
+#[test]
+fn eval_protocol_is_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = hts_rl::model::manifest::Manifest::load(
+        hts_rl::coordinator::common::default_artifacts_dir(),
+    )
+    .unwrap();
+    let rt = hts_rl::runtime::ModelRuntime::new(manifest).unwrap();
+    let params = rt.init_params("catch", 5).unwrap();
+    let pool = hts_rl::runtime::ForwardPool::new(&rt, "catch").unwrap();
+    let spec = EnvSpec::by_name("catch").unwrap();
+    let a = evaluate_params(&pool, &params, &spec, 10, 99).unwrap();
+    let b = evaluate_params(&pool, &params, &spec, 10, 99).unwrap();
+    assert_eq!(a, b);
+    let c = evaluate_params(&pool, &params, &spec, 10, 100).unwrap();
+    assert_ne!(a, c);
+}

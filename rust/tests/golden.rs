@@ -1,0 +1,136 @@
+//! Cross-language numerical contract: replay `artifacts/golden.json` —
+//! concrete input/output vectors recorded by `aot.py` when it lowered each
+//! artifact — through the Rust PJRT runtime and assert allclose.
+//!
+//! This is the single test that pins the whole three-layer stack together:
+//! if the Pallas kernels, the JAX model, the HLO-text interchange, or the
+//! Rust literal marshalling drift, it fails.
+
+use hts_rl::model::manifest::Manifest;
+use hts_rl::runtime::executable::{Input, ModelRuntime};
+use hts_rl::util::json::Json;
+
+fn art_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn golden_vectors_replay_through_pjrt() {
+    let dir = art_dir();
+    let golden_path = dir.join("golden.json");
+    if !golden_path.exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::new(manifest.clone()).unwrap();
+    let golden =
+        Json::parse(&std::fs::read_to_string(&golden_path).unwrap()).unwrap();
+    let arts: std::collections::BTreeMap<String, _> = manifest
+        .artifacts
+        .iter()
+        .map(|a| (a.file.clone(), a))
+        .collect();
+
+    let mut checked = 0;
+    for case in golden.get("cases").unwrap().as_arr().unwrap() {
+        let fname = case.get("artifact").unwrap().as_str().unwrap();
+        let art = arts[fname];
+        let meta = manifest
+            .artifacts
+            .iter()
+            .find(|a| a.file == fname)
+            .unwrap();
+        let _ = meta;
+        // input dtypes + shapes come from the manifest artifact entry
+        let manifest_entry = {
+            let raw = std::fs::read_to_string(dir.join("manifest.json"))
+                .unwrap();
+            let root = Json::parse(&raw).unwrap();
+            root.get("artifacts")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .find(|a| {
+                    a.get("file").unwrap().as_str().unwrap() == fname
+                })
+                .cloned()
+                .unwrap()
+        };
+        let in_specs = manifest_entry.get("inputs").unwrap().as_arr()
+            .unwrap().to_vec();
+        let inputs_raw = case.get("inputs").unwrap().as_arr().unwrap();
+        let dtypes = case.get("in_dtypes").unwrap().as_arr().unwrap();
+
+        // buffers must outlive the Input refs
+        let mut f32_bufs: Vec<Vec<f32>> = Vec::new();
+        let mut i32_bufs: Vec<Vec<i32>> = Vec::new();
+        let mut u32_bufs: Vec<Vec<u32>> = Vec::new();
+        let mut kinds: Vec<(u8, usize, Vec<i64>)> = Vec::new();
+        for (i, raw) in inputs_raw.iter().enumerate() {
+            let dt = dtypes[i].as_str().unwrap();
+            let shape: Vec<i64> = in_specs[i]
+                .get("shape")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as i64)
+                .collect();
+            let vals = raw.as_arr().unwrap();
+            match dt {
+                "float32" => {
+                    f32_bufs.push(
+                        vals.iter().map(|v| v.as_f64().unwrap() as f32)
+                            .collect());
+                    kinds.push((0, f32_bufs.len() - 1, shape));
+                }
+                "int32" => {
+                    i32_bufs.push(
+                        vals.iter().map(|v| v.as_f64().unwrap() as i32)
+                            .collect());
+                    kinds.push((1, i32_bufs.len() - 1, shape));
+                }
+                "uint32" => {
+                    u32_bufs.push(
+                        vals.iter().map(|v| v.as_f64().unwrap() as u32)
+                            .collect());
+                    kinds.push((2, u32_bufs.len() - 1, shape));
+                }
+                other => panic!("dtype {other}"),
+            }
+        }
+        let inputs: Vec<(Input, &[i64])> = kinds
+            .iter()
+            .map(|(k, idx, shape)| {
+                let inp = match k {
+                    0 => Input::F32(&f32_bufs[*idx]),
+                    1 => Input::I32(&i32_bufs[*idx]),
+                    _ => Input::U32(&u32_bufs[*idx]),
+                };
+                (inp, shape.as_slice())
+            })
+            .collect();
+
+        let n_out = case.get("outputs").unwrap().as_arr().unwrap().len();
+        let exe = rt.load_artifact(&art.file, n_out).unwrap();
+        let outs = exe.run_shaped(&inputs).unwrap();
+        for (got, want_raw) in
+            outs.iter().zip(case.get("outputs").unwrap().as_arr().unwrap())
+        {
+            let want = want_raw.as_f32_vec().unwrap();
+            assert_eq!(got.len(), want.len(), "{fname}: output arity");
+            for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+                let tol = 1e-4f32 + 1e-3 * w.abs();
+                assert!(
+                    (g - w).abs() <= tol,
+                    "{fname}[{i}]: got {g} want {w}"
+                );
+            }
+        }
+        checked += 1;
+    }
+    assert!(checked >= 9, "expected >=9 golden cases, got {checked}");
+    println!("golden: {checked} artifact cases replayed OK");
+}

@@ -1,0 +1,172 @@
+//! Concurrency stress / property tests for the coordination substrates —
+//! no artifacts needed, pure L3. These hammer the exact interleavings the
+//! HTS-RL determinism argument depends on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use hts_rl::buffers::{ActionBuffer, DoublePair, ObsMsg, StateBuffer};
+use hts_rl::util::prop;
+
+/// Full executor/actor ping-pong at high contention: every observation
+/// must receive exactly the action computed from its own seed, regardless
+/// of how many actors race on the state buffer.
+#[test]
+fn state_action_pingpong_routes_correctly() {
+    for &(n_exec, n_actors) in &[(4usize, 1usize), (8, 3), (16, 5)] {
+        let steps = 200;
+        let sb = Arc::new(StateBuffer::new());
+        let ab = Arc::new(ActionBuffer::new(n_exec));
+        let mut actors = Vec::new();
+        for _ in 0..n_actors {
+            let sb = sb.clone();
+            let ab = ab.clone();
+            actors.push(std::thread::spawn(move || {
+                loop {
+                    let batch = sb.grab(8);
+                    if batch.is_empty() {
+                        return;
+                    }
+                    for m in batch {
+                        // "action" = pure function of the seed
+                        ab.post(m.slot, (m.seed % 97) as usize);
+                    }
+                }
+            }));
+        }
+        let mut execs = Vec::new();
+        for e in 0..n_exec {
+            let sb = sb.clone();
+            let ab = ab.clone();
+            execs.push(std::thread::spawn(move || {
+                for i in 0..steps {
+                    let seed = (e as u64) << 32 | i as u64;
+                    sb.push(ObsMsg { slot: e, obs: vec![0.0], seed });
+                    let a = ab.take(e).unwrap();
+                    assert_eq!(a, (seed % 97) as usize,
+                               "slot {e} step {i} got foreign action");
+                }
+            }));
+        }
+        for h in execs {
+            h.join().unwrap();
+        }
+        sb.close();
+        ab.close();
+        for h in actors {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// The two-phase barrier must keep executors and learner in lockstep even
+/// when their work durations are adversarially jittered.
+#[test]
+fn double_pair_lockstep_under_jitter() {
+    prop::check("double-pair-jitter", 8, |g| {
+        let n_exec = g.usize_in(1, 6);
+        let iters = 30u64;
+        let dp = Arc::new(DoublePair::new(2, n_exec, 1, n_exec));
+        let writes = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for e in 0..n_exec {
+            let dp = dp.clone();
+            let writes = writes.clone();
+            let jitter = g.usize_in(0, 300) as u64;
+            handles.push(std::thread::spawn(move || {
+                let mut it = 0u64;
+                while it < iters {
+                    if jitter > 0 {
+                        std::thread::sleep(
+                            std::time::Duration::from_micros(jitter));
+                    }
+                    {
+                        let mut st = dp.write_storage(it).lock().unwrap();
+                        st.push(e, &[it as f32], 0, 1.0, false);
+                        st.push(e, &[it as f32], 0, 1.0, false);
+                    }
+                    writes.fetch_add(2, Ordering::Relaxed);
+                    it = dp.executor_arrive(it).unwrap();
+                }
+            }));
+        }
+        let mut it = 0u64;
+        while it < iters {
+            if it >= 1 {
+                // read storage must be exactly full — never torn
+                let st = dp.read_storage(it).lock().unwrap();
+                assert!(st.is_full(), "iteration {it}: torn storage");
+                // every row written by the previous iteration
+                assert_eq!(st.total_reward(), (2 * n_exec) as f32);
+            }
+            assert!(dp.learner_arrive(it));
+            it = dp.learner_release(it);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(writes.load(Ordering::Relaxed), 2 * n_exec as u64 * iters);
+    });
+}
+
+/// Closing buffers mid-flight must release every blocked party (shutdown
+/// can never deadlock).
+#[test]
+fn shutdown_releases_all_parties() {
+    let sb = Arc::new(StateBuffer::new());
+    let ab = Arc::new(ActionBuffer::new(4));
+    let dp = Arc::new(DoublePair::new(1, 4, 1, 4));
+    let mut handles = Vec::new();
+    for e in 0..4 {
+        let sb = sb.clone();
+        let ab = ab.clone();
+        let dp = dp.clone();
+        handles.push(std::thread::spawn(move || {
+            // park in different blocking calls
+            match e % 3 {
+                0 => {
+                    let _ = ab.take(e);
+                }
+                1 => {
+                    let _ = sb.grab(4);
+                }
+                _ => {
+                    let _ = dp.executor_arrive(0);
+                }
+            }
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    sb.close();
+    ab.close();
+    dp.shutdown();
+    for h in handles {
+        h.join().unwrap(); // would hang forever on a shutdown bug
+    }
+}
+
+/// Signature combining is order-independent across executors (XOR) but
+/// order-sensitive within one executor's trajectory.
+#[test]
+fn signature_properties() {
+    use hts_rl::coordinator::common::Fnv;
+    prop::check("fnv-signature", 64, |g| {
+        let n = g.usize_in(1, 20);
+        let vals: Vec<u64> =
+            (0..n).map(|_| g.usize_in(0, 1 << 30) as u64).collect();
+        let hash = |xs: &[u64]| {
+            let mut f = Fnv::default();
+            for &x in xs {
+                f.update(x);
+            }
+            f.finish()
+        };
+        let h = hash(&vals);
+        assert_eq!(h, hash(&vals), "deterministic");
+        if n >= 2 && vals[0] != vals[1] {
+            let mut swapped = vals.clone();
+            swapped.swap(0, 1);
+            assert_ne!(h, hash(&swapped), "order-sensitive");
+        }
+    });
+}
