@@ -3,11 +3,13 @@
 //! These are the numbers the §Perf pass in EXPERIMENTS.md starts from:
 //! per-call latency of every hot-path building block.
 
+use std::cell::Cell;
+use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
 use hts_rl::algo::returns::gae;
 use hts_rl::algo::sampling::sample_action;
-use hts_rl::buffers::{BlockingQueue, RolloutStorage};
+use hts_rl::buffers::{BlockingQueue, RolloutStorage, StripedSwap};
 use hts_rl::model::manifest::Manifest;
 use hts_rl::rng::SplitMix64;
 use hts_rl::runtime::{ForwardPool, ModelRuntime, Trainer};
@@ -27,8 +29,116 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+/// Pre-refactor write path: every executor step locks one shared
+/// `Mutex<RolloutStorage>`. Returns wall seconds for all pushes.
+fn contended_mutexed(
+    n_exec: usize,
+    t_len: usize,
+    rounds: usize,
+    obs: &[f32],
+) -> f64 {
+    let storage = Mutex::new(RolloutStorage::new(t_len, n_exec, obs.len()));
+    let start = Barrier::new(n_exec + 1);
+    let round_a = Barrier::new(n_exec);
+    let round_b = Barrier::new(n_exec);
+    let t0 = Cell::new(None);
+    std::thread::scope(|s| {
+        for e in 0..n_exec {
+            let (storage, start) = (&storage, &start);
+            let (round_a, round_b) = (&round_a, &round_b);
+            s.spawn(move || {
+                start.wait();
+                for _r in 0..rounds {
+                    for _t in 0..t_len {
+                        storage.lock().unwrap().push(e, obs, 1, 0.0, false);
+                    }
+                    round_a.wait();
+                    if e == 0 {
+                        storage.lock().unwrap().clear();
+                    }
+                    round_b.wait();
+                }
+            });
+        }
+        start.wait();
+        t0.set(Some(Instant::now()));
+    });
+    t0.get().unwrap().elapsed().as_secs_f64()
+}
+
+/// Striped write path: each executor claims its private column stripe
+/// once per round and pushes with no synchronization at all.
+fn contended_striped(
+    n_exec: usize,
+    t_len: usize,
+    rounds: usize,
+    obs: &[f32],
+) -> f64 {
+    let swap = StripedSwap::new(t_len, n_exec, obs.len(), n_exec);
+    let start = Barrier::new(n_exec + 1);
+    let round_a = Barrier::new(n_exec);
+    let round_b = Barrier::new(n_exec);
+    let t0 = Cell::new(None);
+    std::thread::scope(|s| {
+        for e in 0..n_exec {
+            let (swap, start) = (&swap, &start);
+            let (round_a, round_b) = (&round_a, &round_b);
+            s.spawn(move || {
+                start.wait();
+                for _r in 0..rounds {
+                    let mut w = swap.writer(e);
+                    for _t in 0..t_len {
+                        w.push(e, obs, 1, 0.0, false);
+                    }
+                    w.clear();
+                    drop(w);
+                    round_a.wait();
+                    round_b.wait();
+                }
+            });
+        }
+        start.wait();
+        t0.set(Some(Instant::now()));
+    });
+    t0.get().unwrap().elapsed().as_secs_f64()
+}
+
+/// The ISSUE 1 acceptance benchmark: striped shards must beat the
+/// global-lock baseline by ≥2× at 16 executors (and the gap should grow
+/// with the executor count — the mutex serializes, stripes don't).
+fn bench_contended_write_path() {
+    println!("== contended write path: global mutex vs column stripes ==");
+    const T_LEN: usize = 512;
+    const ROUNDS: usize = 40;
+    let obs = vec![0.5f32; 16];
+    for &n_exec in &[1usize, 4, 16, 64] {
+        let total = t_total(T_LEN, ROUNDS, n_exec) as f64;
+        let base_s = contended_mutexed(n_exec, T_LEN, ROUNDS, &obs);
+        let strip_s = contended_striped(n_exec, T_LEN, ROUNDS, &obs);
+        println!(
+            "{:<28} mutexed {:>8.1} ns/push ({:>6.1} Mpush/s)",
+            format!("contended push, {n_exec} exec"),
+            1e9 * base_s / total,
+            1e-6 * total / base_s,
+        );
+        println!(
+            "{:<28} striped {:>8.1} ns/push ({:>6.1} Mpush/s)  {:.1}x",
+            "",
+            1e9 * strip_s / total,
+            1e-6 * total / strip_s,
+            base_s / strip_s,
+        );
+    }
+}
+
+fn t_total(t_len: usize, rounds: usize, n_exec: usize) -> usize {
+    t_len * rounds * n_exec
+}
+
 fn main() {
     println!("== component micro-benchmarks ==");
+
+    bench_contended_write_path();
 
     // RNG + sampling
     let mut rng = SplitMix64::new(1);

@@ -1,35 +1,64 @@
-//! The double-storage pair + swap barrier — the mechanism behind the
-//! paper's "concurrent rollout and learning" with a *guaranteed* policy
-//! lag of one (§4.1 "Delayed gradient").
+//! The striped-shard swap — the mechanism behind the paper's "concurrent
+//! rollout and learning" with a *guaranteed* policy lag of one (§4.1
+//! "Delayed gradient"). Full design rationale: DESIGN.md §5.
 //!
-//! During iteration `j`, executors fill `storages[j % 2]` while the
-//! learner consumes `storages[(j-1) % 2]`. "The system does not switch the
-//! role of a data storage until executors fill up and learners exhaust the
-//! data storage" — realized as a **two-phase** rendezvous:
+//! Historically this module held a `DoublePair` of two
+//! `Mutex<RolloutStorage>` monoliths that executors locked on **every**
+//! environment step — a single global lock on the hottest path in the
+//! system, exactly the serialization pathology the paper's throughput
+//! claim forbids. It is now a [`StripedSwap`]:
 //!
-//! 1. `learner_arrive` blocks until every executor has arrived. At that
-//!    point no observation is in flight (each executor only arrives after
-//!    all its actions came back), but executors are still parked — the
-//!    iteration counter has *not* advanced.
-//! 2. The learner publishes the next parameter version (and any other
-//!    swap-critical state) while everyone is parked, then calls
-//!    `learner_release`, which clears the next write storage, bumps the
-//!    iteration, and wakes the executors.
+//! * each executor owns a private [`ColumnShard`] — its stripe of batch
+//!   columns — and writes it during an iteration with **no
+//!   synchronization at all** (no lock, no atomics on the push path, no
+//!   shared cache lines);
+//! * the two-phase rendezvous is unchanged: (1) `learner_arrive` blocks
+//!   until every executor has parked; (2) the learner — alone in the
+//!   publication window — gathers all stripes into the time-major
+//!   `[T, B]` train view with [`StripedSwap::gather_and_reset`],
+//!   publishes the next parameter version, and calls `learner_release`,
+//!   which bumps the iteration and wakes the executors.
 //!
-//! The two-phase shape is what makes parameter publication atomic with the
-//! swap: actors can never serve an iteration-`j` observation with
-//! iteration-`j+1` parameters, which is the determinism proof obligation
-//! in DESIGN.md §6.
+//! "The system does not switch the role of a data storage until
+//! executors fill up and learners exhaust the data storage" is preserved:
+//! the shard set plays the write storage, the learner-owned gathered
+//! view plays the read storage, and the gather at the barrier is the
+//! swap. Gather order is fixed by column index, so the `[T, B]` buffers
+//! — and therefore run signatures — are bit-identical to the
+//! pre-refactor `push` layout (property-tested in `storage.rs`) and
+//! independent of executor scheduling. The two-phase shape is what makes
+//! parameter publication atomic with the swap: actors can never serve an
+//! iteration-`j` observation with iteration-`j+1` parameters, the
+//! determinism proof obligation in DESIGN.md §6.
 
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 
-use super::storage::RolloutStorage;
+use super::storage::{ColumnShard, RolloutStorage};
 
-pub struct DoublePair {
-    storages: [Mutex<RolloutStorage>; 2],
+pub struct StripedSwap {
+    /// One stripe per executor, in column order. Interior mutability is
+    /// sound because access alternates strictly by protocol phase — see
+    /// the `Sync` impl below.
+    shards: Vec<UnsafeCell<ColumnShard>>,
+    /// Per-shard writer claim, so shard aliasing is a loud panic instead
+    /// of UB. One uncontended CAS per *iteration* per executor — never
+    /// on the per-step write path.
+    claimed: Vec<AtomicBool>,
     ctl: Mutex<Ctl>,
     cv: Condvar,
 }
+
+// SAFETY: a shard is touched by at most one thread at a time, enforced
+// by the two-phase barrier: executor `e` writes shard `e` only between
+// `learner_release(it-1)` and `executor_arrive(it)`; the learner touches
+// shards only inside the publication window (after `learner_arrive(it)`
+// observed all executors parked, before `learner_release(it)`). Both
+// transitions synchronize through `ctl`'s mutex + condvar, which carry
+// the happens-before edges. The `claimed` flags additionally turn any
+// protocol violation into a panic.
+unsafe impl Sync for StripedSwap {}
 
 #[derive(Debug)]
 struct Ctl {
@@ -39,18 +68,64 @@ struct Ctl {
     shutdown: bool,
 }
 
-impl DoublePair {
+/// Exclusive, lock-free handle to one executor's stripe. Acquired once
+/// per iteration; pushes through it are plain private-memory writes.
+/// Dropping releases the claim.
+pub struct ShardWriter<'a> {
+    owner: &'a StripedSwap,
+    exec: usize,
+    shard: *mut ColumnShard,
+}
+
+impl std::ops::Deref for ShardWriter<'_> {
+    type Target = ColumnShard;
+    fn deref(&self) -> &ColumnShard {
+        // SAFETY: the claim flag guarantees this is the only live
+        // reference to the shard (see `writer`).
+        unsafe { &*self.shard }
+    }
+}
+
+impl std::ops::DerefMut for ShardWriter<'_> {
+    fn deref_mut(&mut self) -> &mut ColumnShard {
+        // SAFETY: as above.
+        unsafe { &mut *self.shard }
+    }
+}
+
+impl Drop for ShardWriter<'_> {
+    fn drop(&mut self) {
+        self.owner.claimed[self.exec].store(false, Ordering::Release);
+    }
+}
+
+impl StripedSwap {
+    /// `b` batch columns striped evenly over `n_exec` executors
+    /// (`b % n_exec == 0`; executor `e` owns columns
+    /// `[e·b/n_exec, (e+1)·b/n_exec)`).
     pub fn new(
         t_len: usize,
         b: usize,
         obs_dim: usize,
         n_exec: usize,
-    ) -> DoublePair {
-        DoublePair {
-            storages: [
-                Mutex::new(RolloutStorage::new(t_len, b, obs_dim)),
-                Mutex::new(RolloutStorage::new(t_len, b, obs_dim)),
-            ],
+    ) -> StripedSwap {
+        assert!(
+            n_exec == 0 || b % n_exec == 0,
+            "batch columns {b} must stripe evenly over {n_exec} executors"
+        );
+        let width = if n_exec == 0 { 0 } else { b / n_exec };
+        StripedSwap {
+            shards: (0..n_exec)
+                .map(|e| {
+                    UnsafeCell::new(ColumnShard::new(
+                        t_len,
+                        e * width,
+                        width,
+                        obs_dim,
+                    ))
+                })
+                .collect(),
+            claimed: (0..n_exec).map(|_| AtomicBool::new(false)).collect(),
             ctl: Mutex::new(Ctl {
                 iteration: 0,
                 exec_arrived: 0,
@@ -65,15 +140,70 @@ impl DoublePair {
         self.ctl.lock().unwrap().iteration
     }
 
-    /// Storage executors write during iteration `it`.
-    pub fn write_storage(&self, it: u64) -> &Mutex<RolloutStorage> {
-        &self.storages[(it % 2) as usize]
+    pub fn n_exec(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Storage the learner reads during iteration `it` (data collected in
-    /// iteration `it - 1`).
-    pub fn read_storage(&self, it: u64) -> &Mutex<RolloutStorage> {
-        &self.storages[((it + 1) % 2) as usize]
+    /// Claim executor `e`'s stripe for the current iteration. One CAS —
+    /// no mutex, no contention with other executors or the learner.
+    /// Panics if the stripe is already claimed (writer aliasing is a
+    /// protocol bug, never a wait).
+    pub fn writer(&self, exec: usize) -> ShardWriter<'_> {
+        assert!(
+            self.claimed[exec]
+                .compare_exchange(
+                    false,
+                    true,
+                    Ordering::Acquire,
+                    Ordering::Relaxed,
+                )
+                .is_ok(),
+            "shard {exec} writer aliased"
+        );
+        ShardWriter { owner: self, exec, shard: self.shards[exec].get() }
+    }
+
+    /// Gather every stripe into `dst` (column order — deterministic) and
+    /// reset the stripes for the next iteration. MUST be called only
+    /// inside the publication window: after `learner_arrive(it)`
+    /// returned true and before `learner_release(it)`, when every
+    /// executor is parked and no writer is live.
+    pub fn gather_and_reset(&self, dst: &mut RolloutStorage) {
+        {
+            let g = self.ctl.lock().unwrap();
+            assert!(
+                g.exec_arrived == g.n_exec,
+                "gather outside the publication window \
+                 ({}/{} executors parked)",
+                g.exec_arrived,
+                g.n_exec
+            );
+        }
+        for (e, cell) in self.shards.iter().enumerate() {
+            // Claim the stripe for the duration of the copy (not a mere
+            // load: check-then-use would let a racing `writer()` alias
+            // the &mut below instead of panicking).
+            assert!(
+                self.claimed[e]
+                    .compare_exchange(
+                        false,
+                        true,
+                        Ordering::Acquire,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok(),
+                "shard {e} writer still live at gather"
+            );
+            // SAFETY: all executors are parked at the barrier and the
+            // claim above excludes any concurrent writer; the learner is
+            // the only thread touching this shard until the release
+            // store below.
+            let shard = unsafe { &mut *cell.get() };
+            dst.absorb(shard);
+            shard.clear();
+            self.claimed[e].store(false, Ordering::Release);
+        }
+        assert!(dst.is_full(), "torn gather: stripe not fully written");
     }
 
     /// Executor rendezvous: "I finished my α steps of iteration `it`".
@@ -96,7 +226,7 @@ impl DoublePair {
 
     /// Phase 1: learner waits for all executors to park. Returns false on
     /// shutdown. After this returns true the learner MUST call
-    /// [`DoublePair::learner_release`].
+    /// [`StripedSwap::learner_release`].
     pub fn learner_arrive(&self, it: u64) -> bool {
         let mut g = self.ctl.lock().unwrap();
         assert_eq!(g.iteration, it, "learner generation mismatch");
@@ -106,12 +236,11 @@ impl DoublePair {
         !g.shutdown
     }
 
-    /// Phase 2: perform the swap and wake executors into iteration
+    /// Phase 2: complete the swap and wake executors into iteration
     /// `it + 1`. Call only between `learner_arrive(it) == true` and any
-    /// further use. Returns the new iteration.
+    /// further use (typically after [`StripedSwap::gather_and_reset`]).
+    /// Returns the new iteration.
     pub fn learner_release(&self, it: u64) -> u64 {
-        // clear the storage the executors will fill next iteration
-        self.storages[((it + 1) % 2) as usize].lock().unwrap().clear();
         let mut g = self.ctl.lock().unwrap();
         assert_eq!(g.iteration, it);
         assert_eq!(g.exec_arrived, g.n_exec, "release before all arrived");
@@ -134,7 +263,7 @@ mod tests {
 
     #[test]
     fn swap_requires_all_executors_and_learner() {
-        let dp = Arc::new(DoublePair::new(1, 1, 1, 2));
+        let dp = Arc::new(StripedSwap::new(1, 2, 1, 2));
         let d1 = dp.clone();
         let h1 = std::thread::spawn(move || d1.executor_arrive(0));
         std::thread::sleep(std::time::Duration::from_millis(20));
@@ -151,33 +280,66 @@ mod tests {
     }
 
     #[test]
-    fn roles_alternate() {
-        let dp = DoublePair::new(1, 1, 1, 0);
-        let w0 = dp.write_storage(0) as *const _;
-        let r0 = dp.read_storage(0) as *const _;
-        let w1 = dp.write_storage(1) as *const _;
-        assert_ne!(w0, r0);
-        assert_eq!(r0, w1, "yesterday's write storage is today's read");
+    fn writer_needs_no_lock_and_stripes_are_private() {
+        let dp = StripedSwap::new(2, 4, 1, 2);
+        let mut w0 = dp.writer(0);
+        let mut w1 = dp.writer(1); // concurrent claim of a *different* stripe
+        w0.push(0, &[1.0], 0, 1.0, false);
+        w1.push(2, &[2.0], 0, 2.0, false);
+        assert_eq!(w0.rows_filled(0), 1);
+        assert_eq!(w1.rows_filled(2), 1);
     }
 
     #[test]
-    fn write_storage_cleared_on_swap() {
-        let dp = Arc::new(DoublePair::new(1, 1, 1, 1));
-        dp.write_storage(0).lock().unwrap().push(0, &[1.0], 0, 1.0, false);
+    #[should_panic(expected = "writer aliased")]
+    fn aliased_writer_panics() {
+        let dp = StripedSwap::new(1, 1, 1, 1);
+        let _w = dp.writer(0);
+        let _w2 = dp.writer(0);
+    }
+
+    #[test]
+    fn writer_claim_released_on_drop() {
+        let dp = StripedSwap::new(1, 1, 1, 1);
+        drop(dp.writer(0));
+        drop(dp.writer(0)); // re-claim after drop must succeed
+    }
+
+    #[test]
+    #[should_panic(expected = "publication window")]
+    fn gather_outside_window_panics() {
+        let dp = StripedSwap::new(1, 1, 1, 1);
+        let mut dst = RolloutStorage::new(1, 1, 1);
+        dp.gather_and_reset(&mut dst); // no executor has arrived
+    }
+
+    #[test]
+    fn gather_swaps_and_resets_stripes() {
+        let dp = Arc::new(StripedSwap::new(1, 1, 1, 1));
+        {
+            let mut w = dp.writer(0);
+            w.push(0, &[1.0], 3, 1.5, false);
+            w.set_last_obs(0, &[9.0]);
+        }
         let d = dp.clone();
         let h = std::thread::spawn(move || d.executor_arrive(0));
         assert!(dp.learner_arrive(0));
+        let mut view = RolloutStorage::new(1, 1, 1);
+        dp.gather_and_reset(&mut view);
         dp.learner_release(0);
         h.join().unwrap();
         // iteration 1: learner reads what was written in iteration 0
-        assert!(dp.read_storage(1).lock().unwrap().is_full());
-        // iteration 1's write storage (the other one) must be clear
-        assert!(!dp.write_storage(1).lock().unwrap().is_full());
+        assert!(view.is_full());
+        assert_eq!(view.act[0], 3);
+        assert_eq!(view.rew[0], 1.5);
+        assert_eq!(view.last_obs[0], 9.0);
+        // the stripe itself was reset for iteration 1
+        assert_eq!(dp.writer(0).rows_filled(0), 0);
     }
 
     #[test]
     fn shutdown_releases_everyone() {
-        let dp = Arc::new(DoublePair::new(1, 1, 1, 1));
+        let dp = Arc::new(StripedSwap::new(1, 1, 1, 1));
         let d = dp.clone();
         let h = std::thread::spawn(move || d.executor_arrive(0));
         std::thread::sleep(std::time::Duration::from_millis(10));
@@ -190,20 +352,28 @@ mod tests {
     fn many_generations_stay_in_lockstep() {
         let n_exec = 3;
         let iters = 50u64;
-        let dp = Arc::new(DoublePair::new(1, 1, 1, n_exec));
+        let dp = Arc::new(StripedSwap::new(1, 3, 1, n_exec));
         let mut handles = Vec::new();
-        for _ in 0..n_exec {
+        for e in 0..n_exec {
             let d = dp.clone();
             handles.push(std::thread::spawn(move || {
                 let mut it = 0;
                 while it < iters {
+                    {
+                        let mut w = d.writer(e);
+                        w.push(e, &[it as f32], 0, 1.0, false);
+                        w.set_last_obs(e, &[it as f32]);
+                    }
                     it = d.executor_arrive(it).unwrap();
                 }
             }));
         }
+        let mut view = RolloutStorage::new(1, 3, 1);
         let mut it = 0;
         while it < iters {
             assert!(dp.learner_arrive(it));
+            dp.gather_and_reset(&mut view);
+            assert_eq!(view.total_reward(), n_exec as f32);
             it = dp.learner_release(it);
         }
         for h in handles {
@@ -216,18 +386,24 @@ mod tests {
     fn publication_window_is_exclusive() {
         // While the learner is between arrive and release, no executor may
         // make progress — modeled by checking iteration stays fixed.
-        let dp = Arc::new(DoublePair::new(1, 1, 1, 1));
+        let dp = Arc::new(StripedSwap::new(1, 1, 1, 1));
         let d = dp.clone();
         let h = std::thread::spawn(move || {
             let mut it = 0;
             for _ in 0..3 {
+                {
+                    let mut w = d.writer(0);
+                    w.push(0, &[0.0], 0, 0.0, false);
+                }
                 it = d.executor_arrive(it).unwrap();
             }
             it
         });
+        let mut view = RolloutStorage::new(1, 1, 1);
         for it in 0..3 {
             assert!(dp.learner_arrive(it));
-            // exclusive window: publish would happen here
+            // exclusive window: gather + publish happen here
+            dp.gather_and_reset(&mut view);
             std::thread::sleep(std::time::Duration::from_millis(5));
             assert_eq!(dp.iteration(), it);
             dp.learner_release(it);

@@ -1,7 +1,8 @@
 //! The paper's Fig. 1(e) data plumbing: the state buffer and action buffer
-//! that decouple executors from actors, the `[T, B]` rollout storage, and
-//! the double-storage pair whose swap barrier realizes "concurrent rollout
-//! and learning" with a guaranteed policy lag of one.
+//! that decouple executors from actors, the `[T, B]` rollout storage with
+//! its executor-private column stripes, and the striped-shard swap whose
+//! two-phase barrier realizes "concurrent rollout and learning" with a
+//! guaranteed policy lag of one (DESIGN.md §5).
 
 pub mod action_buffer;
 pub mod double;
@@ -10,7 +11,7 @@ pub mod state_buffer;
 pub mod storage;
 
 pub use action_buffer::ActionBuffer;
-pub use double::DoublePair;
+pub use double::{ShardWriter, StripedSwap};
 pub use queue::BlockingQueue;
 pub use state_buffer::{ObsMsg, StateBuffer};
-pub use storage::RolloutStorage;
+pub use storage::{ColumnShard, RolloutStorage};

@@ -158,15 +158,18 @@ mod tests {
         for p in producers {
             p.join().unwrap();
         }
-        // wait for drain, then close
-        while !q.is_empty() {
-            std::thread::yield_now();
-        }
+        // Close as soon as all producers have joined — no draining spin
+        // (the old `while !q.is_empty() { yield }` loop could live-lock
+        // forever if a consumer stalled). `pop` keeps handing out the
+        // backlog after close and only then returns None, so closing
+        // early never drops items; the exact-delivery accounting below
+        // proves every item arrived exactly once.
         q.close();
         let mut all: Vec<usize> = consumers
             .into_iter()
             .flat_map(|c| c.join().unwrap())
             .collect();
+        assert_eq!(all.len(), n_items, "duplicate or dropped delivery");
         all.sort_unstable();
         assert_eq!(all, (0..n_items).collect::<Vec<_>>());
     }

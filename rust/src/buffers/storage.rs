@@ -1,7 +1,8 @@
 //! `[T, B]` rollout storage matching the train-step artifact's input
 //! layout exactly (row-major `[T, B, D]` obs, `[T, B]` act/rew/done,
 //! `[B, D]` bootstrap obs), so the learner hands buffers straight to PJRT
-//! with no reshuffling.
+//! with no reshuffling — plus the executor-private [`ColumnShard`] stripe
+//! it is gathered from at the swap barrier (DESIGN.md §5).
 
 #[derive(Debug, Clone)]
 pub struct RolloutStorage {
@@ -65,6 +66,31 @@ impl RolloutStorage {
         self.last_obs[o0..o0 + self.obs_dim].copy_from_slice(obs);
     }
 
+    /// Gather one executor's stripe into this `[T, B]` view: one
+    /// contiguous `memcpy` per rollout row per field (the shard's rows are
+    /// `[C, D]` / `[C]` runs that land at column offset `col_start` of the
+    /// matching global row). No allocation; bit-identical to having
+    /// `push`ed the same transitions directly (property-tested below).
+    pub fn absorb(&mut self, shard: &ColumnShard) {
+        assert_eq!(shard.t_len, self.t_len, "shard/storage depth");
+        assert_eq!(shard.obs_dim, self.obs_dim, "shard/storage obs_dim");
+        let (c0, c, d) = (shard.col_start, shard.n_cols, self.obs_dim);
+        assert!(c0 + c <= self.b, "shard stripe out of range");
+        for t in 0..self.t_len {
+            let src = t * c;
+            let dst = t * self.b + c0;
+            self.obs[dst * d..(dst + c) * d]
+                .copy_from_slice(&shard.obs[src * d..(src + c) * d]);
+            self.act[dst..dst + c].copy_from_slice(&shard.act[src..src + c]);
+            self.rew[dst..dst + c].copy_from_slice(&shard.rew[src..src + c]);
+            self.done[dst..dst + c]
+                .copy_from_slice(&shard.done[src..src + c]);
+        }
+        self.last_obs[c0 * d..(c0 + c) * d]
+            .copy_from_slice(&shard.last_obs);
+        self.filled[c0..c0 + c].copy_from_slice(&shard.filled);
+    }
+
     pub fn column_full(&self, col: usize) -> bool {
         self.filled[col] == self.t_len
     }
@@ -80,6 +106,107 @@ impl RolloutStorage {
     /// Sum of rewards currently stored (test/metrics convenience).
     pub fn total_reward(&self) -> f32 {
         self.rew.iter().sum()
+    }
+}
+
+/// One executor's private, lock-free stripe of the rollout: `n_cols`
+/// consecutive batch columns starting at global column `col_start`,
+/// laid out time-major *within the stripe* (`[T, C, D]` obs, `[T, C]`
+/// scalars). Executors write their own shard with no synchronization
+/// whatsoever during an iteration; at the swap barrier — while every
+/// executor is parked — the learner gathers all stripes into the
+/// `[T, B]` train view with [`RolloutStorage::absorb`] (DESIGN.md §5).
+///
+/// Columns are addressed by their *global* index so driver code is
+/// identical whether it writes a shard or a monolithic storage.
+#[derive(Debug, Clone)]
+pub struct ColumnShard {
+    pub t_len: usize,
+    pub col_start: usize,
+    pub n_cols: usize,
+    pub obs_dim: usize,
+    obs: Vec<f32>,      // [T, C, D]
+    act: Vec<i32>,      // [T, C]
+    rew: Vec<f32>,      // [T, C]
+    done: Vec<f32>,     // [T, C]
+    last_obs: Vec<f32>, // [C, D]
+    filled: Vec<usize>, // per-local-column step count
+}
+
+impl ColumnShard {
+    pub fn new(
+        t_len: usize,
+        col_start: usize,
+        n_cols: usize,
+        obs_dim: usize,
+    ) -> ColumnShard {
+        ColumnShard {
+            t_len,
+            col_start,
+            n_cols,
+            obs_dim,
+            obs: vec![0.0; t_len * n_cols * obs_dim],
+            act: vec![0; t_len * n_cols],
+            rew: vec![0.0; t_len * n_cols],
+            done: vec![0.0; t_len * n_cols],
+            last_obs: vec![0.0; n_cols * obs_dim],
+            filled: vec![0; n_cols],
+        }
+    }
+
+    fn local(&self, col: usize) -> usize {
+        debug_assert!(
+            col >= self.col_start && col < self.col_start + self.n_cols,
+            "column {col} outside stripe [{}, {})",
+            self.col_start,
+            self.col_start + self.n_cols
+        );
+        col - self.col_start
+    }
+
+    /// Write one transition into global column `col` at its next row.
+    /// Returns the row index written. Same semantics as
+    /// [`RolloutStorage::push`], but touching only this executor's
+    /// private stripe — no lock, no shared cache lines.
+    pub fn push(
+        &mut self,
+        col: usize,
+        obs: &[f32],
+        act: usize,
+        rew: f32,
+        done: bool,
+    ) -> usize {
+        let lc = self.local(col);
+        let t = self.filled[lc];
+        assert!(t < self.t_len, "column {col} overflow");
+        assert_eq!(obs.len(), self.obs_dim);
+        let idx = t * self.n_cols + lc;
+        let o0 = idx * self.obs_dim;
+        self.obs[o0..o0 + self.obs_dim].copy_from_slice(obs);
+        self.act[idx] = act as i32;
+        self.rew[idx] = rew;
+        self.done[idx] = if done { 1.0 } else { 0.0 };
+        self.filled[lc] = t + 1;
+        t
+    }
+
+    /// Record the observation after the column's final step (bootstrap).
+    pub fn set_last_obs(&mut self, col: usize, obs: &[f32]) {
+        assert_eq!(obs.len(), self.obs_dim);
+        let o0 = self.local(col) * self.obs_dim;
+        self.last_obs[o0..o0 + self.obs_dim].copy_from_slice(obs);
+    }
+
+    pub fn clear(&mut self) {
+        self.filled.iter_mut().for_each(|f| *f = 0);
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.filled.iter().all(|&f| f == self.t_len)
+    }
+
+    pub fn rows_filled(&self, col: usize) -> usize {
+        self.filled[self.local(col)]
     }
 }
 
@@ -150,6 +277,136 @@ mod tests {
                 assert_eq!(s.act[t * b + col], act as i32);
                 assert_eq!(s.rew[t * b + col], rew);
             }
+        });
+    }
+
+    #[test]
+    fn shard_addresses_global_columns() {
+        let mut sh = ColumnShard::new(2, 4, 2, 1);
+        sh.push(4, &[1.0], 1, 0.1, false);
+        sh.push(5, &[2.0], 2, 0.2, true);
+        sh.push(4, &[3.0], 3, 0.3, false);
+        assert_eq!(sh.rows_filled(4), 2);
+        assert_eq!(sh.rows_filled(5), 1);
+        assert!(!sh.is_full());
+        sh.push(5, &[4.0], 4, 0.4, false);
+        assert!(sh.is_full());
+        sh.clear();
+        assert_eq!(sh.rows_filled(4), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shard_overflow_panics() {
+        let mut sh = ColumnShard::new(1, 0, 1, 1);
+        sh.push(0, &[0.0], 0, 0.0, false);
+        sh.push(0, &[0.0], 0, 0.0, false);
+    }
+
+    #[test]
+    fn absorb_places_stripe_at_global_offset() {
+        // 2 shards of 2 columns each over a B=4 storage
+        let mut dst = RolloutStorage::new(2, 4, 2);
+        for s in 0..2usize {
+            let mut sh = ColumnShard::new(2, s * 2, 2, 2);
+            for t in 0..2usize {
+                for lc in 0..2usize {
+                    let col = s * 2 + lc;
+                    let v = (100 * s + 10 * t + lc) as f32;
+                    sh.push(col, &[v, v + 0.5], col, v, t == 1);
+                }
+            }
+            for lc in 0..2usize {
+                let col = s * 2 + lc;
+                sh.set_last_obs(col, &[col as f32, -1.0]);
+            }
+            dst.absorb(&sh);
+        }
+        assert!(dst.is_full());
+        // spot-check shard 1, t=1, local col 0 => global col 2,
+        // scalar index t*B + col = 6
+        let idx = 6;
+        let o0 = idx * 2;
+        assert_eq!(&dst.obs[o0..o0 + 2], &[110.0, 110.5]);
+        assert_eq!(dst.act[idx], 2);
+        assert_eq!(dst.rew[idx], 110.0);
+        assert_eq!(dst.done[idx], 1.0);
+        assert_eq!(&dst.last_obs[2 * 2..3 * 2], &[2.0, -1.0]);
+    }
+
+    /// The paper's Tab. 4 layout obligation: gathering striped shards
+    /// must reproduce the exact `[T, B]` buffers the pre-refactor
+    /// monolithic `push` produced — bit-identical, for any stripe split
+    /// and any executor-style interleaving of column fills.
+    #[test]
+    fn prop_shard_gather_matches_monolithic_push() {
+        prop::check("shard-gather-equivalence", 64, |g| {
+            let t_len = g.usize_in(1, 5);
+            let n_exec = g.usize_in(1, 5);
+            let n_agents = g.usize_in(1, 3);
+            let b = n_exec * n_agents;
+            let d = g.usize_in(1, 4);
+
+            // generate the full trajectory data up front
+            let mut data = Vec::new(); // [col][t] -> (obs, act, rew, done)
+            for _col in 0..b {
+                let rows: Vec<(Vec<f32>, usize, f32, bool)> = (0..t_len)
+                    .map(|_| {
+                        (
+                            g.vec_f32(d),
+                            g.usize_in(0, 9),
+                            g.f32_std(),
+                            g.bool(0.2),
+                        )
+                    })
+                    .collect();
+                data.push(rows);
+            }
+            let boot: Vec<Vec<f32>> =
+                (0..b).map(|_| g.vec_f32(d)).collect();
+
+            // old semantics: monolithic push, random column interleaving
+            let mut mono = RolloutStorage::new(t_len, b, d);
+            let mut next_t = vec![0usize; b];
+            while !mono.is_full() {
+                let col = g.usize_in(0, b - 1);
+                let t = next_t[col];
+                if t == t_len {
+                    continue;
+                }
+                let (obs, act, rew, done) = &data[col][t];
+                mono.push(col, obs, *act, *rew, *done);
+                next_t[col] = t + 1;
+            }
+            for (col, ob) in boot.iter().enumerate() {
+                mono.set_last_obs(col, ob);
+            }
+
+            // new semantics: per-executor stripes, then gather
+            let mut gathered = RolloutStorage::new(t_len, b, d);
+            for e in 0..n_exec {
+                let mut sh =
+                    ColumnShard::new(t_len, e * n_agents, n_agents, d);
+                for t in 0..t_len {
+                    for a in 0..n_agents {
+                        let col = e * n_agents + a;
+                        let (obs, act, rew, done) = &data[col][t];
+                        sh.push(col, obs, *act, *rew, *done);
+                    }
+                }
+                for a in 0..n_agents {
+                    let col = e * n_agents + a;
+                    sh.set_last_obs(col, &boot[col]);
+                }
+                gathered.absorb(&sh);
+            }
+
+            assert!(gathered.is_full());
+            assert_eq!(gathered.obs, mono.obs);
+            assert_eq!(gathered.act, mono.act);
+            assert_eq!(gathered.rew, mono.rew);
+            assert_eq!(gathered.done, mono.done);
+            assert_eq!(gathered.last_obs, mono.last_obs);
         });
     }
 }

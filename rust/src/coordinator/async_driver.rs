@@ -21,8 +21,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use super::common::{spawn_actors, EvalWorker, Fnv, RunConfig};
-use crate::buffers::{ActionBuffer, BlockingQueue, ObsMsg, RolloutStorage,
-                     StateBuffer};
+use crate::buffers::{ActionBuffer, BlockingQueue, ColumnShard, ObsMsg,
+                     RolloutStorage, StateBuffer};
 use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch, TrainReport};
 use crate::model::manifest::Manifest;
 use crate::model::ParamStore;
@@ -172,7 +172,17 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
     };
 
     // ---- learner (this thread) -----------------------------------------------
+    // Batches are assembled through the shared column-stripe API: one
+    // stripe per batch slot, gathered into the [T, B] view before the
+    // train step (DESIGN.md §5). Single-threaded here — layout
+    // uniformity with the HTS driver, not locking.
     let mut storage = RolloutStorage::new(t_len, b_cols, info.obs_dim);
+    let n_traj = b_cols / n_agents;
+    let mut slot_shards: Vec<ColumnShard> = (0..n_traj)
+        .map(|slot| {
+            ColumnShard::new(t_len, slot * n_agents, n_agents, info.obs_dim)
+        })
+        .collect();
     let mut staleness: Vec<f64> = Vec::new();
     let mut last_out = Default::default();
     'learn: loop {
@@ -181,8 +191,6 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         // a fast replica can contribute twice while a slow one lags, so
         // columns are assigned by batch slot, exactly like IMPALA's
         // learner batches.
-        storage.clear();
-        let n_traj = b_cols / n_agents;
         let mut batch: Vec<Traj> = Vec::with_capacity(n_traj);
         while batch.len() < n_traj {
             match traj_q.pop() {
@@ -196,9 +204,11 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
             staleness.push((cur_version - t.version) as f64);
         }
         for (slot, traj) in batch.iter().enumerate() {
+            let sh = &mut slot_shards[slot];
+            sh.clear();
             for t in 0..t_len {
                 for a in 0..n_agents {
-                    storage.push(
+                    sh.push(
                         slot * n_agents + a,
                         &traj.obs[t][a],
                         traj.act[t][a],
@@ -208,11 +218,9 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
                 }
             }
             for a in 0..n_agents {
-                storage.set_last_obs(
-                    slot * n_agents + a,
-                    &traj.last_obs[a],
-                );
+                sh.set_last_obs(slot * n_agents + a, &traj.last_obs[a]);
             }
+            storage.absorb(sh);
         }
         let behavior = params.get(oldest).data;
         last_out = trainer.step(&storage, &behavior)?;

@@ -324,7 +324,9 @@ impl EvalWorker {
         self.handle.join().expect("eval worker panicked")?;
         let mut out =
             std::mem::take(&mut *self.results.lock().unwrap());
-        out.sort_by(|a, b| a.wall_s.partial_cmp(&b.wall_s).unwrap());
+        // total_cmp: a NaN timestamp must not panic the whole run's
+        // result collection (NaN sorts last; IEEE-754 total order)
+        out.sort_by(|a, b| a.wall_s.total_cmp(&b.wall_s));
         Ok(out)
     }
 }

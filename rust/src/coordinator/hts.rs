@@ -5,7 +5,8 @@
 //!     three private PRNG streams (env dynamics, sampling seeds, step-time
 //!     delays). Executors push `(obs, slot, seed)` to the state buffer,
 //!     block on their action mailbox, apply the action, and write the
-//!     transition into the current write storage.
+//!     transition into their private column stripe — **no lock, no shared
+//!     state of any kind on the step path** (DESIGN.md §5).
 //!   * `n_actors` actor threads (usually fewer than executors): batch-grab
 //!     observations, forward once per batch on their private PJRT runtime,
 //!     sample with the executor-provided seeds, post actions back.
@@ -14,8 +15,9 @@
 //!     θ_{j-1} and applying it to θ_j (Eq. 6), concurrently with the
 //!     executors filling the write storage.
 //!
-//! The swap barrier is two-phase (see `buffers::double`): parameter
-//! publication happens while all executors are parked, which upholds the
+//! The swap barrier is two-phase (see `buffers::double`): the learner
+//! gathers all stripes into the `[T, B]` train view and publishes
+//! parameters while all executors are parked, which upholds the
 //! full-determinism guarantee for any actor count (paper Tab. 4).
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,7 +26,9 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use super::common::{spawn_actors, EvalWorker, Fnv, RunConfig};
-use crate::buffers::{ActionBuffer, DoublePair, ObsMsg, StateBuffer};
+use crate::buffers::{
+    ActionBuffer, ObsMsg, RolloutStorage, StateBuffer, StripedSwap,
+};
 use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch, TrainReport};
 use crate::model::manifest::Manifest;
 use crate::model::ParamStore;
@@ -49,8 +53,8 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         Trainer::new(&rt, &cfg.spec.model, cfg.algo, init.clone(), b_cols)?;
 
     // Shared system state.
-    let dp = Arc::new(DoublePair::new(alpha, b_cols, info.obs_dim,
-                                      cfg.n_envs));
+    let dp = Arc::new(StripedSwap::new(alpha, b_cols, info.obs_dim,
+                                       cfg.n_envs));
     let state_buf = Arc::new(StateBuffer::new());
     let act_buf = Arc::new(ActionBuffer::new(b_cols));
     let params = Arc::new(ParamStore::new(init.clone()));
@@ -84,6 +88,11 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
             let mut it = 0u64;
             let watch = Stopwatch::new();
             'outer: loop {
+                // Claim this executor's private stripe for the whole
+                // iteration: one CAS here, then every step below is a
+                // plain unsynchronized write (the old code took a global
+                // storage mutex on *every* step).
+                let mut shard = dp.writer(e);
                 for _t in 0..alpha {
                     // 1. publish observations with executor-drawn seeds
                     for a in 0..n_agents {
@@ -104,18 +113,16 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
                     // 3. simulated engine latency + real env step
                     spec.steptime.sleep(&mut delay_rng);
                     let step = env.step(&actions, &mut env_rng);
-                    // 4. record the transition (per agent column)
-                    {
-                        let mut st = dp.write_storage(it).lock().unwrap();
-                        for a in 0..n_agents {
-                            st.push(
-                                e * n_agents + a,
-                                &obs[a],
-                                actions[a],
-                                step.reward,
-                                step.done,
-                            );
-                        }
+                    // 4. record the transition (per agent column) —
+                    // lock-free: the stripe is this thread's alone
+                    for a in 0..n_agents {
+                        shard.push(
+                            e * n_agents + a,
+                            &obs[a],
+                            actions[a],
+                            step.reward,
+                            step.done,
+                        );
                     }
                     let gsteps = sps.add(1);
                     for (a, &act) in actions.iter().enumerate() {
@@ -136,13 +143,13 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
                         obs = step.obs;
                     }
                 }
-                // 5. bootstrap observations, then rendezvous
-                {
-                    let mut st = dp.write_storage(it).lock().unwrap();
-                    for a in 0..n_agents {
-                        st.set_last_obs(e * n_agents + a, &obs[a]);
-                    }
+                // 5. bootstrap observations, then rendezvous (the writer
+                // must be released before parking — the learner gathers
+                // the stripes inside the publication window)
+                for a in 0..n_agents {
+                    shard.set_last_obs(e * n_agents + a, &obs[a]);
                 }
+                drop(shard);
                 match dp.executor_arrive(it) {
                     Some(next) => it = next,
                     None => break,
@@ -177,13 +184,17 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
     };
 
     // ---- learner (this thread) ----------------------------------------------
+    // `gathered` is the learner-owned read storage: refilled zero-alloc
+    // from the executor stripes at each swap barrier, then consumed
+    // concurrently with the executors filling the next iteration.
+    let mut gathered = RolloutStorage::new(alpha, b_cols, info.obs_dim);
     let mut behavior: Arc<Vec<f32>> = Arc::new(init);
     let mut it = 0u64;
     let mut last_out = Default::default();
     loop {
         if it >= 1 {
-            let st = dp.read_storage(it).lock().unwrap();
-            last_out = trainer.step(&st, &behavior)?;
+            // data collected in iteration it-1, gathered at the barrier
+            last_out = trainer.step(&gathered, &behavior)?;
             if let Some(ev) = &eval {
                 if trainer.updates % cfg.eval_every.max(1) == 0 {
                     ev.submit(
@@ -200,9 +211,11 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         if !dp.learner_arrive(it) {
             break;
         }
-        // Exclusive publication window: remember the parameters that
-        // collected the storage we will read next iteration (θ_{j-1}), then
+        // Exclusive publication window: gather the stripes into the
+        // [T, B] train view (fixed column order — deterministic),
+        // remember the parameters that collected it (θ_{j-1}), then
         // publish θ_j for the executors' next iteration.
+        dp.gather_and_reset(&mut gathered);
         behavior = params.latest().data.clone();
         params.publish(trainer.params.clone());
         if cfg.stop.done(sps.steps(), watch.elapsed_s(), trainer.updates) {

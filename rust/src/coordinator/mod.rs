@@ -1,8 +1,10 @@
 //! Layer-3 drivers — the paper's contribution and its baselines.
 //!
-//! * [`hts`] — **HTS-RL** (ours): executors/actors/learner with double
-//!   storage, batch synchronization every α steps, one-step delayed
-//!   gradient, deferred randomness (paper §4.1, Fig. 1e / Fig. 2d).
+//! * [`hts`] — **HTS-RL** (ours): executors/actors/learner with
+//!   lock-free column-striped rollout shards gathered at the two-phase
+//!   swap barrier (DESIGN.md §5), batch synchronization every α steps,
+//!   one-step delayed gradient, deferred randomness (paper §4.1,
+//!   Fig. 1e / Fig. 2d).
 //! * [`sync_driver`] — the A2C/PPO baseline: per-step synchronization and
 //!   strictly alternating rollout/learning (Fig. 1d / Fig. 2c).
 //! * [`async_driver`] — the IMPALA/GA3C-style baseline: free-running

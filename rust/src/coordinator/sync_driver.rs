@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use super::common::{EvalWorker, Fnv, RunConfig};
 use crate::algo::sampling::sample_action;
-use crate::buffers::{BlockingQueue, RolloutStorage};
+use crate::buffers::{BlockingQueue, ColumnShard, RolloutStorage};
 use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch, TrainReport};
 use crate::model::manifest::Manifest;
 use crate::rng::SplitMix64;
@@ -112,6 +112,16 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
     let mut seed_rngs: Vec<SplitMix64> = (0..cfg.n_envs)
         .map(|e| SplitMix64::stream(cfg.seed, 2_000 + e as u64))
         .collect();
+    // Rollouts are recorded through the same per-env column stripes the
+    // HTS driver uses (one stripe per replica, gathered into the [T, B]
+    // view before the learn phase) so both drivers share one layout
+    // authority (DESIGN.md §5). The driver is single-threaded here, so
+    // this is purely about API uniformity, not locking.
+    let mut shards: Vec<ColumnShard> = (0..cfg.n_envs)
+        .map(|e| {
+            ColumnShard::new(t_len, e * n_agents, n_agents, info.obs_dim)
+        })
+        .collect();
     let mut storage = RolloutStorage::new(t_len, b_cols, info.obs_dim);
     let mut episodes: Vec<EpisodePoint> = Vec::new();
     let mut ep_rewards = vec![0.0f64; cfg.n_envs];
@@ -120,7 +130,9 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
     let _ = &last_out;
 
     'outer: loop {
-        storage.clear();
+        for sh in &mut shards {
+            sh.clear();
+        }
         for _t in 0..t_len {
             // one batched forward over all B columns
             let mut flat = Vec::with_capacity(b_cols * info.obs_dim);
@@ -160,7 +172,7 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
             for e in 0..cfg.n_envs {
                 let r = replies[e].take().unwrap();
                 for a in 0..n_agents {
-                    storage.push(
+                    shards[e].push(
                         e * n_agents + a,
                         &cur_obs[e][a],
                         actions[e][a],
@@ -185,8 +197,9 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
         }
         for e in 0..cfg.n_envs {
             for a in 0..n_agents {
-                storage.set_last_obs(e * n_agents + a, &cur_obs[e][a]);
+                shards[e].set_last_obs(e * n_agents + a, &cur_obs[e][a]);
             }
+            storage.absorb(&shards[e]);
         }
         // alternating phase: learn while all executors idle.
         // On-policy: behavior == target (λ-lag 0); the a2c_delayed artifact

@@ -376,11 +376,10 @@ impl Env for Football {
                                 .filter(|&j| j != i)
                                 .min_by(|&a, &b| {
                                     Self::dist(self.attackers[a], GOAL)
-                                        .partial_cmp(&Self::dist(
+                                        .total_cmp(&Self::dist(
                                             self.attackers[b],
                                             GOAL,
                                         ))
-                                        .unwrap()
                                 })
                                 .unwrap();
                             self.carrier = target;

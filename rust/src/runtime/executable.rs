@@ -51,7 +51,7 @@ impl Executable {
     pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
         let literals: Vec<Literal> = inputs
             .iter()
-            .map(|inp| match inp {
+            .map(|inp| match *inp {
                 Input::F32(v) => Literal::vec1(v),
                 Input::I32(v) => Literal::vec1(v),
                 Input::U32(v) => Literal::vec1(v),
@@ -94,7 +94,7 @@ impl Executable {
         let literals: Vec<Literal> = inputs
             .iter()
             .map(|(inp, dims)| -> Result<Literal> {
-                let l = match inp {
+                let l = match *inp {
                     Input::F32(v) => Literal::vec1(v),
                     Input::I32(v) => Literal::vec1(v),
                     Input::U32(v) => Literal::vec1(v),

@@ -5,6 +5,12 @@
 //! Eq. 6 verbatim: the artifact computes the gradient at
 //! `behavior_params` (θ_{j-1}, for `a2c_delayed`) and applies the RMSProp
 //! update to the held target parameters (θ_j).
+//!
+//! The `RolloutStorage` consumed here is the learner-owned **gathered
+//! view**: drivers record transitions into executor-private column
+//! stripes and gather them into this time-major `[T, B]` layout at the
+//! swap barrier (DESIGN.md §5), so every chunk handed to PJRT below is a
+//! contiguous, zero-copy slice regardless of how many executors wrote it.
 
 use anyhow::Result;
 

@@ -31,7 +31,7 @@ pub fn cov_squared(xs: &[f64]) -> f64 {
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b)); // NaN-safe (total order)
     let pos = q * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;

@@ -9,7 +9,7 @@ use crate::stats::special::gamma_cdf;
 pub fn ks_statistic_gamma(xs: &[f64], alpha: f64, beta: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b)); // NaN-safe (total order)
     let n = v.len() as f64;
     let mut d: f64 = 0.0;
     for (i, &x) in v.iter().enumerate() {

@@ -36,6 +36,30 @@ fn hts_identical_across_actor_counts() {
     assert_eq!(r1.steps, r3.steps);
 }
 
+/// Paper Tab. 4: the run signature for a fixed seed must be bit-identical
+/// for n_actors ∈ {1, 2, 4} — the striped-shard gather must not let the
+/// actor count (or executor scheduling) leak into the `[T, B]` batch the
+/// learner trains on.
+#[test]
+fn hts_tab4_signature_invariant_actor_sweep() {
+    if !have_artifacts() {
+        return;
+    }
+    let runs: Vec<_> = [1usize, 2, 4]
+        .iter()
+        .map(|&n| (n, run(Method::Hts, &cfg(n, 13)).unwrap()))
+        .collect();
+    let (_, base) = &runs[0];
+    for (n, r) in &runs[1..] {
+        assert_eq!(
+            base.signature, r.signature,
+            "signature diverged at n_actors={n}"
+        );
+        assert_eq!(base.steps, r.steps, "step count diverged at {n}");
+        assert_eq!(base.updates, r.updates, "updates diverged at {n}");
+    }
+}
+
 #[test]
 fn hts_identical_across_repeated_runs() {
     if !have_artifacts() {

@@ -5,7 +5,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use hts_rl::buffers::{ActionBuffer, DoublePair, ObsMsg, StateBuffer};
+use hts_rl::buffers::{
+    ActionBuffer, ObsMsg, RolloutStorage, StateBuffer, StripedSwap,
+};
 use hts_rl::util::prop;
 
 /// Full executor/actor ping-pong at high contention: every observation
@@ -60,13 +62,15 @@ fn state_action_pingpong_routes_correctly() {
 }
 
 /// The two-phase barrier must keep executors and learner in lockstep even
-/// when their work durations are adversarially jittered.
+/// when their work durations are adversarially jittered — with each
+/// executor writing its private stripe lock-free and the learner
+/// gathering at the swap barrier.
 #[test]
-fn double_pair_lockstep_under_jitter() {
-    prop::check("double-pair-jitter", 8, |g| {
+fn striped_swap_lockstep_under_jitter() {
+    prop::check("striped-swap-jitter", 8, |g| {
         let n_exec = g.usize_in(1, 6);
         let iters = 30u64;
-        let dp = Arc::new(DoublePair::new(2, n_exec, 1, n_exec));
+        let dp = Arc::new(StripedSwap::new(2, n_exec, 1, n_exec));
         let writes = Arc::new(AtomicU64::new(0));
         let mut handles = Vec::new();
         for e in 0..n_exec {
@@ -81,25 +85,28 @@ fn double_pair_lockstep_under_jitter() {
                             std::time::Duration::from_micros(jitter));
                     }
                     {
-                        let mut st = dp.write_storage(it).lock().unwrap();
-                        st.push(e, &[it as f32], 0, 1.0, false);
-                        st.push(e, &[it as f32], 0, 1.0, false);
+                        let mut sh = dp.writer(e);
+                        sh.push(e, &[it as f32], 0, 1.0, false);
+                        sh.push(e, &[it as f32], 0, 1.0, false);
+                        sh.set_last_obs(e, &[it as f32]);
                     }
                     writes.fetch_add(2, Ordering::Relaxed);
                     it = dp.executor_arrive(it).unwrap();
                 }
             }));
         }
+        let mut view = RolloutStorage::new(2, n_exec, 1);
         let mut it = 0u64;
         while it < iters {
             if it >= 1 {
-                // read storage must be exactly full — never torn
-                let st = dp.read_storage(it).lock().unwrap();
-                assert!(st.is_full(), "iteration {it}: torn storage");
+                // the gathered view must be exactly full — never torn
+                assert!(view.is_full(), "iteration {it}: torn gather");
                 // every row written by the previous iteration
-                assert_eq!(st.total_reward(), (2 * n_exec) as f32);
+                assert_eq!(view.total_reward(), (2 * n_exec) as f32);
             }
             assert!(dp.learner_arrive(it));
+            // publication window: gather the stripes, like the learner
+            dp.gather_and_reset(&mut view);
             it = dp.learner_release(it);
         }
         for h in handles {
@@ -115,7 +122,7 @@ fn double_pair_lockstep_under_jitter() {
 fn shutdown_releases_all_parties() {
     let sb = Arc::new(StateBuffer::new());
     let ab = Arc::new(ActionBuffer::new(4));
-    let dp = Arc::new(DoublePair::new(1, 4, 1, 4));
+    let dp = Arc::new(StripedSwap::new(1, 4, 1, 4));
     let mut handles = Vec::new();
     for e in 0..4 {
         let sb = sb.clone();

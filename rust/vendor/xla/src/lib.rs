@@ -1,0 +1,267 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The runtime layer (`hts_rl::runtime`) is written against the real
+//! xla/PJRT Rust bindings, which need the XLA C++ runtime shared library —
+//! not present in the offline container (DESIGN.md §3). This crate keeps
+//! the exact API surface the codebase uses so everything *builds and
+//! tests* offline:
+//!
+//! * [`Literal`] is fully functional host-side (typed flat buffers with
+//!   shapes) — it backs the marshalling paths and unit tests.
+//! * The PJRT entry points ([`PjRtClient::compile`],
+//!   [`HloModuleProto::from_text_file`]) return a descriptive error, so
+//!   every artifact-dependent test skips or fails fast with a clear
+//!   message instead of segfaulting. Swap the `vendor/xla` path in
+//!   `rust/Cargo.toml` for the real bindings to execute artifacts.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: carries the reason PJRT functionality is unavailable.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real xla/PJRT bindings; this build uses the \
+         offline stub (see rust/Cargo.toml [dependencies] and DESIGN.md §3)"
+    )))
+}
+
+/// Element types the codebase marshals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    I32,
+    U32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Marker trait for element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(values: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            const TY: ElementType = ElementType::$variant;
+            fn wrap(values: Vec<Self>) -> Data {
+                Data::$variant(values)
+            }
+            fn unwrap(data: &Data) -> Option<Vec<Self>> {
+                match data {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, I32);
+native!(u32, U32);
+
+/// Host-side typed buffer with a shape — functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            dims: vec![values.len() as i64],
+            data: T::wrap(values.to_vec()),
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        match self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::F64(_) => ElementType::F64,
+            Data::I32(_) => ElementType::I32,
+            Data::U32(_) => ElementType::U32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch \
+                 ({} vs {count})",
+                self.dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal. The stub never constructs tuples (they
+    /// only arise from PJRT execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple on an executed result")
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            Error(format!(
+                "to_vec: literal holds {:?}, asked for {:?}",
+                self.element_type(),
+                T::TY
+            ))
+        })
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text, so construction
+/// fails with a descriptive error (callers surface it with context).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle. Construction succeeds (drivers create the client
+/// before probing for artifacts); compilation is where the stub stops.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable. Uninhabited in the stub: `compile` never returns
+/// one, so `execute` is statically unreachable yet fully type-checked.
+pub struct PjRtLoadedExecutable {
+    never: std::convert::Infallible,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.never {}
+    }
+}
+
+/// Device buffer returned by execution — likewise uninhabited.
+pub struct PjRtBuffer {
+    never: std::convert::Infallible,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_type(), ElementType::F32);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        let back = r.to_vec::<f32>().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn typed_variants() {
+        assert_eq!(
+            Literal::vec1(&[1i32, -2]).to_vec::<i32>().unwrap(),
+            vec![1, -2]
+        );
+        assert_eq!(
+            Literal::vec1(&[7u32]).to_vec::<u32>().unwrap(),
+            vec![7]
+        );
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        assert!(HloModuleProto::from_text_file("/nope.hlo").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { _priv: () };
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("offline stub"), "{err}");
+    }
+}
