@@ -2,20 +2,66 @@
 //! set; this is a `harness = false` bench binary with manual timing).
 //! These are the numbers the §Perf pass in EXPERIMENTS.md starts from:
 //! per-call latency of every hot-path building block.
+//!
+//! Besides the console table, results are written as machine-readable
+//! JSON to `BENCH_components.json` (override the path with
+//! `HTS_RL_BENCH_OUT`) so the perf trajectory can be tracked across
+//! commits.
 
 use std::cell::Cell;
-use std::sync::{Barrier, Mutex};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
 use hts_rl::algo::returns::gae;
 use hts_rl::algo::sampling::sample_action;
-use hts_rl::buffers::{BlockingQueue, RolloutStorage, StripedSwap};
+use hts_rl::buffers::{
+    ActionBuffer, BlockingQueue, ObsMsg, RolloutStorage, StateBuffer,
+    StripedSwap,
+};
+use hts_rl::envs::{EnvSpec, StepTimeModel};
+use hts_rl::executor::harness::{
+    drive_learner_barrier, spawn_standin_actors, StandInPolicy,
+};
+use hts_rl::executor::{PoolShared, ReplicaPool};
+use hts_rl::metrics::report::{SpsMeter, Stopwatch};
 use hts_rl::model::manifest::Manifest;
 use hts_rl::rng::SplitMix64;
 use hts_rl::runtime::{ForwardPool, ModelRuntime, Trainer};
 use hts_rl::util::json::Json;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+/// Collects every benchmark figure for the JSON emission.
+struct Recorder {
+    out: BTreeMap<String, Json>,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder { out: BTreeMap::new() }
+    }
+
+    fn record(&mut self, key: &str, value: f64) {
+        self.out.insert(key.to_string(), Json::Num(value));
+    }
+
+    fn write(self) {
+        let path = std::env::var("HTS_RL_BENCH_OUT")
+            .unwrap_or_else(|_| "BENCH_components.json".to_string());
+        let json = Json::Obj(self.out);
+        match std::fs::write(&path, json.to_string()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+}
+
+fn bench<F: FnMut()>(
+    rec: &mut Recorder,
+    name: &str,
+    key: &str,
+    iters: usize,
+    mut f: F,
+) -> f64 {
     // warmup
     for _ in 0..iters.div_ceil(10) {
         f();
@@ -26,6 +72,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     }
     let per = t0.elapsed().as_secs_f64() / iters as f64;
     println!("{name:<44} {:>12.3} µs/op", per * 1e6);
+    rec.record(&format!("{key}_us"), per * 1e6);
     per
 }
 
@@ -106,7 +153,7 @@ fn contended_striped(
 /// The ISSUE 1 acceptance benchmark: striped shards must beat the
 /// global-lock baseline by ≥2× at 16 executors (and the gap should grow
 /// with the executor count — the mutex serializes, stripes don't).
-fn bench_contended_write_path() {
+fn bench_contended_write_path(rec: &mut Recorder) {
     println!("== contended write path: global mutex vs column stripes ==");
     const T_LEN: usize = 512;
     const ROUNDS: usize = 40;
@@ -128,6 +175,14 @@ fn bench_contended_write_path() {
             1e-6 * total / strip_s,
             base_s / strip_s,
         );
+        rec.record(
+            &format!("contended_push_mutexed_{n_exec}exec_ns"),
+            1e9 * base_s / total,
+        );
+        rec.record(
+            &format!("contended_push_striped_{n_exec}exec_ns"),
+            1e9 * strip_s / total,
+        );
     }
 }
 
@@ -135,26 +190,212 @@ fn t_total(t_len: usize, rounds: usize, n_exec: usize) -> usize {
     t_len * rounds * n_exec
 }
 
+/// Cheap stand-in policy for the executor benches (the point is the
+/// scheduling cost, not the sampling cost).
+fn modulo_policy(act_dim: usize) -> StandInPolicy {
+    Arc::new(move |_obs, seed| (seed % act_dim as u64) as usize)
+}
+
+/// One OS thread per replica, blocking mailbox take, `thread::sleep` for
+/// the engine delay — the classic executor loop the replica pool
+/// replaces. Returns total wall seconds.
+#[allow(clippy::too_many_arguments)]
+fn blocking_executors(
+    spec: &EnvSpec,
+    n_replicas: usize,
+    alpha: usize,
+    iters: u64,
+    seed: u64,
+    n_actors: usize,
+    act_dim: usize,
+) -> f64 {
+    let obs_dim = spec.build().unwrap().obs_dim();
+    let swap =
+        Arc::new(StripedSwap::new(alpha, n_replicas, obs_dim, n_replicas));
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(n_replicas));
+    let actors = spawn_standin_actors(
+        n_actors, &state_buf, &act_buf, n_replicas, &modulo_policy(act_dim),
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for e in 0..n_replicas {
+        let spec = spec.clone();
+        let swap = swap.clone();
+        let state_buf = state_buf.clone();
+        let act_buf = act_buf.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
+            let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
+            let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
+            let mut env = spec.build().unwrap();
+            let mut obs = env.reset(&mut env_rng);
+            let mut it = 0u64;
+            'outer: loop {
+                let mut shard = swap.writer(e);
+                for _t in 0..alpha {
+                    state_buf.push(ObsMsg {
+                        slot: e,
+                        obs: obs[0].clone(),
+                        seed: seed_rng.next_u64(),
+                    });
+                    let act = match act_buf.take(e) {
+                        Some(a) => a,
+                        None => break 'outer,
+                    };
+                    spec.steptime.sleep(&mut delay_rng);
+                    let step = env.step(&[act], &mut env_rng);
+                    shard.push(e, &obs[0], act, step.reward, step.done);
+                    obs = if step.done {
+                        env.reset(&mut env_rng)
+                    } else {
+                        step.obs
+                    };
+                }
+                shard.set_last_obs(e, &obs[0]);
+                drop(shard);
+                match swap.executor_arrive(it) {
+                    Some(next) => it = next,
+                    None => break,
+                }
+            }
+        }));
+    }
+    let mut gathered = RolloutStorage::new(alpha, n_replicas, obs_dim);
+    drive_learner_barrier(
+        &swap, &state_buf, &act_buf, &mut gathered, iters, |_| {},
+    );
+    for h in handles {
+        h.join().unwrap();
+    }
+    for h in actors {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// The replica-pool path: `n_replicas / k` threads, K replicas each,
+/// deadline-based delays. Returns total wall seconds.
+#[allow(clippy::too_many_arguments)]
+fn pooled_executors(
+    spec: &EnvSpec,
+    n_replicas: usize,
+    k: usize,
+    alpha: usize,
+    iters: u64,
+    seed: u64,
+    n_actors: usize,
+    act_dim: usize,
+) -> f64 {
+    let obs_dim = spec.build().unwrap().obs_dim();
+    let n_threads = n_replicas / k;
+    let swap = Arc::new(StripedSwap::with_parties(
+        alpha, n_replicas, obs_dim, n_replicas, n_threads,
+    ));
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(n_replicas));
+    let actors = spawn_standin_actors(
+        n_actors, &state_buf, &act_buf, n_replicas, &modulo_policy(act_dim),
+    );
+    let sps = Arc::new(SpsMeter::new());
+    let watch = Stopwatch::new();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let spec = spec.clone();
+        let shared = PoolShared {
+            swap: swap.clone(),
+            state_buf: state_buf.clone(),
+            act_buf: act_buf.clone(),
+            sps: sps.clone(),
+            watch,
+        };
+        handles.push(std::thread::spawn(move || {
+            ReplicaPool::new(&spec, seed, alpha, t * k..(t + 1) * k, shared)
+                .unwrap()
+                .run()
+                .unwrap()
+        }));
+    }
+    let mut gathered = RolloutStorage::new(alpha, n_replicas, obs_dim);
+    drive_learner_barrier(
+        &swap, &state_buf, &act_buf, &mut gathered, iters, |_| {},
+    );
+    for h in handles {
+        h.join().unwrap();
+    }
+    for h in actors {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// The ISSUE 2 acceptance benchmark: at 64 replicas with realistic
+/// step-time variance, pooled executors (fewer threads, deadline-based
+/// delay overlap, amortized wakeups) must beat one-thread-per-replica.
+fn bench_pool_vs_blocking(rec: &mut Recorder) {
+    println!("== executor scheduling: replica pool vs thread-per-replica ==");
+    const N_REPLICAS: usize = 64;
+    const ALPHA: usize = 16;
+    const ITERS: u64 = 4;
+    let spec = EnvSpec::by_name("catch").unwrap().with_steptime(
+        StepTimeModel::Gamma { shape: 2.0, mean_us: 120.0 },
+    );
+    let act_dim = spec.build().unwrap().act_dim();
+    let total = (N_REPLICAS * ALPHA) as f64 * ITERS as f64;
+    let base_s = blocking_executors(
+        &spec, N_REPLICAS, ALPHA, ITERS, 5, 2, act_dim,
+    );
+    println!(
+        "{:<34} {:>10.0} SPS  ({} threads)",
+        format!("blocking, {N_REPLICAS} replicas"),
+        total / base_s,
+        N_REPLICAS,
+    );
+    rec.record("exec_blocking_64replicas_sps", total / base_s);
+    for &k in &[1usize, 4, 16] {
+        let pool_s = pooled_executors(
+            &spec, N_REPLICAS, k, ALPHA, ITERS, 5, 2, act_dim,
+        );
+        println!(
+            "{:<34} {:>10.0} SPS  ({} threads)  {:.2}x",
+            format!("pooled K={k}, {N_REPLICAS} replicas"),
+            total / pool_s,
+            N_REPLICAS / k,
+            base_s / pool_s,
+        );
+        rec.record(
+            &format!("exec_pooled_k{k}_64replicas_sps"),
+            total / pool_s,
+        );
+    }
+}
+
 fn main() {
+    let mut rec = Recorder::new();
     println!("== component micro-benchmarks ==");
 
-    bench_contended_write_path();
+    bench_contended_write_path(&mut rec);
+    bench_pool_vs_blocking(&mut rec);
 
     // RNG + sampling
     let mut rng = SplitMix64::new(1);
-    bench("splitmix64::next_u64", 1_000_000, || {
+    bench(&mut rec, "splitmix64::next_u64", "splitmix64_next", 1_000_000,
+          || {
         std::hint::black_box(rng.next_u64());
     });
     let logits: Vec<f32> = (0..19).map(|i| (i as f32) * 0.1).collect();
     let mut seed = 0u64;
-    bench("gumbel sample (19 actions)", 200_000, || {
+    bench(&mut rec, "gumbel sample (19 actions)", "gumbel_sample_19",
+          200_000, || {
         seed += 1;
         std::hint::black_box(sample_action(&logits, seed));
     });
 
     // queue
     let q: BlockingQueue<u64> = BlockingQueue::new();
-    bench("blocking queue push+pop", 200_000, || {
+    bench(&mut rec, "blocking queue push+pop", "queue_push_pop", 200_000,
+          || {
         q.push(1);
         std::hint::black_box(q.try_pop());
     });
@@ -164,7 +405,8 @@ fn main() {
     let obs = vec![0.5f32; 50];
     let mut col = 0usize;
     let mut filled = 0usize;
-    bench("storage push (50-dim obs)", 200_000, || {
+    bench(&mut rec, "storage push (50-dim obs)", "storage_push_50d",
+          200_000, || {
         if filled == 5 * 16 {
             st.clear();
             filled = 0;
@@ -179,7 +421,7 @@ fn main() {
     let done = vec![0.0f32; 5 * 16];
     let values = vec![0.2f32; 5 * 16];
     let boot = vec![0.3f32; 16];
-    bench("rust GAE (T=5, B=16)", 100_000, || {
+    bench(&mut rec, "rust GAE (T=5, B=16)", "gae_t5_b16", 100_000, || {
         std::hint::black_box(gae(&rew, &done, &values, &boot, 5, 16, 0.99,
                                  1.0));
     });
@@ -191,7 +433,8 @@ fn main() {
     )
     .ok();
     if let Some(text) = &manifest_text {
-        bench("json parse (manifest)", 200, || {
+        bench(&mut rec, "json parse (manifest)", "json_parse_manifest", 200,
+              || {
             std::hint::black_box(Json::parse(text).unwrap());
         });
     }
@@ -205,10 +448,16 @@ fn main() {
         let params = rt.init_params("catch", 1).unwrap();
         for n in [1usize, 4, 16] {
             let obs = vec![0.1f32; n * 50];
-            bench(&format!("PJRT forward catch (batch {n})"), 300, || {
-                std::hint::black_box(
-                    pool.forward(&params, &obs, n).unwrap());
-            });
+            bench(
+                &mut rec,
+                &format!("PJRT forward catch (batch {n})"),
+                &format!("pjrt_forward_catch_b{n}"),
+                300,
+                || {
+                    std::hint::black_box(
+                        pool.forward(&params, &obs, n).unwrap());
+                },
+            );
         }
         let cfg = hts_rl::algo::AlgoConfig::a2c(
             hts_rl::algo::Algo::A2cDelayed);
@@ -222,11 +471,14 @@ fn main() {
             storage.set_last_obs(col, &vec![0.1f32; 50]);
         }
         let behavior = params.clone();
-        bench("PJRT train step a2c (T=5, B=16)", 100, || {
+        bench(&mut rec, "PJRT train step a2c (T=5, B=16)",
+              "pjrt_train_a2c_t5_b16", 100, || {
             std::hint::black_box(
                 trainer.step_chunk(&storage, 0, &behavior).unwrap());
         });
     } else {
         println!("(artifacts missing — PJRT benches skipped)");
     }
+
+    rec.write();
 }

@@ -1,18 +1,61 @@
 //! Action buffer (paper Fig. 1e): per-slot mailboxes. An actor posts the
-//! sampled action for a slot; the slot's executor blocks on its own
-//! mailbox. Per-slot (rather than a shared queue) because each executor
+//! sampled action for a slot; the slot's executor consumes only its own
+//! mailboxes. Per-slot (rather than a shared queue) because each executor
 //! only ever consumes its own actions — this keeps wakeups targeted.
+//!
+//! Two consumption modes:
+//!
+//! * [`ActionBuffer::take`] — the classic blocking path (one replica per
+//!   thread): park on the slot's own condvar until the action lands.
+//! * [`ActionBuffer::try_take`] + [`ActionBuffer::wait_any`] — the
+//!   replica-pool path (DESIGN.md §6): a pool thread multiplexing K
+//!   replicas polls each pending slot without blocking, and when *none*
+//!   of its replicas can make progress it parks on a buffer-wide epoch
+//!   that every `post` (and `close`) bumps. The epoch is captured
+//!   *before* polling, so a post that races with the poll advances the
+//!   epoch and `wait_any` returns immediately — no lost wakeups.
+//!
+//! The pool path must not tax the actor hot path: the epoch is an atomic
+//! (no lock on `post`), and posts touch the park mutex/condvar only when
+//! a waiter is actually registered — in steady state with no parked pool
+//! thread, `post` costs one mailbox lock plus two atomic ops.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct Mailbox {
     m: Mutex<Option<usize>>,
     cv: Condvar,
 }
 
+/// Result of a non-blocking [`ActionBuffer::try_take`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryTake {
+    /// The action for the slot was available and has been consumed.
+    Ready(usize),
+    /// No action posted yet; poll again (or park via `wait_any`).
+    Pending,
+    /// The buffer is closed and the slot is empty: shut down, don't spin.
+    Closed,
+}
+
 pub struct ActionBuffer {
     boxes: Vec<Mailbox>,
-    closed: Mutex<bool>,
+    /// Bumped on every `post` and on `close`. SeqCst: the bump must be
+    /// globally ordered against a waiter's registration below.
+    epoch: AtomicU64,
+    /// Threads currently inside `wait_any`. Posts skip the park
+    /// mutex/condvar entirely while this is zero (the common case).
+    waiters: AtomicUsize,
+    closed: AtomicBool,
+    /// Park point for pooled waiters. Holds no data — the condition is
+    /// carried by `epoch`/`closed`; a waiter holds this mutex from its
+    /// epoch check until it is parked in the condvar, and a poster that
+    /// saw a registered waiter locks it (empty critical section) before
+    /// notifying, which closes the check-then-park window.
+    park: Mutex<()>,
+    any_cv: Condvar,
 }
 
 impl ActionBuffer {
@@ -21,7 +64,11 @@ impl ActionBuffer {
             boxes: (0..n_slots)
                 .map(|_| Mailbox { m: Mutex::new(None), cv: Condvar::new() })
                 .collect(),
-            closed: Mutex::new(false),
+            epoch: AtomicU64::new(0),
+            waiters: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            park: Mutex::new(()),
+            any_cv: Condvar::new(),
         }
     }
 
@@ -37,10 +84,21 @@ impl ActionBuffer {
         *g = Some(action);
         drop(g);
         mb.cv.notify_all();
+        // Publish the value before advertising it: the epoch bump is
+        // what a pooled waiter re-polls on.
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // A waiter that missed this bump registered itself before
+            // its epoch check and holds `park` until it is inside the
+            // condvar — locking (and releasing) `park` here serializes
+            // with that window, so the notify cannot be lost.
+            drop(self.park.lock().unwrap());
+            self.any_cv.notify_all();
+        }
     }
 
-    /// Executor-side: block until the action for `slot` arrives.
-    /// Returns None on shutdown.
+    /// Executor-side (blocking mode): park until the action for `slot`
+    /// arrives. Returns None on shutdown.
     pub fn take(&self, slot: usize) -> Option<usize> {
         let mb = &self.boxes[slot];
         let mut g = mb.m.lock().unwrap();
@@ -48,20 +106,79 @@ impl ActionBuffer {
             if let Some(a) = g.take() {
                 return Some(a);
             }
-            if *self.closed.lock().unwrap() {
+            if self.closed.load(Ordering::SeqCst) {
                 return None;
             }
             let (ng, timeout) = mb
                 .cv
-                .wait_timeout(g, std::time::Duration::from_millis(50))
+                .wait_timeout(g, Duration::from_millis(50))
                 .unwrap();
             g = ng;
             let _ = timeout;
         }
     }
 
+    /// Executor-side (pool mode): consume the action for `slot` if it has
+    /// already arrived, without ever blocking. A posted action is still
+    /// drained after close (matching `take`); `Closed` is returned only
+    /// once the slot is empty *and* the buffer is closed.
+    pub fn try_take(&self, slot: usize) -> TryTake {
+        let mut g = self.boxes[slot].m.lock().unwrap();
+        if let Some(a) = g.take() {
+            return TryTake::Ready(a);
+        }
+        drop(g);
+        if self.closed.load(Ordering::SeqCst) {
+            TryTake::Closed
+        } else {
+            TryTake::Pending
+        }
+    }
+
+    /// Current wakeup epoch. Capture this *before* a `try_take` polling
+    /// sweep; pass it to [`ActionBuffer::wait_any`] to park without
+    /// racing against posts that land mid-sweep.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Pool-side parking: block until the epoch advances past `seen`
+    /// (any post, or close), or until `timeout` elapses (used to wake at
+    /// the earliest cooking-replica deadline). Returns the current epoch.
+    pub fn wait_any(&self, seen: u64, timeout: Option<Duration>) -> u64 {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        // Register BEFORE checking the condition: a post that this
+        // check misses is then guaranteed to observe the registration
+        // and take the park lock (see `post`).
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let mut g = self.park.lock().unwrap();
+        while self.epoch.load(Ordering::SeqCst) == seen
+            && !self.closed.load(Ordering::SeqCst)
+        {
+            match deadline {
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        break;
+                    }
+                    let (ng, _) =
+                        self.any_cv.wait_timeout(g, dl - now).unwrap();
+                    g = ng;
+                }
+                None => g = self.any_cv.wait(g).unwrap(),
+            }
+        }
+        drop(g);
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        self.epoch.load(Ordering::SeqCst)
+    }
+
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        self.closed.store(true, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        // Close is rare: always sweep through the park point.
+        drop(self.park.lock().unwrap());
+        self.any_cv.notify_all();
         for mb in &self.boxes {
             mb.cv.notify_all();
         }
@@ -85,7 +202,7 @@ mod tests {
         let ab = Arc::new(ActionBuffer::new(2));
         let ab2 = ab.clone();
         let h = std::thread::spawn(move || ab2.take(0));
-        std::thread::sleep(std::time::Duration::from_millis(10));
+        std::thread::sleep(Duration::from_millis(10));
         ab.post(0, 3);
         assert_eq!(h.join().unwrap(), Some(3));
     }
@@ -95,7 +212,7 @@ mod tests {
         let ab = Arc::new(ActionBuffer::new(1));
         let ab2 = ab.clone();
         let h = std::thread::spawn(move || ab2.take(0));
-        std::thread::sleep(std::time::Duration::from_millis(10));
+        std::thread::sleep(Duration::from_millis(10));
         ab.close();
         assert_eq!(h.join().unwrap(), None);
     }
@@ -107,5 +224,93 @@ mod tests {
         ab.post(0, 1);
         assert_eq!(ab.take(0), Some(1));
         assert_eq!(ab.take(2), Some(9));
+    }
+
+    #[test]
+    fn try_take_pending_then_ready_then_pending() {
+        let ab = ActionBuffer::new(2);
+        assert_eq!(ab.try_take(0), TryTake::Pending);
+        ab.post(0, 4);
+        assert_eq!(ab.try_take(1), TryTake::Pending, "wrong slot untouched");
+        assert_eq!(ab.try_take(0), TryTake::Ready(4));
+        assert_eq!(ab.try_take(0), TryTake::Pending, "consumed exactly once");
+    }
+
+    /// ISSUE 2 satellite: `try_take` after `close()` must signal shutdown
+    /// — a pool executor polling a closed buffer must never spin on
+    /// `Pending` forever.
+    #[test]
+    fn try_take_after_close_signals_shutdown() {
+        let ab = ActionBuffer::new(2);
+        ab.post(0, 9);
+        ab.close();
+        // a posted action is still drained (matching `take`)...
+        assert_eq!(ab.try_take(0), TryTake::Ready(9));
+        // ...and every empty slot reports Closed, not Pending
+        assert_eq!(ab.try_take(0), TryTake::Closed);
+        assert_eq!(ab.try_take(1), TryTake::Closed);
+    }
+
+    #[test]
+    fn wait_any_wakes_on_post_to_any_slot() {
+        let ab = Arc::new(ActionBuffer::new(8));
+        let seen = ab.epoch();
+        let ab2 = ab.clone();
+        let h = std::thread::spawn(move || ab2.wait_any(seen, None));
+        std::thread::sleep(Duration::from_millis(10));
+        ab.post(5, 1);
+        let new_epoch = h.join().unwrap();
+        assert!(new_epoch > seen, "epoch must advance on post");
+    }
+
+    /// ISSUE 2 satellite: a parked pool executor must wake on close (a
+    /// shutdown can never leave a pool thread parked in `wait_any`).
+    #[test]
+    fn wait_any_wakes_on_close() {
+        let ab = Arc::new(ActionBuffer::new(4));
+        let seen = ab.epoch();
+        let ab2 = ab.clone();
+        let h = std::thread::spawn(move || ab2.wait_any(seen, None));
+        std::thread::sleep(Duration::from_millis(10));
+        ab.close();
+        h.join().unwrap(); // would hang forever on a wakeup bug
+        assert_eq!(ab.try_take(0), TryTake::Closed);
+    }
+
+    #[test]
+    fn wait_any_returns_on_timeout() {
+        let ab = ActionBuffer::new(1);
+        let seen = ab.epoch();
+        let t0 = Instant::now();
+        ab.wait_any(seen, Some(Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn wait_any_with_stale_epoch_returns_immediately() {
+        let ab = ActionBuffer::new(1);
+        let seen = ab.epoch();
+        ab.post(0, 1); // epoch moves before the wait begins
+        let t0 = Instant::now();
+        ab.wait_any(seen, None);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    /// Hammer the registered-waiter handshake: a post racing with a
+    /// waiter's check-then-park window must never be lost.
+    #[test]
+    fn wait_any_post_race_has_no_lost_wakeups() {
+        for round in 0..200u64 {
+            let ab = Arc::new(ActionBuffer::new(1));
+            let seen = ab.epoch();
+            let ab2 = ab.clone();
+            let h = std::thread::spawn(move || ab2.wait_any(seen, None));
+            if round % 2 == 0 {
+                std::thread::yield_now();
+            }
+            ab.post(0, 1);
+            h.join().unwrap(); // hangs on a lost wakeup
+            assert_eq!(ab.try_take(0), TryTake::Ready(1));
+        }
     }
 }

@@ -102,20 +102,41 @@ impl Drop for ShardWriter<'_> {
 impl StripedSwap {
     /// `b` batch columns striped evenly over `n_exec` executors
     /// (`b % n_exec == 0`; executor `e` owns columns
-    /// `[e·b/n_exec, (e+1)·b/n_exec)`).
+    /// `[e·b/n_exec, (e+1)·b/n_exec)`). One barrier party per shard —
+    /// the classic one-thread-per-replica topology.
     pub fn new(
         t_len: usize,
         b: usize,
         obs_dim: usize,
         n_exec: usize,
     ) -> StripedSwap {
+        StripedSwap::with_parties(t_len, b, obs_dim, n_exec, n_exec)
+    }
+
+    /// Replica-pool topology (DESIGN.md §6): `n_shards` stripes (one per
+    /// environment replica — the stripe layout, and therefore the
+    /// gathered `[T, B]` view, depends only on the replica count), but
+    /// only `n_parties` executor *threads* rendezvous at the barrier.
+    /// Each pool thread claims the writers of all K replicas it owns and
+    /// arrives once per iteration.
+    pub fn with_parties(
+        t_len: usize,
+        b: usize,
+        obs_dim: usize,
+        n_shards: usize,
+        n_parties: usize,
+    ) -> StripedSwap {
         assert!(
-            n_exec == 0 || b % n_exec == 0,
-            "batch columns {b} must stripe evenly over {n_exec} executors"
+            n_shards == 0 || b % n_shards == 0,
+            "batch columns {b} must stripe evenly over {n_shards} replicas"
         );
-        let width = if n_exec == 0 { 0 } else { b / n_exec };
+        assert!(
+            n_parties <= n_shards,
+            "barrier parties {n_parties} exceed replica shards {n_shards}"
+        );
+        let width = if n_shards == 0 { 0 } else { b / n_shards };
         StripedSwap {
-            shards: (0..n_exec)
+            shards: (0..n_shards)
                 .map(|e| {
                     UnsafeCell::new(ColumnShard::new(
                         t_len,
@@ -125,11 +146,11 @@ impl StripedSwap {
                     ))
                 })
                 .collect(),
-            claimed: (0..n_exec).map(|_| AtomicBool::new(false)).collect(),
+            claimed: (0..n_shards).map(|_| AtomicBool::new(false)).collect(),
             ctl: Mutex::new(Ctl {
                 iteration: 0,
                 exec_arrived: 0,
-                n_exec,
+                n_exec: n_parties,
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -335,6 +356,36 @@ mod tests {
         assert_eq!(view.last_obs[0], 9.0);
         // the stripe itself was reset for iteration 1
         assert_eq!(dp.writer(0).rows_filled(0), 0);
+    }
+
+    #[test]
+    fn pooled_party_owns_many_shards_and_arrives_once() {
+        // 4 replica shards, 2 barrier parties (K = 2): each party claims
+        // both of its replicas' writers, arrives once, and the learner
+        // still gathers all four stripes in fixed column order.
+        let dp = Arc::new(StripedSwap::with_parties(1, 4, 1, 4, 2));
+        let mut handles = Vec::new();
+        for p in 0..2usize {
+            let d = dp.clone();
+            handles.push(std::thread::spawn(move || {
+                for r in [2 * p, 2 * p + 1] {
+                    let mut w = d.writer(r);
+                    w.push(r, &[r as f32], r, r as f32, false);
+                    w.set_last_obs(r, &[10.0 + r as f32]);
+                }
+                d.executor_arrive(0)
+            }));
+        }
+        assert!(dp.learner_arrive(0));
+        let mut view = RolloutStorage::new(1, 4, 1);
+        dp.gather_and_reset(&mut view);
+        dp.learner_release(0);
+        for h in handles {
+            assert_eq!(h.join().unwrap(), Some(1));
+        }
+        assert!(view.is_full());
+        assert_eq!(view.act, vec![0, 1, 2, 3]);
+        assert_eq!(view.last_obs, vec![10.0, 11.0, 12.0, 13.0]);
     }
 
     #[test]

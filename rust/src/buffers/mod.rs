@@ -10,7 +10,7 @@ pub mod queue;
 pub mod state_buffer;
 pub mod storage;
 
-pub use action_buffer::ActionBuffer;
+pub use action_buffer::{ActionBuffer, TryTake};
 pub use double::{ShardWriter, StripedSwap};
 pub use queue::BlockingQueue;
 pub use state_buffer::{ObsMsg, StateBuffer};

@@ -41,6 +41,26 @@ impl<T> BlockingQueue<T> {
         true
     }
 
+    /// Push a batch under one lock acquisition (a replica-pool executor
+    /// publishes all of a replica's agent observations at once). Returns
+    /// false — dropping the whole batch — if the queue is closed.
+    pub fn push_all(&self, items: impl IntoIterator<Item = T>) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        let before = g.items.len();
+        g.items.extend(items);
+        let pushed = g.items.len() - before;
+        drop(g);
+        match pushed {
+            0 => {}
+            1 => self.cv.notify_one(),
+            _ => self.cv.notify_all(),
+        }
+        true
+    }
+
     /// Pop one item, blocking. Returns None once closed and drained.
     pub fn pop(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
@@ -105,6 +125,16 @@ mod tests {
         for i in 0..5 {
             assert_eq!(q.pop(), Some(i));
         }
+    }
+
+    #[test]
+    fn push_all_delivers_in_order_and_respects_close() {
+        let q = BlockingQueue::new();
+        assert!(q.push_all(0..4));
+        assert_eq!(q.pop_batch(8), vec![0, 1, 2, 3]);
+        q.close();
+        assert!(!q.push_all(4..6), "closed queue must reject the batch");
+        assert!(q.pop_batch(8).is_empty());
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl StateBuffer {
         self.q.push(msg)
     }
 
+    /// Publish several observations under one lock acquisition — a
+    /// replica-pool executor ships all of a replica's agent observations
+    /// (or several just-stepped replicas') in one call.
+    pub fn push_batch(&self, msgs: Vec<ObsMsg>) -> bool {
+        self.q.push_all(msgs)
+    }
+
     /// Actor-side: block for ≥1 observation, then take up to `max`.
     /// Empty result means shutdown.
     pub fn grab(&self, max: usize) -> Vec<ObsMsg> {
@@ -80,6 +87,18 @@ mod tests {
         assert_eq!(batch.len(), 4);
         assert_eq!(batch[0].slot, 0);
         assert_eq!(sb.len(), 2);
+    }
+
+    #[test]
+    fn push_batch_preserves_order() {
+        let sb = StateBuffer::new();
+        let msgs: Vec<ObsMsg> = (0..3)
+            .map(|slot| ObsMsg { slot, obs: vec![0.0], seed: slot as u64 })
+            .collect();
+        assert!(sb.push_batch(msgs));
+        let batch = sb.grab(8);
+        assert_eq!(batch.iter().map(|m| m.slot).collect::<Vec<_>>(),
+                   vec![0, 1, 2]);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! start-of-unroll version.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -61,12 +61,13 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
     let traj_q: Arc<BlockingQueue<Traj>> = Arc::new(BlockingQueue::new());
     let sps = Arc::new(SpsMeter::new());
     let stop_flag = Arc::new(AtomicBool::new(false));
-    let episodes: Arc<Mutex<Vec<EpisodePoint>>> =
-        Arc::new(Mutex::new(Vec::new()));
-    let signatures = Arc::new(std::sync::atomic::AtomicU64::new(0));
     let watch = Stopwatch::new();
 
     // ---- free-running executors -------------------------------------------
+    // Episode logs and signatures are thread-local, merged at join (no
+    // shared episode lock — DESIGN.md §6); the run's stopwatch is copied
+    // in so episode timestamps share the eval/report origin.
+    type ExecReport = (Vec<EpisodePoint>, u64);
     let mut exec_handles = Vec::new();
     for e in 0..cfg.n_envs {
         let spec = cfg.spec.clone();
@@ -76,19 +77,17 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         let params = params.clone();
         let sps = sps.clone();
         let stop_flag = stop_flag.clone();
-        let episodes = episodes.clone();
-        let signatures = signatures.clone();
         let seed = cfg.seed;
-        exec_handles.push(std::thread::spawn(move || -> Result<()> {
+        exec_handles.push(std::thread::spawn(move || -> Result<ExecReport> {
             let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
             let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
             let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
             let mut env = spec.build()?;
             let mut obs = env.reset(&mut env_rng);
             let mut ep_reward = 0.0f64;
+            let mut episodes: Vec<EpisodePoint> = Vec::new();
             let mut sig = Fnv::default();
             sig.update(e as u64);
-            let watch = Stopwatch::new();
             'outer: while !stop_flag.load(Ordering::Relaxed) {
                 let version = params.version();
                 let mut traj = Traj {
@@ -128,7 +127,7 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
                     sig.update(step.reward.to_bits() as u64);
                     ep_reward += step.reward as f64;
                     if step.done {
-                        episodes.lock().unwrap().push(EpisodePoint {
+                        episodes.push(EpisodePoint {
                             steps: gsteps,
                             wall_s: watch.elapsed_s(),
                             reward: ep_reward,
@@ -144,8 +143,7 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
                 // GA3C/IMPALA design whose length IS the policy lag.
                 traj_q.push(traj);
             }
-            signatures.fetch_xor(sig.finish(), Ordering::Relaxed);
-            Ok(())
+            Ok((episodes, sig.finish()))
         }));
     }
 
@@ -245,8 +243,12 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
     state_buf.close();
     act_buf.close();
     traj_q.close();
+    let mut episodes: Vec<EpisodePoint> = Vec::new();
+    let mut signature = 0u64;
     for h in exec_handles {
-        h.join().expect("executor panicked")?;
+        let (eps, sig) = h.join().expect("executor panicked")?;
+        episodes.extend(eps);
+        signature ^= sig;
     }
     for h in actor_handles {
         h.join().expect("actor panicked")?;
@@ -263,9 +265,6 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         }
         None => Vec::new(),
     };
-    let mut episodes = Arc::try_unwrap(episodes)
-        .map(|m| m.into_inner().unwrap())
-        .unwrap_or_default();
     episodes.sort_by_key(|e| e.steps);
 
     Ok(TrainReport {
@@ -277,7 +276,7 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         wall_s: watch.elapsed_s(),
         episodes,
         evals,
-        signature: signatures.load(Ordering::Relaxed),
+        signature,
         staleness,
         final_loss: last_out.total_loss,
         final_entropy: last_out.entropy,

@@ -83,10 +83,15 @@ impl StopCond {
 pub struct RunConfig {
     pub spec: EnvSpec,
     pub algo: AlgoConfig,
-    /// Environment replicas (executor threads).
+    /// Environment replicas (HTS: `n_envs / replicas_per_executor`
+    /// executor threads each multiplex a pool of replicas).
     pub n_envs: usize,
     /// Inference actor threads (paper default: 4, fewer than executors).
     pub n_actors: usize,
+    /// Replicas multiplexed per executor thread (K). Must divide
+    /// `n_envs`; the run signature is identical for every K (DESIGN.md
+    /// §6). 1 ⇒ classic one-thread-per-replica.
+    pub replicas_per_executor: usize,
     /// Batch-synchronization interval α, in env steps per iteration.
     /// Must be a multiple of the artifact unroll T. 0 ⇒ use T.
     pub sync_interval: usize,
@@ -105,6 +110,7 @@ impl RunConfig {
             algo,
             n_envs: 16,
             n_actors: 4,
+            replicas_per_executor: 1,
             sync_interval: 0,
             seed: 1,
             stop: StopCond::updates(50),

@@ -1,12 +1,17 @@
 //! **HTS-RL** — the paper's system (§4.1, Fig. 1e, Fig. 2d).
 //!
 //! Topology per run:
-//!   * `n_envs` executor threads, each owning one environment replica and
-//!     three private PRNG streams (env dynamics, sampling seeds, step-time
-//!     delays). Executors push `(obs, slot, seed)` to the state buffer,
-//!     block on their action mailbox, apply the action, and write the
-//!     transition into their private column stripe — **no lock, no shared
-//!     state of any kind on the step path** (DESIGN.md §5).
+//!   * `n_envs / K` executor threads, each owning a pool of K environment
+//!     replicas (`executor::ReplicaPool`, DESIGN.md §6). Every replica
+//!     keeps three private PRNG streams (env dynamics, sampling seeds,
+//!     step-time delays), its own batch columns, and its own rollout
+//!     stripe. The pool interleaves its replicas: observations go out
+//!     with executor-drawn seeds, actions come back through non-blocking
+//!     mailbox polls, and injected engine latency is a virtual deadline
+//!     the scheduler overlaps instead of a `thread::sleep` — **no lock,
+//!     no shared state of any kind on the step path** (DESIGN.md §5),
+//!     and no thread ever idles on one replica's inference round-trip
+//!     while a sibling replica could run.
 //!   * `n_actors` actor threads (usually fewer than executors): batch-grab
 //!     observations, forward once per batch on their private PJRT runtime,
 //!     sample with the executor-provided seeds, post actions back.
@@ -17,22 +22,20 @@
 //!
 //! The swap barrier is two-phase (see `buffers::double`): the learner
 //! gathers all stripes into the `[T, B]` train view and publishes
-//! parameters while all executors are parked, which upholds the
-//! full-determinism guarantee for any actor count (paper Tab. 4).
+//! parameters while all pool threads are parked, which upholds the
+//! full-determinism guarantee for any actor count *and any replica
+//! pooling factor* (paper Tab. 4; `rust/tests/pool.rs`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::common::{spawn_actors, EvalWorker, Fnv, RunConfig};
-use crate::buffers::{
-    ActionBuffer, ObsMsg, RolloutStorage, StateBuffer, StripedSwap,
-};
-use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch, TrainReport};
+use super::common::{spawn_actors, EvalWorker, RunConfig};
+use crate::buffers::{ActionBuffer, RolloutStorage, StateBuffer, StripedSwap};
+use crate::executor::{PoolReport, PoolShared, ReplicaPool};
+use crate::metrics::report::{SpsMeter, Stopwatch, TrainReport};
 use crate::model::manifest::Manifest;
 use crate::model::ParamStore;
-use crate::rng::SplitMix64;
 use crate::runtime::{ModelRuntime, Trainer};
 
 pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
@@ -45,6 +48,13 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         "sync interval {alpha} must be a multiple of unroll {}",
         info.unroll
     );
+    let k = cfg.replicas_per_executor.max(1);
+    anyhow::ensure!(
+        cfg.n_envs % k == 0,
+        "n_envs {} must be divisible by replicas_per_executor {k}",
+        cfg.n_envs
+    );
+    let n_threads = cfg.n_envs / k;
 
     // Learner-side runtime, initial parameters, trainer.
     let rt = ModelRuntime::new(manifest.clone())?;
@@ -52,111 +62,38 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
     let mut trainer =
         Trainer::new(&rt, &cfg.spec.model, cfg.algo, init.clone(), b_cols)?;
 
-    // Shared system state.
-    let dp = Arc::new(StripedSwap::new(alpha, b_cols, info.obs_dim,
-                                       cfg.n_envs));
+    // Shared system state: one stripe per *replica*, one barrier party
+    // per pool *thread*.
+    let dp = Arc::new(StripedSwap::with_parties(
+        alpha,
+        b_cols,
+        info.obs_dim,
+        cfg.n_envs,
+        n_threads,
+    ));
     let state_buf = Arc::new(StateBuffer::new());
     let act_buf = Arc::new(ActionBuffer::new(b_cols));
     let params = Arc::new(ParamStore::new(init.clone()));
     let sps = Arc::new(SpsMeter::new());
-    let episodes: Arc<Mutex<Vec<EpisodePoint>>> =
-        Arc::new(Mutex::new(Vec::new()));
-    let signatures = Arc::new(AtomicU64::new(0));
     let watch = Stopwatch::new();
 
-    // ---- executors -------------------------------------------------------
+    // ---- executors (replica pools) ---------------------------------------
+    // Episode logs and trajectory signatures are thread-local and merged
+    // at join (no shared episode lock — DESIGN.md §6).
     let mut exec_handles = Vec::new();
-    for e in 0..cfg.n_envs {
+    for t in 0..n_threads {
         let spec = cfg.spec.clone();
-        let dp = dp.clone();
-        let state_buf = state_buf.clone();
-        let act_buf = act_buf.clone();
-        let sps = sps.clone();
-        let episodes = episodes.clone();
-        let signatures = signatures.clone();
+        let shared = PoolShared {
+            swap: dp.clone(),
+            state_buf: state_buf.clone(),
+            act_buf: act_buf.clone(),
+            sps: sps.clone(),
+            watch,
+        };
         let seed = cfg.seed;
-        let n_agents = spec.n_agents;
-        exec_handles.push(std::thread::spawn(move || -> Result<()> {
-            let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
-            let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
-            let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
-            let mut env = spec.build()?;
-            let mut obs = env.reset(&mut env_rng);
-            let mut ep_reward = 0.0f64;
-            let mut sig = Fnv::default();
-            sig.update(e as u64);
-            let mut it = 0u64;
-            let watch = Stopwatch::new();
-            'outer: loop {
-                // Claim this executor's private stripe for the whole
-                // iteration: one CAS here, then every step below is a
-                // plain unsynchronized write (the old code took a global
-                // storage mutex on *every* step).
-                let mut shard = dp.writer(e);
-                for _t in 0..alpha {
-                    // 1. publish observations with executor-drawn seeds
-                    for a in 0..n_agents {
-                        state_buf.push(ObsMsg {
-                            slot: e * n_agents + a,
-                            obs: obs[a].clone(),
-                            seed: seed_rng.next_u64(),
-                        });
-                    }
-                    // 2. await actions from whichever actor served us
-                    let mut actions = Vec::with_capacity(n_agents);
-                    for a in 0..n_agents {
-                        match act_buf.take(e * n_agents + a) {
-                            Some(act) => actions.push(act),
-                            None => break 'outer, // shutdown
-                        }
-                    }
-                    // 3. simulated engine latency + real env step
-                    spec.steptime.sleep(&mut delay_rng);
-                    let step = env.step(&actions, &mut env_rng);
-                    // 4. record the transition (per agent column) —
-                    // lock-free: the stripe is this thread's alone
-                    for a in 0..n_agents {
-                        shard.push(
-                            e * n_agents + a,
-                            &obs[a],
-                            actions[a],
-                            step.reward,
-                            step.done,
-                        );
-                    }
-                    let gsteps = sps.add(1);
-                    for (a, &act) in actions.iter().enumerate() {
-                        sig.update(((a as u64) << 32) | act as u64);
-                    }
-                    sig.update(step.reward.to_bits() as u64);
-                    sig.update(step.done as u64);
-                    ep_reward += step.reward as f64;
-                    if step.done {
-                        episodes.lock().unwrap().push(EpisodePoint {
-                            steps: gsteps,
-                            wall_s: watch.elapsed_s(),
-                            reward: ep_reward,
-                        });
-                        ep_reward = 0.0;
-                        obs = env.reset(&mut env_rng);
-                    } else {
-                        obs = step.obs;
-                    }
-                }
-                // 5. bootstrap observations, then rendezvous (the writer
-                // must be released before parking — the learner gathers
-                // the stripes inside the publication window)
-                for a in 0..n_agents {
-                    shard.set_last_obs(e * n_agents + a, &obs[a]);
-                }
-                drop(shard);
-                match dp.executor_arrive(it) {
-                    Some(next) => it = next,
-                    None => break,
-                }
-            }
-            signatures.fetch_xor(sig.finish(), Ordering::Relaxed);
-            Ok(())
+        exec_handles.push(std::thread::spawn(move || -> Result<PoolReport> {
+            let replicas = t * k..(t + 1) * k;
+            ReplicaPool::new(&spec, seed, alpha, replicas, shared)?.run()
         }));
     }
 
@@ -185,7 +122,7 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
 
     // ---- learner (this thread) ----------------------------------------------
     // `gathered` is the learner-owned read storage: refilled zero-alloc
-    // from the executor stripes at each swap barrier, then consumed
+    // from the replica stripes at each swap barrier, then consumed
     // concurrently with the executors filling the next iteration.
     let mut gathered = RolloutStorage::new(alpha, b_cols, info.obs_dim);
     let mut behavior: Arc<Vec<f32>> = Arc::new(init);
@@ -206,8 +143,8 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
                 }
             }
         }
-        // Phase 1: wait for executors to park (all obs answered, no
-        // in-flight inference).
+        // Phase 1: wait for all pool threads to park (all obs answered,
+        // no in-flight inference).
         if !dp.learner_arrive(it) {
             break;
         }
@@ -227,8 +164,14 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         it = dp.learner_release(it);
     }
 
+    // Merge the thread-local episode logs and XOR-combine the per-replica
+    // trajectory signatures (combine order independent — DESIGN.md §6).
+    let mut episodes = Vec::new();
+    let mut signature = 0u64;
     for h in exec_handles {
-        h.join().expect("executor panicked")?;
+        let report = h.join().expect("executor panicked")?;
+        signature ^= report.signature;
+        episodes.extend(report.episodes);
     }
     for h in actor_handles {
         h.join().expect("actor panicked")?;
@@ -248,9 +191,6 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         None => Vec::new(),
     };
 
-    let mut episodes = Arc::try_unwrap(episodes)
-        .map(|m| m.into_inner().unwrap())
-        .unwrap_or_default();
     episodes.sort_by_key(|e| e.steps);
 
     Ok(TrainReport {
@@ -262,7 +202,7 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         wall_s: watch.elapsed_s(),
         episodes,
         evals,
-        signature: signatures.load(Ordering::Relaxed),
+        signature,
         staleness: vec![1.0], // guaranteed lag of one (paper §4.1)
         final_loss: last_out.total_loss,
         final_entropy: last_out.entropy,

@@ -24,6 +24,12 @@ use crate::Result;
 
 /// Dispatch a training run by method.
 pub fn run(method: Method, cfg: &RunConfig) -> Result<TrainReport> {
+    // Replica pooling is an HTS executor feature; silently ignoring it
+    // for the baselines would let topology comparisons lie.
+    anyhow::ensure!(
+        method == Method::Hts || cfg.replicas_per_executor <= 1,
+        "replicas_per_executor > 1 is only supported by the hts method"
+    );
     match method {
         Method::Hts => hts::run_hts(cfg),
         Method::Sync => sync_driver::run_sync(cfg),

@@ -1,0 +1,73 @@
+//! Shared stand-in plumbing for the executor integration tests
+//! (`rust/tests/pool.rs`) and the scheduling benches
+//! (`rust/benches/bench_components.rs`): a deterministic actor fleet
+//! whose actions are a pure function of `(obs, executor-drawn seed)`,
+//! and a learner stand-in that drives the two-phase barrier with the
+//! exact shutdown sequence the HTS driver uses. Kept in one place so
+//! the swap/close protocol can never drift between the two harnesses.
+//!
+//! Hidden from docs: this is test/bench support, not runtime API.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::buffers::{ActionBuffer, RolloutStorage, StateBuffer, StripedSwap};
+
+/// Deterministic stand-in policy: sampled action from the observation
+/// and the executor-drawn seed (the deferred-randomness contract the
+/// PJRT actors uphold — DESIGN.md §4).
+pub type StandInPolicy = Arc<dyn Fn(&[f32], u64) -> usize + Send + Sync>;
+
+/// Spawn actor stand-ins: batch-grab observations, answer each with
+/// `policy(obs, seed)`, exit when the state buffer closes.
+pub fn spawn_standin_actors(
+    n_actors: usize,
+    state_buf: &Arc<StateBuffer>,
+    act_buf: &Arc<ActionBuffer>,
+    grab: usize,
+    policy: &StandInPolicy,
+) -> Vec<JoinHandle<()>> {
+    (0..n_actors)
+        .map(|_| {
+            let sb = state_buf.clone();
+            let ab = act_buf.clone();
+            let policy = policy.clone();
+            std::thread::spawn(move || loop {
+                let batch = sb.grab(grab);
+                if batch.is_empty() {
+                    return; // shutdown
+                }
+                for m in batch {
+                    ab.post(m.slot, policy(&m.obs, m.seed));
+                }
+            })
+        })
+        .collect()
+}
+
+/// Learner stand-in: drive `iters` two-phase barrier iterations, calling
+/// `on_gather` on the gathered view inside each publication window, then
+/// shut down exactly the way the HTS learner does — shutdown + close
+/// both buffers *inside* the final window, never releasing it.
+pub fn drive_learner_barrier(
+    swap: &StripedSwap,
+    state_buf: &StateBuffer,
+    act_buf: &ActionBuffer,
+    gathered: &mut RolloutStorage,
+    iters: u64,
+    mut on_gather: impl FnMut(&RolloutStorage),
+) {
+    let mut it = 0u64;
+    for i in 0..iters {
+        assert!(swap.learner_arrive(it), "premature shutdown");
+        swap.gather_and_reset(gathered);
+        on_gather(gathered);
+        if i + 1 == iters {
+            swap.shutdown();
+            state_buf.close();
+            act_buf.close();
+        } else {
+            it = swap.learner_release(it);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Replica-pool executors — latency-hiding environment scheduling with
+//! bit-exact determinism (DESIGN.md §6).
+//!
+//! The classic HTS-RL topology dedicates one OS thread to each
+//! environment replica and blocks it on its action mailbox every step:
+//! a full inference round-trip sits on the critical path of every
+//! replica, and scaling replicas means scaling threads. This module
+//! decouples the two. Each executor *thread* owns a [`ReplicaPool`] of K
+//! [`ReplicaSlot`]s and interleaves them: while replica *i*'s actions
+//! are in flight at an actor (or its simulated engine latency is
+//! "cooking" toward a virtual deadline), the thread steps whichever
+//! sibling replica is ready — double-buffered sampling in the Sample
+//! Factory sense, generalized to K-way multiplexing.
+//!
+//! Determinism is preserved **bit-exactly** for any `(n_threads, K)`
+//! factorization of `n_envs`: every replica keeps its own three PRNG
+//! streams keyed by its *global* replica index, its own batch columns
+//! and rollout stripe, its own FNV trajectory hash, and runs exactly α
+//! steps per iteration — so a replica's trajectory never depends on
+//! which thread drives it or which siblings share that thread
+//! (integration-tested in `rust/tests/pool.rs`, artifact-gated
+//! end-to-end in `rust/tests/determinism.rs`).
+
+#[doc(hidden)]
+pub mod harness;
+pub mod pool;
+pub mod slot;
+
+pub use pool::{PoolReport, PoolShared, ReplicaPool};
+pub use slot::{Polled, ReplicaSlot, SlotState};

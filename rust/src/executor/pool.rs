@@ -1,0 +1,246 @@
+//! The replica-pool scheduler: one executor thread driving K environment
+//! replicas through the HTS-RL step protocol, overlapping their action
+//! round-trips and engine delays (DESIGN.md §6).
+//!
+//! Scheduling structure per iteration:
+//!
+//! * a **waiting list** of replicas whose observations are out at the
+//!   actor fleet — polled with the non-blocking
+//!   [`ActionBuffer::try_take`](crate::buffers::ActionBuffer::try_take);
+//! * a **cooking min-heap** keyed by virtual deadline — replicas whose
+//!   actions arrived and whose simulated engine latency has not elapsed
+//!   yet (`StepTimeModel::sample_us` drawn from the replica's private
+//!   delay stream; the thread never sleeps a delay away, it parks until
+//!   the *earliest* deadline while other replicas run);
+//! * a **ready queue** of replicas whose deadline has passed — stepped,
+//!   recorded into their private stripes, and re-published.
+//!
+//! When no replica can make progress the thread parks on the action
+//! buffer's epoch (`wait_any`), bounded by the earliest cooking deadline,
+//! so a pool thread burns no CPU while its replicas' requests are in
+//! flight. Once all K replicas hit α steps the thread arrives at the
+//! two-phase swap barrier exactly once.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::slot::{Polled, ReplicaSlot};
+use crate::buffers::{ActionBuffer, ShardWriter, StateBuffer, StripedSwap};
+use crate::envs::{EnvSpec, StepTimeModel};
+use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch};
+
+/// Handles a pool thread shares with the rest of the run.
+#[derive(Clone)]
+pub struct PoolShared {
+    pub swap: Arc<StripedSwap>,
+    pub state_buf: Arc<StateBuffer>,
+    pub act_buf: Arc<ActionBuffer>,
+    pub sps: Arc<SpsMeter>,
+    /// The run's stopwatch (copied, same origin) so episode timestamps
+    /// line up with eval/report timestamps.
+    pub watch: Stopwatch,
+}
+
+/// What a pool thread hands back at join: its replicas' episode log and
+/// the XOR of their trajectory signatures. Collecting these thread-locally
+/// removes the last shared lock executors ever touched (the old
+/// `Mutex<Vec<EpisodePoint>>` episode sink).
+#[derive(Debug, Default)]
+pub struct PoolReport {
+    pub episodes: Vec<EpisodePoint>,
+    pub signature: u64,
+}
+
+/// One executor thread's pool of K replicas.
+pub struct ReplicaPool {
+    shared: PoolShared,
+    steptime: StepTimeModel,
+    alpha: usize,
+    slots: Vec<ReplicaSlot>,
+    episodes: Vec<EpisodePoint>,
+}
+
+impl ReplicaPool {
+    /// Build the pool owning global replicas `replicas` (a contiguous
+    /// range; each brings its own RNG streams, batch columns, and stripe).
+    pub fn new(
+        spec: &EnvSpec,
+        seed: u64,
+        alpha: usize,
+        replicas: Range<usize>,
+        shared: PoolShared,
+    ) -> Result<ReplicaPool> {
+        anyhow::ensure!(alpha > 0, "alpha must be positive");
+        anyhow::ensure!(!replicas.is_empty(), "pool needs >= 1 replica");
+        let slots = replicas
+            .map(|r| ReplicaSlot::new(spec, seed, r))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ReplicaPool {
+            shared,
+            steptime: spec.steptime,
+            alpha,
+            slots,
+            episodes: Vec::new(),
+        })
+    }
+
+    /// Drive all replicas until the learner shuts the run down. Returns
+    /// the pool's episode log and combined trajectory signature.
+    pub fn run(self) -> Result<PoolReport> {
+        if self.slots.len() == 1 {
+            // K = 1: nothing to multiplex. Run the classic blocking
+            // loop — per-slot condvar waits keep actor wakeups targeted
+            // instead of parking on the buffer-wide epoch (which would
+            // herd-wake every single-replica pool on every post).
+            return self.run_single();
+        }
+        self.run_multiplexed()
+    }
+
+    /// The K = 1 fast path: publish → block on own mailboxes → sleep the
+    /// engine delay → step, exactly the pre-pool executor loop. Same
+    /// per-replica draw order as the scheduler path, so the trajectory
+    /// is bit-identical (cross-checked by the factorization tests in
+    /// `rust/tests/pool.rs`, whose K = 1 baseline runs this loop against
+    /// the K > 1 scheduler).
+    fn run_single(mut self) -> Result<PoolReport> {
+        let swap = self.shared.swap.clone();
+        let mut it = 0u64;
+        'outer: loop {
+            let mut writer = swap.writer(self.slots[0].replica);
+            self.slots[0].begin_iteration(&self.shared.state_buf);
+            for _t in 0..self.alpha {
+                if !self.slots[0]
+                    .take_actions_blocking(&self.shared.act_buf)
+                {
+                    break 'outer; // shutdown
+                }
+                self.slots[0].cook_blocking(&self.steptime);
+                self.slots[0].step(
+                    &mut writer,
+                    &self.shared.sps,
+                    &self.shared.watch,
+                    &mut self.episodes,
+                );
+                if self.slots[0].steps_done() < self.alpha {
+                    self.slots[0].publish_obs(&self.shared.state_buf);
+                }
+            }
+            self.slots[0].finish_iteration(&mut writer);
+            drop(writer);
+            match swap.executor_arrive(it) {
+                Some(next) => it = next,
+                None => break,
+            }
+        }
+        Ok(self.into_report())
+    }
+
+    /// The K > 1 scheduler path (module docs above).
+    fn run_multiplexed(mut self) -> Result<PoolReport> {
+        let swap = self.shared.swap.clone();
+        let n_slots = self.slots.len();
+        let mut it = 0u64;
+        'outer: loop {
+            // Claim every owned stripe for the iteration (one CAS per
+            // replica per iteration — never on the step path).
+            let mut writers: Vec<ShardWriter<'_>> =
+                self.slots.iter().map(|s| swap.writer(s.replica)).collect();
+            for slot in &mut self.slots {
+                slot.begin_iteration(&self.shared.state_buf);
+            }
+            let mut waiting: Vec<usize> = (0..n_slots).collect();
+            let mut cooking: BinaryHeap<Reverse<(Instant, usize)>> =
+                BinaryHeap::new();
+            let mut ready: VecDeque<usize> = VecDeque::new();
+            let mut at_barrier = 0usize;
+            while at_barrier < n_slots {
+                // Capture the wakeup epoch BEFORE polling: a post that
+                // lands mid-sweep advances it and the park below returns
+                // immediately (no lost wakeup).
+                let seen = self.shared.act_buf.epoch();
+                let now = Instant::now();
+                // 1. cooking replicas whose deadline passed become ready
+                while let Some(&Reverse((deadline, i))) = cooking.peek() {
+                    if deadline > now {
+                        break;
+                    }
+                    cooking.pop();
+                    ready.push_back(i);
+                }
+                // 2. poll the waiting replicas' mailboxes
+                let mut still = Vec::with_capacity(waiting.len());
+                let mut closed = false;
+                for i in waiting.drain(..) {
+                    match self.slots[i].poll_actions(&self.shared.act_buf) {
+                        Polled::Closed => {
+                            closed = true;
+                            break;
+                        }
+                        Polled::Complete => {
+                            let dl = self.slots[i]
+                                .start_cooking(now, &self.steptime);
+                            if dl <= now {
+                                ready.push_back(i);
+                            } else {
+                                cooking.push(Reverse((dl, i)));
+                            }
+                        }
+                        Polled::Pending => still.push(i),
+                    }
+                }
+                if closed {
+                    break 'outer; // shutdown: buffers closed mid-flight
+                }
+                waiting = still;
+                // 3. step everything ready; finished replicas park at
+                //    the barrier, the rest republish and wait again
+                let progressed = !ready.is_empty();
+                while let Some(i) = ready.pop_front() {
+                    self.slots[i].step(
+                        &mut writers[i],
+                        &self.shared.sps,
+                        &self.shared.watch,
+                        &mut self.episodes,
+                    );
+                    if self.slots[i].steps_done() == self.alpha {
+                        self.slots[i].finish_iteration(&mut writers[i]);
+                        at_barrier += 1;
+                    } else {
+                        self.slots[i].publish_obs(&self.shared.state_buf);
+                        waiting.push(i);
+                    }
+                }
+                // 4. nothing runnable: park until an action posts, the
+                //    buffer closes, or the earliest cooking deadline
+                if !progressed && at_barrier < n_slots {
+                    let timeout = cooking.peek().map(|&Reverse((dl, _))| {
+                        dl.saturating_duration_since(now)
+                    });
+                    self.shared.act_buf.wait_any(seen, timeout);
+                }
+            }
+            // Release the stripes before parking — the learner gathers
+            // them inside the publication window.
+            drop(writers);
+            match swap.executor_arrive(it) {
+                Some(next) => it = next,
+                None => break,
+            }
+        }
+        Ok(self.into_report())
+    }
+
+    fn into_report(self) -> PoolReport {
+        let signature = self
+            .slots
+            .iter()
+            .fold(0u64, |acc, s| acc ^ s.signature());
+        PoolReport { episodes: self.episodes, signature }
+    }
+}

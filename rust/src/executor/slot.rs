@@ -1,0 +1,301 @@
+//! One environment replica as a schedulable unit: a tiny state machine
+//! the pool scheduler drives through the HTS-RL step protocol.
+//!
+//! A slot owns everything the old one-thread-per-replica executor loop
+//! owned — the env instance, the three private PRNG streams, the batch
+//! columns `replica·A..(replica+1)·A`, its stripe of the rollout, and
+//! its FNV trajectory hash — so a replica's trajectory is a pure
+//! function of `(run_seed, replica_index, params_versions)` no matter
+//! which thread happens to drive it, or how many sibling replicas that
+//! thread multiplexes. That purity is the whole K-invariance argument
+//! (DESIGN.md §6).
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::buffers::{ActionBuffer, ObsMsg, ShardWriter, StateBuffer, TryTake};
+use crate::coordinator::common::Fnv;
+use crate::envs::{Env, EnvSpec, StepTimeModel};
+use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch};
+use crate::rng::SplitMix64;
+
+/// Where a replica is within the current α-step iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// Observations published with executor-drawn seeds; some agent
+    /// actions are still in flight at an actor.
+    AwaitingActions,
+    /// All actions in hand; the (simulated) engine is busy until the
+    /// virtual deadline — the scheduler runs other replicas meanwhile.
+    Cooking { deadline: Instant },
+    /// α steps recorded and the bootstrap observation set; the replica
+    /// is done until the pool thread's barrier rendezvous.
+    AtBarrier,
+}
+
+/// Outcome of polling a slot's outstanding action mailboxes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polled {
+    /// Every agent action has arrived — ready to cook.
+    Complete,
+    /// At least one action still in flight.
+    Pending,
+    /// The action buffer closed: shut the pool down.
+    Closed,
+}
+
+pub struct ReplicaSlot {
+    /// Global replica index (RNG stream id, stripe id, column base).
+    pub replica: usize,
+    pub state: SlotState,
+    n_agents: usize,
+    env: Box<dyn Env>,
+    env_rng: SplitMix64,
+    seed_rng: SplitMix64,
+    delay_rng: SplitMix64,
+    /// Current per-agent observations (input of the pending step).
+    obs: Vec<Vec<f32>>,
+    /// Per-agent actions received so far this step.
+    actions: Vec<Option<usize>>,
+    /// Unwrapped copy of `actions` once complete (step scratch).
+    act_scratch: Vec<usize>,
+    steps_done: usize,
+    ep_reward: f64,
+    sig: Fnv,
+}
+
+impl ReplicaSlot {
+    /// Build replica `replica` with the same stream ids the classic
+    /// executor used (`1000/2000/3000 + replica`), so a pooled run is
+    /// bit-identical to the historical one-thread-per-replica run.
+    pub fn new(spec: &EnvSpec, seed: u64, replica: usize) -> Result<ReplicaSlot> {
+        let mut env_rng = SplitMix64::stream(seed, 1_000 + replica as u64);
+        let seed_rng = SplitMix64::stream(seed, 2_000 + replica as u64);
+        let delay_rng = SplitMix64::stream(seed, 3_000 + replica as u64);
+        let mut env = spec.build()?;
+        let obs = env.reset(&mut env_rng);
+        let n_agents = spec.n_agents;
+        let mut sig = Fnv::default();
+        sig.update(replica as u64);
+        Ok(ReplicaSlot {
+            replica,
+            state: SlotState::AtBarrier,
+            n_agents,
+            env,
+            env_rng,
+            seed_rng,
+            delay_rng,
+            obs,
+            actions: vec![None; n_agents],
+            act_scratch: Vec::with_capacity(n_agents),
+            steps_done: 0,
+            ep_reward: 0.0,
+            sig,
+        })
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    /// Finish the replica: its contribution to the run signature.
+    pub fn signature(&self) -> u64 {
+        self.sig.finish()
+    }
+
+    /// Start a fresh iteration: reset the step counter and publish the
+    /// first observations.
+    pub fn begin_iteration(&mut self, state_buf: &StateBuffer) {
+        self.steps_done = 0;
+        self.publish_obs(state_buf);
+    }
+
+    /// Publish this step's observations with executor-drawn sampling
+    /// seeds (deferred randomness, DESIGN.md §4) and start waiting for
+    /// the actions.
+    pub fn publish_obs(&mut self, state_buf: &StateBuffer) {
+        // Legal from AtBarrier (iteration start) or Cooking (the step
+        // that just ran); publishing while actions are still in flight
+        // is a scheduler bug.
+        debug_assert!(
+            matches!(
+                self.state,
+                SlotState::AtBarrier | SlotState::Cooking { .. }
+            ),
+            "publish from {:?}",
+            self.state
+        );
+        let base = self.replica * self.n_agents;
+        let msgs: Vec<ObsMsg> = (0..self.n_agents)
+            .map(|a| ObsMsg {
+                slot: base + a,
+                obs: self.obs[a].clone(),
+                seed: self.seed_rng.next_u64(),
+            })
+            .collect();
+        // A false return means the buffer closed mid-shutdown; the next
+        // `poll_actions` observes Closed and the pool unwinds.
+        let _ = state_buf.push_batch(msgs);
+        self.actions.fill(None);
+        self.state = SlotState::AwaitingActions;
+    }
+
+    /// Non-blocking sweep over this replica's outstanding mailboxes.
+    pub fn poll_actions(&mut self, act_buf: &ActionBuffer) -> Polled {
+        debug_assert!(
+            matches!(self.state, SlotState::AwaitingActions),
+            "poll from {:?}",
+            self.state
+        );
+        let base = self.replica * self.n_agents;
+        let mut missing = 0usize;
+        for (a, got) in self.actions.iter_mut().enumerate() {
+            if got.is_some() {
+                continue;
+            }
+            match act_buf.try_take(base + a) {
+                TryTake::Ready(act) => *got = Some(act),
+                TryTake::Pending => missing += 1,
+                TryTake::Closed => return Polled::Closed,
+            }
+        }
+        if missing == 0 {
+            self.act_scratch.clear();
+            self.act_scratch
+                .extend(self.actions.iter().map(|a| a.unwrap()));
+            Polled::Complete
+        } else {
+            Polled::Pending
+        }
+    }
+
+    /// Blocking-mode action wait (the K = 1 fast path): park on each
+    /// agent mailbox's *own* condvar — targeted wakeups, no buffer-wide
+    /// epoch traffic. Returns false on shutdown.
+    pub fn take_actions_blocking(&mut self, act_buf: &ActionBuffer) -> bool {
+        debug_assert!(
+            matches!(self.state, SlotState::AwaitingActions),
+            "take from {:?}",
+            self.state
+        );
+        let base = self.replica * self.n_agents;
+        for (a, got) in self.actions.iter_mut().enumerate() {
+            match act_buf.take(base + a) {
+                Some(act) => *got = Some(act),
+                None => return false,
+            }
+        }
+        self.act_scratch.clear();
+        self.act_scratch
+            .extend(self.actions.iter().map(|a| a.unwrap()));
+        true
+    }
+
+    /// Blocking-mode engine delay (the K = 1 fast path): identical
+    /// delay-stream draw to [`ReplicaSlot::start_cooking`], but slept
+    /// away for real — with a single replica there is nothing to
+    /// overlap, and `thread::sleep` matches the classic executor loop
+    /// exactly.
+    pub fn cook_blocking(&mut self, steptime: &StepTimeModel) {
+        debug_assert!(
+            matches!(self.state, SlotState::AwaitingActions),
+            "cooking from {:?}",
+            self.state
+        );
+        let us = steptime.sample_us(&mut self.delay_rng);
+        if us > 0.0 {
+            std::thread::sleep(Duration::from_nanos((us * 1000.0) as u64));
+        }
+        self.state = SlotState::Cooking { deadline: Instant::now() };
+    }
+
+    /// All actions arrived: sample the engine delay from the replica's
+    /// private stream and set the virtual deadline. Returns the deadline
+    /// so the scheduler can order its cooking heap. The delay-stream
+    /// draw order per replica is identical to the historical
+    /// `steptime.sleep` call — one sample per step, after the actions —
+    /// which keeps pooled trajectories bit-exact.
+    pub fn start_cooking(
+        &mut self,
+        now: Instant,
+        steptime: &StepTimeModel,
+    ) -> Instant {
+        debug_assert!(
+            matches!(self.state, SlotState::AwaitingActions),
+            "cooking from {:?}",
+            self.state
+        );
+        let us = steptime.sample_us(&mut self.delay_rng);
+        let deadline = if us > 0.0 {
+            now + Duration::from_nanos((us * 1000.0) as u64)
+        } else {
+            now
+        };
+        self.state = SlotState::Cooking { deadline };
+        deadline
+    }
+
+    /// The deadline passed: apply the step to the env, record the
+    /// transition in this replica's stripe, and update telemetry and the
+    /// trajectory signature. Caller decides what happens next
+    /// (publish the next observations, or finish the iteration).
+    pub fn step(
+        &mut self,
+        writer: &mut ShardWriter<'_>,
+        sps: &SpsMeter,
+        watch: &Stopwatch,
+        episodes: &mut Vec<EpisodePoint>,
+    ) {
+        debug_assert!(
+            matches!(self.state, SlotState::Cooking { .. }),
+            "step from {:?}",
+            self.state
+        );
+        let step = self.env.step(&self.act_scratch, &mut self.env_rng);
+        let base = self.replica * self.n_agents;
+        for a in 0..self.n_agents {
+            writer.push(
+                base + a,
+                &self.obs[a],
+                self.act_scratch[a],
+                step.reward,
+                step.done,
+            );
+        }
+        let gsteps = sps.add(1);
+        for (a, &act) in self.act_scratch.iter().enumerate() {
+            self.sig.update(((a as u64) << 32) | act as u64);
+        }
+        self.sig.update(step.reward.to_bits() as u64);
+        self.sig.update(step.done as u64);
+        self.ep_reward += step.reward as f64;
+        if step.done {
+            episodes.push(EpisodePoint {
+                steps: gsteps,
+                wall_s: watch.elapsed_s(),
+                reward: self.ep_reward,
+            });
+            self.ep_reward = 0.0;
+            self.obs = self.env.reset(&mut self.env_rng);
+        } else {
+            self.obs = step.obs;
+        }
+        self.steps_done += 1;
+    }
+
+    /// α steps done: record the bootstrap observations and park until
+    /// the pool's barrier rendezvous.
+    pub fn finish_iteration(&mut self, writer: &mut ShardWriter<'_>) {
+        debug_assert!(
+            matches!(self.state, SlotState::Cooking { .. }),
+            "finish from {:?}",
+            self.state
+        );
+        let base = self.replica * self.n_agents;
+        for a in 0..self.n_agents {
+            writer.set_last_obs(base + a, &self.obs[a]);
+        }
+        self.state = SlotState::AtBarrier;
+    }
+}

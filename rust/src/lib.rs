@@ -23,6 +23,7 @@ pub mod algo;
 pub mod buffers;
 pub mod coordinator;
 pub mod envs;
+pub mod executor;
 pub mod experiments;
 pub mod metrics;
 pub mod model;

@@ -23,9 +23,11 @@ fn usage() -> &'static str {
     "usage: hts-rl <train|compare|exp|sim|determinism|list> [flags]\n\
      train flags: --env catch --method hts|sync|async --algo a2c|ppo|...\n\
        --steps N | --wall-s S | --updates N   --n-envs 16 --n-actors 4\n\
+       --replicas-per-exec K (hts only: pool K replicas per exec thread)\n\
        --alpha K --seed 1 --eval-every U --out results/\n\
      exp flags: --id fig3a|...|all  --quick  --out results/\n\
-     sim flags: --claim 1|2 [--n 16 --alpha 4 --beta 2.0]"
+     sim flags: --claim 1|2 [--n 16 --alpha 4 --beta 2.0]\n\
+     determinism flags: --k-sweep 1,2,4 (replica-pool factors to check)"
 }
 
 fn build_run_config(a: &Args) -> Result<RunConfig> {
@@ -38,6 +40,7 @@ fn build_run_config(a: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::new(spec, AlgoConfig::for_algo(algo));
     cfg.n_envs = a.usize_or("n-envs", 16)?;
     cfg.n_actors = a.usize_or("n-actors", 4)?;
+    cfg.replicas_per_executor = a.usize_or("replicas-per-exec", 1)?;
     cfg.sync_interval = a.usize_or("alpha", 0)?;
     cfg.seed = a.u64_or("seed", 1)?;
     cfg.eval_every = a.u64_or("eval-every", 0)?;
@@ -113,6 +116,11 @@ fn cmd_compare(a: &Args) -> Result<()> {
         if method == Method::Async && c.algo.algo != Algo::Ppo {
             c.algo = AlgoConfig::a2c(Algo::Vtrace);
         }
+        if method != Method::Hts {
+            // replica pooling is an HTS executor feature; the baselines
+            // always run one replica per thread
+            c.replicas_per_executor = 1;
+        }
         let r = run(method, &c)?;
         rows.push(vec![
             method.name().to_string(),
@@ -173,16 +181,45 @@ fn cmd_sim(a: &Args) -> Result<()> {
 fn cmd_determinism(a: &Args) -> Result<()> {
     let mut cfg = build_run_config(a)?;
     cfg.stop = StopCond::updates(a.u64_or("updates", 8)?);
+    // Tab. 4 plus the replica-pool obligation: the signature must be
+    // invariant to the actor count AND to how replicas are pooled onto
+    // executor threads (any K dividing n_envs). An explicitly requested
+    // sweep is validated strictly — silently dropping factors would let
+    // a CI determinism gate pass without checking anything.
+    let ks: Vec<usize> = match a.str_opt("k-sweep") {
+        None => [1usize, 2, 4]
+            .into_iter()
+            .filter(|&k| cfg.n_envs % k == 0)
+            .collect(),
+        Some(_) => {
+            let ks = a.usize_list_or("k-sweep", &[])?;
+            anyhow::ensure!(!ks.is_empty(), "--k-sweep must name >= 1 factor");
+            for &k in &ks {
+                anyhow::ensure!(
+                    k >= 1 && cfg.n_envs % k == 0,
+                    "--k-sweep {k} must divide n_envs {}",
+                    cfg.n_envs
+                );
+            }
+            ks
+        }
+    };
     let mut sigs = Vec::new();
     for n_actors in [1usize, 2, 4] {
-        let mut c = cfg.clone();
-        c.n_actors = n_actors;
-        let r = run(Method::Hts, &c)?;
-        println!("actors={n_actors}: signature {:016x}", r.signature);
-        sigs.push(r.signature);
+        for &k in &ks {
+            let mut c = cfg.clone();
+            c.n_actors = n_actors;
+            c.replicas_per_executor = k;
+            let r = run(Method::Hts, &c)?;
+            println!(
+                "actors={n_actors} replicas/exec={k}: signature {:016x}",
+                r.signature
+            );
+            sigs.push(r.signature);
+        }
     }
     if sigs.windows(2).all(|s| s[0] == s[1]) {
-        println!("deterministic across actor counts ✓");
+        println!("deterministic across actor counts and pool factors ✓");
         Ok(())
     } else {
         bail!("determinism violated");

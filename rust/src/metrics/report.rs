@@ -143,7 +143,11 @@ impl TrainReport {
     }
 }
 
-/// Wall-clock helper.
+/// Wall-clock helper. `Copy` so a run's single watch can be handed to
+/// every executor thread — episode timestamps must share the run origin
+/// with eval/report timestamps (a per-thread watch started after spawn
+/// skews them by the spawn latency).
+#[derive(Debug, Clone, Copy)]
 pub struct Stopwatch(Instant);
 
 impl Default for Stopwatch {

@@ -70,6 +70,22 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of usizes (`--k-sweep 1,2,4`), used by the
+    /// sweep-style subcommands.
+    pub fn usize_list_or(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| Ok(s.trim().parse::<usize>()?))
+                .collect(),
+        }
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -115,6 +131,15 @@ mod tests {
     #[test]
     fn rejects_double_positional() {
         assert!(Args::parse(&sv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = Args::parse(&sv(&["--k-sweep", "1,2, 4"])).unwrap();
+        assert_eq!(a.usize_list_or("k-sweep", &[9]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.usize_list_or("other", &[9]).unwrap(), vec![9]);
+        let bad = Args::parse(&sv(&["--k-sweep", "1,x"])).unwrap();
+        assert!(bad.usize_list_or("k-sweep", &[]).is_err());
     }
 
     #[test]

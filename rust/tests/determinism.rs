@@ -60,6 +60,36 @@ fn hts_tab4_signature_invariant_actor_sweep() {
     }
 }
 
+/// ISSUE 2 tentpole obligation: the run signature must be bit-identical
+/// across every (n_threads, K) factorization of n_envs — pooling K
+/// replicas onto one executor thread reorders *scheduling*, never
+/// *trajectories* — and simultaneously across actor counts. n_envs = 8,
+/// K ∈ {1, 2, 4, 8} (8 threads × 1 replica down to 1 thread × 8).
+#[test]
+fn hts_tab4_signature_invariant_replica_pool_sweep() {
+    if !have_artifacts() {
+        return;
+    }
+    let pool_cfg = |n_actors: usize, k: usize| {
+        let mut c = cfg(n_actors, 19);
+        c.n_envs = 8;
+        c.replicas_per_executor = k;
+        c
+    };
+    let base = run(Method::Hts, &pool_cfg(1, 1)).unwrap();
+    for (n_actors, k) in
+        [(1usize, 2usize), (1, 4), (1, 8), (2, 2), (3, 4), (2, 8)]
+    {
+        let r = run(Method::Hts, &pool_cfg(n_actors, k)).unwrap();
+        assert_eq!(
+            base.signature, r.signature,
+            "signature diverged at n_actors={n_actors} K={k}"
+        );
+        assert_eq!(base.steps, r.steps, "steps diverged at K={k}");
+        assert_eq!(base.updates, r.updates, "updates diverged at K={k}");
+    }
+}
+
 #[test]
 fn hts_identical_across_repeated_runs() {
     if !have_artifacts() {
