@@ -8,8 +8,10 @@ use hts_rl::envs::EnvSpec;
 
 fn main() -> anyhow::Result<()> {
     for (n_agents, n_envs) in [(1usize, 12usize), (3, 4)] {
-        let spec = EnvSpec::by_name("football/3_vs_1_with_keeper")?
-            .with_agents(n_agents);
+        // parameterized registry spec: agents= is validated at parse time
+        let spec = EnvSpec::by_name(&format!(
+            "football/3_vs_1_with_keeper?agents={n_agents}"
+        ))?;
         let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
         cfg.n_envs = n_envs;
         cfg.n_actors = 2;

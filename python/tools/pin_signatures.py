@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Pin generator for `rust/tests/pool.rs::pool_signatures_pinned`.
+
+Exact integer transliteration of the PR 2 executor trajectory semantics
+(pre-flat-plane API): SplitMix64 streams, the calm Catch environment, the
+replica-pool step protocol, the FNV-1a trajectory signature, and the
+gathered-``[T, B]`` batch hash. Everything here is integer or
+exactly-representable float (obs and rewards are only 0.0 / 1.0 / -1.0),
+so the pins are bit-portable across platforms and libm versions — unlike
+the gumbel stand-in policy, which goes through `ln`.
+
+The stand-in policy is ``action = seed % act_dim`` (the bench's
+``modulo_policy``), with the executor-drawn seed. Per-replica trajectories
+are K-invariant by construction (each replica owns its own streams and
+runs exactly alpha steps per iteration), so one sequential simulation
+yields the pin for every (n_threads, K) factorization.
+
+Run: python3 python/tools/pin_signatures.py
+"""
+
+MASK = (1 << 64) - 1
+
+F32_BITS = {0.0: 0x0000_0000, 1.0: 0x3F80_0000, -1.0: 0xBF80_0000}
+
+
+class SplitMix64:
+    """rust/src/rng/mod.rs transliteration (u64 wrapping arithmetic)."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK
+
+    @classmethod
+    def stream(cls, run_seed, sid):
+        s = cls(run_seed ^ (sid * 0x9E3779B97F4A7C15 & MASK))
+        s.next_u64()  # burn-in
+        return cls(s.next_u64())
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+
+class Fnv:
+    """coordinator/common.rs FNV-1a over little-endian u64 bytes."""
+
+    def __init__(self):
+        self.h = 0xCBF29CE484222325
+
+    def update(self, x):
+        for i in range(8):
+            self.h ^= (x >> (8 * i)) & 0xFF
+            self.h = (self.h * 0x100000001B3) & MASK
+
+    def finish(self):
+        return self.h
+
+
+HEIGHT, WIDTH, OBS_DIM = 10, 5, 50
+
+
+class Catch:
+    """envs/catch.rs, calm variant (wind = 0: step draws no RNG)."""
+
+    def reset(self, rng):
+        self.ball_row = 0
+        self.ball_col = rng.next_u64() % WIDTH
+        self.paddle_col = WIDTH // 2
+
+    def step(self, act):
+        if act == 0:
+            self.paddle_col = max(0, self.paddle_col - 1)
+        elif act == 2:
+            self.paddle_col = min(WIDTH - 1, self.paddle_col + 1)
+        self.ball_row += 1
+        if self.ball_row == HEIGHT - 1:
+            reward = 1.0 if self.ball_col == self.paddle_col else -1.0
+            return reward, True
+        return 0.0, False
+
+    def obs(self):
+        o = [0.0] * OBS_DIM
+        o[self.ball_row * WIDTH + self.ball_col] = 1.0
+        o[(HEIGHT - 1) * WIDTH + self.paddle_col] = -1.0
+        return o
+
+
+def simulate(n_envs=8, alpha=5, iters=4, seed=42, act_dim=3):
+    """Mirror `run_harness_with(modulo_policy, "catch", 1, None, ...)`."""
+    sig_xor = 0
+    # per-iteration gathered [T, B] storage, hashed like hash_storage()
+    store_obs = [[None] * n_envs for _ in range(alpha)]
+    store_act = [[0] * n_envs for _ in range(alpha)]
+    store_rew = [[0.0] * n_envs for _ in range(alpha)]
+    store_done = [[0.0] * n_envs for _ in range(alpha)]
+    store_last = [None] * n_envs
+    batch_hashes = []
+
+    envs, env_rngs, seed_rngs, sigs = [], [], [], []
+    for r in range(n_envs):
+        env_rngs.append(SplitMix64.stream(seed, 1000 + r))
+        seed_rngs.append(SplitMix64.stream(seed, 2000 + r))
+        e = Catch()
+        e.reset(env_rngs[r])  # ReplicaSlot::new resets on construction
+        envs.append(e)
+        f = Fnv()
+        f.update(r)
+        sigs.append(f)
+
+    for _ in range(iters):
+        for r in range(n_envs):
+            env, sig = envs[r], sigs[r]
+            for t in range(alpha):
+                s = seed_rngs[r].next_u64()  # publish_obs draws the seed
+                act = s % act_dim  # stand-in modulo policy
+                obs_pre = env.obs()
+                reward, done = env.step(act)
+                store_obs[t][r] = obs_pre
+                store_act[t][r] = act
+                store_rew[t][r] = reward
+                store_done[t][r] = 1.0 if done else 0.0
+                sig.update(act)  # agent 0: (0 << 32) | act
+                sig.update(F32_BITS[reward])
+                sig.update(1 if done else 0)
+                if done:
+                    env.reset(env_rngs[r])  # on-done reset, post-step
+            store_last[r] = env.obs()
+        h = Fnv()
+        for t in range(alpha):
+            for r in range(n_envs):
+                for v in store_obs[t][r]:
+                    h.update(F32_BITS[v])
+        for field in (store_act, store_rew, store_done):
+            for t in range(alpha):
+                for r in range(n_envs):
+                    v = field[t][r]
+                    h.update(v if isinstance(v, int) else F32_BITS[v])
+        for r in range(n_envs):
+            for v in store_last[r]:
+                h.update(F32_BITS[v])
+        batch_hashes.append(h.finish())
+
+    for f in sigs:
+        sig_xor ^= f.finish()
+    return sig_xor, batch_hashes
+
+
+if __name__ == "__main__":
+    sig, hashes = simulate()
+    print(f"const PINNED_SIGNATURE: u64 = 0x{sig:016x};")
+    print("const PINNED_BATCH_HASHES: [u64; 4] = [")
+    for h in hashes:
+        print(f"    0x{h:016x},")
+    print("];")

@@ -6,10 +6,17 @@
 //! Besides the console table, results are written as machine-readable
 //! JSON to `BENCH_components.json` (override the path with
 //! `HTS_RL_BENCH_OUT`) so the perf trajectory can be tracked across
-//! commits.
+//! commits (CI uploads the file as a workflow artifact).
+//!
+//! The whole binary runs under a counting global allocator, so the
+//! executor-scheduling benches also report **heap allocations per env
+//! step** — the ISSUE 3 (flat observation plane) acceptance number: at
+//! steady state the executor/actor step path should allocate ~0.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
@@ -29,6 +36,47 @@ use hts_rl::model::manifest::Manifest;
 use hts_rl::rng::SplitMix64;
 use hts_rl::runtime::{ForwardPool, ModelRuntime, Trainer};
 use hts_rl::util::json::Json;
+
+/// Counts every heap allocation in the process (frees are uncounted —
+/// the metric is allocation *pressure* on the hot path).
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: defers to `System` for all actual memory management; the
+// wrapper only bumps a relaxed counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 /// Collects every benchmark figure for the JSON emission.
 struct Recorder {
@@ -198,7 +246,9 @@ fn modulo_policy(act_dim: usize) -> StandInPolicy {
 
 /// One OS thread per replica, blocking mailbox take, `thread::sleep` for
 /// the engine delay — the classic executor loop the replica pool
-/// replaces. Returns total wall seconds.
+/// replaces, on the flat observation plane (recycled state-buffer
+/// buffers, zero per-step allocation). Returns (wall seconds, heap
+/// allocations during the run).
 #[allow(clippy::too_many_arguments)]
 fn blocking_executors(
     spec: &EnvSpec,
@@ -208,7 +258,7 @@ fn blocking_executors(
     seed: u64,
     n_actors: usize,
     act_dim: usize,
-) -> f64 {
+) -> (f64, u64) {
     let obs_dim = spec.build().unwrap().obs_dim();
     let swap =
         Arc::new(StripedSwap::new(alpha, n_replicas, obs_dim, n_replicas));
@@ -218,6 +268,7 @@ fn blocking_executors(
         n_actors, &state_buf, &act_buf, n_replicas, &modulo_policy(act_dim),
     );
     let t0 = Instant::now();
+    let allocs0 = allocations();
     let mut handles = Vec::new();
     for e in 0..n_replicas {
         let spec = spec.clone();
@@ -229,14 +280,18 @@ fn blocking_executors(
             let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
             let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
             let mut env = spec.build().unwrap();
-            let mut obs = env.reset(&mut env_rng);
+            let mut obs = vec![0.0f32; obs_dim];
+            env.reset_into(&mut env_rng, &mut obs);
+            let mut next = vec![0.0f32; obs_dim];
             let mut it = 0u64;
             'outer: loop {
                 let mut shard = swap.writer(e);
                 for _t in 0..alpha {
+                    let mut buf = state_buf.rent(obs_dim);
+                    buf.extend_from_slice(&obs);
                     state_buf.push(ObsMsg {
                         slot: e,
-                        obs: obs[0].clone(),
+                        obs: buf,
                         seed: seed_rng.next_u64(),
                     });
                     let act = match act_buf.take(e) {
@@ -244,18 +299,17 @@ fn blocking_executors(
                         None => break 'outer,
                     };
                     spec.steptime.sleep(&mut delay_rng);
-                    let step = env.step(&[act], &mut env_rng);
-                    shard.push(e, &obs[0], act, step.reward, step.done);
-                    obs = if step.done {
-                        env.reset(&mut env_rng)
-                    } else {
-                        step.obs
-                    };
+                    let info = env.step_into(&[act], &mut env_rng, &mut next);
+                    shard.push(e, &obs, act, info.reward, info.done);
+                    if info.done {
+                        env.reset_into(&mut env_rng, &mut next);
+                    }
+                    std::mem::swap(&mut obs, &mut next);
                 }
-                shard.set_last_obs(e, &obs[0]);
+                shard.set_last_obs(e, &obs);
                 drop(shard);
                 match swap.executor_arrive(it) {
-                    Some(next) => it = next,
+                    Some(next_it) => it = next_it,
                     None => break,
                 }
             }
@@ -271,11 +325,11 @@ fn blocking_executors(
     for h in actors {
         h.join().unwrap();
     }
-    t0.elapsed().as_secs_f64()
+    (t0.elapsed().as_secs_f64(), allocations() - allocs0)
 }
 
 /// The replica-pool path: `n_replicas / k` threads, K replicas each,
-/// deadline-based delays. Returns total wall seconds.
+/// deadline-based delays. Returns (wall seconds, heap allocations).
 #[allow(clippy::too_many_arguments)]
 fn pooled_executors(
     spec: &EnvSpec,
@@ -286,7 +340,7 @@ fn pooled_executors(
     seed: u64,
     n_actors: usize,
     act_dim: usize,
-) -> f64 {
+) -> (f64, u64) {
     let obs_dim = spec.build().unwrap().obs_dim();
     let n_threads = n_replicas / k;
     let swap = Arc::new(StripedSwap::with_parties(
@@ -300,6 +354,7 @@ fn pooled_executors(
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
     let t0 = Instant::now();
+    let allocs0 = allocations();
     let mut handles = Vec::new();
     for t in 0..n_threads {
         let spec = spec.clone();
@@ -327,12 +382,16 @@ fn pooled_executors(
     for h in actors {
         h.join().unwrap();
     }
-    t0.elapsed().as_secs_f64()
+    (t0.elapsed().as_secs_f64(), allocations() - allocs0)
 }
 
-/// The ISSUE 2 acceptance benchmark: at 64 replicas with realistic
-/// step-time variance, pooled executors (fewer threads, deadline-based
-/// delay overlap, amortized wakeups) must beat one-thread-per-replica.
+/// The ISSUE 2 acceptance benchmark (throughput) extended with the
+/// ISSUE 3 acceptance number (allocation pressure): at 64 replicas with
+/// realistic step-time variance, pooled executors must beat
+/// one-thread-per-replica, and the flat observation plane must hold the
+/// per-step allocation count near zero at steady state (the reported
+/// figure includes warm-up: thread spawns, env construction, and the
+/// free-list filling once — amortize over more steps and it tends to 0).
 fn bench_pool_vs_blocking(rec: &mut Recorder) {
     println!("== executor scheduling: replica pool vs thread-per-replica ==");
     const N_REPLICAS: usize = 64;
@@ -343,30 +402,40 @@ fn bench_pool_vs_blocking(rec: &mut Recorder) {
     );
     let act_dim = spec.build().unwrap().act_dim();
     let total = (N_REPLICAS * ALPHA) as f64 * ITERS as f64;
-    let base_s = blocking_executors(
+    let (base_s, base_allocs) = blocking_executors(
         &spec, N_REPLICAS, ALPHA, ITERS, 5, 2, act_dim,
     );
     println!(
-        "{:<34} {:>10.0} SPS  ({} threads)",
+        "{:<34} {:>10.0} SPS  ({} threads)  {:>6.2} allocs/step",
         format!("blocking, {N_REPLICAS} replicas"),
         total / base_s,
         N_REPLICAS,
+        base_allocs as f64 / total,
     );
     rec.record("exec_blocking_64replicas_sps", total / base_s);
+    rec.record(
+        "exec_blocking_64replicas_allocs_per_step",
+        base_allocs as f64 / total,
+    );
     for &k in &[1usize, 4, 16] {
-        let pool_s = pooled_executors(
+        let (pool_s, pool_allocs) = pooled_executors(
             &spec, N_REPLICAS, k, ALPHA, ITERS, 5, 2, act_dim,
         );
         println!(
-            "{:<34} {:>10.0} SPS  ({} threads)  {:.2}x",
+            "{:<34} {:>10.0} SPS  ({} threads)  {:.2}x  {:>6.2} allocs/step",
             format!("pooled K={k}, {N_REPLICAS} replicas"),
             total / pool_s,
             N_REPLICAS / k,
             base_s / pool_s,
+            pool_allocs as f64 / total,
         );
         rec.record(
             &format!("exec_pooled_k{k}_64replicas_sps"),
             total / pool_s,
+        );
+        rec.record(
+            &format!("exec_pooled_k{k}_64replicas_allocs_per_step"),
+            pool_allocs as f64 / total,
         );
     }
 }

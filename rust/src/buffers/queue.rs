@@ -83,14 +83,26 @@ impl<T> BlockingQueue<T> {
     /// Block until at least one item is available (or closed), then drain
     /// up to `max` items. Returns an empty vec only when closed+empty.
     pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        self.pop_batch_into(&mut out, max);
+        out
+    }
+
+    /// [`BlockingQueue::pop_batch`] into a caller-owned vector — the
+    /// consumer reuses one buffer across grabs instead of allocating a
+    /// fresh `Vec` per batch. `out` is cleared first; it stays empty only
+    /// when the queue is closed and drained.
+    pub fn pop_batch_into(&self, out: &mut Vec<T>, max: usize) {
+        out.clear();
         let mut g = self.inner.lock().unwrap();
         loop {
             if !g.items.is_empty() {
                 let n = g.items.len().min(max);
-                return g.items.drain(..n).collect();
+                out.extend(g.items.drain(..n));
+                return;
             }
             if g.closed {
-                return Vec::new();
+                return;
             }
             g = self.cv.wait(g).unwrap();
         }

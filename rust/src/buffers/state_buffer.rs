@@ -2,6 +2,15 @@
 //! each environment step; actors batch-grab whatever is available. The
 //! executor-drawn `seed` is the deferred-randomness mechanism that keeps
 //! sampling deterministic no matter which actor serves the observation.
+//!
+//! **Zero-alloc at steady state** (DESIGN.md §7): the observation buffers
+//! inside [`ObsMsg`]s are recycled through a free list. Executors
+//! [`StateBuffer::rent`] a buffer, fill it from their flat observation
+//! plane, and ship it; actors consume the message and
+//! [`StateBuffer::recycle_batch`] the buffers back. After warm-up the
+//! ring is closed — the state plane performs no heap allocation per step.
+
+use std::sync::Mutex;
 
 use super::queue::BlockingQueue;
 
@@ -17,6 +26,9 @@ pub struct ObsMsg {
 
 pub struct StateBuffer {
     q: BlockingQueue<ObsMsg>,
+    /// Recycled observation buffers (capacity is bounded by the number
+    /// of in-flight observations, i.e. the batch-column count).
+    free: Mutex<Vec<Vec<f32>>>,
 }
 
 impl Default for StateBuffer {
@@ -27,7 +39,38 @@ impl Default for StateBuffer {
 
 impl StateBuffer {
     pub fn new() -> StateBuffer {
-        StateBuffer { q: BlockingQueue::new() }
+        StateBuffer { q: BlockingQueue::new(), free: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop one recycled buffer off the (locked) free list — or allocate
+    /// during warm-up — cleared, with capacity for `dim` floats.
+    fn pop_cleared(free: &mut Vec<Vec<f32>>, dim: usize) -> Vec<f32> {
+        let mut buf = free.pop().unwrap_or_default();
+        buf.clear();
+        buf.reserve(dim);
+        buf
+    }
+
+    /// Take an empty observation buffer off the free list (or allocate
+    /// one during warm-up), with capacity for at least `dim` floats.
+    pub fn rent(&self, dim: usize) -> Vec<f32> {
+        Self::pop_cleared(&mut self.free.lock().unwrap(), dim)
+    }
+
+    /// [`StateBuffer::rent`] × `n` under **one** lock acquisition
+    /// (appended to `out`) — a multi-agent publisher takes all of a
+    /// step's buffers without hammering the free-list lock per agent.
+    pub fn rent_into(&self, out: &mut Vec<Vec<f32>>, n: usize, dim: usize) {
+        let mut g = self.free.lock().unwrap();
+        out.extend((0..n).map(|_| Self::pop_cleared(&mut g, dim)));
+    }
+
+    /// Return a whole served batch's buffers under one lock acquisition
+    /// (the actor-side counterpart of [`StateBuffer::push_batch`]).
+    /// Leaves `batch` empty and reusable.
+    pub fn recycle_batch(&self, batch: &mut Vec<ObsMsg>) {
+        let mut g = self.free.lock().unwrap();
+        g.extend(batch.drain(..).map(|m| m.obs));
     }
 
     pub fn push(&self, msg: ObsMsg) -> bool {
@@ -36,15 +79,26 @@ impl StateBuffer {
 
     /// Publish several observations under one lock acquisition — a
     /// replica-pool executor ships all of a replica's agent observations
-    /// (or several just-stepped replicas') in one call.
-    pub fn push_batch(&self, msgs: Vec<ObsMsg>) -> bool {
-        self.q.push_all(msgs)
+    /// (or several just-stepped replicas') in one call. Drains `msgs`
+    /// (leaving the caller's scratch vec empty and reusable) whether or
+    /// not the buffer is already closed; returns false when closed.
+    pub fn push_batch(&self, msgs: &mut Vec<ObsMsg>) -> bool {
+        // On the closed path `push_all` never consumes the iterator, but
+        // dropping the `Drain` still empties `msgs` — shutdown simply
+        // drops the in-flight buffers.
+        self.q.push_all(msgs.drain(..))
     }
 
     /// Actor-side: block for ≥1 observation, then take up to `max`.
     /// Empty result means shutdown.
     pub fn grab(&self, max: usize) -> Vec<ObsMsg> {
         self.q.pop_batch(max)
+    }
+
+    /// [`StateBuffer::grab`] into a caller-owned vector, so the actor
+    /// loop reuses one batch buffer forever. Empty result means shutdown.
+    pub fn grab_into(&self, batch: &mut Vec<ObsMsg>, max: usize) {
+        self.q.pop_batch_into(batch, max);
     }
 
     /// Actor-side batching window (§Perf): after an initial grab, drain
@@ -90,15 +144,26 @@ mod tests {
     }
 
     #[test]
-    fn push_batch_preserves_order() {
+    fn push_batch_preserves_order_and_drains_scratch() {
         let sb = StateBuffer::new();
-        let msgs: Vec<ObsMsg> = (0..3)
+        let mut msgs: Vec<ObsMsg> = (0..3)
             .map(|slot| ObsMsg { slot, obs: vec![0.0], seed: slot as u64 })
             .collect();
-        assert!(sb.push_batch(msgs));
+        assert!(sb.push_batch(&mut msgs));
+        assert!(msgs.is_empty(), "scratch must drain for reuse");
         let batch = sb.grab(8);
         assert_eq!(batch.iter().map(|m| m.slot).collect::<Vec<_>>(),
                    vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn push_batch_after_close_still_drains() {
+        let sb = StateBuffer::new();
+        sb.close();
+        let mut msgs =
+            vec![ObsMsg { slot: 0, obs: vec![1.0], seed: 0 }];
+        assert!(!sb.push_batch(&mut msgs));
+        assert!(msgs.is_empty(), "closed push must still empty the scratch");
     }
 
     #[test]
@@ -106,5 +171,48 @@ mod tests {
         let sb = StateBuffer::new();
         sb.close();
         assert!(sb.grab(8).is_empty());
+        let mut batch = vec![ObsMsg { slot: 0, obs: vec![], seed: 0 }];
+        sb.grab_into(&mut batch, 8);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn rent_recycle_closes_the_allocation_ring() {
+        let sb = StateBuffer::new();
+        let mut buf = sb.rent(4);
+        buf.extend_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        sb.push(ObsMsg { slot: 0, obs: buf, seed: 7 });
+        let mut batch = Vec::new();
+        sb.grab_into(&mut batch, 8);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].obs, vec![1.0, 2.0, 3.0, 4.0]);
+        sb.recycle_batch(&mut batch);
+        assert!(batch.is_empty());
+        // the exact same backing storage comes back, cleared
+        let again = sb.rent(4);
+        assert_eq!(again.as_ptr(), ptr);
+        assert_eq!(again.capacity(), cap);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn rent_into_takes_n_buffers_at_once() {
+        let sb = StateBuffer::new();
+        let mut bufs = Vec::new();
+        sb.rent_into(&mut bufs, 3, 8);
+        assert_eq!(bufs.len(), 3);
+        assert!(bufs.iter().all(|b| b.is_empty() && b.capacity() >= 8));
+        // recycle through the message ring and rent again: recycled
+        // storage is reused before anything new is allocated
+        let mut batch: Vec<ObsMsg> = bufs
+            .drain(..)
+            .enumerate()
+            .map(|(slot, obs)| ObsMsg { slot, obs, seed: 0 })
+            .collect();
+        sb.recycle_batch(&mut batch);
+        sb.rent_into(&mut bufs, 4, 8);
+        assert_eq!(bufs.len(), 4);
     }
 }

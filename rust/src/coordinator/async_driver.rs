@@ -10,7 +10,7 @@
 //!
 //! Off-policy correction is selected by `cfg.algo`: `Vtrace` reproduces
 //! IMPALA; `A2cNoCorrection` reproduces uncorrected GA3C (Tab. A1).
-//! Approximation note (DESIGN.md §8): the train artifact takes a single
+//! Approximation note (DESIGN.md §9): the train artifact takes a single
 //! behavior-parameter vector per batch, so ratios use the *oldest* version
 //! in the batch; trajectories whose unroll spans a publish use their
 //! start-of-unroll version.
@@ -29,18 +29,20 @@ use crate::model::ParamStore;
 use crate::rng::SplitMix64;
 use crate::runtime::{ModelRuntime, Trainer};
 
-/// One executor-local trajectory (all agent columns of one env).
+/// One executor-local trajectory (all agent columns of one env), laid
+/// out on the flat observation plane (DESIGN.md §7): obs is
+/// `[T, n_agents, D]` row-major, act is `[T, n_agents]`, last_obs is
+/// `[n_agents, D]` — one allocation set per unroll, none per step.
 struct Traj {
     /// producing env replica (diagnostics only since the learner
     /// assigns columns by batch slot)
     _env: usize,
     version: u64,
-    /// [T][agent] tuples
-    obs: Vec<Vec<Vec<f32>>>,
-    act: Vec<Vec<usize>>,
+    obs: Vec<f32>,
+    act: Vec<usize>,
     rew: Vec<f32>,
     done: Vec<f32>,
-    last_obs: Vec<Vec<f32>>,
+    last_obs: Vec<f32>,
 }
 
 pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
@@ -83,7 +85,18 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
             let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
             let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
             let mut env = spec.build()?;
-            let mut obs = env.reset(&mut env_rng);
+            let d = env.obs_dim();
+            let width = n_agents * d;
+            // double-buffered flat planes: `obs` is the pending step's
+            // input, `next` receives the post-step output
+            let mut obs = vec![0.0f32; width];
+            env.reset_into(&mut env_rng, &mut obs);
+            let mut next = vec![0.0f32; width];
+            let mut act_scratch: Vec<usize> = Vec::with_capacity(n_agents);
+            // publish scratches: one free-list rent and one queue push
+            // per step, regardless of agent count
+            let mut buf_scratch: Vec<Vec<f32>> = Vec::with_capacity(n_agents);
+            let mut msg_scratch: Vec<ObsMsg> = Vec::with_capacity(n_agents);
             let mut ep_reward = 0.0f64;
             let mut episodes: Vec<EpisodePoint> = Vec::new();
             let mut sig = Fnv::default();
@@ -93,52 +106,55 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
                 let mut traj = Traj {
                     _env: e,
                     version,
-                    obs: Vec::with_capacity(t_len),
-                    act: Vec::with_capacity(t_len),
+                    obs: Vec::with_capacity(t_len * width),
+                    act: Vec::with_capacity(t_len * n_agents),
                     rew: Vec::with_capacity(t_len),
                     done: Vec::with_capacity(t_len),
                     last_obs: Vec::new(),
                 };
                 for _t in 0..t_len {
-                    for a in 0..n_agents {
-                        state_buf.push(ObsMsg {
+                    state_buf.rent_into(&mut buf_scratch, n_agents, d);
+                    for (a, mut buf) in buf_scratch.drain(..).enumerate() {
+                        buf.extend_from_slice(&obs[a * d..(a + 1) * d]);
+                        msg_scratch.push(ObsMsg {
                             slot: e * n_agents + a,
-                            obs: obs[a].clone(),
+                            obs: buf,
                             seed: seed_rng.next_u64(),
                         });
                     }
-                    let mut actions = Vec::with_capacity(n_agents);
+                    let _ = state_buf.push_batch(&mut msg_scratch);
+                    act_scratch.clear();
                     for a in 0..n_agents {
                         match act_buf.take(e * n_agents + a) {
-                            Some(act) => actions.push(act),
+                            Some(act) => act_scratch.push(act),
                             None => break 'outer,
                         }
                     }
                     spec.steptime.sleep(&mut delay_rng);
-                    let step = env.step(&actions, &mut env_rng);
-                    traj.obs.push(obs.clone());
-                    traj.act.push(actions.clone());
-                    traj.rew.push(step.reward);
-                    traj.done.push(if step.done { 1.0 } else { 0.0 });
+                    let info =
+                        env.step_into(&act_scratch, &mut env_rng, &mut next);
+                    traj.obs.extend_from_slice(&obs);
+                    traj.act.extend_from_slice(&act_scratch);
+                    traj.rew.push(info.reward);
+                    traj.done.push(if info.done { 1.0 } else { 0.0 });
                     let gsteps = sps.add(1);
-                    for &a in &actions {
+                    for &a in &act_scratch {
                         sig.update(a as u64);
                     }
-                    sig.update(step.reward.to_bits() as u64);
-                    ep_reward += step.reward as f64;
-                    if step.done {
+                    sig.update(info.reward.to_bits() as u64);
+                    ep_reward += info.reward as f64;
+                    if info.done {
                         episodes.push(EpisodePoint {
                             steps: gsteps,
                             wall_s: watch.elapsed_s(),
                             reward: ep_reward,
                         });
                         ep_reward = 0.0;
-                        obs = env.reset(&mut env_rng);
-                    } else {
-                        obs = step.obs;
+                        env.reset_into(&mut env_rng, &mut next);
                     }
+                    std::mem::swap(&mut obs, &mut next);
                 }
-                traj.last_obs = obs.clone();
+                traj.last_obs.extend_from_slice(&obs);
                 // non-blocking send: the queue is unbounded, exactly the
                 // GA3C/IMPALA design whose length IS the policy lag.
                 traj_q.push(traj);
@@ -201,22 +217,27 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         for t in &batch {
             staleness.push((cur_version - t.version) as f64);
         }
+        let d = info.obs_dim;
         for (slot, traj) in batch.iter().enumerate() {
             let sh = &mut slot_shards[slot];
             sh.clear();
             for t in 0..t_len {
                 for a in 0..n_agents {
+                    let row = t * n_agents + a;
                     sh.push(
                         slot * n_agents + a,
-                        &traj.obs[t][a],
-                        traj.act[t][a],
+                        &traj.obs[row * d..(row + 1) * d],
+                        traj.act[row],
                         traj.rew[t],
                         traj.done[t] > 0.5,
                     );
                 }
             }
             for a in 0..n_agents {
-                sh.set_last_obs(slot * n_agents + a, &traj.last_obs[a]);
+                sh.set_last_obs(
+                    slot * n_agents + a,
+                    &traj.last_obs[a * d..(a + 1) * d],
+                );
             }
             storage.absorb(sh);
         }

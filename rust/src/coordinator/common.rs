@@ -200,8 +200,12 @@ pub fn spawn_actors(
                 let mut cached: Option<(u64, xla::Literal)> = None;
                 let (mut fwd_s, mut n_calls, mut n_obs) = (0.0f64, 0u64, 0u64);
                 let stats = std::env::var("HTS_RL_ACTOR_STATS").is_ok();
+                // Reused across batches: the grab vec and the flattened
+                // forward input (zero-alloc actor loop, DESIGN.md §7).
+                let mut batch: Vec<crate::buffers::ObsMsg> = Vec::new();
+                let mut flat: Vec<f32> = Vec::with_capacity(grab * d);
                 loop {
-                    let mut batch = state_buf.grab(grab);
+                    state_buf.grab_into(&mut batch, grab);
                     if batch.is_empty() {
                         if stats && n_calls > 0 {
                             eprintln!(
@@ -232,7 +236,7 @@ pub fn spawn_actors(
                             &cached.as_ref().unwrap().1
                         }
                     };
-                    let mut flat = Vec::with_capacity(batch.len() * d);
+                    flat.clear();
                     for m in &batch {
                         flat.extend_from_slice(&m.obs);
                     }
@@ -249,6 +253,8 @@ pub fn spawn_actors(
                         );
                         act_buf.post(m.slot, a);
                     }
+                    // Hand the served buffers back to the executors.
+                    state_buf.recycle_batch(&mut batch);
                 }
             })
         })

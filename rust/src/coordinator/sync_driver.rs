@@ -24,15 +24,22 @@ use crate::model::manifest::Manifest;
 use crate::rng::SplitMix64;
 use crate::runtime::{ForwardPool, ModelRuntime, Trainer};
 
-/// Message to an executor: apply this action vector for this step.
+/// Message to an executor: apply this action vector for this step. The
+/// `out` plane is a recycled flat `[n_agents * obs_dim]` buffer the
+/// executor writes the post-step observations into — the driver and each
+/// executor pass the same two planes back and forth forever, so the
+/// per-step protocol allocates nothing at steady state (DESIGN.md §7).
 struct StepCmd {
     actions: Vec<usize>,
+    out: Vec<f32>,
 }
 
-/// Executor reply: resulting observations (post-reset on done).
+/// Executor reply: resulting flat observation plane (post-reset on done)
+/// plus the applied actions (returned so the buffers recycle).
 struct StepRes {
     env: usize,
-    obs: Vec<Vec<f32>>,
+    obs: Vec<f32>,
+    actions: Vec<usize>,
     reward: f32,
     done: bool,
 }
@@ -70,33 +77,50 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
             let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
             let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
             let mut env = spec.build()?;
-            let obs = env.reset(&mut env_rng);
-            results.push(StepRes { env: e, obs, reward: 0.0, done: false });
-            while let Some(c) = cmd.pop() {
+            let width = env.n_agents() * env.obs_dim();
+            let mut first = vec![0.0f32; width];
+            env.reset_into(&mut env_rng, &mut first);
+            results.push(StepRes {
+                env: e,
+                obs: first,
+                actions: Vec::new(),
+                reward: 0.0,
+                done: false,
+            });
+            while let Some(mut c) = cmd.pop() {
                 spec.steptime.sleep(&mut delay_rng);
-                let step = env.step(&c.actions, &mut env_rng);
-                let obs = if step.done {
-                    env.reset(&mut env_rng)
-                } else {
-                    step.obs.clone()
-                };
+                c.out.resize(width, 0.0);
+                let info =
+                    env.step_into(&c.actions, &mut env_rng, &mut c.out);
+                if info.done {
+                    // same stream position as before: reset draws after
+                    // the step's draws
+                    env.reset_into(&mut env_rng, &mut c.out);
+                }
                 results.push(StepRes {
                     env: e,
-                    obs,
-                    reward: step.reward,
-                    done: step.done,
+                    obs: c.out,
+                    actions: c.actions,
+                    reward: info.reward,
+                    done: info.done,
                 });
             }
             Ok(())
         }));
     }
 
-    // collect initial observations
-    let mut cur_obs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); cfg.n_envs];
+    // collect initial observations (one flat plane per env)
+    let mut cur_obs: Vec<Vec<f32>> = vec![Vec::new(); cfg.n_envs];
     for _ in 0..cfg.n_envs {
         let r = results.pop().expect("executor died");
         cur_obs[r.env] = r.obs;
     }
+    // Recycled per-env scratch: the action vec and spare obs plane sent
+    // with each command (refilled from every reply — no per-step allocs).
+    let mut act_pool: Vec<Vec<usize>> =
+        (0..cfg.n_envs).map(|_| Vec::with_capacity(n_agents)).collect();
+    let mut out_pool: Vec<Vec<f32>> =
+        (0..cfg.n_envs).map(|_| Vec::new()).collect();
 
     let eval = if cfg.eval_every > 0 {
         Some(EvalWorker::spawn(
@@ -129,41 +153,43 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
     let mut last_out: crate::runtime::TrainOutput = Default::default();
     let _ = &last_out;
 
+    // Hoisted step scratch: the batched forward input and the in-order
+    // reply slots (reused every step — zero-alloc loop, DESIGN.md §7).
+    let mut flat: Vec<f32> = Vec::with_capacity(b_cols * info.obs_dim);
+    let mut replies: Vec<Option<StepRes>> =
+        (0..cfg.n_envs).map(|_| None).collect();
+    let d = info.obs_dim;
+
     'outer: loop {
         for sh in &mut shards {
             sh.clear();
         }
         for _t in 0..t_len {
             // one batched forward over all B columns
-            let mut flat = Vec::with_capacity(b_cols * info.obs_dim);
+            flat.clear();
             for obs in &cur_obs {
-                for o in obs {
-                    flat.extend_from_slice(o);
-                }
+                flat.extend_from_slice(obs);
             }
             let (logits, _v) =
                 pool.forward(&trainer.params, &flat, b_cols)?;
             // distribute actions; every env steps; wait for ALL (α = 1)
-            let mut actions: Vec<Vec<usize>> = Vec::with_capacity(cfg.n_envs);
             for e in 0..cfg.n_envs {
-                let acts: Vec<usize> = (0..n_agents)
-                    .map(|a| {
-                        let col = e * n_agents + a;
-                        sample_action(
-                            &logits[col * info.act_dim
-                                ..(col + 1) * info.act_dim],
-                            seed_rngs[e].next_u64(),
-                        )
-                    })
-                    .collect();
-                cmds[e].push(StepCmd { actions: acts.clone() });
-                actions.push(acts);
+                let mut acts = std::mem::take(&mut act_pool[e]);
+                acts.clear();
+                acts.extend((0..n_agents).map(|a| {
+                    let col = e * n_agents + a;
+                    sample_action(
+                        &logits[col * info.act_dim
+                            ..(col + 1) * info.act_dim],
+                        seed_rngs[e].next_u64(),
+                    )
+                }));
+                let out = std::mem::take(&mut out_pool[e]);
+                cmds[e].push(StepCmd { actions: acts, out });
             }
             // Barrier: collect all replies first, then process in env
             // order so telemetry (signature, episode log) is independent
             // of OS scheduling — the baseline must stay deterministic.
-            let mut replies: Vec<Option<StepRes>> =
-                (0..cfg.n_envs).map(|_| None).collect();
             for _ in 0..cfg.n_envs {
                 let r = results.pop().expect("executor died");
                 let env = r.env;
@@ -174,12 +200,12 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
                 for a in 0..n_agents {
                     shards[e].push(
                         e * n_agents + a,
-                        &cur_obs[e][a],
-                        actions[e][a],
+                        &cur_obs[e][a * d..(a + 1) * d],
+                        r.actions[a],
                         r.reward,
                         r.done,
                     );
-                    sig.update(actions[e][a] as u64);
+                    sig.update(r.actions[a] as u64);
                 }
                 sig.update(r.reward.to_bits() as u64);
                 let gsteps = sps.add(1);
@@ -192,12 +218,17 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
                     });
                     ep_rewards[e] = 0.0;
                 }
-                cur_obs[e] = r.obs;
+                // recycle: the reply's buffers become the next command's
+                act_pool[e] = r.actions;
+                out_pool[e] = std::mem::replace(&mut cur_obs[e], r.obs);
             }
         }
         for e in 0..cfg.n_envs {
             for a in 0..n_agents {
-                shards[e].set_last_obs(e * n_agents + a, &cur_obs[e][a]);
+                shards[e].set_last_obs(
+                    e * n_agents + a,
+                    &cur_obs[e][a * d..(a + 1) * d],
+                );
             }
             storage.absorb(&shards[e]);
         }

@@ -1,9 +1,11 @@
 //! CartPole-v0 dynamics (Barto–Sutton–Anderson / OpenAI Gym constants),
-//! standing in for a dense-reward Atari title. The `noise` variant
-//! perturbs the force to add stochasticity.
+//! standing in for a dense-reward Atari title. The `noise` registry param
+//! perturbs the force to add stochasticity (`cartpole_noisy` is the
+//! `noise=0.05` preset).
 
-use super::{Env, Step};
+use super::{Env, StepInfo};
 use crate::rng::SplitMix64;
+use anyhow::Result;
 
 const GRAVITY: f32 = 9.8;
 const MASS_CART: f32 = 1.0;
@@ -24,12 +26,17 @@ pub struct CartPole {
 }
 
 impl CartPole {
-    pub fn new(noise: f64) -> CartPole {
-        CartPole { state: [0.0; 4], t: 0, noise }
+    pub fn new(noise: f64) -> Result<CartPole> {
+        anyhow::ensure!(
+            noise >= 0.0 && noise.is_finite(),
+            "cartpole noise must be >= 0, got {noise}"
+        );
+        Ok(CartPole { state: [0.0; 4], t: 0, noise })
     }
 
-    fn obs(&self) -> Vec<Vec<f32>> {
-        vec![self.state.to_vec()]
+    fn write_obs(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 4);
+        out.copy_from_slice(&self.state);
     }
 }
 
@@ -42,15 +49,20 @@ impl Env for CartPole {
         2
     }
 
-    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>> {
+    fn reset_into(&mut self, rng: &mut SplitMix64, out: &mut [f32]) {
         for v in self.state.iter_mut() {
             *v = (rng.next_f64() * 0.1 - 0.05) as f32;
         }
         self.t = 0;
-        self.obs()
+        self.write_obs(out);
     }
 
-    fn step(&mut self, actions: &[usize], rng: &mut SplitMix64) -> Step {
+    fn step_into(
+        &mut self,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
         let mut force = if actions[0] == 1 { FORCE_MAG } else { -FORCE_MAG };
         if self.noise > 0.0 {
             force += (rng.normal() * self.noise) as f32 * FORCE_MAG;
@@ -74,7 +86,8 @@ impl Env for CartPole {
         let fell = self.state[0].abs() > X_LIMIT
             || self.state[2].abs() > THETA_LIMIT;
         let done = fell || self.t >= MAX_STEPS;
-        Step { obs: self.obs(), reward: 1.0, done }
+        self.write_obs(out);
+        StepInfo { reward: 1.0, done }
     }
 }
 
@@ -85,11 +98,12 @@ mod tests {
     #[test]
     fn pole_falls_under_constant_action() {
         let mut rng = SplitMix64::new(1);
-        let mut env = CartPole::new(0.0);
-        env.reset(&mut rng);
+        let mut env = CartPole::new(0.0).unwrap();
+        let mut obs = [0.0f32; 4];
+        env.reset_into(&mut rng, &mut obs);
         let mut steps = 0;
         loop {
-            let s = env.step(&[1], &mut rng);
+            let s = env.step_into(&[1], &mut rng, &mut obs);
             steps += 1;
             if s.done {
                 break;
@@ -102,18 +116,18 @@ mod tests {
     fn balancing_heuristic_survives_longer_than_constant() {
         let run = |heuristic: bool| -> usize {
             let mut rng = SplitMix64::new(2);
-            let mut env = CartPole::new(0.0);
-            let mut obs = env.reset(&mut rng);
+            let mut env = CartPole::new(0.0).unwrap();
+            let mut obs = [0.0f32; 4];
+            env.reset_into(&mut rng, &mut obs);
             let mut steps = 0;
             loop {
                 let a = if heuristic {
                     // push in the direction the pole is falling
-                    usize::from(obs[0][2] + obs[0][3] > 0.0)
+                    usize::from(obs[2] + obs[3] > 0.0)
                 } else {
                     1
                 };
-                let s = env.step(&[a], &mut rng);
-                obs = s.obs;
+                let s = env.step_into(&[a], &mut rng, &mut obs);
                 steps += 1;
                 if s.done {
                     return steps;
@@ -126,12 +140,12 @@ mod tests {
     #[test]
     fn caps_at_max_steps() {
         let mut rng = SplitMix64::new(3);
-        let mut env = CartPole::new(0.0);
-        let mut obs = env.reset(&mut rng);
+        let mut env = CartPole::new(0.0).unwrap();
+        let mut obs = [0.0f32; 4];
+        env.reset_into(&mut rng, &mut obs);
         for t in 1..=MAX_STEPS {
-            let a = usize::from(obs[0][2] + obs[0][3] > 0.0);
-            let s = env.step(&[a], &mut rng);
-            obs = s.obs;
+            let a = usize::from(obs[2] + obs[3] > 0.0);
+            let s = env.step_into(&[a], &mut rng, &mut obs);
             if s.done {
                 assert!(t > 50, "heuristic died too early at {t}");
                 return;
@@ -142,8 +156,14 @@ mod tests {
     #[test]
     fn reward_is_one_per_step() {
         let mut rng = SplitMix64::new(4);
-        let mut env = CartPole::new(0.0);
-        env.reset(&mut rng);
-        assert_eq!(env.step(&[0], &mut rng).reward, 1.0);
+        let mut env = CartPole::new(0.0).unwrap();
+        let mut obs = [0.0f32; 4];
+        env.reset_into(&mut rng, &mut obs);
+        assert_eq!(env.step_into(&[0], &mut rng, &mut obs).reward, 1.0);
+    }
+
+    #[test]
+    fn negative_noise_rejected() {
+        assert!(CartPole::new(-0.1).is_err());
     }
 }

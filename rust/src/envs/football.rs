@@ -16,7 +16,7 @@
 //! from the caller's RNG stream — executor-side, per the determinism
 //! design.
 
-use super::{steptime::StepTimeModel, Env, Step};
+use super::{steptime::StepTimeModel, Env, StepInfo};
 use crate::rng::SplitMix64;
 use anyhow::{bail, Result};
 
@@ -160,6 +160,12 @@ fn scenario(name: &str) -> Result<Scenario> {
     Ok(s)
 }
 
+/// Number of attackers (= the controllable-agent upper bound) in a
+/// scenario — the registry's `agents=` validation source.
+pub fn scenario_attackers(name: &str) -> Result<usize> {
+    Ok(scenario(name)?.attackers.len())
+}
+
 /// Per-scenario engine step-time model (µs). The paper's own measurement
 /// ("an actor generates about λ₀ = 100 frames per second", §4.2) puts the
 /// real GFootball engine at ~10 ms/step on the simple scenarios; these
@@ -216,7 +222,15 @@ pub struct Football {
 impl Football {
     pub fn new(scenario_name: &str, n_agents: usize) -> Result<Football> {
         let sc = scenario(scenario_name)?;
-        let n_ctrl = n_agents.max(1).min(sc.attackers.len());
+        // No silent clamping: bad agent counts are caught by the registry
+        // at spec-parse time, and loudly here if construction is reached
+        // through some other path.
+        anyhow::ensure!(
+            (1..=sc.attackers.len()).contains(&n_agents),
+            "football/{scenario_name} supports 1..={} agents, got {n_agents}",
+            sc.attackers.len()
+        );
+        let n_ctrl = n_agents;
         Ok(Football {
             name: scenario_name.to_string(),
             attackers: sc.attackers.clone(),
@@ -266,10 +280,11 @@ impl Football {
         }
     }
 
-    fn obs_for(&self, agent: usize) -> Vec<f32> {
+    fn obs_for_into(&self, agent: usize, o: &mut [f32]) {
+        debug_assert_eq!(o.len(), OBS_DIM);
         let me = self.attackers[agent];
         let ball = self.attackers[self.carrier];
-        let mut o = vec![0.0f32; OBS_DIM];
+        o.fill(0.0);
         o[0] = me.0;
         o[1] = me.1;
         o[2] = ball.0;
@@ -299,7 +314,6 @@ impl Football {
         o[22] = Self::dist(me, GOAL);
         o[23] = self.shot_prob(ball) as f32;
         o[24] = self.carrier as f32 / self.attackers.len() as f32;
-        o
     }
 
     /// Attacker index controlled by agent slot `a`. In single-agent mode
@@ -314,43 +328,20 @@ impl Football {
         }
     }
 
-    fn all_obs(&self) -> Vec<Vec<f32>> {
-        (0..self.n_ctrl).map(|i| self.obs_for(self.ctrl_idx(i))).collect()
-    }
-
-    fn finish(&self, reward: f32) -> Step {
-        Step { obs: self.all_obs(), reward, done: true }
-    }
-}
-
-impl Env for Football {
-    fn obs_dim(&self) -> usize {
-        OBS_DIM
-    }
-
-    fn act_dim(&self) -> usize {
-        ACT_DIM
-    }
-
-    fn n_agents(&self) -> usize {
-        self.n_ctrl
-    }
-
-    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>> {
-        self.attackers = self.sc.attackers.clone();
-        self.defenders = self.sc.defenders.clone();
-        // small positional jitter so episodes differ (seeded)
-        for p in self.attackers.iter_mut().chain(self.defenders.iter_mut()) {
-            p.0 = (p.0 + (rng.next_f32() - 0.5) * 0.02).clamp(0.0, 1.0);
-            p.1 = (p.1 + (rng.next_f32() - 0.5) * 0.02).clamp(0.0, 1.0);
+    fn write_all_obs(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_ctrl * OBS_DIM);
+        for (i, o) in out.chunks_mut(OBS_DIM).enumerate() {
+            self.obs_for_into(self.ctrl_idx(i), o);
         }
-        self.keeper = if self.sc.keeper { Some((0.97, 0.5)) } else { None };
-        self.carrier = 0;
-        self.t = 0;
-        self.all_obs()
     }
 
-    fn step(&mut self, actions: &[usize], rng: &mut SplitMix64) -> Step {
+    /// One simulation tick: all state mutation and all RNG draws, no
+    /// observation writing. `step_into` writes the plane afterward, so
+    /// the draw order is identical to the historical allocating `step`
+    /// (observation construction never drew).
+    fn advance(&mut self, actions: &[usize], rng: &mut SplitMix64) -> StepInfo {
+        const SCORED: StepInfo = StepInfo { reward: 1.0, done: true };
+        const LOST: StepInfo = StepInfo { reward: 0.0, done: true };
         assert_eq!(actions.len(), self.n_ctrl);
         self.t += 1;
 
@@ -364,13 +355,13 @@ impl Env for Football {
                     SHOOT => {
                         let p = self.shot_prob(self.attackers[i]);
                         let scored = rng.next_f64() < p;
-                        return self.finish(if scored { 1.0 } else { 0.0 });
+                        return if scored { SCORED } else { LOST };
                     }
                     PASS => {
                         // pass to the teammate closest to goal; 10% turnover
                         if self.attackers.len() > 1 {
                             if rng.next_f64() < 0.1 {
-                                return self.finish(0.0);
+                                return LOST;
                             }
                             let target = (0..self.attackers.len())
                                 .filter(|&j| j != i)
@@ -412,7 +403,7 @@ impl Env for Football {
             if Self::dist(d, carrier_pos) < TACKLE_RADIUS
                 && rng.next_f64() < self.sc.tackle_prob
             {
-                return self.finish(0.0);
+                return LOST;
             }
         }
 
@@ -427,13 +418,52 @@ impl Env for Football {
             let blocked = self.keeper.map_or(false, |k| {
                 Self::dist(k, carrier_pos) < 0.03
             });
-            return self.finish(if blocked { 0.0 } else { 1.0 });
+            return if blocked { LOST } else { SCORED };
         }
 
         if self.t >= self.sc.max_steps {
-            return self.finish(0.0);
+            return LOST;
         }
-        Step { obs: self.all_obs(), reward: 0.0, done: false }
+        StepInfo { reward: 0.0, done: false }
+    }
+}
+
+impl Env for Football {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        ACT_DIM
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n_ctrl
+    }
+
+    fn reset_into(&mut self, rng: &mut SplitMix64, out: &mut [f32]) {
+        self.attackers = self.sc.attackers.clone();
+        self.defenders = self.sc.defenders.clone();
+        // small positional jitter so episodes differ (seeded)
+        for p in self.attackers.iter_mut().chain(self.defenders.iter_mut()) {
+            p.0 = (p.0 + (rng.next_f32() - 0.5) * 0.02).clamp(0.0, 1.0);
+            p.1 = (p.1 + (rng.next_f32() - 0.5) * 0.02).clamp(0.0, 1.0);
+        }
+        self.keeper = if self.sc.keeper { Some((0.97, 0.5)) } else { None };
+        self.carrier = 0;
+        self.t = 0;
+        self.write_all_obs(out);
+    }
+
+    fn step_into(
+        &mut self,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
+        let info = self.advance(actions, rng);
+        self.write_all_obs(out);
+        info
     }
 }
 
@@ -458,13 +488,13 @@ mod tests {
     ) -> f64 {
         let mut rng = SplitMix64::new(seed);
         let mut total = 0.0;
+        let mut obs = vec![0.0f32; OBS_DIM];
         for _ in 0..episodes {
             let mut env = Football::new(name, 1).unwrap();
-            let mut obs = env.reset(&mut rng);
+            env.reset_into(&mut rng, &mut obs);
             loop {
-                let act = policy(&env, &obs[0]);
-                let s = env.step(&[act], &mut rng);
-                obs = s.obs;
+                let act = policy(&env, &obs);
+                let s = env.step_into(&[act], &mut rng, &mut obs);
                 if s.done {
                     total += s.reward as f64;
                     break;
@@ -528,25 +558,38 @@ mod tests {
 
     #[test]
     fn multi_agent_shapes() {
+        use crate::envs::compat;
         let mut rng = SplitMix64::new(5);
         let mut env = Football::new("3_vs_1_with_keeper", 3).unwrap();
-        let obs = env.reset(&mut rng);
+        let obs = compat::reset_vecs(&mut env, &mut rng);
         assert_eq!(obs.len(), 3);
-        let s = env.step(&[SPRINT, SPRINT, SPRINT], &mut rng);
-        assert_eq!(s.obs.len(), 3);
+        let (obs, _) =
+            compat::step_vecs(&mut env, &[SPRINT, SPRINT, SPRINT], &mut rng);
+        assert_eq!(obs.len(), 3);
+        assert!(obs.iter().all(|o| o.len() == OBS_DIM));
+    }
+
+    #[test]
+    fn agent_count_strictly_bounded() {
+        // 3_vs_1 has three attackers; 0 or 4 controlled agents is a
+        // construction error, not a silent clamp.
+        assert!(Football::new("3_vs_1_with_keeper", 3).is_ok());
+        assert!(Football::new("3_vs_1_with_keeper", 0).is_err());
+        assert!(Football::new("3_vs_1_with_keeper", 4).is_err());
     }
 
     #[test]
     fn pass_transfers_carrier() {
         let mut rng = SplitMix64::new(6);
         let mut env = Football::new("pass_and_shoot_with_keeper", 1).unwrap();
-        env.reset(&mut rng);
+        let mut obs = vec![0.0f32; OBS_DIM];
+        env.reset_into(&mut rng, &mut obs);
         assert_eq!(env.carrier, 0);
         // try until the 10% turnover dice doesn't fire
         for _ in 0..20 {
-            let s = env.step(&[PASS], &mut rng);
+            let s = env.step_into(&[PASS], &mut rng, &mut obs);
             if s.done {
-                env.reset(&mut rng);
+                env.reset_into(&mut rng, &mut obs);
                 continue;
             }
             break;

@@ -1,9 +1,10 @@
 //! 8×8 GridWorld with a per-episode random goal: one-hot agent position
 //! (64) + normalized goal offset (2) = 66 observation features. Dense
-//! step penalty, +1 at the goal. The `sparse` variant removes the shaping
-//! penalty, making credit assignment harder (second difficulty tier).
+//! step penalty, +1 at the goal. The `sparse` registry param removes the
+//! shaping penalty, making credit assignment harder (second difficulty
+//! tier; `gridworld_sparse` is the `sparse=1` preset).
 
-use super::{Env, Step};
+use super::{Env, StepInfo};
 use crate::rng::SplitMix64;
 
 pub const N: usize = 8;
@@ -22,12 +23,12 @@ impl GridWorld {
         GridWorld { sparse, agent: (0, 0), goal: (N - 1, N - 1), t: 0 }
     }
 
-    fn obs(&self) -> Vec<Vec<f32>> {
-        let mut o = vec![0.0f32; OBS_DIM];
-        o[self.agent.0 * N + self.agent.1] = 1.0;
-        o[N * N] = (self.goal.0 as f32 - self.agent.0 as f32) / N as f32;
-        o[N * N + 1] = (self.goal.1 as f32 - self.agent.1 as f32) / N as f32;
-        vec![o]
+    fn write_obs(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), OBS_DIM);
+        out.fill(0.0);
+        out[self.agent.0 * N + self.agent.1] = 1.0;
+        out[N * N] = (self.goal.0 as f32 - self.agent.0 as f32) / N as f32;
+        out[N * N + 1] = (self.goal.1 as f32 - self.agent.1 as f32) / N as f32;
     }
 }
 
@@ -40,7 +41,7 @@ impl Env for GridWorld {
         4
     }
 
-    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>> {
+    fn reset_into(&mut self, rng: &mut SplitMix64, out: &mut [f32]) {
         self.agent =
             ((rng.below(N as u64)) as usize, (rng.below(N as u64)) as usize);
         loop {
@@ -53,10 +54,15 @@ impl Env for GridWorld {
             }
         }
         self.t = 0;
-        self.obs()
+        self.write_obs(out);
     }
 
-    fn step(&mut self, actions: &[usize], _rng: &mut SplitMix64) -> Step {
+    fn step_into(
+        &mut self,
+        actions: &[usize],
+        _rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
         let (r, c) = self.agent;
         self.agent = match actions[0] {
             0 => (r.saturating_sub(1), c),
@@ -65,11 +71,12 @@ impl Env for GridWorld {
             _ => (r, (c + 1).min(N - 1)),
         };
         self.t += 1;
+        self.write_obs(out);
         if self.agent == self.goal {
-            return Step { obs: self.obs(), reward: 1.0, done: true };
+            return StepInfo { reward: 1.0, done: true };
         }
         let reward = if self.sparse { 0.0 } else { -0.01 };
-        Step { obs: self.obs(), reward, done: self.t >= MAX_STEPS }
+        StepInfo { reward, done: self.t >= MAX_STEPS }
     }
 }
 
@@ -81,8 +88,9 @@ mod tests {
     fn greedy_policy_reaches_goal() {
         let mut rng = SplitMix64::new(1);
         let mut env = GridWorld::new(false);
+        let mut obs = vec![0.0f32; OBS_DIM];
         for _ in 0..30 {
-            env.reset(&mut rng);
+            env.reset_into(&mut rng, &mut obs);
             let mut total = 0.0;
             loop {
                 let act = if env.agent.0 < env.goal.0 {
@@ -94,7 +102,7 @@ mod tests {
                 } else {
                     2
                 };
-                let s = env.step(&[act], &mut rng);
+                let s = env.step_into(&[act], &mut rng, &mut obs);
                 total += s.reward;
                 if s.done {
                     break;
@@ -108,7 +116,8 @@ mod tests {
     fn timeout_after_max_steps() {
         let mut rng = SplitMix64::new(2);
         let mut env = GridWorld::new(false);
-        env.reset(&mut rng);
+        let mut obs = vec![0.0f32; OBS_DIM];
+        env.reset_into(&mut rng, &mut obs);
         env.goal = (7, 7);
         env.agent = (0, 0);
         let mut n = 0;
@@ -116,7 +125,7 @@ mod tests {
             // bounce between two cells, never reach goal
             let act = if n % 2 == 0 { 0 } else { 1 };
             n += 1;
-            if env.step(&[act], &mut rng).done {
+            if env.step_into(&[act], &mut rng, &mut obs).done {
                 break;
             }
         }
@@ -127,8 +136,9 @@ mod tests {
     fn goal_never_equals_start() {
         let mut rng = SplitMix64::new(3);
         let mut env = GridWorld::new(false);
+        let mut obs = vec![0.0f32; OBS_DIM];
         for _ in 0..200 {
-            env.reset(&mut rng);
+            env.reset_into(&mut rng, &mut obs);
             assert_ne!(env.agent, env.goal);
         }
     }
@@ -137,11 +147,9 @@ mod tests {
     fn obs_one_hot_plus_offset() {
         let mut rng = SplitMix64::new(4);
         let mut env = GridWorld::new(false);
-        let o = env.reset(&mut rng);
-        assert_eq!(o[0].len(), OBS_DIM);
-        assert_eq!(
-            o[0][..N * N].iter().filter(|&&v| v == 1.0).count(),
-            1
-        );
+        let mut o = vec![9.0f32; OBS_DIM]; // must be fully overwritten
+        env.reset_into(&mut rng, &mut o);
+        assert_eq!(o[..N * N].iter().filter(|&&v| v == 1.0).count(), 1);
+        assert!(o[..N * N].iter().all(|&v| v == 0.0 || v == 1.0));
     }
 }

@@ -12,32 +12,57 @@
 //! passed by the caller (the executor), never internal state — this is
 //! what lets HTS-RL defer *all* randomness to executors and stay fully
 //! deterministic under asynchronous actor scheduling.
+//!
+//! **The flat observation plane** (DESIGN.md §7): environments never
+//! allocate. [`Env::reset_into`] and [`Env::step_into`] write all
+//! per-agent observations into a caller-owned contiguous
+//! `[n_agents * obs_dim]` scratch slice, and a step's scalar outcome
+//! comes back as the `Copy` struct [`StepInfo`]. The executor hot loop
+//! therefore touches the heap zero times per step at steady state.
+//! Observation writes draw no RNG, so the per-replica draw order is
+//! byte-for-byte the one the old allocating API produced (pinned in
+//! `rust/tests/pool.rs`).
+//!
+//! **The environment registry** ([`registry()`], DESIGN.md §7): env
+//! families register `{name, model, constructor, default steptime,
+//! agent-count bounds}` exactly once; every spec string —
+//! `family[/scenario][?key=val,...]`, e.g. `catch?wind=0.15` or
+//! `football/3_vs_1_with_keeper?agents=3` — resolves through that single
+//! table, so new scenarios are data rather than code and the suite lists
+//! cannot drift from the parser.
 
 pub mod cartpole;
 pub mod catch;
 pub mod football;
 pub mod gridworld;
+pub mod registry;
 pub mod steptime;
 pub mod suite;
 
 use crate::rng::SplitMix64;
-use anyhow::{bail, Result};
+use anyhow::Result;
+pub use registry::{registry, EnvRegistry};
 pub use steptime::StepTimeModel;
 
-/// Result of a single environment step (for one agent slot the obs is
-/// per-agent; reward/done are per-environment).
-#[derive(Debug, Clone)]
-pub struct Step {
-    /// One observation per controlled agent, each `obs_dim` long.
-    pub obs: Vec<Vec<f32>>,
+/// Scalar outcome of a single environment step. Reward and done are
+/// per-environment; the per-agent observations land in the caller's flat
+/// scratch plane (see [`Env::step_into`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepInfo {
     pub reward: f32,
     pub done: bool,
 }
 
 /// A (possibly multi-agent) episodic environment.
 ///
-/// `reset`/`step` take the caller's RNG stream so that trajectories are a
-/// pure function of that stream — the determinism backbone of HTS-RL.
+/// `reset_into`/`step_into` take the caller's RNG stream so that
+/// trajectories are a pure function of that stream — the determinism
+/// backbone of HTS-RL — and write observations into a caller-owned flat
+/// plane of exactly `n_agents() * obs_dim()` floats (agent-major:
+/// agent `a` owns `out[a*obs_dim .. (a+1)*obs_dim]`). Implementations
+/// must overwrite the full plane (the caller recycles scratch buffers)
+/// and must not draw RNG while writing observations, so that the flat
+/// API is draw-order-identical to the historical allocating one.
 pub trait Env: Send {
     fn obs_dim(&self) -> usize;
     fn act_dim(&self) -> usize;
@@ -45,17 +70,25 @@ pub trait Env: Send {
     fn n_agents(&self) -> usize {
         1
     }
-    /// Reset and return initial per-agent observations.
-    fn reset(&mut self, rng: &mut SplitMix64) -> Vec<Vec<f32>>;
-    /// Apply one action per agent.
-    fn step(&mut self, actions: &[usize], rng: &mut SplitMix64) -> Step;
+    /// Reset and write the initial per-agent observations into `out`.
+    fn reset_into(&mut self, rng: &mut SplitMix64, out: &mut [f32]);
+    /// Apply one action per agent; write the post-step per-agent
+    /// observations into `out`.
+    fn step_into(
+        &mut self,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo;
 }
 
 /// Everything needed to (re)create an environment instance — specs are
 /// cheap to clone and are the unit the registry, evaluator, and all
 /// drivers share.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EnvSpec {
+    /// Canonical spec string: `family[/scenario][?key=val,...]`, with
+    /// the agent count held separately in `n_agents`.
     pub name: String,
     /// Model-config name in the artifact manifest (obs/act dims).
     pub model: String,
@@ -64,32 +97,19 @@ pub struct EnvSpec {
 }
 
 impl EnvSpec {
+    /// Resolve a spec string through the [`registry()`]. Family, scenario,
+    /// parameter keys, and `agents=` bounds are all validated here — a
+    /// bad spec fails at parse time with a clean error, never inside a
+    /// spawned executor.
     pub fn by_name(name: &str) -> Result<EnvSpec> {
-        let (model, default_steptime) = match name {
-            "catch" | "catch_windy" | "catch_narrow" => {
-                ("catch", StepTimeModel::None)
-            }
-            "gridworld" | "gridworld_sparse" => {
-                ("gridworld", StepTimeModel::None)
-            }
-            "cartpole" | "cartpole_noisy" => ("cartpole", StepTimeModel::None),
-            n if n.starts_with("football/") => {
-                ("football", football::scenario_steptime(
-                    n.trim_start_matches("football/"))?)
-            }
-            _ => bail!("unknown env '{name}'"),
-        };
-        Ok(EnvSpec {
-            name: name.to_string(),
-            model: model.to_string(),
-            n_agents: 1,
-            steptime: default_steptime,
-        })
+        registry().spec(name)
     }
 
-    pub fn with_agents(mut self, n: usize) -> EnvSpec {
-        self.n_agents = n;
-        self
+    /// Override the controlled-agent count. Validated against the
+    /// family's per-scenario bounds (same check `?agents=` gets at parse
+    /// time).
+    pub fn with_agents(self, n: usize) -> Result<EnvSpec> {
+        registry().with_agents(self, n)
     }
 
     pub fn with_steptime(mut self, st: StepTimeModel) -> EnvSpec {
@@ -97,24 +117,67 @@ impl EnvSpec {
         self
     }
 
-    /// Instantiate a fresh environment replica.
+    /// Canonical round-trippable spec string:
+    /// `EnvSpec::by_name(&spec.spec_str())` reproduces the spec exactly
+    /// (steptime overrides excepted — those are not part of the
+    /// grammar).
+    pub fn spec_str(&self) -> String {
+        if self.n_agents == 1 {
+            self.name.clone()
+        } else if self.name.contains('?') {
+            format!("{},agents={}", self.name, self.n_agents)
+        } else {
+            format!("{}?agents={}", self.name, self.n_agents)
+        }
+    }
+
+    /// Instantiate a fresh environment replica via the registry.
     pub fn build(&self) -> Result<Box<dyn Env>> {
-        Ok(match self.name.as_str() {
-            "catch" => Box::new(catch::Catch::new(false, false)),
-            "catch_windy" => Box::new(catch::Catch::new(true, false)),
-            "catch_narrow" => Box::new(catch::Catch::new(false, true)),
-            "gridworld" => Box::new(gridworld::GridWorld::new(false)),
-            "gridworld_sparse" => Box::new(gridworld::GridWorld::new(true)),
-            "cartpole" => Box::new(cartpole::CartPole::new(0.0)),
-            "cartpole_noisy" => Box::new(cartpole::CartPole::new(0.05)),
-            n if n.starts_with("football/") => Box::new(
-                football::Football::new(
-                    n.trim_start_matches("football/"),
-                    self.n_agents,
-                )?,
-            ),
-            other => bail!("unknown env '{other}'"),
-        })
+        registry().build(self)
+    }
+}
+
+impl std::fmt::Display for EnvSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec_str())
+    }
+}
+
+/// Old-shape observation reconstruction — the compatibility shim.
+///
+/// Tests (and any non-hot-path caller that wants per-agent `Vec`s) can
+/// reconstruct the historical `Vec<Vec<f32>>` observation shape from the
+/// flat plane. The executor/driver/eval hot paths never use this; it
+/// exists so the flat-plane refactor is *provably* a re-layout and not a
+/// behavior change (see `compat_shim_reconstructs_flat_plane` below).
+pub mod compat {
+    use super::{Env, StepInfo};
+    use crate::rng::SplitMix64;
+
+    fn chunk(flat: &[f32], d: usize) -> Vec<Vec<f32>> {
+        flat.chunks(d).map(<[f32]>::to_vec).collect()
+    }
+
+    /// Reset and return per-agent observation vectors (old `reset`).
+    pub fn reset_vecs(
+        env: &mut dyn Env,
+        rng: &mut SplitMix64,
+    ) -> Vec<Vec<f32>> {
+        let mut flat = vec![0.0f32; env.n_agents() * env.obs_dim()];
+        env.reset_into(rng, &mut flat);
+        chunk(&flat, env.obs_dim())
+    }
+
+    /// Step and return per-agent observation vectors plus the scalar
+    /// outcome (old `step`, with `Step.obs` reconstructed).
+    pub fn step_vecs(
+        env: &mut dyn Env,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+    ) -> (Vec<Vec<f32>>, StepInfo) {
+        let mut flat = vec![0.0f32; env.n_agents() * env.obs_dim()];
+        let info = env.step_into(actions, rng, &mut flat);
+        (chunk(&flat, env.obs_dim()), info)
     }
 }
 
@@ -125,36 +188,41 @@ mod tests {
     fn roll(spec: &EnvSpec, seed: u64, steps: usize) -> Vec<(usize, f32, bool)> {
         let mut rng = SplitMix64::stream(seed, 0);
         let mut env = spec.build().unwrap();
-        let mut obs = env.reset(&mut rng);
+        let width = env.n_agents() * env.obs_dim();
+        let mut obs = vec![0.0f32; width];
+        env.reset_into(&mut rng, &mut obs);
         let mut out = Vec::new();
         for _ in 0..steps {
-            let acts: Vec<usize> = obs
-                .iter()
+            let acts: Vec<usize> = (0..env.n_agents())
                 .map(|_| rng.below(env.act_dim() as u64) as usize)
                 .collect();
-            let s = env.step(&acts, &mut rng);
-            out.push((acts[0], s.reward, s.done));
-            obs = if s.done { env.reset(&mut rng) } else { s.obs };
+            let info = env.step_into(&acts, &mut rng, &mut obs);
+            out.push((acts[0], info.reward, info.done));
+            if info.done {
+                env.reset_into(&mut rng, &mut obs);
+            }
         }
         out
     }
 
     #[test]
     fn all_envs_build_and_step() {
-        for name in suite::ALL_ENVS {
-            let spec = EnvSpec::by_name(name).unwrap();
+        for name in suite::all_envs() {
+            let spec = EnvSpec::by_name(&name).unwrap();
             let mut rng = SplitMix64::new(1);
             let mut env = spec.build().unwrap();
-            let obs = env.reset(&mut rng);
-            assert_eq!(obs.len(), env.n_agents(), "{name}");
-            assert!(obs.iter().all(|o| o.len() == env.obs_dim()), "{name}");
+            let width = env.n_agents() * env.obs_dim();
+            let mut obs = vec![f32::NAN; width];
+            env.reset_into(&mut rng, &mut obs);
+            assert!(obs.iter().all(|v| v.is_finite()), "{name}: torn reset");
             for _ in 0..50 {
                 let acts = vec![0usize; env.n_agents()];
-                let s = env.step(&acts, &mut rng);
-                assert!(s.obs.iter().all(|o| o.len() == env.obs_dim()));
-                assert!(s.reward.is_finite());
-                if s.done {
-                    env.reset(&mut rng);
+                obs.fill(f32::NAN); // envs must overwrite the full plane
+                let info = env.step_into(&acts, &mut rng, &mut obs);
+                assert!(obs.iter().all(|v| v.is_finite()), "{name}: torn obs");
+                assert!(info.reward.is_finite());
+                if info.done {
+                    env.reset_into(&mut rng, &mut obs);
                 }
             }
         }
@@ -177,22 +245,66 @@ mod tests {
 
     #[test]
     fn episodes_terminate() {
-        for name in suite::ALL_ENVS {
-            let spec = EnvSpec::by_name(name).unwrap();
+        for name in suite::all_envs() {
+            let spec = EnvSpec::by_name(&name).unwrap();
             let mut rng = SplitMix64::new(3);
             let mut env = spec.build().unwrap();
-            env.reset(&mut rng);
+            let mut obs = vec![0.0f32; env.n_agents() * env.obs_dim()];
+            env.reset_into(&mut rng, &mut obs);
             let mut done_seen = false;
             for _ in 0..3000 {
                 let acts: Vec<usize> = (0..env.n_agents())
                     .map(|_| rng.below(env.act_dim() as u64) as usize)
                     .collect();
-                if env.step(&acts, &mut rng).done {
+                if env.step_into(&acts, &mut rng, &mut obs).done {
                     done_seen = true;
                     break;
                 }
             }
             assert!(done_seen, "{name} never terminates");
+        }
+    }
+
+    /// The compat shim's reconstruction is exactly the flat plane cut
+    /// into per-agent rows — same bytes, same RNG stream consumption —
+    /// for single- and multi-agent environments.
+    #[test]
+    fn compat_shim_reconstructs_flat_plane() {
+        for (name, agents) in
+            [("catch_windy", 1), ("football/3_vs_1_with_keeper", 3)]
+        {
+            let spec =
+                EnvSpec::by_name(name).unwrap().with_agents(agents).unwrap();
+            let mut env_a = spec.build().unwrap();
+            let mut env_b = spec.build().unwrap();
+            let mut rng_a = SplitMix64::new(9);
+            let mut rng_b = SplitMix64::new(9);
+            let (n, d) = (env_a.n_agents(), env_a.obs_dim());
+            let mut flat = vec![0.0f32; n * d];
+            env_a.reset_into(&mut rng_a, &mut flat);
+            let vecs = compat::reset_vecs(env_b.as_mut(), &mut rng_b);
+            assert_eq!(vecs.len(), n);
+            for a in 0..n {
+                assert_eq!(vecs[a], flat[a * d..(a + 1) * d], "{name}");
+            }
+            for step in 0..30 {
+                let acts = vec![step % env_a.act_dim(); n];
+                let info_a = env_a.step_into(&acts, &mut rng_a, &mut flat);
+                let (vecs, info_b) =
+                    compat::step_vecs(env_b.as_mut(), &acts, &mut rng_b);
+                assert_eq!(info_a, info_b, "{name} step {step}");
+                for a in 0..n {
+                    assert_eq!(
+                        vecs[a],
+                        flat[a * d..(a + 1) * d],
+                        "{name} step {step}"
+                    );
+                }
+                if info_a.done {
+                    env_a.reset_into(&mut rng_a, &mut flat);
+                    compat::reset_vecs(env_b.as_mut(), &mut rng_b);
+                }
+            }
         }
     }
 }

@@ -1,0 +1,540 @@
+//! The open environment registry (DESIGN.md §7).
+//!
+//! Every environment *family* registers exactly once: its model config,
+//! its constructor, its default step-time model, its agent-count bounds,
+//! the parameter keys it accepts, and its data-defined named variants.
+//! Spec strings resolve through this single table with the grammar
+//!
+//! ```text
+//! spec     := base [ "?" params ]
+//! base     := family | family "/" scenario | variant
+//! params   := key "=" value { "," key "=" value }
+//! ```
+//!
+//! so `catch?wind=0.15`, `cartpole?noise=0.1`, and
+//! `football/3_vs_1_with_keeper?agents=3` are all valid specs, and the
+//! historical flat names (`catch_windy`, `gridworld_sparse`, ...) are
+//! *variants* — named parameter presets registered as data, not match
+//! arms. `agents=` is a universal key, validated against the family's
+//! per-scenario bounds at parse time (never inside a spawned executor).
+//!
+//! The suite lists (`suite::all_envs`, `suite::football_suite`) are
+//! derived from this table, so adding a family or variant here is the
+//! whole job: parser, builder, and listings cannot drift.
+
+use std::collections::BTreeMap;
+use std::ops::RangeInclusive;
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{cartpole, catch, football, gridworld};
+use super::{Env, EnvSpec, StepTimeModel};
+
+/// A named parameter preset (`catch_windy` ≡ `catch?wind=0.2`).
+pub struct Variant {
+    pub name: &'static str,
+    pub preset: &'static [(&'static str, f64)],
+}
+
+/// Validated spec arguments handed to a family constructor.
+pub struct EnvArgs<'a> {
+    pub scenario: Option<&'a str>,
+    pub n_agents: usize,
+    params: &'a BTreeMap<&'static str, f64>,
+}
+
+impl EnvArgs<'_> {
+    /// Numeric parameter with a default.
+    pub fn f(&self, key: &str, default: f64) -> f64 {
+        self.params.get(key).copied().unwrap_or(default)
+    }
+
+    /// Boolean parameter (any non-zero value is true; default false).
+    pub fn flag(&self, key: &str) -> bool {
+        self.f(key, 0.0) != 0.0
+    }
+}
+
+/// One registered environment family.
+pub struct EnvFamily {
+    pub name: &'static str,
+    /// Model-config name in the artifact manifest.
+    pub model: &'static str,
+    /// Named sub-scenarios (`family/<scenario>`); empty for families
+    /// without a scenario segment.
+    pub scenarios: &'static [&'static str],
+    /// Flat-named parameter presets (listed by `suite::all_envs`).
+    pub variants: &'static [Variant],
+    /// Accepted `?key=` parameters (besides the universal `agents`).
+    pub params: &'static [&'static str],
+    agent_bounds: fn(Option<&str>) -> Result<RangeInclusive<usize>>,
+    steptime: fn(Option<&str>) -> Result<StepTimeModel>,
+    build: fn(&EnvArgs<'_>) -> Result<Box<dyn Env>>,
+}
+
+/// The resolved pieces of a spec string.
+struct SpecParts<'a> {
+    family: &'a EnvFamily,
+    scenario: Option<&'a str>,
+    params: BTreeMap<&'static str, f64>,
+    n_agents: usize,
+    /// Canonical name: the base plus every non-`agents` query segment,
+    /// in the order given (so `spec_str` round-trips verbatim).
+    name: String,
+}
+
+pub struct EnvRegistry {
+    families: Vec<EnvFamily>,
+}
+
+/// The process-wide registry of builtin families.
+pub fn registry() -> &'static EnvRegistry {
+    static REGISTRY: OnceLock<EnvRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(EnvRegistry::builtin)
+}
+
+impl EnvRegistry {
+    pub fn families(&self) -> &[EnvFamily] {
+        &self.families
+    }
+
+    fn family(&self, name: &str) -> Option<&EnvFamily> {
+        self.families.iter().find(|f| f.name == name)
+    }
+
+    /// All flat variant names, in registration order — the source of
+    /// `suite::all_envs`.
+    pub fn variant_names(&self) -> Vec<String> {
+        self.families
+            .iter()
+            .flat_map(|f| f.variants.iter().map(|v| v.name.to_string()))
+            .collect()
+    }
+
+    /// All `family/<scenario>` specs of one family — the source of
+    /// `suite::football_suite`.
+    pub fn scenario_specs(&self, family: &str) -> Vec<String> {
+        self.families
+            .iter()
+            .filter(|f| f.name == family)
+            .flat_map(|f| {
+                f.scenarios.iter().map(move |s| format!("{}/{s}", f.name))
+            })
+            .collect()
+    }
+
+    /// Parse and fully validate a spec string (family, scenario, keys,
+    /// values, and agent bounds — plus a probe construction, so a spec
+    /// that parses is a spec that builds).
+    pub fn spec(&self, s: &str) -> Result<EnvSpec> {
+        let p = self.parse_parts(s)?;
+        let spec = EnvSpec {
+            name: p.name,
+            model: p.family.model.to_string(),
+            n_agents: p.n_agents,
+            steptime: (p.family.steptime)(p.scenario)?,
+        };
+        // Probe-build once so any constructor-level rejection (bad
+        // parameter range, ...) surfaces at parse time too.
+        (p.family.build)(&EnvArgs {
+            scenario: p.scenario,
+            n_agents: p.n_agents,
+            params: &p.params,
+        })
+        .with_context(|| format!("invalid env spec '{s}'"))?;
+        Ok(spec)
+    }
+
+    /// Re-validate an agent-count override against the family bounds.
+    pub fn with_agents(&self, mut spec: EnvSpec, n: usize) -> Result<EnvSpec> {
+        let p = self.parse_parts(&spec.name)?;
+        check_agents(p.family, p.scenario, n)?;
+        spec.n_agents = n;
+        Ok(spec)
+    }
+
+    /// Instantiate the environment a spec describes.
+    pub fn build(&self, spec: &EnvSpec) -> Result<Box<dyn Env>> {
+        let p = self.parse_parts(&spec.name)?;
+        check_agents(p.family, p.scenario, spec.n_agents)?;
+        (p.family.build)(&EnvArgs {
+            scenario: p.scenario,
+            n_agents: spec.n_agents,
+            params: &p.params,
+        })
+    }
+
+    fn parse_parts<'a>(&'a self, s: &'a str) -> Result<SpecParts<'a>> {
+        let (base, query) = match s.split_once('?') {
+            Some((b, q)) => (b, Some(q)),
+            None => (s, None),
+        };
+        let (family, scenario, preset) = self.resolve_base(base)?;
+        let mut params: BTreeMap<&'static str, f64> = BTreeMap::new();
+        for &(k, v) in preset {
+            params.insert(k, v);
+        }
+        let mut n_agents = 1usize;
+        let mut kept: Vec<&str> = Vec::new();
+        for pair in query.into_iter().flat_map(|q| q.split(',')) {
+            let (key, val) = pair.split_once('=').ok_or_else(|| {
+                anyhow!("bad env param '{pair}' in '{s}' (want key=value)")
+            })?;
+            if key == "agents" {
+                n_agents = val.parse().with_context(|| {
+                    format!("bad agents value '{val}' in '{s}'")
+                })?;
+                continue;
+            }
+            let key = family
+                .params
+                .iter()
+                .copied()
+                .find(|&k| k == key)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "unknown param '{key}' for env family '{}' \
+                         (accepted: agents{}{})",
+                        family.name,
+                        if family.params.is_empty() { "" } else { ", " },
+                        family.params.join(", ")
+                    )
+                })?;
+            let num: f64 = val.parse().with_context(|| {
+                format!("bad value '{val}' for param '{key}' in '{s}'")
+            })?;
+            anyhow::ensure!(num.is_finite(), "param '{key}' must be finite");
+            params.insert(key, num);
+            kept.push(pair);
+        }
+        check_agents(family, scenario, n_agents)?;
+        let name = if kept.is_empty() {
+            base.to_string()
+        } else {
+            format!("{base}?{}", kept.join(","))
+        };
+        Ok(SpecParts { family, scenario, params, n_agents, name })
+    }
+
+    /// Resolve the part before `?`: a family, `family/scenario`, or a
+    /// flat variant name.
+    #[allow(clippy::type_complexity)]
+    fn resolve_base<'a>(
+        &'a self,
+        base: &'a str,
+    ) -> Result<(
+        &'a EnvFamily,
+        Option<&'a str>,
+        &'static [(&'static str, f64)],
+    )> {
+        if let Some((fam, scenario)) = base.split_once('/') {
+            let family = self
+                .family(fam)
+                .ok_or_else(|| self.unknown(fam))?;
+            anyhow::ensure!(
+                family.scenarios.contains(&scenario),
+                "unknown {} scenario '{scenario}' (known: {})",
+                family.name,
+                family.scenarios.join(", ")
+            );
+            return Ok((family, Some(scenario), &[]));
+        }
+        if let Some(family) = self.family(base) {
+            anyhow::ensure!(
+                family.scenarios.is_empty(),
+                "env family '{base}' needs a scenario: {base}/<{}>",
+                family.scenarios.join("|")
+            );
+            return Ok((family, None, &[]));
+        }
+        for f in &self.families {
+            if let Some(v) = f.variants.iter().find(|v| v.name == base) {
+                return Ok((f, None, v.preset));
+            }
+        }
+        Err(self.unknown(base))
+    }
+
+    fn unknown(&self, name: &str) -> anyhow::Error {
+        anyhow!(
+            "unknown env '{name}' (known: {})",
+            self.variant_names()
+                .into_iter()
+                .chain(
+                    self.families
+                        .iter()
+                        .filter(|f| !f.scenarios.is_empty())
+                        .map(|f| format!("{}/<scenario>", f.name))
+                )
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+
+    /// The builtin families. Adding an environment means adding one
+    /// entry (and, for presets, variants) here — nothing else.
+    fn builtin() -> EnvRegistry {
+        EnvRegistry {
+            families: vec![
+                EnvFamily {
+                    name: "catch",
+                    model: "catch",
+                    scenarios: &[],
+                    variants: &[
+                        Variant { name: "catch", preset: &[] },
+                        Variant {
+                            name: "catch_windy",
+                            preset: &[("wind", 0.2)],
+                        },
+                        Variant {
+                            name: "catch_narrow",
+                            preset: &[("narrow", 1.0)],
+                        },
+                    ],
+                    params: &["wind", "narrow"],
+                    agent_bounds: single_agent,
+                    steptime: no_steptime,
+                    build: build_catch,
+                },
+                EnvFamily {
+                    name: "gridworld",
+                    model: "gridworld",
+                    scenarios: &[],
+                    variants: &[
+                        Variant { name: "gridworld", preset: &[] },
+                        Variant {
+                            name: "gridworld_sparse",
+                            preset: &[("sparse", 1.0)],
+                        },
+                    ],
+                    params: &["sparse"],
+                    agent_bounds: single_agent,
+                    steptime: no_steptime,
+                    build: build_gridworld,
+                },
+                EnvFamily {
+                    name: "cartpole",
+                    model: "cartpole",
+                    scenarios: &[],
+                    variants: &[
+                        Variant { name: "cartpole", preset: &[] },
+                        Variant {
+                            name: "cartpole_noisy",
+                            preset: &[("noise", 0.05)],
+                        },
+                    ],
+                    params: &["noise"],
+                    agent_bounds: single_agent,
+                    steptime: no_steptime,
+                    build: build_cartpole,
+                },
+                EnvFamily {
+                    name: "football",
+                    model: "football",
+                    scenarios: &football::SCENARIOS,
+                    variants: &[],
+                    params: &[],
+                    agent_bounds: football_agents,
+                    steptime: football_steptime,
+                    build: build_football,
+                },
+            ],
+        }
+    }
+}
+
+fn check_agents(
+    family: &EnvFamily,
+    scenario: Option<&str>,
+    n: usize,
+) -> Result<()> {
+    let bounds = (family.agent_bounds)(scenario)?;
+    if !bounds.contains(&n) {
+        let what = match scenario {
+            Some(s) => format!("{}/{s}", family.name),
+            None => family.name.to_string(),
+        };
+        bail!(
+            "env '{what}' supports {}..={} agents, got {n}",
+            bounds.start(),
+            bounds.end()
+        );
+    }
+    Ok(())
+}
+
+fn single_agent(_: Option<&str>) -> Result<RangeInclusive<usize>> {
+    Ok(1..=1)
+}
+
+fn no_steptime(_: Option<&str>) -> Result<StepTimeModel> {
+    Ok(StepTimeModel::None)
+}
+
+fn football_agents(sc: Option<&str>) -> Result<RangeInclusive<usize>> {
+    Ok(1..=football::scenario_attackers(require_scenario(sc)?)?)
+}
+
+fn football_steptime(sc: Option<&str>) -> Result<StepTimeModel> {
+    football::scenario_steptime(require_scenario(sc)?)
+}
+
+fn require_scenario(sc: Option<&str>) -> Result<&str> {
+    sc.ok_or_else(|| anyhow!("football spec needs football/<scenario>"))
+}
+
+fn build_catch(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
+    Ok(Box::new(catch::Catch::new(a.f("wind", 0.0), a.flag("narrow"))?))
+}
+
+fn build_gridworld(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
+    Ok(Box::new(gridworld::GridWorld::new(a.flag("sparse"))))
+}
+
+fn build_cartpole(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
+    Ok(Box::new(cartpole::CartPole::new(a.f("noise", 0.0))?))
+}
+
+fn build_football(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
+    Ok(Box::new(football::Football::new(
+        require_scenario(a.scenario)?,
+        a.n_agents,
+    )?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::suite;
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    /// Trajectory fingerprint: action echoes + rewards + dones under a
+    /// fixed action pattern and RNG stream.
+    fn fingerprint(spec: &EnvSpec, steps: usize) -> Vec<(f32, bool)> {
+        let mut rng = SplitMix64::stream(7, 0);
+        let mut env = spec.build().unwrap();
+        let mut obs = vec![0.0f32; env.n_agents() * env.obs_dim()];
+        env.reset_into(&mut rng, &mut obs);
+        (0..steps)
+            .map(|t| {
+                let acts = vec![t % env.act_dim(); env.n_agents()];
+                let info = env.step_into(&acts, &mut rng, &mut obs);
+                if info.done {
+                    env.reset_into(&mut rng, &mut obs);
+                }
+                (info.reward, info.done)
+            })
+            .collect()
+    }
+
+    /// The satellite round-trip property: `spec_str → parse → identical
+    /// spec` for every registered family × variant × scenario, with and
+    /// without agent overrides and explicit params.
+    #[test]
+    fn registry_roundtrip_every_family_and_variant() {
+        let mut specs: Vec<String> = registry().variant_names();
+        for f in registry().families() {
+            specs.extend(registry().scenario_specs(f.name));
+        }
+        specs.extend([
+            "catch?wind=0.15".to_string(),
+            "catch?wind=0.15,narrow=1".to_string(),
+            "catch_windy?wind=0.35".to_string(),
+            "cartpole?noise=0.1".to_string(),
+            "gridworld?sparse=1".to_string(),
+            "football/3_vs_1_with_keeper?agents=3".to_string(),
+            "football/corner?agents=2".to_string(),
+        ]);
+        for s in specs {
+            let spec = EnvSpec::by_name(&s)
+                .unwrap_or_else(|e| panic!("'{s}' failed to parse: {e}"));
+            let round = EnvSpec::by_name(&spec.spec_str())
+                .unwrap_or_else(|e| {
+                    panic!("'{}' failed to reparse: {e}", spec.spec_str())
+                });
+            assert_eq!(spec, round, "round-trip drift for '{s}'");
+        }
+    }
+
+    #[test]
+    fn variants_are_presets_not_code() {
+        // A legacy flat name and its parameterized spelling build
+        // byte-identical environments.
+        for (legacy, modern) in [
+            ("catch_windy", "catch?wind=0.2"),
+            ("catch_narrow", "catch?narrow=1"),
+            ("gridworld_sparse", "gridworld?sparse=1"),
+            ("cartpole_noisy", "cartpole?noise=0.05"),
+        ] {
+            let a = EnvSpec::by_name(legacy).unwrap();
+            let b = EnvSpec::by_name(modern).unwrap();
+            assert_eq!(fingerprint(&a, 300), fingerprint(&b, 300),
+                       "{legacy} vs {modern}");
+            assert_eq!(a.model, b.model);
+        }
+    }
+
+    #[test]
+    fn parameters_change_dynamics() {
+        let plain = EnvSpec::by_name("catch").unwrap();
+        let windy = EnvSpec::by_name("catch?wind=1").unwrap();
+        assert_ne!(fingerprint(&plain, 300), fingerprint(&windy, 300));
+        let noisy = EnvSpec::by_name("cartpole?noise=0.5").unwrap();
+        let calm = EnvSpec::by_name("cartpole").unwrap();
+        assert_ne!(fingerprint(&calm, 300), fingerprint(&noisy, 300));
+    }
+
+    #[test]
+    fn agent_bounds_checked_at_parse_time() {
+        // 3_vs_1 has three attackers: 3 agents fine, 4 a parse error.
+        assert!(EnvSpec::by_name("football/3_vs_1_with_keeper?agents=3")
+            .is_ok());
+        let err = EnvSpec::by_name("football/3_vs_1_with_keeper?agents=4")
+            .unwrap_err();
+        assert!(err.to_string().contains("agents"), "{err}");
+        assert!(EnvSpec::by_name("football/3_vs_1_with_keeper?agents=0")
+            .is_err());
+        // single-agent families reject any multi-agent request
+        assert!(EnvSpec::by_name("catch?agents=2").is_err());
+        // ... and the builder-style override hits the same validation
+        let spec = EnvSpec::by_name("football/3_vs_1_with_keeper").unwrap();
+        assert!(spec.clone().with_agents(3).is_ok());
+        assert!(spec.clone().with_agents(4).is_err());
+        assert!(EnvSpec::by_name("catch").unwrap().with_agents(2).is_err());
+    }
+
+    #[test]
+    fn malformed_specs_rejected_cleanly() {
+        for bad in [
+            "catch?frobnicate=1",       // unknown key
+            "catch?wind",               // not key=value
+            "catch?wind=abc",           // not a number
+            "catch?wind=inf",           // not finite
+            "catch?wind=1.5",           // constructor range check
+            "cartpole?noise=-1",        // constructor range check
+            "football",                 // scenario required
+            "gridworld/maze",           // family has no scenarios
+            "football/3_vs_1_with_keeper?agents=-1", // bad usize
+        ] {
+            assert!(EnvSpec::by_name(bad).is_err(), "'{bad}' parsed");
+        }
+    }
+
+    #[test]
+    fn suites_are_registry_derived() {
+        assert_eq!(suite::all_envs(), registry().variant_names());
+        assert_eq!(
+            suite::football_suite(),
+            registry().scenario_specs("football")
+        );
+        assert_eq!(suite::football_suite().len(), 11);
+        // the historical names all survive
+        for name in [
+            "catch", "catch_windy", "catch_narrow", "gridworld",
+            "gridworld_sparse", "cartpole", "cartpole_noisy",
+        ] {
+            assert!(suite::all_envs().iter().any(|n| n == name), "{name}");
+        }
+    }
+}

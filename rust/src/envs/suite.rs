@@ -1,22 +1,23 @@
 //! Named experiment suites mapping the paper's evaluation workloads onto
 //! the synthetic substrate (see DESIGN.md §3 for the substitution table).
+//!
+//! The listings are *derived from the registry* (DESIGN.md §7): a family
+//! or variant registered in [`super::registry::EnvRegistry`] appears here
+//! with no further bookkeeping, so the suites and the spec parser cannot
+//! drift.
 
-use super::EnvSpec;
+use super::{registry, EnvSpec};
 use anyhow::Result;
 
-/// All registered single-env names (football scenarios use the
-/// `football/<scenario>` form).
-pub const ALL_ENVS: [&str; 7] = [
-    "catch",
-    "catch_windy",
-    "catch_narrow",
-    "gridworld",
-    "gridworld_sparse",
-    "cartpole",
-    "cartpole_noisy",
-];
+/// All registered flat env names (football scenarios use the
+/// `football/<scenario>` form — see [`football_suite`]).
+pub fn all_envs() -> Vec<String> {
+    registry().variant_names()
+}
 
-/// The 6-game "Atari-sim" suite used for Tab. 1 (final-time metric).
+/// The 6-game "Atari-sim" suite used for Tab. 1 (final-time metric) — a
+/// curated experiment subset (three model configs × two difficulty
+/// tiers), not the full registry listing.
 pub const ATARI_SUITE: [&str; 6] = [
     "catch",
     "catch_windy",
@@ -28,10 +29,7 @@ pub const ATARI_SUITE: [&str; 6] = [
 
 /// All 11 academy scenarios for Tab. 2 (required-time metric).
 pub fn football_suite() -> Vec<String> {
-    super::football::SCENARIOS
-        .iter()
-        .map(|s| format!("football/{s}"))
-        .collect()
+    registry().scenario_specs("football")
 }
 
 pub fn specs(names: &[&str]) -> Result<Vec<EnvSpec>> {
@@ -45,8 +43,19 @@ mod tests {
     #[test]
     fn suites_resolve() {
         specs(&ATARI_SUITE).unwrap();
+        for name in all_envs() {
+            EnvSpec::by_name(&name).unwrap();
+        }
         for name in football_suite() {
             EnvSpec::by_name(&name).unwrap();
+        }
+    }
+
+    #[test]
+    fn atari_suite_names_are_registered() {
+        let all = all_envs();
+        for name in ATARI_SUITE {
+            assert!(all.iter().any(|n| n == name), "{name} not registered");
         }
     }
 

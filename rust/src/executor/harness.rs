@@ -32,13 +32,18 @@ pub fn spawn_standin_actors(
             let sb = state_buf.clone();
             let ab = act_buf.clone();
             let policy = policy.clone();
-            std::thread::spawn(move || loop {
-                let batch = sb.grab(grab);
-                if batch.is_empty() {
-                    return; // shutdown
-                }
-                for m in batch {
-                    ab.post(m.slot, policy(&m.obs, m.seed));
+            std::thread::spawn(move || {
+                let mut batch = Vec::new();
+                loop {
+                    sb.grab_into(&mut batch, grab);
+                    if batch.is_empty() {
+                        return; // shutdown
+                    }
+                    for m in &batch {
+                        ab.post(m.slot, policy(&m.obs, m.seed));
+                    }
+                    // close the allocation ring, like the PJRT actors
+                    sb.recycle_batch(&mut batch);
                 }
             })
         })

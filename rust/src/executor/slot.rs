@@ -9,6 +9,16 @@
 //! which thread happens to drive it, or how many sibling replicas that
 //! thread multiplexes. That purity is the whole K-invariance argument
 //! (DESIGN.md §6).
+//!
+//! Observations live on the **flat plane** (DESIGN.md §7): two
+//! slot-owned `[n_agents * obs_dim]` scratch planes the env writes into
+//! (`obs` holds the pending step's input, `next_obs` receives the
+//! post-step output, and the two are pointer-swapped). Publishing rents
+//! recycled buffers from the state buffer and reuses one `ObsMsg`
+//! scratch vec, so a slot performs **zero heap allocations per step** at
+//! steady state. RNG draw order is byte-identical to the historical
+//! allocating loop (step draws, then the on-done reset draws), pinned by
+//! `rust/tests/pool.rs`.
 
 use std::time::{Duration, Instant};
 
@@ -50,16 +60,27 @@ pub struct ReplicaSlot {
     pub replica: usize,
     pub state: SlotState,
     n_agents: usize,
+    obs_dim: usize,
     env: Box<dyn Env>,
     env_rng: SplitMix64,
     seed_rng: SplitMix64,
     delay_rng: SplitMix64,
-    /// Current per-agent observations (input of the pending step).
-    obs: Vec<Vec<f32>>,
+    /// Flat plane of the pending step's input observations
+    /// (`[n_agents * obs_dim]`, agent-major).
+    obs: Vec<f32>,
+    /// Scratch plane the env writes the post-step observations into;
+    /// swapped with `obs` after every step.
+    next_obs: Vec<f32>,
     /// Per-agent actions received so far this step.
     actions: Vec<Option<usize>>,
     /// Unwrapped copy of `actions` once complete (step scratch).
     act_scratch: Vec<usize>,
+    /// Reusable publish scratch (satellite of ISSUE 3: no per-step
+    /// `Vec<ObsMsg>` allocation — drained by `push_batch`).
+    msg_scratch: Vec<ObsMsg>,
+    /// Rented-buffer scratch: filled by one `rent_into` call per publish
+    /// so the free-list lock is taken once per step, not per agent.
+    buf_scratch: Vec<Vec<f32>>,
     steps_done: usize,
     ep_reward: f64,
     sig: Fnv,
@@ -74,21 +95,29 @@ impl ReplicaSlot {
         let seed_rng = SplitMix64::stream(seed, 2_000 + replica as u64);
         let delay_rng = SplitMix64::stream(seed, 3_000 + replica as u64);
         let mut env = spec.build()?;
-        let obs = env.reset(&mut env_rng);
         let n_agents = spec.n_agents;
+        let obs_dim = env.obs_dim();
+        debug_assert_eq!(env.n_agents(), n_agents, "spec/env agent drift");
+        let mut obs = vec![0.0f32; n_agents * obs_dim];
+        env.reset_into(&mut env_rng, &mut obs);
+        let next_obs = vec![0.0f32; n_agents * obs_dim];
         let mut sig = Fnv::default();
         sig.update(replica as u64);
         Ok(ReplicaSlot {
             replica,
             state: SlotState::AtBarrier,
             n_agents,
+            obs_dim,
             env,
             env_rng,
             seed_rng,
             delay_rng,
             obs,
+            next_obs,
             actions: vec![None; n_agents],
             act_scratch: Vec::with_capacity(n_agents),
+            msg_scratch: Vec::with_capacity(n_agents),
+            buf_scratch: Vec::with_capacity(n_agents),
             steps_done: 0,
             ep_reward: 0.0,
             sig,
@@ -113,7 +142,9 @@ impl ReplicaSlot {
 
     /// Publish this step's observations with executor-drawn sampling
     /// seeds (deferred randomness, DESIGN.md §4) and start waiting for
-    /// the actions.
+    /// the actions. Buffers are rented from the state buffer's free
+    /// list and the message vec is a reused slot scratch — no per-step
+    /// allocation at steady state.
     pub fn publish_obs(&mut self, state_buf: &StateBuffer) {
         // Legal from AtBarrier (iteration start) or Cooking (the step
         // that just ran); publishing while actions are still in flight
@@ -126,17 +157,22 @@ impl ReplicaSlot {
             "publish from {:?}",
             self.state
         );
+        debug_assert!(self.msg_scratch.is_empty(), "unsent publish scratch");
         let base = self.replica * self.n_agents;
-        let msgs: Vec<ObsMsg> = (0..self.n_agents)
-            .map(|a| ObsMsg {
+        let d = self.obs_dim;
+        state_buf.rent_into(&mut self.buf_scratch, self.n_agents, d);
+        for (a, mut buf) in self.buf_scratch.drain(..).enumerate() {
+            buf.extend_from_slice(&self.obs[a * d..(a + 1) * d]);
+            self.msg_scratch.push(ObsMsg {
                 slot: base + a,
-                obs: self.obs[a].clone(),
+                obs: buf,
                 seed: self.seed_rng.next_u64(),
-            })
-            .collect();
+            });
+        }
         // A false return means the buffer closed mid-shutdown; the next
-        // `poll_actions` observes Closed and the pool unwinds.
-        let _ = state_buf.push_batch(msgs);
+        // `poll_actions` observes Closed and the pool unwinds. Either
+        // way the scratch is drained for reuse.
+        let _ = state_buf.push_batch(&mut self.msg_scratch);
         self.actions.fill(None);
         self.state = SlotState::AwaitingActions;
     }
@@ -252,35 +288,41 @@ impl ReplicaSlot {
             "step from {:?}",
             self.state
         );
-        let step = self.env.step(&self.act_scratch, &mut self.env_rng);
+        let info = self.env.step_into(
+            &self.act_scratch,
+            &mut self.env_rng,
+            &mut self.next_obs,
+        );
         let base = self.replica * self.n_agents;
+        let d = self.obs_dim;
         for a in 0..self.n_agents {
             writer.push(
                 base + a,
-                &self.obs[a],
+                &self.obs[a * d..(a + 1) * d],
                 self.act_scratch[a],
-                step.reward,
-                step.done,
+                info.reward,
+                info.done,
             );
         }
         let gsteps = sps.add(1);
         for (a, &act) in self.act_scratch.iter().enumerate() {
             self.sig.update(((a as u64) << 32) | act as u64);
         }
-        self.sig.update(step.reward.to_bits() as u64);
-        self.sig.update(step.done as u64);
-        self.ep_reward += step.reward as f64;
-        if step.done {
+        self.sig.update(info.reward.to_bits() as u64);
+        self.sig.update(info.done as u64);
+        self.ep_reward += info.reward as f64;
+        if info.done {
             episodes.push(EpisodePoint {
                 steps: gsteps,
                 wall_s: watch.elapsed_s(),
                 reward: self.ep_reward,
             });
             self.ep_reward = 0.0;
-            self.obs = self.env.reset(&mut self.env_rng);
-        } else {
-            self.obs = step.obs;
+            // Same stream position as the historical loop: the on-done
+            // reset draws *after* the step's draws.
+            self.env.reset_into(&mut self.env_rng, &mut self.next_obs);
         }
+        std::mem::swap(&mut self.obs, &mut self.next_obs);
         self.steps_done += 1;
     }
 
@@ -293,8 +335,9 @@ impl ReplicaSlot {
             self.state
         );
         let base = self.replica * self.n_agents;
+        let d = self.obs_dim;
         for a in 0..self.n_agents {
-            writer.set_last_obs(base + a, &self.obs[a]);
+            writer.set_last_obs(base + a, &self.obs[a * d..(a + 1) * d]);
         }
         self.state = SlotState::AtBarrier;
     }

@@ -23,7 +23,7 @@ pub fn tab3(out: &Path, quick: bool) -> Result<()> {
     )?;
     let mut rows = Vec::new();
     for (n_agents, n_envs) in [(1usize, 12usize), (3, 4)] {
-        let spec = EnvSpec::by_name(SCENARIO)?.with_agents(n_agents);
+        let spec = EnvSpec::by_name(SCENARIO)?.with_agents(n_agents)?;
         let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
         cfg.n_envs = n_envs;
         cfg.n_actors = 1;

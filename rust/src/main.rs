@@ -34,7 +34,9 @@ fn build_run_config(a: &Args) -> Result<RunConfig> {
     let env = a.str_or("env", "catch");
     let mut spec = EnvSpec::by_name(&env)?;
     if let Some(n) = a.str_opt("agents") {
-        spec = spec.with_agents(n.parse()?);
+        // validated against the registry's per-scenario bounds — a bad
+        // agent count fails here, not inside a spawned executor
+        spec = spec.with_agents(n.parse()?)?;
     }
     let algo = Algo::parse(&a.str_or("algo", "a2c"))?;
     let mut cfg = RunConfig::new(spec, AlgoConfig::for_algo(algo));
@@ -95,9 +97,12 @@ fn cmd_train(a: &Args) -> Result<()> {
     if let Some(out) = a.str_opt("out") {
         let dir = PathBuf::from(out);
         std::fs::create_dir_all(&dir)?;
+        // registry spec names may carry `/scenario` and `?key=val,...` —
+        // keep the filename filesystem- and glob-safe
+        let safe_name =
+            cfg.spec.name.replace(['/', '?', '=', ','], "_");
         let mut w = hts_rl::util::csv::CsvWriter::create(
-            dir.join(format!("curve_{}_{}.csv", method.name(),
-                             cfg.spec.name.replace('/', "_"))),
+            dir.join(format!("curve_{}_{safe_name}.csv", method.name())),
             &["steps", "wall_s", "reward_ma100"],
         )?;
         for (s, t, rew) in r.curve(200) {
@@ -227,12 +232,19 @@ fn cmd_determinism(a: &Args) -> Result<()> {
 }
 
 fn cmd_list() {
-    println!("envs:");
-    for e in hts_rl::envs::suite::ALL_ENVS {
+    println!("envs (registry; params: family[/scenario][?key=val,...]):");
+    for e in hts_rl::envs::suite::all_envs() {
         println!("  {e}");
     }
     for s in hts_rl::envs::suite::football_suite() {
         println!("  {s}");
+    }
+    for f in hts_rl::envs::registry().families() {
+        if !f.params.is_empty() {
+            let keys: Vec<String> =
+                f.params.iter().map(|p| format!("{p}=<v>")).collect();
+            println!("  {}?{}", f.name, keys.join(","));
+        }
     }
     println!("methods: hts sync async");
     println!("algos: a2c a2c_nocorr a2c_tis vtrace ppo");

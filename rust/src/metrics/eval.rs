@@ -22,35 +22,37 @@ pub fn evaluate_params(
     seed: u64,
 ) -> Result<Vec<f64>> {
     let mut scores = Vec::with_capacity(n_episodes);
+    // One flat observation plane and one action scratch for the whole
+    // evaluation (ISSUE 3 satellite): the env writes each step's
+    // observations in place, and the forward consumes them before the
+    // next `step_into` overwrites the plane.
+    let mut flat: Vec<f32> = Vec::new();
+    let mut actions: Vec<usize> = Vec::new();
     for ep in 0..n_episodes {
         let mut rng = SplitMix64::stream(seed, 0x5eed_0000 + ep as u64);
         let mut env = spec.build()?;
         let n_agents = env.n_agents();
         let d = env.obs_dim();
-        let mut obs = env.reset(&mut rng);
+        flat.clear();
+        flat.resize(n_agents * d, 0.0);
+        env.reset_into(&mut rng, &mut flat);
         let mut total = 0.0f64;
         loop {
             // batch all agents' observations in one forward
-            let mut flat = Vec::with_capacity(n_agents * d);
-            for o in &obs {
-                flat.extend_from_slice(o);
-            }
             let (logits, _values) = pool.forward(params, &flat, n_agents)?;
             let a_dim = pool.info.act_dim;
-            let actions: Vec<usize> = (0..n_agents)
-                .map(|i| {
-                    sample_action(
-                        &logits[i * a_dim..(i + 1) * a_dim],
-                        rng.next_u64(),
-                    )
-                })
-                .collect();
-            let step = env.step(&actions, &mut rng);
-            total += step.reward as f64;
-            if step.done {
+            actions.clear();
+            actions.extend((0..n_agents).map(|i| {
+                sample_action(
+                    &logits[i * a_dim..(i + 1) * a_dim],
+                    rng.next_u64(),
+                )
+            }));
+            let info = env.step_into(&actions, &mut rng, &mut flat);
+            total += info.reward as f64;
+            if info.done {
                 break;
             }
-            obs = step.obs;
         }
         scores.push(total);
     }

@@ -2,8 +2,10 @@
 //! environments synchronized every α steps, when per-step times are i.i.d.
 //! and the α-step sums are Gamma(α, β) (paper Eq. 7):
 //!
-//!   E[T] ≈ (K / nα) · ( (γ/β)·(1 + (α−1)/(β·F⁻¹(1−1/n))) + F⁻¹(1−1/n) )
-//!          + K·c/n
+//! ```text
+//! E[T] ≈ (K / nα) · ( (γ/β)·(1 + (α−1)/(β·F⁻¹(1−1/n))) + F⁻¹(1−1/n) )
+//!        + K·c/n
+//! ```
 //!
 //! with F⁻¹ the Gamma(α, β) quantile and γ the Euler–Mascheroni constant.
 //! `expected_runtime` evaluates the formula; `simulate_runtime` runs the

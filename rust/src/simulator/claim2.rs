@@ -1,7 +1,7 @@
 //! Claim 2 — expected policy lag of asynchronous actor-learner systems
 //! (GA3C/IMPALA): n actors produce at Poisson rate λ₀ each, the learner
 //! consumes at exponential rate µ; the queue is M/M/1 and the expected lag
-//! is E[L] = nρ₀ / (1 − nρ₀) with ρ₀ = λ₀/µ (paper appendix B).
+//! is `E[L] = nρ₀ / (1 − nρ₀)` with `ρ₀ = λ₀/µ` (paper appendix B).
 //!
 //! `expected_latency` is the closed form; `simulate_latency` runs the
 //! actual queue; Fig. 3(c) overlays the two and the async driver's
@@ -9,7 +9,7 @@
 
 use crate::rng::SplitMix64;
 
-/// E[L] = nρ₀/(1 − nρ₀). Returns None when the queue is unstable
+/// `E[L] = nρ₀/(1 − nρ₀)`. Returns None when the queue is unstable
 /// (nρ₀ ≥ 1 — the learner can't keep up, lag diverges).
 pub fn expected_latency(n: usize, lambda0: f64, mu: f64) -> Option<f64> {
     let rho = n as f64 * lambda0 / mu;

@@ -81,9 +81,8 @@ fn multi_agent_columns_work() {
     if !have_artifacts() {
         return;
     }
-    let spec = EnvSpec::by_name("football/3_vs_1_with_keeper")
-        .unwrap()
-        .with_agents(3);
+    let spec = EnvSpec::by_name("football/3_vs_1_with_keeper?agents=3")
+        .unwrap();
     let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
     cfg.n_envs = 4; // 4 envs × 3 agents = 12 columns (B=12 artifact)
     cfg.n_actors = 2;

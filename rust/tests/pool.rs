@@ -69,7 +69,8 @@ struct HarnessOut {
 /// `n_envs / k` pool threads of K replicas each, mirroring the HTS
 /// driver's protocol (including its shutdown sequence).
 #[allow(clippy::too_many_arguments)]
-fn run_harness(
+fn run_harness_with(
+    policy: StandInPolicy,
     env: &str,
     n_agents: usize,
     steptime: StepTimeModel,
@@ -84,11 +85,9 @@ fn run_harness(
     let spec = EnvSpec::by_name(env)
         .unwrap()
         .with_agents(n_agents)
+        .unwrap()
         .with_steptime(steptime);
-    let (obs_dim, act_dim) = {
-        let e = spec.build().unwrap();
-        (e.obs_dim(), e.act_dim())
-    };
+    let obs_dim = spec.build().unwrap().obs_dim();
     let b_cols = n_envs * n_agents;
     let n_threads = n_envs / k;
     let swap = Arc::new(StripedSwap::with_parties(
@@ -99,9 +98,6 @@ fn run_harness(
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
 
-    let policy: StandInPolicy = Arc::new(move |obs, seed| {
-        gumbel_argmax(&fake_logits(obs, act_dim), seed)
-    });
     let actor_handles = spawn_standin_actors(
         n_actors, &state_buf, &act_buf, b_cols, &policy,
     );
@@ -145,6 +141,30 @@ fn run_harness(
         h.join().unwrap();
     }
     HarnessOut { signature, batch_hashes }
+}
+
+/// The historical harness entry point: deterministic gumbel stand-in
+/// actors over `fake_logits`.
+#[allow(clippy::too_many_arguments)]
+fn run_harness(
+    env: &str,
+    n_agents: usize,
+    steptime: StepTimeModel,
+    n_envs: usize,
+    k: usize,
+    n_actors: usize,
+    alpha: usize,
+    iters: u64,
+    seed: u64,
+) -> HarnessOut {
+    let act_dim = EnvSpec::by_name(env).unwrap().build().unwrap().act_dim();
+    let policy: StandInPolicy = Arc::new(move |obs, seed| {
+        gumbel_argmax(&fake_logits(obs, act_dim), seed)
+    });
+    run_harness_with(
+        policy, env, n_agents, steptime, n_envs, k, n_actors, alpha, iters,
+        seed,
+    )
 }
 
 /// The tentpole acceptance test: n_envs = 8 across every factorization
@@ -206,6 +226,43 @@ fn pool_invariant_multi_agent() {
         );
         assert_eq!(base.signature, r.signature, "multi-agent sig, K={k}");
         assert_eq!(base.batch_hashes, r.batch_hashes, "batches, K={k}");
+    }
+}
+
+/// ISSUE 3 satellite: the PR 2 trajectory semantics survive the flat
+/// observation-plane API swap, pinned to absolute values. The constants
+/// were computed by an exact integer transliteration of the *pre-swap*
+/// executor protocol (`python/tools/pin_signatures.py`): SplitMix64
+/// streams 1000/2000+r, calm Catch dynamics, FNV signature update order
+/// (action, reward bits, done — then on-done reset), and the gathered
+/// `[T, B]` hash. The stand-in policy is `seed % act_dim` rather than
+/// the gumbel policy so every quantity is integer or exactly
+/// representable — the pins are bit-portable across platforms and libm
+/// versions. Any draw-order or layout regression in the new API moves
+/// these values.
+#[test]
+fn pool_signatures_pinned() {
+    const PINNED_SIGNATURE: u64 = 0xc9567d1a817f0564;
+    const PINNED_BATCH_HASHES: [u64; 4] = [
+        0x60ff0bc8027ea625,
+        0xd7df0c258c254067,
+        0xf806391c6f0ab8e4,
+        0x505165e9ed735ea6,
+    ];
+    for k in [1usize, 2, 4, 8] {
+        let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
+        let r = run_harness_with(
+            policy, "catch", 1, StepTimeModel::None, 8, k, 2, 5, 4, 42,
+        );
+        assert_eq!(
+            r.signature, PINNED_SIGNATURE,
+            "PR 2 signature regressed at K={k}"
+        );
+        assert_eq!(
+            r.batch_hashes,
+            PINNED_BATCH_HASHES.to_vec(),
+            "PR 2 gathered [T, B] bytes regressed at K={k}"
+        );
     }
 }
 
