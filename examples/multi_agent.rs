@@ -28,5 +28,23 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n(paper Tab. 3: controlling 3 attackers scores higher than 1)");
+
+    // The cheap multi-agent workload (ISSUE 4): cooperative gridworld
+    // goal capture — same pool/plane multi-agent path, ~zero engine cost.
+    let spec = EnvSpec::by_name("gridworld_team/gather?agents=2,slip=0.1")?;
+    let mut cfg = RunConfig::new(spec, AlgoConfig::ppo());
+    cfg.n_envs = 8;
+    cfg.n_actors = 2;
+    cfg.seed = 5;
+    cfg.eval_every = 5;
+    cfg.stop = StopCond::steps(8_000);
+    let r = run(Method::Hts, &cfg)?;
+    println!(
+        "gridworld_team 2 agents × 8 envs: {} steps in {:.1}s, final \
+         score {:.3}",
+        r.steps,
+        r.wall_s,
+        r.final_metric()
+    );
     Ok(())
 }

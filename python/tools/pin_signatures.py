@@ -1,26 +1,34 @@
 #!/usr/bin/env python3
-"""Pin generator for `rust/tests/pool.rs::pool_signatures_pinned`.
+"""Pin generator for the `rust/tests/pool.rs` pinned-signature tests.
 
-Exact integer transliteration of the PR 2 executor trajectory semantics
-(pre-flat-plane API): SplitMix64 streams, the calm Catch environment, the
-replica-pool step protocol, the FNV-1a trajectory signature, and the
-gathered-``[T, B]`` batch hash. Everything here is integer or
-exactly-representable float (obs and rewards are only 0.0 / 1.0 / -1.0),
-so the pins are bit-portable across platforms and libm versions — unlike
-the gumbel stand-in policy, which goes through `ln`.
+Exact transliteration of the executor trajectory semantics: SplitMix64
+streams, the calm Catch environment (PR 2/3 pins) and the multi-agent
+TeamGridWorld environment (ISSUE 4 pins), the replica-pool step
+protocol, the FNV-1a trajectory signature, and the gathered-``[T, B]``
+batch hash. Every quantity is an integer or an exactly-representable
+float (obs values are 0 / ±0.5 / ±1 / k/8; rewards are 0.25·k or the
+constant −0.01), so the pins are bit-portable across platforms and libm
+versions — unlike the gumbel stand-in policy, which goes through `ln`.
 
 The stand-in policy is ``action = seed % act_dim`` (the bench's
-``modulo_policy``), with the executor-drawn seed. Per-replica trajectories
-are K-invariant by construction (each replica owns its own streams and
-runs exactly alpha steps per iteration), so one sequential simulation
-yields the pin for every (n_threads, K) factorization.
+``modulo_policy``), with the executor-drawn seed; for multi-agent
+replicas each agent's seed is drawn in agent order at publish time
+(`ReplicaSlot::publish_obs`). Per-replica trajectories are K-invariant
+by construction (each replica owns its own streams and runs exactly
+alpha steps per iteration), so one sequential simulation yields the pin
+for every (n_threads, K) factorization.
 
 Run: python3 python/tools/pin_signatures.py
 """
 
+import struct
+
 MASK = (1 << 64) - 1
 
-F32_BITS = {0.0: 0x0000_0000, 1.0: 0x3F80_0000, -1.0: 0xBF80_0000}
+
+def f32_bits(v):
+    """Bit pattern of the f32 nearest to ``v`` (little-endian u32)."""
+    return struct.unpack("<I", struct.pack("<f", v))[0]
 
 
 class SplitMix64:
@@ -42,6 +50,12 @@ class SplitMix64:
         z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
         return z ^ (z >> 31)
 
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return self.next_u64() % n
+
 
 class Fnv:
     """coordinator/common.rs FNV-1a over little-endian u64 bytes."""
@@ -58,18 +72,22 @@ class Fnv:
         return self.h
 
 
-HEIGHT, WIDTH, OBS_DIM = 10, 5, 50
+HEIGHT, WIDTH, CATCH_OBS = 10, 5, 50
 
 
 class Catch:
     """envs/catch.rs, calm variant (wind = 0: step draws no RNG)."""
 
+    n_agents = 1
+    act_dim = 3
+
     def reset(self, rng):
         self.ball_row = 0
-        self.ball_col = rng.next_u64() % WIDTH
+        self.ball_col = rng.below(WIDTH)
         self.paddle_col = WIDTH // 2
 
-    def step(self, act):
+    def step(self, actions, rng):
+        act = actions[0]
         if act == 0:
             self.paddle_col = max(0, self.paddle_col - 1)
         elif act == 2:
@@ -80,29 +98,129 @@ class Catch:
             return reward, True
         return 0.0, False
 
-    def obs(self):
-        o = [0.0] * OBS_DIM
+    def obs_for(self, _agent):
+        o = [0.0] * CATCH_OBS
         o[self.ball_row * WIDTH + self.ball_col] = 1.0
         o[(HEIGHT - 1) * WIDTH + self.paddle_col] = -1.0
         return o
 
 
-def simulate(n_envs=8, alpha=5, iters=4, seed=42, act_dim=3):
-    """Mirror `run_harness_with(modulo_policy, "catch", 1, None, ...)`."""
-    sig_xor = 0
-    # per-iteration gathered [T, B] storage, hashed like hash_storage()
-    store_obs = [[None] * n_envs for _ in range(alpha)]
-    store_act = [[0] * n_envs for _ in range(alpha)]
-    store_rew = [[0.0] * n_envs for _ in range(alpha)]
-    store_done = [[0.0] * n_envs for _ in range(alpha)]
-    store_last = [None] * n_envs
+N, TEAM_GOALS, TEAM_MAX_STEPS, TEAM_OBS = 8, 4, 96, 66
+
+
+def team_mv(pos, act):
+    r, c = pos
+    if act == 0:
+        return (max(r - 1, 0), c)
+    if act == 1:
+        return (min(r + 1, N - 1), c)
+    if act == 2:
+        return (r, max(c - 1, 0))
+    return (r, min(c + 1, N - 1))
+
+
+class TeamGridWorld:
+    """envs/gridworld.rs::TeamGridWorld, `gather` scenario, dense reward.
+
+    Draw order (pinned): reset draws goals (rejection against earlier
+    goals) then agents (rejection against all goals); each step draws,
+    per agent in index order, one slip gate when slip > 0 plus one
+    direction when the gate fires. Observation writes draw nothing.
+    """
+
+    act_dim = 4
+
+    def __init__(self, n_agents, slip):
+        self.n_agents = n_agents
+        self.slip = slip
+
+    def reset(self, rng):
+        self.goals = []
+        for _g in range(TEAM_GOALS):
+            while True:
+                pos = (rng.below(N), rng.below(N))
+                if pos not in self.goals:
+                    break
+            self.goals.append(pos)
+        self.captured = [False] * TEAM_GOALS
+        self.agents = []
+        for _a in range(self.n_agents):
+            while True:
+                pos = (rng.below(N), rng.below(N))
+                if pos not in self.goals:
+                    break
+            self.agents.append(pos)
+        self.t = 0
+
+    def step(self, actions, rng):
+        for a in range(self.n_agents):
+            act = actions[a]
+            if self.slip > 0.0 and rng.next_f64() < self.slip:
+                act = rng.below(4)
+            self.agents[a] = team_mv(self.agents[a], act)
+        new_caps = 0
+        for a in range(self.n_agents):
+            for g in range(TEAM_GOALS):
+                if not self.captured[g] and self.agents[a] == self.goals[g]:
+                    self.captured[g] = True
+                    new_caps += 1
+        self.t += 1
+        if new_caps > 0:
+            reward = 0.25 * new_caps
+        else:
+            reward = -0.01  # dense shaping penalty (sparse=0)
+        done = all(self.captured) or self.t >= TEAM_MAX_STEPS
+        return reward, done
+
+    def obs_for(self, agent):
+        o = [0.0] * TEAM_OBS
+        for g, (gr, gc) in enumerate(self.goals):
+            if not self.captured[g]:
+                o[gr * N + gc] = 0.5
+        for i, (ar, ac) in enumerate(self.agents):
+            if i != agent:
+                o[ar * N + ac] = -0.5
+        mr, mc = self.agents[agent]
+        o[mr * N + mc] = 1.0
+        best = None  # (d2, goal index), first strict minimum
+        for g, (gr, gc) in enumerate(self.goals):
+            if self.captured[g]:
+                continue
+            d2 = (gr - mr) ** 2 + (gc - mc) ** 2
+            if best is None or d2 < best[0]:
+                best = (d2, g)
+        if best is not None:
+            gr, gc = self.goals[best[1]]
+            o[N * N] = (gr - mr) / 8.0
+            o[N * N + 1] = (gc - mc) / 8.0
+        return o
+
+
+def simulate(make_env, n_envs=8, alpha=5, iters=4, seed=42):
+    """Mirror `run_harness_with(modulo_policy, ...)` from tests/pool.rs.
+
+    Per replica: env stream 1000+r, seed stream 2000+r (delay stream
+    3000+r is undrawn — StepTimeModel::None). Publish draws one seed per
+    agent in agent order; the stand-in action is ``seed % act_dim``; the
+    step's env draws follow; an episode-ending step resets from the env
+    stream. Signature update order per step: per-agent
+    ``(a << 32) | act``, then reward bits, then done.
+    """
+    probe = make_env()
+    n_agents, act_dim = probe.n_agents, probe.act_dim
+    b = n_envs * n_agents
+    store_obs = [[None] * b for _ in range(alpha)]
+    store_act = [[0] * b for _ in range(alpha)]
+    store_rew = [[0.0] * b for _ in range(alpha)]
+    store_done = [[0.0] * b for _ in range(alpha)]
+    store_last = [None] * b
     batch_hashes = []
 
     envs, env_rngs, seed_rngs, sigs = [], [], [], []
     for r in range(n_envs):
         env_rngs.append(SplitMix64.stream(seed, 1000 + r))
         seed_rngs.append(SplitMix64.stream(seed, 2000 + r))
-        e = Catch()
+        e = make_env()
         e.reset(env_rngs[r])  # ReplicaSlot::new resets on construction
         envs.append(e)
         f = Fnv()
@@ -113,44 +231,62 @@ def simulate(n_envs=8, alpha=5, iters=4, seed=42, act_dim=3):
         for r in range(n_envs):
             env, sig = envs[r], sigs[r]
             for t in range(alpha):
-                s = seed_rngs[r].next_u64()  # publish_obs draws the seed
-                act = s % act_dim  # stand-in modulo policy
-                obs_pre = env.obs()
-                reward, done = env.step(act)
-                store_obs[t][r] = obs_pre
-                store_act[t][r] = act
-                store_rew[t][r] = reward
-                store_done[t][r] = 1.0 if done else 0.0
-                sig.update(act)  # agent 0: (0 << 32) | act
-                sig.update(F32_BITS[reward])
+                obs_pre = [env.obs_for(a) for a in range(n_agents)]
+                seeds = [seed_rngs[r].next_u64() for _ in range(n_agents)]
+                actions = [s % act_dim for s in seeds]
+                reward, done = env.step(actions, env_rngs[r])
+                for a in range(n_agents):
+                    col = r * n_agents + a
+                    store_obs[t][col] = obs_pre[a]
+                    store_act[t][col] = actions[a]
+                    store_rew[t][col] = reward
+                    store_done[t][col] = 1.0 if done else 0.0
+                    sig.update(((a << 32) | actions[a]) & MASK)
+                sig.update(f32_bits(reward))
                 sig.update(1 if done else 0)
                 if done:
                     env.reset(env_rngs[r])  # on-done reset, post-step
-            store_last[r] = env.obs()
+            for a in range(n_agents):
+                store_last[r * n_agents + a] = env.obs_for(a)
         h = Fnv()
         for t in range(alpha):
-            for r in range(n_envs):
-                for v in store_obs[t][r]:
-                    h.update(F32_BITS[v])
-        for field in (store_act, store_rew, store_done):
+            for col in range(b):
+                for v in store_obs[t][col]:
+                    h.update(f32_bits(v))
+        for t in range(alpha):
+            for col in range(b):
+                h.update(store_act[t][col])
+        for field in (store_rew, store_done):
             for t in range(alpha):
-                for r in range(n_envs):
-                    v = field[t][r]
-                    h.update(v if isinstance(v, int) else F32_BITS[v])
-        for r in range(n_envs):
-            for v in store_last[r]:
-                h.update(F32_BITS[v])
+                for col in range(b):
+                    h.update(f32_bits(field[t][col]))
+        for col in range(b):
+            for v in store_last[col]:
+                h.update(f32_bits(v))
         batch_hashes.append(h.finish())
 
+    sig_xor = 0
     for f in sigs:
         sig_xor ^= f.finish()
     return sig_xor, batch_hashes
 
 
-if __name__ == "__main__":
-    sig, hashes = simulate()
+def emit(label, sig, hashes):
+    print(f"// {label}")
     print(f"const PINNED_SIGNATURE: u64 = 0x{sig:016x};")
-    print("const PINNED_BATCH_HASHES: [u64; 4] = [")
+    print(f"const PINNED_BATCH_HASHES: [u64; {len(hashes)}] = [")
     for h in hashes:
         print(f"    0x{h:016x},")
     print("];")
+
+
+if __name__ == "__main__":
+    emit(
+        "tests/pool.rs::pool_signatures_pinned — catch, 1 agent",
+        *simulate(Catch),
+    )
+    emit(
+        "tests/pool.rs::team_gridworld_signatures_pinned — "
+        "gridworld_team/gather?slip=0.15, 2 agents",
+        *simulate(lambda: TeamGridWorld(2, 0.15)),
+    )

@@ -440,12 +440,76 @@ fn bench_pool_vs_blocking(rec: &mut Recorder) {
     }
 }
 
+/// ISSUE 4 satellite (perf): `EnvSpec::build` used to re-run the spec
+/// parser — string splits, `BTreeMap` allocation, bounds re-checks — on
+/// **every** replica construction, including once per episode in
+/// `evaluate_params`. Build now consumes the parse-time `ResolvedSpec`
+/// cache; this bench measures parse vs build and *asserts* the
+/// construction cost: a calm-catch build is one heap allocation (the
+/// `Box<dyn Env>`), a multi-agent team build a handful of `Vec`s —
+/// parser allocations on the build path trip the bound and fail CI.
+fn bench_spec_resolution(rec: &mut Recorder) {
+    println!("== spec resolution: parse+probe vs parse-free build ==");
+    bench(
+        rec,
+        "EnvSpec::by_name (catch?wind=0.15)",
+        "spec_parse_catch",
+        20_000,
+        || {
+            std::hint::black_box(
+                EnvSpec::by_name("catch?wind=0.15").unwrap(),
+            );
+        },
+    );
+    for (label, key, spec, max_allocs) in [
+        (
+            "spec.build catch?wind=0.15",
+            "env_build_catch",
+            EnvSpec::by_name("catch?wind=0.15").unwrap(),
+            2.0,
+        ),
+        (
+            "spec.build gridworld_team 2ag",
+            "env_build_team",
+            EnvSpec::by_name("gridworld_team/gather?slip=0.15")
+                .unwrap()
+                .with_agents(2)
+                .unwrap(),
+            8.0,
+        ),
+    ] {
+        const N: u64 = 20_000;
+        for _ in 0..N / 10 {
+            std::hint::black_box(spec.build().unwrap()); // warm-up
+        }
+        let allocs0 = allocations();
+        let t0 = Instant::now();
+        for _ in 0..N {
+            std::hint::black_box(spec.build().unwrap());
+        }
+        let per_us = t0.elapsed().as_secs_f64() / N as f64 * 1e6;
+        let per_allocs = (allocations() - allocs0) as f64 / N as f64;
+        println!(
+            "{label:<44} {per_us:>12.3} µs/op  {per_allocs:>6.2} \
+             allocs/build"
+        );
+        rec.record(&format!("{key}_us"), per_us);
+        rec.record(&format!("{key}_allocs"), per_allocs);
+        assert!(
+            per_allocs <= max_allocs,
+            "{label}: {per_allocs} allocs/build — EnvSpec::build must \
+             stay parse-free on the replica-construction path"
+        );
+    }
+}
+
 fn main() {
     let mut rec = Recorder::new();
     println!("== component micro-benchmarks ==");
 
     bench_contended_write_path(&mut rec);
     bench_pool_vs_blocking(&mut rec);
+    bench_spec_resolution(&mut rec);
 
     // RNG + sampling
     let mut rng = SplitMix64::new(1);

@@ -3,9 +3,20 @@
 //! step penalty, +1 at the goal. The `sparse` registry param removes the
 //! shaping penalty, making credit assignment harder (second difficulty
 //! tier; `gridworld_sparse` is the `sparse=1` preset).
+//!
+//! The same board also hosts [`TeamGridWorld`] — the `gridworld_team`
+//! registry family (ISSUE 4 tentpole): a cheap, fast *multi-agent*
+//! workload so the pool/plane multi-agent path is exercised by something
+//! lighter than FootballSim. Up to four agents cooperatively capture
+//! four goals; observations share the single-agent family's 66-feature
+//! layout (and therefore the `gridworld` model config), agent-major on
+//! the flat plane.
+
+use std::ops::RangeInclusive;
 
 use super::{Env, StepInfo};
 use crate::rng::SplitMix64;
+use anyhow::{bail, Result};
 
 pub const N: usize = 8;
 pub const OBS_DIM: usize = N * N + 2; // 66, matches `gridworld` model cfg
@@ -80,6 +91,250 @@ impl Env for GridWorld {
     }
 }
 
+/// Named sub-scenarios of the `gridworld_team` family.
+pub const TEAM_SCENARIOS: [&str; 2] = ["gather", "corners"];
+
+/// Goals per team episode (all must be captured to win).
+pub const TEAM_N_GOALS: usize = 4;
+
+/// Team episode step cap.
+pub const TEAM_MAX_STEPS: usize = 96;
+
+/// Per-scenario controlled-agent bounds — the registry's `agents=`
+/// validation source. `gather` is playable solo; `corners` (goals pinned
+/// to the four board corners) needs a real team.
+pub fn team_agent_bounds(scenario: &str) -> Result<RangeInclusive<usize>> {
+    match scenario {
+        "gather" => Ok(1..=4),
+        "corners" => Ok(2..=4),
+        other => bail!(
+            "unknown gridworld_team scenario '{other}' (known: {})",
+            TEAM_SCENARIOS.join(", ")
+        ),
+    }
+}
+
+/// Cooperative multi-agent goal capture on the 8×8 board.
+///
+/// Rules: [`TEAM_N_GOALS`] goals are placed at reset (`gather`: drawn
+/// distinct; `corners`: the four board corners, draw-free). Each step
+/// every agent moves (UDLR); any agent entering an uncaptured goal cell
+/// captures it. Reward is `0.25 × new captures` on a capturing step,
+/// otherwise a `-0.01` shaping penalty (`sparse=1` removes it); an
+/// episode totals exactly `+1.0` when the team captures everything.
+/// Done when all goals are captured or after [`TEAM_MAX_STEPS`] steps.
+///
+/// Per-agent observation (66 features — the `gridworld` model config):
+/// the 64-cell board plane holding uncaptured goals (`0.5`), teammates
+/// (`-0.5`, overwriting a shared goal mark is impossible since occupied
+/// goals are captured) and own position (`1.0`, written last), plus the
+/// normalized offset to the nearest uncaptured goal (squared-distance
+/// nearest, first index on ties; zero when none remain). All
+/// observation values are exactly representable in f32, keeping the
+/// `pin_signatures.py` transliteration bit-portable.
+///
+/// RNG contract (draw order is pinned by `rust/tests/pool.rs`):
+/// `reset` draws goal cells (gather only) then agent cells, each by
+/// rejection; `step` draws, per agent in index order, one gate draw when
+/// `slip > 0` plus one direction draw when the gate fires (the agent's
+/// move is replaced by a random direction — the difficulty knob the
+/// curriculum suites sweep). Observation writes draw nothing.
+pub struct TeamGridWorld {
+    n_agents: usize,
+    slip: f64,
+    sparse: bool,
+    /// `corners` scenario: goals pinned, reset draws none for them.
+    fixed_goals: bool,
+    agents: Vec<(usize, usize)>,
+    goals: Vec<(usize, usize)>,
+    captured: Vec<bool>,
+    t: usize,
+}
+
+impl TeamGridWorld {
+    pub fn new(
+        scenario: &str,
+        n_agents: usize,
+        slip: f64,
+        sparse: bool,
+    ) -> Result<TeamGridWorld> {
+        let bounds = team_agent_bounds(scenario)?;
+        // No silent clamping (same policy as Football::new): bad agent
+        // counts are caught by the registry at parse time, and loudly
+        // here if construction is reached through some other path.
+        anyhow::ensure!(
+            bounds.contains(&n_agents),
+            "gridworld_team/{scenario} supports {}..={} agents, got \
+             {n_agents}",
+            bounds.start(),
+            bounds.end()
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&slip),
+            "gridworld_team slip must be in [0, 1], got {slip}"
+        );
+        Ok(TeamGridWorld {
+            n_agents,
+            slip,
+            sparse,
+            fixed_goals: scenario == "corners",
+            agents: vec![(0, 0); n_agents],
+            goals: vec![(0, 0); TEAM_N_GOALS],
+            captured: vec![false; TEAM_N_GOALS],
+            t: 0,
+        })
+    }
+
+    fn write_obs_for(&self, agent: usize, o: &mut [f32]) {
+        debug_assert_eq!(o.len(), OBS_DIM);
+        o.fill(0.0);
+        for (g, &(gr, gc)) in self.goals.iter().enumerate() {
+            if !self.captured[g] {
+                o[gr * N + gc] = 0.5;
+            }
+        }
+        for (i, &(ar, ac)) in self.agents.iter().enumerate() {
+            if i != agent {
+                o[ar * N + ac] = -0.5;
+            }
+        }
+        let me = self.agents[agent];
+        o[me.0 * N + me.1] = 1.0;
+        // nearest uncaptured goal: first strict minimum of the squared
+        // distance, in goal-index order (deterministic tie-break)
+        let (mut best_d2, mut best_g) = (i64::MAX, usize::MAX);
+        for (g, &(gr, gc)) in self.goals.iter().enumerate() {
+            if self.captured[g] {
+                continue;
+            }
+            let dr = gr as i64 - me.0 as i64;
+            let dc = gc as i64 - me.1 as i64;
+            let d2 = dr * dr + dc * dc;
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best_g = g;
+            }
+        }
+        if best_g != usize::MAX {
+            let (gr, gc) = self.goals[best_g];
+            o[N * N] = (gr as f32 - me.0 as f32) / N as f32;
+            o[N * N + 1] = (gc as f32 - me.1 as f32) / N as f32;
+        }
+    }
+
+    fn write_all_obs(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_agents * OBS_DIM);
+        for (a, o) in out.chunks_mut(OBS_DIM).enumerate() {
+            self.write_obs_for(a, o);
+        }
+    }
+
+    fn mv(pos: (usize, usize), act: usize) -> (usize, usize) {
+        let (r, c) = pos;
+        match act {
+            0 => (r.saturating_sub(1), c),
+            1 => ((r + 1).min(N - 1), c),
+            2 => (r, c.saturating_sub(1)),
+            _ => (r, (c + 1).min(N - 1)),
+        }
+    }
+}
+
+impl Env for TeamGridWorld {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        4
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    fn reset_into(&mut self, rng: &mut SplitMix64, out: &mut [f32]) {
+        // goals first (distinct cells), then agents (never on a goal) —
+        // this exact draw order is transliterated in pin_signatures.py
+        if self.fixed_goals {
+            self.goals.copy_from_slice(&[
+                (0, 0),
+                (0, N - 1),
+                (N - 1, 0),
+                (N - 1, N - 1),
+            ]);
+        } else {
+            for g in 0..TEAM_N_GOALS {
+                loop {
+                    let pos = (
+                        rng.below(N as u64) as usize,
+                        rng.below(N as u64) as usize,
+                    );
+                    if !self.goals[..g].contains(&pos) {
+                        self.goals[g] = pos;
+                        break;
+                    }
+                }
+            }
+        }
+        self.captured.fill(false);
+        for a in 0..self.n_agents {
+            loop {
+                let pos = (
+                    rng.below(N as u64) as usize,
+                    rng.below(N as u64) as usize,
+                );
+                if !self.goals.contains(&pos) {
+                    self.agents[a] = pos;
+                    break;
+                }
+            }
+        }
+        self.t = 0;
+        self.write_all_obs(out);
+    }
+
+    fn step_into(
+        &mut self,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
+        assert_eq!(actions.len(), self.n_agents);
+        for (a, &chosen) in actions.iter().enumerate() {
+            let act = if self.slip > 0.0 && rng.next_f64() < self.slip {
+                rng.below(4) as usize
+            } else {
+                chosen
+            };
+            self.agents[a] = Self::mv(self.agents[a], act);
+        }
+        let mut new_caps = 0usize;
+        for a in 0..self.n_agents {
+            for g in 0..TEAM_N_GOALS {
+                if !self.captured[g] && self.agents[a] == self.goals[g] {
+                    self.captured[g] = true;
+                    new_caps += 1;
+                }
+            }
+        }
+        self.t += 1;
+        // every reward value is a single exactly-representable constant
+        // (0.25·k or −0.01) so the integer pin transliteration holds
+        let reward = if new_caps > 0 {
+            0.25 * new_caps as f32
+        } else if self.sparse {
+            0.0
+        } else {
+            -0.01
+        };
+        let done = self.captured.iter().all(|&c| c)
+            || self.t >= TEAM_MAX_STEPS;
+        self.write_all_obs(out);
+        StepInfo { reward, done }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +406,142 @@ mod tests {
         env.reset_into(&mut rng, &mut o);
         assert_eq!(o[..N * N].iter().filter(|&&v| v == 1.0).count(), 1);
         assert!(o[..N * N].iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    /// Greedy team play: every agent walks toward its observed nearest
+    /// uncaptured goal; the team must clear the board for exactly +1.0
+    /// (0.25 per capture) well before the step cap.
+    #[test]
+    fn team_greedy_cooperation_captures_all_goals() {
+        let mut rng = SplitMix64::new(11);
+        for n_agents in [1usize, 2, 4] {
+            let mut env =
+                TeamGridWorld::new("gather", n_agents, 0.0, false).unwrap();
+            let mut obs = vec![0.0f32; n_agents * OBS_DIM];
+            for _ in 0..10 {
+                env.reset_into(&mut rng, &mut obs);
+                let mut total = 0.0f64;
+                let mut captures = 0.0f64;
+                loop {
+                    let acts: Vec<usize> = (0..n_agents)
+                        .map(|a| {
+                            let o = &obs[a * OBS_DIM..(a + 1) * OBS_DIM];
+                            let (dr, dc) = (o[N * N], o[N * N + 1]);
+                            if dr < 0.0 {
+                                0
+                            } else if dr > 0.0 {
+                                1
+                            } else if dc < 0.0 {
+                                2
+                            } else {
+                                3
+                            }
+                        })
+                        .collect();
+                    let s = env.step_into(&acts, &mut rng, &mut obs);
+                    total += s.reward as f64;
+                    if s.reward > 0.0 {
+                        captures += s.reward as f64;
+                    }
+                    if s.done {
+                        break;
+                    }
+                }
+                assert_eq!(captures, 1.0, "{n_agents} agents missed goals");
+                assert!(total > 0.5, "{n_agents} agents: total={total}");
+            }
+        }
+    }
+
+    #[test]
+    fn team_corners_scenario_pins_goals() {
+        let mut rng = SplitMix64::new(12);
+        let mut env = TeamGridWorld::new("corners", 2, 0.0, false).unwrap();
+        let mut obs = vec![0.0f32; 2 * OBS_DIM];
+        env.reset_into(&mut rng, &mut obs);
+        assert_eq!(
+            env.goals,
+            vec![(0, 0), (0, N - 1), (N - 1, 0), (N - 1, N - 1)]
+        );
+        // agents never start on a goal
+        for &a in &env.agents {
+            assert!(!env.goals.contains(&a));
+        }
+    }
+
+    #[test]
+    fn team_timeout_and_bounds() {
+        let mut rng = SplitMix64::new(13);
+        let mut env = TeamGridWorld::new("gather", 2, 0.0, true).unwrap();
+        let mut obs = vec![0.0f32; 2 * OBS_DIM];
+        env.reset_into(&mut rng, &mut obs);
+        // idle in place (action 0 against the top wall after reaching it
+        // may still capture by accident; force the corner-bounce instead)
+        env.agents = vec![(3, 3); 2];
+        env.goals = vec![(0, 0), (0, 7), (7, 0), (7, 7)];
+        env.captured = vec![false; 4];
+        let mut n = 0;
+        loop {
+            n += 1;
+            // bounce between two non-goal cells
+            let act = if n % 2 == 0 { 0 } else { 1 };
+            if env.step_into(&[act, act], &mut rng, &mut obs).done {
+                break;
+            }
+        }
+        assert_eq!(n, TEAM_MAX_STEPS);
+        // constructor rejects out-of-bounds teams and slip
+        assert!(TeamGridWorld::new("gather", 0, 0.0, false).is_err());
+        assert!(TeamGridWorld::new("gather", 5, 0.0, false).is_err());
+        assert!(TeamGridWorld::new("corners", 1, 0.0, false).is_err());
+        assert!(TeamGridWorld::new("gather", 2, 1.5, false).is_err());
+        assert!(TeamGridWorld::new("maze", 2, 0.0, false).is_err());
+    }
+
+    #[test]
+    fn team_obs_layout_goals_teammates_self() {
+        let mut rng = SplitMix64::new(14);
+        let mut env = TeamGridWorld::new("corners", 2, 0.0, false).unwrap();
+        let mut obs = vec![9.0f32; 2 * OBS_DIM]; // must be overwritten
+        env.reset_into(&mut rng, &mut obs);
+        for a in 0..2 {
+            let o = &obs[a * OBS_DIM..(a + 1) * OBS_DIM];
+            let board = &o[..N * N];
+            assert_eq!(
+                board.iter().filter(|&&v| v == 0.5).count(),
+                4,
+                "four uncaptured goal marks"
+            );
+            assert_eq!(board.iter().filter(|&&v| v == 1.0).count(), 1);
+            // the teammate mark may be hidden under own position only if
+            // the two agents share a cell
+            let mates = board.iter().filter(|&&v| v == -0.5).count();
+            assert!(mates <= 1);
+            // offset points at the nearest corner: magnitude < 8/8
+            assert!(o[N * N].abs() <= 1.0 && o[N * N + 1].abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn team_slip_consumes_rng_and_changes_dynamics() {
+        let run = |slip: f64| -> Vec<(f32, bool)> {
+            let mut rng = SplitMix64::new(15);
+            let mut env =
+                TeamGridWorld::new("gather", 2, slip, false).unwrap();
+            let mut obs = vec![0.0f32; 2 * OBS_DIM];
+            env.reset_into(&mut rng, &mut obs);
+            (0..120)
+                .map(|t| {
+                    let s = env.step_into(&[t % 4, (t + 1) % 4], &mut rng,
+                                          &mut obs);
+                    if s.done {
+                        env.reset_into(&mut rng, &mut obs);
+                    }
+                    (s.reward, s.done)
+                })
+                .collect()
+        };
+        assert_eq!(run(0.0), run(0.0));
+        assert_ne!(run(0.0), run(0.9), "slip must consume RNG draws");
     }
 }

@@ -41,7 +41,7 @@ pub mod suite;
 
 use crate::rng::SplitMix64;
 use anyhow::Result;
-pub use registry::{registry, EnvRegistry};
+pub use registry::{registry, EnvRegistry, ResolvedSpec};
 pub use steptime::StepTimeModel;
 
 /// Scalar outcome of a single environment step. Reward and done are
@@ -84,7 +84,11 @@ pub trait Env: Send {
 
 /// Everything needed to (re)create an environment instance — specs are
 /// cheap to clone and are the unit the registry, evaluator, and all
-/// drivers share.
+/// drivers share. Besides the canonical string, a spec carries its
+/// parse-time [`ResolvedSpec`] (family entry, interned scenario,
+/// resolved params), so [`EnvSpec::build`] on the replica-construction
+/// path performs **no spec-string parsing** (ISSUE 4 satellite;
+/// measured and asserted in `bench_components`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EnvSpec {
     /// Canonical spec string: `family[/scenario][?key=val,...]`, with
@@ -94,6 +98,9 @@ pub struct EnvSpec {
     pub model: String,
     pub n_agents: usize,
     pub steptime: StepTimeModel,
+    /// Parse-time resolution cache — what `build` consumes instead of
+    /// re-parsing `name` on every replica construction.
+    resolved: ResolvedSpec,
 }
 
 impl EnvSpec {
@@ -107,9 +114,11 @@ impl EnvSpec {
 
     /// Override the controlled-agent count. Validated against the
     /// family's per-scenario bounds (same check `?agents=` gets at parse
-    /// time).
-    pub fn with_agents(self, n: usize) -> Result<EnvSpec> {
-        registry().with_agents(self, n)
+    /// time) — via the resolution cache, without re-parsing the spec.
+    pub fn with_agents(mut self, n: usize) -> Result<EnvSpec> {
+        self.resolved.check_agents(n)?;
+        self.n_agents = n;
+        Ok(self)
     }
 
     pub fn with_steptime(mut self, st: StepTimeModel) -> EnvSpec {
@@ -131,9 +140,13 @@ impl EnvSpec {
         }
     }
 
-    /// Instantiate a fresh environment replica via the registry.
+    /// Instantiate a fresh environment replica. Parse-free: goes
+    /// straight from the cached [`ResolvedSpec`] to the family
+    /// constructor — executor slots call this once per replica and
+    /// `evaluate_params` once per episode, so no string splitting or
+    /// map allocation happens here.
     pub fn build(&self) -> Result<Box<dyn Env>> {
-        registry().build(self)
+        self.resolved.build(self.n_agents)
     }
 }
 
@@ -207,7 +220,11 @@ mod tests {
 
     #[test]
     fn all_envs_build_and_step() {
-        for name in suite::all_envs() {
+        let mut names = suite::all_envs();
+        for f in registry().families() {
+            names.extend(registry().scenario_specs(f.name).unwrap());
+        }
+        for name in names {
             let spec = EnvSpec::by_name(&name).unwrap();
             let mut rng = SplitMix64::new(1);
             let mut env = spec.build().unwrap();
@@ -230,7 +247,14 @@ mod tests {
 
     #[test]
     fn trajectories_deterministic_in_stream() {
-        for name in ["catch", "gridworld", "cartpole", "football/3_vs_1_with_keeper"] {
+        for name in [
+            "catch",
+            "gridworld",
+            "cartpole",
+            "football/3_vs_1_with_keeper",
+            "gridworld_team/gather?agents=2,slip=0.2",
+            "gridworld_team/corners",
+        ] {
             let spec = EnvSpec::by_name(name).unwrap();
             assert_eq!(roll(&spec, 42, 200), roll(&spec, 42, 200), "{name}");
             assert_ne!(roll(&spec, 42, 200), roll(&spec, 43, 200), "{name}");

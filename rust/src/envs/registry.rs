@@ -8,19 +8,32 @@
 //! ```text
 //! spec     := base [ "?" params ]
 //! base     := family | family "/" scenario | variant
-//! params   := key "=" value { "," key "=" value }
+//! params   := key "=" value { "," key "=" value }   (keys unique)
 //! ```
 //!
 //! so `catch?wind=0.15`, `cartpole?noise=0.1`, and
 //! `football/3_vs_1_with_keeper?agents=3` are all valid specs, and the
 //! historical flat names (`catch_windy`, `gridworld_sparse`, ...) are
 //! *variants* — named parameter presets registered as data, not match
-//! arms. `agents=` is a universal key, validated against the family's
-//! per-scenario bounds at parse time (never inside a spawned executor).
+//! arms. A repeated query key (including `agents=`) is a parse error,
+//! not a silent last-wins: `catch?wind=0.1,wind=0.2` used to keep both
+//! pairs in the canonical name while applying only the last. `agents=`
+//! is a universal key, validated against the family's per-scenario
+//! bounds at parse time (never inside a spawned executor); when omitted
+//! it defaults to the scenario's *minimum* bound, so scenarios that
+//! require a team (`gridworld_team/corners`) still parse bare.
 //!
-//! The suite lists (`suite::all_envs`, `suite::football_suite`) are
-//! derived from this table, so adding a family or variant here is the
-//! whole job: parser, builder, and listings cannot drift.
+//! Parsing happens **once**: the returned [`EnvSpec`] carries a
+//! [`ResolvedSpec`] — the family entry, interned scenario, and resolved
+//! parameter list — so [`EnvSpec::build`] on the replica-construction
+//! hot path (executor slots, per-episode eval) performs no string
+//! splitting, no map allocation, and no re-validation beyond the O(1)
+//! agent-bounds check.
+//!
+//! The suite lists (`suite::all_envs`, `suite::football_suite`, the
+//! sweep-expanded `suite::SUITES`) are derived from this table, so
+//! adding a family or variant here is the whole job: parser, builder,
+//! and listings cannot drift.
 
 use std::collections::BTreeMap;
 use std::ops::RangeInclusive;
@@ -41,18 +54,84 @@ pub struct Variant {
 pub struct EnvArgs<'a> {
     pub scenario: Option<&'a str>,
     pub n_agents: usize,
-    params: &'a BTreeMap<&'static str, f64>,
+    /// Resolved `(key, value)` pairs, sorted by key (two or three entries
+    /// at most — linear scan beats a map here and allocates nothing on
+    /// the build path).
+    params: &'a [(&'static str, f64)],
 }
 
 impl EnvArgs<'_> {
     /// Numeric parameter with a default.
     pub fn f(&self, key: &str, default: f64) -> f64 {
-        self.params.get(key).copied().unwrap_or(default)
+        self.params
+            .iter()
+            .find(|&&(k, _)| k == key)
+            .map_or(default, |&(_, v)| v)
     }
 
     /// Boolean parameter (any non-zero value is true; default false).
     pub fn flag(&self, key: &str) -> bool {
         self.f(key, 0.0) != 0.0
+    }
+}
+
+/// The parse-time product an [`EnvSpec`] carries so replica construction
+/// is parse-free (ISSUE 4 satellite): the family table entry, the
+/// interned scenario, and the resolved parameter list. `EnvSpec::build`
+/// goes straight from here to the family constructor — no string
+/// splitting, no `BTreeMap`, no per-replica re-validation work beyond
+/// the O(1) agent-bounds check (executor slots build one env per
+/// replica; `evaluate_params` builds one per *episode*).
+#[derive(Clone)]
+pub struct ResolvedSpec {
+    family: &'static EnvFamily,
+    scenario: Option<&'static str>,
+    params: Box<[(&'static str, f64)]>,
+}
+
+impl ResolvedSpec {
+    /// Name of the family this spec resolved to.
+    pub fn family_name(&self) -> &'static str {
+        self.family.name
+    }
+
+    /// Validate an agent count against the family's per-scenario bounds.
+    pub(crate) fn check_agents(&self, n: usize) -> Result<()> {
+        check_agents(self.family, self.scenario, n)
+    }
+
+    /// Instantiate the environment — the parse-free replica-construction
+    /// path.
+    pub(crate) fn build(&self, n_agents: usize) -> Result<Box<dyn Env>> {
+        // Cheap tripwire (one fn call, no allocation): `EnvSpec` fields
+        // are public, so a hand-mutated agent count should still fail
+        // loudly here rather than inside the constructor.
+        self.check_agents(n_agents)?;
+        (self.family.build)(&EnvArgs {
+            scenario: self.scenario,
+            n_agents,
+            params: &self.params,
+        })
+    }
+}
+
+impl PartialEq for ResolvedSpec {
+    fn eq(&self, other: &ResolvedSpec) -> bool {
+        // families are registry singletons — pointer identity is name
+        // identity
+        std::ptr::eq(self.family, other.family)
+            && self.scenario == other.scenario
+            && self.params == other.params
+    }
+}
+
+impl std::fmt::Debug for ResolvedSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResolvedSpec")
+            .field("family", &self.family.name)
+            .field("scenario", &self.scenario)
+            .field("params", &self.params)
+            .finish()
     }
 }
 
@@ -73,10 +152,12 @@ pub struct EnvFamily {
     build: fn(&EnvArgs<'_>) -> Result<Box<dyn Env>>,
 }
 
-/// The resolved pieces of a spec string.
-struct SpecParts<'a> {
-    family: &'a EnvFamily,
-    scenario: Option<&'a str>,
+/// The resolved pieces of a spec string. Scenario strings are interned
+/// against the family's `&'static` scenario table during base
+/// resolution, so no borrow of the input survives parsing.
+struct SpecParts {
+    family: &'static EnvFamily,
+    scenario: Option<&'static str>,
     params: BTreeMap<&'static str, f64>,
     n_agents: usize,
     /// Canonical name: the base plus every non-`agents` query segment,
@@ -113,59 +194,47 @@ impl EnvRegistry {
     }
 
     /// All `family/<scenario>` specs of one family — the source of
-    /// `suite::football_suite`.
-    pub fn scenario_specs(&self, family: &str) -> Vec<String> {
-        self.families
-            .iter()
-            .filter(|f| f.name == family)
-            .flat_map(|f| {
-                f.scenarios.iter().map(move |s| format!("{}/{s}", f.name))
-            })
-            .collect()
+    /// `suite::football_suite` and the `family/*` sweep glob. An unknown
+    /// family name is an error, not an empty listing: a typo used to
+    /// silently turn a whole suite into zero experiments.
+    pub fn scenario_specs(&self, family: &str) -> Result<Vec<String>> {
+        let f = self.family(family).ok_or_else(|| {
+            anyhow!(
+                "unknown env family '{family}' (known: {})",
+                self.families
+                    .iter()
+                    .map(|f| f.name)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        Ok(f.scenarios.iter().map(|s| format!("{}/{s}", f.name)).collect())
     }
 
     /// Parse and fully validate a spec string (family, scenario, keys,
     /// values, and agent bounds — plus a probe construction, so a spec
-    /// that parses is a spec that builds).
-    pub fn spec(&self, s: &str) -> Result<EnvSpec> {
+    /// that parses is a spec that builds). The returned spec caches its
+    /// [`ResolvedSpec`], making every later `build` parse-free.
+    pub fn spec(&'static self, s: &str) -> Result<EnvSpec> {
         let p = self.parse_parts(s)?;
         let spec = EnvSpec {
             name: p.name,
             model: p.family.model.to_string(),
             n_agents: p.n_agents,
             steptime: (p.family.steptime)(p.scenario)?,
+            resolved: ResolvedSpec {
+                family: p.family,
+                scenario: p.scenario,
+                params: p.params.into_iter().collect(),
+            },
         };
         // Probe-build once so any constructor-level rejection (bad
         // parameter range, ...) surfaces at parse time too.
-        (p.family.build)(&EnvArgs {
-            scenario: p.scenario,
-            n_agents: p.n_agents,
-            params: &p.params,
-        })
-        .with_context(|| format!("invalid env spec '{s}'"))?;
+        spec.build().with_context(|| format!("invalid env spec '{s}'"))?;
         Ok(spec)
     }
 
-    /// Re-validate an agent-count override against the family bounds.
-    pub fn with_agents(&self, mut spec: EnvSpec, n: usize) -> Result<EnvSpec> {
-        let p = self.parse_parts(&spec.name)?;
-        check_agents(p.family, p.scenario, n)?;
-        spec.n_agents = n;
-        Ok(spec)
-    }
-
-    /// Instantiate the environment a spec describes.
-    pub fn build(&self, spec: &EnvSpec) -> Result<Box<dyn Env>> {
-        let p = self.parse_parts(&spec.name)?;
-        check_agents(p.family, p.scenario, spec.n_agents)?;
-        (p.family.build)(&EnvArgs {
-            scenario: p.scenario,
-            n_agents: spec.n_agents,
-            params: &p.params,
-        })
-    }
-
-    fn parse_parts<'a>(&'a self, s: &'a str) -> Result<SpecParts<'a>> {
+    fn parse_parts(&'static self, s: &str) -> Result<SpecParts> {
         let (base, query) = match s.split_once('?') {
             Some((b, q)) => (b, Some(q)),
             None => (s, None),
@@ -175,12 +244,28 @@ impl EnvRegistry {
         for &(k, v) in preset {
             params.insert(k, v);
         }
-        let mut n_agents = 1usize;
+        // When the spec doesn't say, run the smallest valid team — all
+        // single-agent families and every football scenario bound start
+        // at 1, so this only matters for scenarios that *require* a team
+        // (gridworld_team/corners).
+        let mut n_agents = *(family.agent_bounds)(scenario)?.start();
         let mut kept: Vec<&str> = Vec::new();
+        let mut seen: Vec<&str> = Vec::new();
         for pair in query.into_iter().flat_map(|q| q.split(',')) {
             let (key, val) = pair.split_once('=').ok_or_else(|| {
                 anyhow!("bad env param '{pair}' in '{s}' (want key=value)")
             })?;
+            // A duplicate key is a spec bug, never a harmless override:
+            // last-wins used to keep *both* pairs in the canonical name
+            // while applying only the second value. (A query key
+            // overriding a variant's *preset* value stays legal —
+            // `catch_windy?wind=0.35` is the supported spelling.)
+            anyhow::ensure!(
+                !seen.contains(&key),
+                "duplicate param '{key}' in '{s}' (each key may appear \
+                 once)"
+            );
+            seen.push(key);
             if key == "agents" {
                 n_agents = val.parse().with_context(|| {
                     format!("bad agents value '{val}' in '{s}'")
@@ -218,26 +303,33 @@ impl EnvRegistry {
     }
 
     /// Resolve the part before `?`: a family, `family/scenario`, or a
-    /// flat variant name.
+    /// flat variant name. The scenario is interned against the family's
+    /// static table so the result borrows nothing from the input.
     #[allow(clippy::type_complexity)]
-    fn resolve_base<'a>(
-        &'a self,
-        base: &'a str,
+    fn resolve_base(
+        &'static self,
+        base: &str,
     ) -> Result<(
-        &'a EnvFamily,
-        Option<&'a str>,
+        &'static EnvFamily,
+        Option<&'static str>,
         &'static [(&'static str, f64)],
     )> {
         if let Some((fam, scenario)) = base.split_once('/') {
             let family = self
                 .family(fam)
                 .ok_or_else(|| self.unknown(fam))?;
-            anyhow::ensure!(
-                family.scenarios.contains(&scenario),
-                "unknown {} scenario '{scenario}' (known: {})",
-                family.name,
-                family.scenarios.join(", ")
-            );
+            let scenario = family
+                .scenarios
+                .iter()
+                .copied()
+                .find(|&sc| sc == scenario)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "unknown {} scenario '{scenario}' (known: {})",
+                        family.name,
+                        family.scenarios.join(", ")
+                    )
+                })?;
             return Ok((family, Some(scenario), &[]));
         }
         if let Some(family) = self.family(base) {
@@ -330,6 +422,16 @@ impl EnvRegistry {
                     build: build_cartpole,
                 },
                 EnvFamily {
+                    name: "gridworld_team",
+                    model: "gridworld",
+                    scenarios: &gridworld::TEAM_SCENARIOS,
+                    variants: &[],
+                    params: &["slip", "sparse"],
+                    agent_bounds: team_agents,
+                    steptime: no_steptime,
+                    build: build_gridworld_team,
+                },
+                EnvFamily {
                     name: "football",
                     model: "football",
                     scenarios: &football::SCENARIOS,
@@ -373,15 +475,22 @@ fn no_steptime(_: Option<&str>) -> Result<StepTimeModel> {
 }
 
 fn football_agents(sc: Option<&str>) -> Result<RangeInclusive<usize>> {
-    Ok(1..=football::scenario_attackers(require_scenario(sc)?)?)
+    Ok(1..=football::scenario_attackers(require_scenario("football", sc)?)?)
 }
 
 fn football_steptime(sc: Option<&str>) -> Result<StepTimeModel> {
-    football::scenario_steptime(require_scenario(sc)?)
+    football::scenario_steptime(require_scenario("football", sc)?)
 }
 
-fn require_scenario(sc: Option<&str>) -> Result<&str> {
-    sc.ok_or_else(|| anyhow!("football spec needs football/<scenario>"))
+fn team_agents(sc: Option<&str>) -> Result<RangeInclusive<usize>> {
+    gridworld::team_agent_bounds(require_scenario("gridworld_team", sc)?)
+}
+
+fn require_scenario<'a>(
+    family: &str,
+    sc: Option<&'a str>,
+) -> Result<&'a str> {
+    sc.ok_or_else(|| anyhow!("{family} spec needs {family}/<scenario>"))
 }
 
 fn build_catch(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
@@ -396,9 +505,18 @@ fn build_cartpole(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
     Ok(Box::new(cartpole::CartPole::new(a.f("noise", 0.0))?))
 }
 
+fn build_gridworld_team(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
+    Ok(Box::new(gridworld::TeamGridWorld::new(
+        require_scenario("gridworld_team", a.scenario)?,
+        a.n_agents,
+        a.f("slip", 0.0),
+        a.flag("sparse"),
+    )?))
+}
+
 fn build_football(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
     Ok(Box::new(football::Football::new(
-        require_scenario(a.scenario)?,
+        require_scenario("football", a.scenario)?,
         a.n_agents,
     )?))
 }
@@ -435,7 +553,7 @@ mod tests {
     fn registry_roundtrip_every_family_and_variant() {
         let mut specs: Vec<String> = registry().variant_names();
         for f in registry().families() {
-            specs.extend(registry().scenario_specs(f.name));
+            specs.extend(registry().scenario_specs(f.name).unwrap());
         }
         specs.extend([
             "catch?wind=0.15".to_string(),
@@ -445,6 +563,9 @@ mod tests {
             "gridworld?sparse=1".to_string(),
             "football/3_vs_1_with_keeper?agents=3".to_string(),
             "football/corner?agents=2".to_string(),
+            "gridworld_team/gather?slip=0.15".to_string(),
+            "gridworld_team/gather?agents=3,slip=0.1,sparse=1".to_string(),
+            "gridworld_team/corners?agents=4".to_string(),
         ]);
         for s in specs {
             let spec = EnvSpec::by_name(&s)
@@ -504,6 +625,107 @@ mod tests {
         assert!(EnvSpec::by_name("catch").unwrap().with_agents(2).is_err());
     }
 
+    /// ISSUE 4: the multi-agent gridworld family's per-scenario bounds —
+    /// `gather` is playable solo, `corners` requires a team, both cap at
+    /// four agents; a bare spec defaults to the scenario's *minimum*
+    /// bound so every scenario listing parses.
+    #[test]
+    fn team_gridworld_agent_bounds_per_scenario() {
+        let gather = EnvSpec::by_name("gridworld_team/gather").unwrap();
+        assert_eq!(gather.n_agents, 1);
+        let corners = EnvSpec::by_name("gridworld_team/corners").unwrap();
+        assert_eq!(corners.n_agents, 2, "defaults to the minimum bound");
+        for good in [
+            "gridworld_team/gather?agents=4",
+            "gridworld_team/corners?agents=3",
+            "gridworld_team/gather?agents=2,slip=0.3",
+        ] {
+            let spec = EnvSpec::by_name(good).unwrap();
+            let env = spec.build().unwrap();
+            assert_eq!(env.n_agents(), spec.n_agents, "{good}");
+            assert_eq!(env.obs_dim(), 66, "{good}: gridworld model cfg");
+            assert_eq!(env.act_dim(), 4, "{good}");
+        }
+        for bad in [
+            "gridworld_team/gather?agents=5",
+            "gridworld_team/gather?agents=0",
+            "gridworld_team/corners?agents=1",
+            "gridworld_team/corners?agents=9",
+            "gridworld_team",            // scenario required
+            "gridworld_team/maze",       // unknown scenario
+            "gridworld_team/gather?slip=1.5", // constructor range check
+        ] {
+            assert!(EnvSpec::by_name(bad).is_err(), "'{bad}' parsed");
+        }
+        assert!(gather.clone().with_agents(4).is_ok());
+        assert!(gather.with_agents(5).is_err());
+        assert!(corners.with_agents(1).is_err());
+    }
+
+    /// ISSUE 4 satellite: duplicate query keys used to be silent
+    /// last-wins — `catch?wind=0.1,wind=0.2` kept both pairs in the
+    /// canonical name while applying only the last. Now a clean parse
+    /// error, including repeated `agents=`.
+    #[test]
+    fn duplicate_query_keys_rejected() {
+        for bad in [
+            "catch?wind=0.1,wind=0.2",
+            "catch?wind=0.1,wind=0.1", // same value is still a spec bug
+            "catch?narrow=1,wind=0.1,narrow=1",
+            "football/corner?agents=2,agents=2",
+            "gridworld_team/gather?agents=2,slip=0.1,agents=3",
+        ] {
+            let err = EnvSpec::by_name(bad).unwrap_err();
+            assert!(
+                err.to_string().contains("duplicate param"),
+                "'{bad}': {err}"
+            );
+        }
+        // a query key overriding a variant *preset* remains legal — the
+        // supported override spelling, distinct from a repeated key
+        let spec = EnvSpec::by_name("catch_windy?wind=0.35").unwrap();
+        assert_eq!(spec.name, "catch_windy?wind=0.35");
+    }
+
+    /// ISSUE 4 satellite: an unknown family is an error, not a silently
+    /// empty suite.
+    #[test]
+    fn scenario_specs_rejects_unknown_family() {
+        let specs = registry().scenario_specs("football").unwrap();
+        assert_eq!(specs.len(), 11);
+        let team = registry().scenario_specs("gridworld_team").unwrap();
+        assert_eq!(team, vec![
+            "gridworld_team/gather".to_string(),
+            "gridworld_team/corners".to_string(),
+        ]);
+        // scenario-less families list no scenario specs but are known
+        assert_eq!(registry().scenario_specs("catch").unwrap(), Vec::<String>::new());
+        let err = registry().scenario_specs("footbal").unwrap_err();
+        assert!(err.to_string().contains("unknown env family"), "{err}");
+        assert!(err.to_string().contains("football"), "names families: {err}");
+    }
+
+    /// ISSUE 4 satellite (perf): `EnvSpec::build` must not re-parse the
+    /// spec string on the replica-construction path. Direct proof: a
+    /// spec whose `name` is clobbered with garbage still builds, because
+    /// build consumes the cached [`ResolvedSpec`], not the string.
+    #[test]
+    fn build_is_parse_free() {
+        for (s, agents) in [
+            ("catch?wind=0.15", 1usize),
+            ("gridworld_team/gather?slip=0.2", 3),
+            ("football/3_vs_1_with_keeper", 2),
+        ] {
+            let mut spec =
+                EnvSpec::by_name(s).unwrap().with_agents(agents).unwrap();
+            spec.name = "?!not-a-spec!?".to_string();
+            let env = spec.build().expect("build must not parse `name`");
+            assert_eq!(env.n_agents(), agents, "{s}");
+            // ... and the with_agents re-validation is parse-free too
+            assert!(spec.clone().with_agents(99).is_err(), "{s}");
+        }
+    }
+
     #[test]
     fn malformed_specs_rejected_cleanly() {
         for bad in [
@@ -526,7 +748,7 @@ mod tests {
         assert_eq!(suite::all_envs(), registry().variant_names());
         assert_eq!(
             suite::football_suite(),
-            registry().scenario_specs("football")
+            registry().scenario_specs("football").unwrap()
         );
         assert_eq!(suite::football_suite().len(), 11);
         // the historical names all survive

@@ -1,13 +1,34 @@
-//! Named experiment suites mapping the paper's evaluation workloads onto
-//! the synthetic substrate (see DESIGN.md §3 for the substitution table).
+//! Experiment suites and curriculum sweeps **as data** (ISSUE 4
+//! tentpole; DESIGN.md §7).
 //!
-//! The listings are *derived from the registry* (DESIGN.md §7): a family
-//! or variant registered in [`super::registry::EnvRegistry`] appears here
-//! with no further bookkeeping, so the suites and the spec parser cannot
-//! drift.
+//! A suite is a list of *sweep patterns* — spec strings with optional
+//! expansion syntax — resolved through the registry:
+//!
+//! ```text
+//! pattern  := segment* ; a spec string with `{...}` expansions
+//! brace    := "{" lo ".." hi " step " s "}"   numeric inclusive range
+//!           | "{" v ("|" v)* "}"              explicit value list
+//! glob     := family "/*"                     every registered scenario
+//! ```
+//!
+//! so `catch?wind={0..0.3 step 0.05}` expands to seven specs,
+//! `football/*` to all eleven academy scenarios, and
+//! `gridworld_team/{gather|corners}?agents={2..4 step 1}` to a 2×3
+//! Cartesian product. Expansion is deterministic, duplicate-free (a
+//! pattern that collides with itself is an error, not a silent dedup),
+//! and every expanded spec is validated through
+//! [`EnvSpec::by_name`] — a suite that stops parsing fails at
+//! expansion, never mid-experiment (`hts-rl list --check-suites` runs
+//! in CI).
+//!
+//! The paper suites ([`ATARI_SUITE`], [`football_suite`]) are instances
+//! of the same mechanism (see [`SUITES`]), so the listings, the spec
+//! parser, and the experiment runners cannot drift.
+
+use std::collections::BTreeSet;
 
 use super::{registry, EnvSpec};
-use anyhow::Result;
+use anyhow::{anyhow, Context, Result};
 
 /// All registered flat env names (football scenarios use the
 /// `football/<scenario>` form — see [`football_suite`]).
@@ -15,23 +36,272 @@ pub fn all_envs() -> Vec<String> {
     registry().variant_names()
 }
 
-/// The 6-game "Atari-sim" suite used for Tab. 1 (final-time metric) — a
-/// curated experiment subset (three model configs × two difficulty
-/// tiers), not the full registry listing.
+/// The 6-game "Atari-sim" suite used for Tab. 1 (final-time metric):
+/// the full tier grid — three model configs (catch / gridworld /
+/// cartpole) × two difficulty tiers (the calm base game and its hard
+/// variant) — not the full registry listing. Registered as the `atari`
+/// entry of [`SUITES`].
 pub const ATARI_SUITE: [&str; 6] = [
     "catch",
     "catch_windy",
-    "catch_narrow",
     "gridworld",
     "gridworld_sparse",
     "cartpole",
+    "cartpole_noisy",
 ];
 
-/// All 11 academy scenarios for Tab. 2 (required-time metric).
+/// All 11 academy scenarios for Tab. 2 (required-time metric) — the
+/// registry-derived expansion of the `football/*` glob.
 pub fn football_suite() -> Vec<String> {
-    registry().scenario_specs("football")
+    registry()
+        .scenario_specs("football")
+        .expect("builtin family 'football' is registered")
 }
 
+/// One named experiment suite: a list of sweep patterns resolved
+/// through the registry at expansion time.
+pub struct SuiteDef {
+    pub name: &'static str,
+    /// One-line description for `hts-rl list`.
+    pub about: &'static str,
+    pub patterns: &'static [&'static str],
+}
+
+/// Every registered suite/curriculum. Suites are pure spec-string data:
+/// growing the scenario space is an edit here (or in the registry
+/// table), never a new hand-rolled loop in `experiments/`.
+pub const SUITES: [SuiteDef; 5] = [
+    SuiteDef {
+        name: "atari",
+        about: "Tab. 1 final-time suite: 3 model configs x 2 tiers",
+        patterns: &ATARI_SUITE,
+    },
+    SuiteDef {
+        name: "football",
+        about: "Tab. 2 required-time suite: all 11 academy scenarios",
+        patterns: &["football/*"],
+    },
+    SuiteDef {
+        name: "catch_wind",
+        about: "catch difficulty curriculum over wind probability",
+        patterns: &["catch?wind={0..0.3 step 0.05}"],
+    },
+    SuiteDef {
+        name: "cartpole_noise",
+        about: "cartpole action-noise curriculum",
+        patterns: &["cartpole?noise={0|0.02|0.05|0.1|0.2}"],
+    },
+    SuiteDef {
+        name: "gridworld_team",
+        about: "multi-agent gridworld curriculum: scenarios x team \
+                sizes x slip",
+        patterns: &[
+            "gridworld_team/{gather|corners}?agents={2..4 step 1},\
+             slip={0|0.15}",
+        ],
+    },
+];
+
+/// Look up a registered suite by name.
+pub fn suite(name: &str) -> Result<&'static SuiteDef> {
+    SUITES.iter().find(|s| s.name == name).ok_or_else(|| {
+        anyhow!(
+            "unknown suite '{name}' (known: {})",
+            SUITES.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+/// Expand and registry-validate every pattern of a named suite.
+pub fn suite_specs(name: &str) -> Result<Vec<EnvSpec>> {
+    let def = suite(name)?;
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut specs = Vec::new();
+    for pattern in def.patterns {
+        // expansion already parse-validated every spec — reuse those
+        // parses instead of re-probe-building each env
+        for spec in expand_validated(pattern)?.1 {
+            anyhow::ensure!(
+                seen.insert(spec.spec_str()),
+                "suite '{name}': duplicate spec '{}' (patterns overlap)",
+                spec.spec_str()
+            );
+            specs.push(spec);
+        }
+    }
+    Ok(specs)
+}
+
+/// Resolve every registered suite through the registry; returns the
+/// total spec count. The CI gate behind `hts-rl list --check-suites`: a
+/// suite that stops parsing fails the build, not the experiment run.
+pub fn check_all_suites() -> Result<usize> {
+    let mut total = 0;
+    for def in &SUITES {
+        total += suite_specs(def.name)
+            .with_context(|| format!("suite '{}' failed to resolve", def.name))?
+            .len();
+    }
+    Ok(total)
+}
+
+/// Expand one sweep pattern into validated spec strings (deterministic
+/// order, duplicate-free, every spec parses through the registry).
+pub fn expand_sweep(pattern: &str) -> Result<Vec<String>> {
+    Ok(expand_validated(pattern)?.0)
+}
+
+/// [`expand_sweep`] plus the `EnvSpec` each string validated as —
+/// callers that need the parsed specs (suite resolution) reuse these
+/// instead of probe-building every env a second time.
+fn expand_validated(pattern: &str) -> Result<(Vec<String>, Vec<EnvSpec>)> {
+    // 1. brace expansion (Cartesian product, left to right)
+    let mut expanded: Vec<String> = vec![String::new()];
+    let mut rest = pattern;
+    while let Some(open) = rest.find('{') {
+        let (lit, tail) = rest.split_at(open);
+        let close = tail.find('}').ok_or_else(|| {
+            anyhow!("unclosed '{{' in sweep pattern '{pattern}'")
+        })?;
+        let values = expand_brace(&tail[1..close])
+            .with_context(|| format!("in sweep pattern '{pattern}'"))?;
+        expanded = expanded
+            .iter()
+            .flat_map(|head| {
+                values.iter().map(move |v| format!("{head}{lit}{v}"))
+            })
+            .collect();
+        anyhow::ensure!(
+            expanded.len() <= 10_000,
+            "sweep pattern '{pattern}' expands to >10000 specs"
+        );
+        rest = &tail[close + 1..];
+    }
+    anyhow::ensure!(
+        !rest.contains('}'),
+        "unmatched '}}' in sweep pattern '{pattern}'"
+    );
+    for head in &mut expanded {
+        head.push_str(rest);
+    }
+
+    // 2. scenario-glob expansion: `family/*[?query]`
+    let mut out = Vec::new();
+    for s in expanded {
+        let glob: Option<(String, Option<String>)> = {
+            let (base, query) = match s.split_once('?') {
+                Some((b, q)) => (b, Some(q)),
+                None => (s.as_str(), None),
+            };
+            base.strip_suffix("/*").map(|family| {
+                (family.to_string(), query.map(str::to_string))
+            })
+        };
+        match glob {
+            Some((family, query)) => {
+                let scenarios = registry().scenario_specs(&family)?;
+                // a glob on a scenario-less family would silently
+                // expand to zero specs — the empty-suite bug class this
+                // layer exists to prevent
+                anyhow::ensure!(
+                    !scenarios.is_empty(),
+                    "sweep pattern '{pattern}': family '{family}' has \
+                     no scenarios to glob"
+                );
+                for scenario_spec in scenarios {
+                    out.push(match &query {
+                        Some(q) => format!("{scenario_spec}?{q}"),
+                        None => scenario_spec,
+                    });
+                }
+            }
+            None => out.push(s),
+        }
+    }
+
+    // 3. duplicate-freedom + registry validation (one probe-build per
+    // spec; the parsed specs ride along for suite resolution)
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut parsed = Vec::with_capacity(out.len());
+    for s in &out {
+        anyhow::ensure!(
+            seen.insert(s),
+            "sweep pattern '{pattern}' expands to duplicate spec '{s}'"
+        );
+        parsed.push(EnvSpec::by_name(s).with_context(|| {
+            format!("sweep pattern '{pattern}' expanded to invalid spec '{s}'")
+        })?);
+    }
+    drop(seen);
+    Ok((out, parsed))
+}
+
+/// Expand one `{...}` body: a numeric `lo..hi step s` range or a
+/// `v1|v2|...` list. `..` decides which (so a list value merely
+/// *containing* the letters "step" — a scenario name, say — still
+/// expands as a list).
+fn expand_brace(body: &str) -> Result<Vec<String>> {
+    if body.contains("..") {
+        let (range, step_s) = body.split_once("step").ok_or_else(|| {
+            anyhow!("range brace '{{{body}}}' is missing ' step s'")
+        })?;
+        let (lo_s, hi_s) = range.split_once("..").ok_or_else(|| {
+            anyhow!("range brace '{{{body}}}' wants 'lo..hi step s'")
+        })?;
+        let (lo_s, hi_s, step_s) = (lo_s.trim(), hi_s.trim(), step_s.trim());
+        let lo: f64 = lo_s
+            .parse()
+            .with_context(|| format!("bad range start '{lo_s}'"))?;
+        let hi: f64 = hi_s
+            .parse()
+            .with_context(|| format!("bad range end '{hi_s}'"))?;
+        let step: f64 = step_s
+            .parse()
+            .with_context(|| format!("bad range step '{step_s}'"))?;
+        anyhow::ensure!(
+            step > 0.0 && lo.is_finite() && hi >= lo,
+            "range brace '{{{body}}}' wants finite lo <= hi and step > 0"
+        );
+        // values are formatted at the *written* precision (the max
+        // decimal places among lo/hi/step), so accumulated binary error
+        // never leaks into the spec string: 0.05 × 3 prints 0.15, not
+        // 0.15000000000000002
+        let dec =
+            decimals(lo_s).max(decimals(hi_s)).max(decimals(step_s));
+        let n = ((hi - lo) / step + 1e-9).floor() as usize + 1;
+        anyhow::ensure!(n <= 1000, "range brace '{{{body}}}' too large");
+        Ok((0..n)
+            .map(|i| fmt_trimmed(lo + i as f64 * step, dec))
+            .collect())
+    } else {
+        let values: Vec<String> = body
+            .split('|')
+            .map(|v| v.trim().to_string())
+            .collect();
+        anyhow::ensure!(
+            !values.is_empty() && values.iter().all(|v| !v.is_empty()),
+            "empty value in list brace '{{{body}}}'"
+        );
+        Ok(values)
+    }
+}
+
+/// Decimal places written in a numeric literal (`"0.05"` → 2).
+fn decimals(s: &str) -> usize {
+    s.split_once('.').map_or(0, |(_, frac)| frac.len())
+}
+
+/// Format at fixed precision, then trim trailing zeros (and the dot).
+fn fmt_trimmed(v: f64, dec: usize) -> String {
+    let s = format!("{v:.dec$}");
+    if s.contains('.') {
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        s
+    }
+}
+
+/// Resolve a list of plain spec names (no sweep syntax).
 pub fn specs(names: &[&str]) -> Result<Vec<EnvSpec>> {
     names.iter().map(|n| EnvSpec::by_name(n)).collect()
 }
@@ -39,6 +309,7 @@ pub fn specs(names: &[&str]) -> Result<Vec<EnvSpec>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     #[test]
     fn suites_resolve() {
@@ -49,6 +320,9 @@ mod tests {
         for name in football_suite() {
             EnvSpec::by_name(&name).unwrap();
         }
+        // the CI gate: every registered suite expands and parses
+        let total = check_all_suites().unwrap();
+        assert!(total >= 6 + 11 + 7 + 5 + 12, "total={total}");
     }
 
     #[test]
@@ -59,13 +333,154 @@ mod tests {
         }
     }
 
+    /// The doc-fix satellite, now structural: the suite is exactly the
+    /// tier grid its comment claims — three model configs × two
+    /// difficulty tiers (a calm base game + its hard variant each).
     #[test]
-    fn atari_suite_covers_three_model_configs() {
-        let models: std::collections::BTreeSet<String> = specs(&ATARI_SUITE)
-            .unwrap()
-            .into_iter()
-            .map(|s| s.model)
-            .collect();
-        assert_eq!(models.len(), 3);
+    fn atari_suite_is_three_configs_by_two_tiers() {
+        let mut per_model = std::collections::BTreeMap::new();
+        for s in specs(&ATARI_SUITE).unwrap() {
+            *per_model.entry(s.model).or_insert(0usize) += 1;
+        }
+        assert_eq!(per_model.len(), 3, "three model configs");
+        assert!(
+            per_model.values().all(|&n| n == 2),
+            "two difficulty tiers per config: {per_model:?}"
+        );
+    }
+
+    #[test]
+    fn sweep_numeric_range_expansion() {
+        assert_eq!(
+            expand_sweep("catch?wind={0..0.3 step 0.05}").unwrap(),
+            vec![
+                "catch?wind=0",
+                "catch?wind=0.05",
+                "catch?wind=0.1",
+                "catch?wind=0.15",
+                "catch?wind=0.2",
+                "catch?wind=0.25",
+                "catch?wind=0.3",
+            ]
+        );
+        // integer steps print as integers
+        assert_eq!(
+            expand_sweep("gridworld_team/gather?agents={1..4 step 1}")
+                .unwrap(),
+            vec![
+                "gridworld_team/gather?agents=1",
+                "gridworld_team/gather?agents=2",
+                "gridworld_team/gather?agents=3",
+                "gridworld_team/gather?agents=4",
+            ]
+        );
+    }
+
+    #[test]
+    fn sweep_list_and_product_expansion() {
+        // two braces = Cartesian product, list order preserved
+        let got = expand_sweep(
+            "gridworld_team/{gather|corners}?agents={2|4}",
+        )
+        .unwrap();
+        assert_eq!(got, vec![
+            "gridworld_team/gather?agents=2",
+            "gridworld_team/gather?agents=4",
+            "gridworld_team/corners?agents=2",
+            "gridworld_team/corners?agents=4",
+        ]);
+    }
+
+    #[test]
+    fn sweep_scenario_glob_matches_registry() {
+        assert_eq!(expand_sweep("football/*").unwrap(), football_suite());
+        // glob with a query suffix applies it to every scenario
+        let team = expand_sweep("gridworld_team/*?agents=2").unwrap();
+        assert_eq!(team, vec![
+            "gridworld_team/gather?agents=2",
+            "gridworld_team/corners?agents=2",
+        ]);
+    }
+
+    #[test]
+    fn sweep_rejects_malformed_and_duplicates() {
+        for bad in [
+            "catch?wind={0..0.3}",            // missing step
+            "catch?wind={0.3..0 step 0.1}",   // hi < lo
+            "catch?wind={0..0.3 step 0}",     // step 0
+            "catch?wind={0..0.3 step -0.1}",  // negative step
+            "catch?wind={0|0}",               // duplicate expansion
+            "catch?wind={0|0.5|}",            // empty list value
+            "catch?wind={0..2 step 1}",       // expands past wind<=1
+            "catch?wind=0.1}",                // unmatched }
+            "catch?wind={0.1",                // unclosed {
+            "footbal/*",                      // unknown family glob
+            "catch/*",                        // glob on scenario-less family
+        ] {
+            assert!(expand_sweep(bad).is_err(), "'{bad}' expanded");
+        }
+        // braces are positional, not key-aware: a key-position brace is
+        // legal and expands like any other segment
+        assert_eq!(expand_sweep("catch?{wind|narrow}=1").unwrap().len(), 2);
+        // `..` decides range-vs-list, so a list value that merely
+        // contains the letters "step" still expands as a list
+        assert_eq!(
+            expand_brace("gather|sidestep").unwrap(),
+            vec!["gather", "sidestep"]
+        );
+    }
+
+    /// ISSUE 4 satellite property tests: expansion is deterministic,
+    /// duplicate-free, and every expanded spec parses — across sweeps
+    /// generated from random grids.
+    #[test]
+    fn prop_sweep_expansion_sound() {
+        prop::check("sweep-expansion", 64, |g| {
+            // centi-units keep the written text exact; bounds keep the
+            // swept wind inside catch's [0, 1] constructor range
+            let lo_c = g.usize_in(0, 10);
+            let n_steps = g.usize_in(1, 6);
+            let step_c = g.usize_in(5, 15);
+            let hi_c = lo_c + n_steps * step_c;
+            let pattern = format!(
+                "catch?wind={{{} .. {} step {}}},narrow={{0|1}}",
+                fmt_trimmed(lo_c as f64 / 100.0, 2),
+                fmt_trimmed(hi_c as f64 / 100.0, 2),
+                fmt_trimmed(step_c as f64 / 100.0, 2),
+            );
+            let a = expand_sweep(&pattern).unwrap();
+            let b = expand_sweep(&pattern).unwrap();
+            assert_eq!(a, b, "deterministic: {pattern}");
+            assert_eq!(a.len(), (n_steps + 1) * 2, "count: {pattern}");
+            let set: BTreeSet<&String> = a.iter().collect();
+            assert_eq!(set.len(), a.len(), "duplicate-free: {pattern}");
+            for s in &a {
+                EnvSpec::by_name(s)
+                    .unwrap_or_else(|e| panic!("'{s}' of '{pattern}': {e}"));
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_suite_is_a_clean_error() {
+        let err = suite("atari7").unwrap_err();
+        assert!(err.to_string().contains("known"), "{err}");
+        assert!(suite("atari").is_ok());
+        // suite listing matches the football registry derivation
+        let specs = suite_specs("football").unwrap();
+        let names: Vec<String> =
+            specs.iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, football_suite());
+    }
+
+    /// The gridworld_team curriculum is the multi-agent acceptance
+    /// surface: 2 scenarios × 3 team sizes × 2 slip levels, every spec
+    /// multi-agent, every spec parse-validated.
+    #[test]
+    fn gridworld_team_curriculum_shape() {
+        let specs = suite_specs("gridworld_team").unwrap();
+        assert_eq!(specs.len(), 12);
+        assert!(specs.iter().all(|s| s.n_agents >= 2));
+        assert!(specs.iter().all(|s| s.model == "gridworld"));
     }
 }

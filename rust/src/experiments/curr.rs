@@ -1,0 +1,58 @@
+//! Curriculum sweep runner (ISSUE 4): train HTS-RL across a
+//! registry-expanded difficulty curriculum and report how the final
+//! metric degrades with difficulty. The sweep itself is pure spec-string
+//! data (`suite::SUITES`) — this runner owns *no* env loop of its own,
+//! it just walks whatever the suite expands to
+//! (`hts-rl list --suite catch_wind` shows the exact listing).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::algo::{Algo, AlgoConfig};
+use crate::coordinator::{run, Method, RunConfig, StopCond};
+use crate::envs::suite;
+use crate::util::csv::{markdown_table, CsvWriter};
+
+/// `--id curr`: the `catch_wind` curriculum — seven wind levels from
+/// calm to wind=0.3 — through the full HTS stack. Expected shape: the
+/// final metric decreases (roughly) monotonically with wind while SPS
+/// stays flat: difficulty is a *learning* knob, not a throughput knob.
+pub fn curr(out: &Path, quick: bool) -> Result<()> {
+    let mut specs = suite::suite_specs("catch_wind")?;
+    if quick {
+        specs.truncate(3);
+    }
+    let steps: u64 = if quick { 3_000 } else { 12_000 };
+    let mut w = CsvWriter::create(
+        out.join("curr.csv"),
+        &["spec_idx", "final_metric", "sps"],
+    )?;
+    let mut rows = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let mut cfg = RunConfig::new(
+            spec.clone(),
+            AlgoConfig::a2c(Algo::A2cDelayed),
+        );
+        cfg.n_envs = 16;
+        cfg.n_actors = 1;
+        cfg.eval_every = 10;
+        cfg.eval_episodes = 10;
+        cfg.stop = StopCond::steps(steps);
+        let r = run(Method::Hts, &cfg)?;
+        let fm = r.final_metric();
+        w.row(&[i as f64, fm, r.sps()])?;
+        rows.push(vec![
+            spec.spec_str(),
+            format!("{fm:.3}"),
+            format!("{:.0}", r.sps()),
+        ]);
+        println!("curr {spec}: final {fm:.3} ({:.0} sps)", r.sps());
+    }
+    w.flush()?;
+    println!(
+        "{}",
+        markdown_table(&["spec", "final metric", "SPS"], &rows)
+    );
+    Ok(())
+}

@@ -1,6 +1,7 @@
 //! Experiment runners — one per paper table/figure (DESIGN.md §5).
 //! Each runner emits CSV into `results/` plus a markdown table on stdout.
 
+pub mod curr;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
@@ -31,6 +32,7 @@ pub fn run(id: &str, out_dir: &Path, quick: bool) -> Result<()> {
         "tab5" => tab345::tab5(out_dir, quick),
         "taba1" => taba::taba1(out_dir, quick),
         "taba2" => taba::taba2(out_dir, quick),
+        "curr" => curr::curr(out_dir, quick),
         "all" => {
             for id in ALL_IDS {
                 println!("=== experiment {id} ===");
@@ -42,7 +44,7 @@ pub fn run(id: &str, out_dir: &Path, quick: bool) -> Result<()> {
     }
 }
 
-pub const ALL_IDS: [&str; 14] = [
+pub const ALL_IDS: [&str; 15] = [
     "fig3a", "fig3b", "fig3c", "fig4l", "fig4r", "fig5", "figa1", "tab1",
-    "tab2", "tab3", "tab4", "tab5", "taba1", "taba2",
+    "tab2", "tab3", "tab4", "tab5", "taba1", "taba2", "curr",
 ];

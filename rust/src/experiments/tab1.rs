@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use crate::algo::{Algo, AlgoConfig};
 use crate::coordinator::{run, Method, RunConfig, StopCond};
-use crate::envs::{suite::ATARI_SUITE, EnvSpec, StepTimeModel};
+use crate::envs::{suite, EnvSpec, StepTimeModel};
 use crate::stats::bootstrap_ci;
 use crate::util::csv::{markdown_table, CsvWriter};
 
@@ -21,19 +21,24 @@ use crate::util::csv::{markdown_table, CsvWriter};
 pub const ATARI_STEPTIME: StepTimeModel =
     StepTimeModel::Gamma { shape: 8.0, mean_us: 2_000.0 };
 
-fn base_cfg(env: &str, algo: Algo, seed: u64) -> Result<RunConfig> {
-    let spec = EnvSpec::by_name(env)?.with_steptime(ATARI_STEPTIME);
+fn base_cfg(spec: &EnvSpec, algo: Algo, seed: u64) -> RunConfig {
+    let spec = spec.clone().with_steptime(ATARI_STEPTIME);
     let mut cfg = RunConfig::new(spec, AlgoConfig::a2c(algo));
     cfg.n_envs = 16;
     cfg.n_actors = 1;
     cfg.seed = seed;
     cfg.eval_every = 10;
     cfg.eval_episodes = 10;
-    Ok(cfg)
+    cfg
 }
 
 pub fn tab1(out: &Path, quick: bool) -> Result<()> {
-    let envs: &[&str] = if quick { &ATARI_SUITE[..2] } else { &ATARI_SUITE };
+    // The suite is registry data (`suite::SUITES`), not a hand-rolled
+    // env loop — `hts-rl list --suite atari` shows exactly this listing.
+    let mut envs = suite::suite_specs("atari")?;
+    if quick {
+        envs.truncate(2);
+    }
     let async_steps: u64 = if quick { 4_000 } else { 24_000 };
     let mut w = CsvWriter::create(
         out.join("tab1.csv"),
@@ -43,13 +48,13 @@ pub fn tab1(out: &Path, quick: bool) -> Result<()> {
     let mut rows = Vec::new();
     for (i, env) in envs.iter().enumerate() {
         // 1. async baseline defines the wall budget
-        let mut cfg = base_cfg(env, Algo::Vtrace, 1)?;
+        let mut cfg = base_cfg(env, Algo::Vtrace, 1);
         cfg.stop = StopCond::steps(async_steps);
         let impala = run(Method::Async, &cfg)?;
         let budget = impala.wall_s;
 
         // 2. both synchronous methods get the same wall budget
-        let mut cfg_sync = base_cfg(env, Algo::A2cDelayed, 1)?;
+        let mut cfg_sync = base_cfg(env, Algo::A2cDelayed, 1);
         cfg_sync.stop = StopCond::wall_s(budget);
         let a2c = run(Method::Sync, &cfg_sync)?;
         let ours = run(Method::Hts, &cfg_sync)?;

@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::algo::{Algo, AlgoConfig};
 use crate::coordinator::{run, Method, RunConfig, StopCond};
-use crate::envs::{suite::football_suite, EnvSpec};
+use crate::envs::{suite, EnvSpec};
 use crate::util::csv::{markdown_table, CsvWriter};
 
 fn fmt_rt(t: Option<f64>) -> String {
@@ -19,8 +19,10 @@ fn fmt_rt(t: Option<f64>) -> String {
 }
 
 pub fn tab2(out: &Path, quick: bool) -> Result<()> {
-    let all = football_suite();
-    let scenarios: Vec<String> = if quick {
+    // Suite as registry data: the `football` entry of `suite::SUITES`
+    // is the `football/*` glob — all 11 academy scenarios.
+    let all = suite::suite_specs("football")?;
+    let scenarios: Vec<EnvSpec> = if quick {
         vec![all[0].clone(), all[6].clone()]
     } else {
         all
@@ -32,8 +34,8 @@ pub fn tab2(out: &Path, quick: bool) -> Result<()> {
           "ours_04", "ours_08"],
     )?;
     let mut rows = Vec::new();
-    for (i, scenario) in scenarios.iter().enumerate() {
-        let spec = EnvSpec::by_name(scenario)?;
+    for (i, spec) in scenarios.iter().enumerate() {
+        let scenario = &spec.name;
         let mk = |algo: AlgoConfig| -> RunConfig {
             let mut cfg = RunConfig::new(spec.clone(), algo);
             cfg.n_envs = 16;

@@ -27,7 +27,9 @@ fn usage() -> &'static str {
        --alpha K --seed 1 --eval-every U --out results/\n\
      exp flags: --id fig3a|...|all  --quick  --out results/\n\
      sim flags: --claim 1|2 [--n 16 --alpha 4 --beta 2.0]\n\
-     determinism flags: --k-sweep 1,2,4 (replica-pool factors to check)"
+     determinism flags: --k-sweep 1,2,4 (replica-pool factors to check)\n\
+     list flags: --suite <name> (expand one suite/curriculum)\n\
+       --check-suites (resolve every suite through the registry; CI gate)"
 }
 
 fn build_run_config(a: &Args) -> Result<RunConfig> {
@@ -231,13 +233,40 @@ fn cmd_determinism(a: &Args) -> Result<()> {
     }
 }
 
-fn cmd_list() {
+fn cmd_list(a: &Args) -> Result<()> {
+    use hts_rl::envs::suite;
+    // `--check-suites`: the CI gate — resolve every registered
+    // suite/curriculum through the registry so a suite that stops
+    // parsing fails the build, not the experiment run.
+    if a.bool("check-suites") {
+        let total = suite::check_all_suites()?;
+        println!(
+            "{} suites resolve to {total} specs through the registry ✓",
+            suite::SUITES.len()
+        );
+        return Ok(());
+    }
+    // `--suite <name>`: expand one suite/curriculum to its spec list.
+    if let Some(name) = a.str_opt("suite") {
+        let specs = suite::suite_specs(name)?;
+        let def = suite::suite(name)?;
+        println!("suite {name}: {} ({} specs)", def.about, specs.len());
+        for p in def.patterns {
+            println!("  pattern: {p}");
+        }
+        for s in &specs {
+            println!("  {}", s.spec_str());
+        }
+        return Ok(());
+    }
     println!("envs (registry; params: family[/scenario][?key=val,...]):");
-    for e in hts_rl::envs::suite::all_envs() {
+    for e in suite::all_envs() {
         println!("  {e}");
     }
-    for s in hts_rl::envs::suite::football_suite() {
-        println!("  {s}");
+    for f in hts_rl::envs::registry().families() {
+        for s in hts_rl::envs::registry().scenario_specs(f.name)? {
+            println!("  {s}");
+        }
     }
     for f in hts_rl::envs::registry().families() {
         if !f.params.is_empty() {
@@ -246,9 +275,19 @@ fn cmd_list() {
             println!("  {}?{}", f.name, keys.join(","));
         }
     }
+    println!("suites (expand with `list --suite <name>`):");
+    for def in &suite::SUITES {
+        println!(
+            "  {:<16} {} [{} patterns]",
+            def.name,
+            def.about,
+            def.patterns.len()
+        );
+    }
     println!("methods: hts sync async");
     println!("algos: a2c a2c_nocorr a2c_tis vtrace ppo");
     println!("experiments: {}", experiments::ALL_IDS.join(" "));
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -263,10 +302,7 @@ fn main() -> Result<()> {
         }
         Some("sim") => cmd_sim(&a),
         Some("determinism") => cmd_determinism(&a),
-        Some("list") => {
-            cmd_list();
-            Ok(())
-        }
+        Some("list") => cmd_list(&a),
         _ => {
             println!("{}", usage());
             Ok(())

@@ -25,7 +25,10 @@ pub fn evaluate_params(
     // One flat observation plane and one action scratch for the whole
     // evaluation (ISSUE 3 satellite): the env writes each step's
     // observations in place, and the forward consumes them before the
-    // next `step_into` overwrites the plane.
+    // next `step_into` overwrites the plane. The per-episode
+    // `spec.build()` below is parse-free (ISSUE 4 satellite): it
+    // consumes the spec's parse-time `ResolvedSpec` cache instead of
+    // re-splitting the spec string every episode.
     let mut flat: Vec<f32> = Vec::new();
     let mut actions: Vec<usize> = Vec::new();
     for ep in 0..n_episodes {

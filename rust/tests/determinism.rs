@@ -90,6 +90,48 @@ fn hts_tab4_signature_invariant_replica_pool_sweep() {
     }
 }
 
+/// ISSUE 4 acceptance (artifact-gated end-to-end leg; the artifact-free
+/// pinned leg lives in `pool.rs`): the new multi-agent gridworld family
+/// runs through all three drivers, with HTS bit-identical for every
+/// (n_threads, K) factorization and actor count, and the sync baseline
+/// bit-identical across repeats.
+#[test]
+fn team_gridworld_all_drivers_and_pool_sweep() {
+    if !have_artifacts() {
+        return;
+    }
+    let team_cfg = |n_actors: usize, k: usize| {
+        let spec = EnvSpec::by_name("gridworld_team/gather?slip=0.1")
+            .unwrap()
+            .with_agents(2)
+            .unwrap();
+        let mut c = RunConfig::new(spec, AlgoConfig::a2c(Algo::A2cDelayed));
+        c.n_envs = 8;
+        c.n_actors = n_actors;
+        c.seed = 23;
+        c.replicas_per_executor = k;
+        c.stop = StopCond::updates(4);
+        c
+    };
+    let base = run(Method::Hts, &team_cfg(1, 1)).unwrap();
+    for (n_actors, k) in [(1usize, 2usize), (2, 4), (3, 8)] {
+        let r = run(Method::Hts, &team_cfg(n_actors, k)).unwrap();
+        assert_eq!(
+            base.signature, r.signature,
+            "team sig diverged at n_actors={n_actors} K={k}"
+        );
+        assert_eq!(base.steps, r.steps);
+    }
+    let s1 = run(Method::Sync, &team_cfg(1, 1)).unwrap();
+    let s2 = run(Method::Sync, &team_cfg(1, 1)).unwrap();
+    assert_eq!(s1.signature, s2.signature, "sync team determinism");
+    assert!(s1.steps > 0);
+    let mut async_cfg = team_cfg(2, 1);
+    async_cfg.algo = AlgoConfig::a2c(Algo::Vtrace);
+    let a = run(Method::Async, &async_cfg).unwrap();
+    assert!(a.steps > 0 && a.final_loss.is_finite(), "async team run");
+}
+
 #[test]
 fn hts_identical_across_repeated_runs() {
     if !have_artifacts() {

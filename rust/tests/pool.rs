@@ -266,6 +266,78 @@ fn pool_signatures_pinned() {
     }
 }
 
+/// ISSUE 4 tentpole: the multi-agent gridworld family through the pool —
+/// factorization invariance with injected delays and an actor sweep,
+/// exercising per-agent mailboxes, the slip RNG draws, and the
+/// agent-major plane on a cheap non-football multi-agent workload.
+#[test]
+fn pool_invariant_team_gridworld() {
+    let st = StepTimeModel::Exponential { mean_us: 80.0 };
+    let base = run_harness(
+        "gridworld_team/gather?slip=0.15", 2, st, 4, 1, 2, 5, 3, 13,
+    );
+    for (k, n_actors) in [(2usize, 1usize), (4, 3)] {
+        let r = run_harness(
+            "gridworld_team/gather?slip=0.15", 2, st, 4, k, n_actors, 5, 3,
+            13,
+        );
+        assert_eq!(
+            base.signature, r.signature,
+            "team sig diverged, K={k} actors={n_actors}"
+        );
+        assert_eq!(
+            base.batch_hashes, r.batch_hashes,
+            "team batches diverged, K={k} actors={n_actors}"
+        );
+    }
+}
+
+/// ISSUE 4 acceptance: integer-exact pins for the new multi-agent
+/// gridworld family across every (n_threads, K) factorization of
+/// n_envs = 8, K ∈ {1, 2, 4, 8}. The constants come from the same
+/// independent transliteration that pins catch
+/// (`python/tools/pin_signatures.py` — which still reproduces the PR 3
+/// catch constants above, proving the existing families' signatures are
+/// byte-identical). TeamGridWorld's observation and reward values are
+/// all exactly representable (0 / ±0.5 / ±1 / k·0.25 / k/8 / the
+/// constant −0.01), so these pins are bit-portable too. The slip=0.15
+/// parameter makes each agent's step draw from the env stream, so any
+/// draw-order regression in the multi-agent path moves these values.
+#[test]
+fn team_gridworld_signatures_pinned() {
+    const PINNED_SIGNATURE: u64 = 0x9a123a8e466ba605;
+    const PINNED_BATCH_HASHES: [u64; 4] = [
+        0xc60afb8c8caad2d0,
+        0xb460b78aa8a8d3ab,
+        0xa54cee67ac83df3e,
+        0xd8718bf4cb3a393b,
+    ];
+    for k in [1usize, 2, 4, 8] {
+        let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 4) as usize);
+        let r = run_harness_with(
+            policy,
+            "gridworld_team/gather?slip=0.15",
+            2,
+            StepTimeModel::None,
+            8,
+            k,
+            2,
+            5,
+            4,
+            42,
+        );
+        assert_eq!(
+            r.signature, PINNED_SIGNATURE,
+            "team gridworld signature regressed at K={k}"
+        );
+        assert_eq!(
+            r.batch_hashes,
+            PINNED_BATCH_HASHES.to_vec(),
+            "team gridworld gathered [T, B] bytes regressed at K={k}"
+        );
+    }
+}
+
 /// Different seeds must still produce different runs through the pool
 /// (the invariance above is not a constant-output artifact).
 #[test]
