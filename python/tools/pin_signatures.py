@@ -271,6 +271,63 @@ def simulate(make_env, n_envs=8, alpha=5, iters=4, seed=42):
     return sig_xor, batch_hashes
 
 
+def fnv_str(s):
+    """rust campaign::plan::derive_seed's FNV-1a over the id bytes."""
+    f = Fnv()
+    for b in s.encode():
+        f.update(b)
+    return f.finish()
+
+
+def derive_seed(campaign_seed, job_id):
+    """campaign::plan::derive_seed transliteration: FNV of the job id
+    selects a SplitMix64 stream keyed by the campaign seed; the stream's
+    first draw is the per-job run seed."""
+    return SplitMix64.stream(campaign_seed, fnv_str(job_id)).next_u64()
+
+
+def emit_campaign():
+    """Pins for tests/campaign.rs::campaign_jobs_invariance_pinned.
+
+    The quick ``gridworld_team`` campaign: first two suite specs
+    (gather, agents=2, slip 0 / 0.15) x method hts x 2 seeds, campaign
+    seed 42. Each job runs the stand-in fleet
+    (`executor::harness::run_standin_job`): n_envs=8, K-invariant,
+    alpha=5, iters=4 (`--updates 4`), modulo policy — i.e. exactly
+    ``simulate`` above with the job's derived seed.
+    """
+    jobs = [
+        ("gridworld_team/gather?slip=0,agents=2|hts|s0", 0.0),
+        ("gridworld_team/gather?slip=0,agents=2|hts|s1", 0.0),
+        ("gridworld_team/gather?slip=0.15,agents=2|hts|s0", 0.15),
+        ("gridworld_team/gather?slip=0.15,agents=2|hts|s1", 0.15),
+    ]
+    seeds, sigs = [], []
+    for job_id, slip in jobs:
+        seed = derive_seed(42, job_id)
+        sig, _ = simulate(
+            lambda: TeamGridWorld(2, slip),
+            n_envs=8,
+            alpha=5,
+            iters=4,
+            seed=seed,
+        )
+        seeds.append(seed)
+        sigs.append(sig)
+    print(
+        "// tests/campaign.rs::campaign_jobs_invariance_pinned — quick"
+    )
+    print("// gridworld_team campaign, campaign seed 42, jobs in plan order")
+    print(f"const PINNED_JOB_SEEDS: [u64; {len(seeds)}] = [")
+    for s in seeds:
+        print(f"    0x{s:016x},")
+    print("];")
+    print(f"const PINNED_JOB_SIGNATURES: [u64; {len(sigs)}] = [")
+    for s in sigs:
+        print(f"    0x{s:016x},")
+    print("];")
+
+
 def emit(label, sig, hashes):
     print(f"// {label}")
     print(f"const PINNED_SIGNATURE: u64 = 0x{sig:016x};")
@@ -290,3 +347,4 @@ if __name__ == "__main__":
         "gridworld_team/gather?slip=0.15, 2 agents",
         *simulate(lambda: TeamGridWorld(2, 0.15)),
     )
+    emit_campaign()

@@ -503,6 +503,63 @@ fn bench_spec_resolution(rec: &mut Recorder) {
     }
 }
 
+/// ISSUE 5: campaign orchestration overhead. Plan expansion cost, plus
+/// the scheduler's per-job cost with a no-op runner at `--jobs` 1 and 4
+/// — claiming, budget accounting, and record collection must stay
+/// invisible next to a real training run (µs against seconds).
+fn bench_campaign_scheduler(rec: &mut Recorder) {
+    use hts_rl::campaign::{self, CampaignConfig, Job};
+    use hts_rl::coordinator::{Method, RunConfig, StopCond};
+    use hts_rl::metrics::TrainReport;
+
+    println!("== campaign orchestration ==");
+    let mut cfg = CampaignConfig::new("catch_wind");
+    cfg.methods = vec![Method::Hts];
+    cfg.seeds = 2;
+    cfg.stop = StopCond::steps(100);
+    bench(
+        rec,
+        "campaign plan expand (catch_wind x 2 seeds)",
+        "campaign_expand",
+        500,
+        || {
+            std::hint::black_box(campaign::expand(&cfg).unwrap());
+        },
+    );
+    let plan = campaign::expand(&cfg).unwrap();
+    let n_jobs = plan.jobs.len();
+    let runner = |job: &Job, rc: &RunConfig| -> hts_rl::Result<TrainReport> {
+        Ok(TrainReport {
+            steps: rc.stop.max_steps.unwrap_or(1),
+            wall_s: 1.0,
+            signature: job.seed,
+            ..TrainReport::default()
+        })
+    };
+    for jobs in [1usize, 4] {
+        let mut c = cfg.clone();
+        c.jobs = jobs;
+        const N: usize = 50;
+        let t0 = Instant::now();
+        for _ in 0..N {
+            std::hint::black_box(
+                campaign::run_campaign(&c, &plan, &runner, None, &[], None)
+                    .unwrap(),
+            );
+        }
+        let per_job_us =
+            t0.elapsed().as_secs_f64() / (N * n_jobs) as f64 * 1e6;
+        println!(
+            "campaign scheduler ({n_jobs} no-op jobs, --jobs {jobs})  \
+             {per_job_us:>12.3} µs/job"
+        );
+        rec.record(
+            &format!("campaign_sched_jobs{jobs}_us_per_job"),
+            per_job_us,
+        );
+    }
+}
+
 fn main() {
     let mut rec = Recorder::new();
     println!("== component micro-benchmarks ==");
@@ -510,6 +567,7 @@ fn main() {
     bench_contended_write_path(&mut rec);
     bench_pool_vs_blocking(&mut rec);
     bench_spec_resolution(&mut rec);
+    bench_campaign_scheduler(&mut rec);
 
     // RNG + sampling
     let mut rng = SplitMix64::new(1);

@@ -1,0 +1,567 @@
+//! Append-only campaign journal (DESIGN.md §10).
+//!
+//! One JSONL file per campaign: a meta header line identifying the
+//! campaign, then one line per *completed* job, flushed as each job
+//! finishes. Crash recovery is the whole point: `--resume` replays the
+//! journal, skips every journaled job, and reuses the journaled records
+//! verbatim — so a resumed campaign's report is byte-identical to an
+//! uninterrupted run (given deterministic jobs; `rust/tests/campaign.rs`).
+//!
+//! Line schema (`v` = 1):
+//!
+//! ```text
+//! {"campaign":{"suite":S,"seed":N,"n_jobs":N,
+//!              "config":"0x…","v":1}}                          header
+//! {"v":1,"id":"spec|method|sK","spec":S,"method":S,
+//!  "seed_index":N,"seed":"0x…","signature":"0x…",
+//!  "steps":N,"updates":N,"wall_s":F,"final_metric":F|null,
+//!  "final_scores":[F…],"required":[F|null…]}                  per job
+//! ```
+//!
+//! `seed`/`signature` are hex *strings*: they are full-width u64s and
+//! the JSON substrate ([`crate::util::json`]) carries numbers as f64,
+//! which is exact only below 2⁵³. A torn final line (the crash landed
+//! mid-`write`) is detected, reported, and truncated away on resume;
+//! a malformed line anywhere *else* is corruption and errors out.
+
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::campaign::plan::Job;
+use crate::metrics::TrainReport;
+use crate::util::json::{obj, Json};
+
+/// Campaign identity, checked on resume so a journal can never be
+/// replayed into a *different* campaign: suite, seed, grid size, and a
+/// [`crate::campaign::plan::CampaignConfig::fingerprint`] of every
+/// result-shaping knob (budgets, algos, topology, eval protocol) —
+/// same suite with a different `--updates` must not mix either.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CampaignMeta {
+    pub suite: String,
+    pub campaign_seed: u64,
+    pub n_jobs: usize,
+    /// Config fingerprint (plus the CLI's stand-in marker).
+    pub config: u64,
+}
+
+impl CampaignMeta {
+    fn to_json(&self) -> Json {
+        obj(vec![(
+            "campaign",
+            obj(vec![
+                ("suite", Json::Str(self.suite.clone())),
+                ("seed", Json::Num(self.campaign_seed as f64)),
+                ("n_jobs", Json::Num(self.n_jobs as f64)),
+                ("config", Json::Str(format!("0x{:016x}", self.config))),
+                ("v", Json::Num(1.0)),
+            ]),
+        )])
+    }
+
+    fn from_json(v: &Json) -> Result<CampaignMeta> {
+        let c = v.get("campaign")?;
+        Ok(CampaignMeta {
+            suite: c.get("suite")?.as_str()?.to_string(),
+            campaign_seed: c.get("seed")?.as_u64()?,
+            n_jobs: c.get("n_jobs")?.as_u64()? as usize,
+            config: hex_u64(c.get("config")?.as_str()?)?,
+        })
+    }
+}
+
+/// Everything the cross-spec report needs about one finished job —
+/// the unit the journal persists and the scheduler hands back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub id: String,
+    /// Canonical spec string (self-describing output: never a bare
+    /// index — indices shift when `--quick` truncates the suite).
+    pub spec: String,
+    pub method: String,
+    pub seed_index: usize,
+    pub seed: u64,
+    pub steps: u64,
+    pub updates: u64,
+    pub wall_s: f64,
+    pub signature: u64,
+    /// Paper final metric (NaN when the run produced no evals).
+    pub final_metric: f64,
+    /// The last-100 evaluation episode scores (10 per policy × last 10
+    /// policies) — kept so reports can bootstrap CIs without rerunning.
+    pub final_scores: Vec<f64>,
+    /// Required-time seconds per configured target (plan order),
+    /// `None` where the target was never reached.
+    pub required: Vec<Option<f64>>,
+}
+
+impl JobRecord {
+    pub fn from_report(
+        job: &Job,
+        r: &TrainReport,
+        rt_targets: &[f64],
+    ) -> JobRecord {
+        let skip = r.evals.len().saturating_sub(10);
+        JobRecord {
+            id: job.id.clone(),
+            spec: job.spec.spec_str(),
+            method: job.method.name().to_string(),
+            seed_index: job.seed_index,
+            seed: job.seed,
+            steps: r.steps,
+            updates: r.updates,
+            wall_s: r.wall_s,
+            signature: r.signature,
+            final_metric: r.final_metric(),
+            final_scores: r.evals[skip..]
+                .iter()
+                .flat_map(|e| e.scores.iter().copied())
+                .collect(),
+            required: rt_targets
+                .iter()
+                .map(|&t| r.required_time(t))
+                .collect(),
+        }
+    }
+
+    pub fn sps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.steps as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("v", Json::Num(1.0)),
+            ("id", Json::Str(self.id.clone())),
+            ("spec", Json::Str(self.spec.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("seed_index", Json::Num(self.seed_index as f64)),
+            ("seed", Json::Str(format!("0x{:016x}", self.seed))),
+            ("steps", Json::Num(self.steps as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("signature", Json::Str(format!("0x{:016x}", self.signature))),
+            // NaN serializes as null (JSON has no NaN) — from_json maps
+            // it back, keeping the roundtrip exact
+            ("final_metric", Json::Num(self.final_metric)),
+            (
+                "final_scores",
+                Json::Arr(
+                    self.final_scores.iter().map(|&s| Json::Num(s)).collect(),
+                ),
+            ),
+            (
+                "required",
+                Json::Arr(
+                    self.required
+                        .iter()
+                        .map(|t| match t {
+                            Some(s) => Json::Num(*s),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobRecord> {
+        anyhow::ensure!(
+            v.get("v")?.as_u64()? == 1,
+            "unknown journal record version"
+        );
+        Ok(JobRecord {
+            id: v.get("id")?.as_str()?.to_string(),
+            spec: v.get("spec")?.as_str()?.to_string(),
+            method: v.get("method")?.as_str()?.to_string(),
+            seed_index: v.get("seed_index")?.as_u64()? as usize,
+            seed: hex_u64(v.get("seed")?.as_str()?)?,
+            steps: v.get("steps")?.as_u64()?,
+            updates: v.get("updates")?.as_u64()?,
+            wall_s: num_or_nan(v.get("wall_s")?)?,
+            signature: hex_u64(v.get("signature")?.as_str()?)?,
+            final_metric: num_or_nan(v.get("final_metric")?)?,
+            final_scores: v
+                .get("final_scores")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_f64())
+                .collect::<Result<_>>()?,
+            required: v
+                .get("required")?
+                .as_arr()?
+                .iter()
+                .map(|t| match t {
+                    Json::Null => Ok(None),
+                    other => other.as_f64().map(Some),
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+fn hex_u64(s: &str) -> Result<u64> {
+    let digits = s
+        .strip_prefix("0x")
+        .ok_or_else(|| anyhow!("u64 field wants 0x-hex, got '{s}'"))?;
+    Ok(u64::from_str_radix(digits, 16)?)
+}
+
+/// `null` ↔ NaN (the JSON writer emits NaN as null).
+fn num_or_nan(v: &Json) -> Result<f64> {
+    match v {
+        Json::Null => Ok(f64::NAN),
+        other => other.as_f64(),
+    }
+}
+
+/// The append handle. Interior mutex: scheduler workers append
+/// concurrently; each line is written and flushed in one critical
+/// section so lines never interleave and a crash tears at most the
+/// final line.
+pub struct Journal {
+    path: PathBuf,
+    w: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl Journal {
+    /// Start a fresh journal (truncates any existing file) and write
+    /// the meta header.
+    pub fn create(path: &Path, meta: &CampaignMeta) -> Result<Journal> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        let j = Journal {
+            path: path.to_path_buf(),
+            w: Mutex::new(std::io::BufWriter::new(f)),
+        };
+        j.line(&meta.to_json())?;
+        Ok(j)
+    }
+
+    /// Reopen an existing journal for `--resume`: verify the meta
+    /// header matches this campaign, replay every completed record,
+    /// truncate away a torn final line, and return the append handle.
+    /// A missing file degrades to [`Journal::create`] (resuming a
+    /// campaign that never started is just starting it).
+    pub fn resume(
+        path: &Path,
+        meta: &CampaignMeta,
+    ) -> Result<(Journal, Vec<JobRecord>)> {
+        if !path.exists() {
+            return Ok((Journal::create(path, meta)?, Vec::new()));
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        let mut records = Vec::new();
+        let mut keep = 0usize; // byte length of the valid prefix
+        let lines: Vec<&str> = text.split_inclusive('\n').collect();
+        let mut first = true;
+        for (i, line) in lines.iter().copied().enumerate() {
+            let is_last = i + 1 == lines.len();
+            let trimmed = line.trim_end_matches('\n');
+            if trimmed.is_empty() {
+                keep += line.len();
+                continue;
+            }
+            if first {
+                // The header. A line that doesn't even parse as a meta
+                // header is the crash-beat-the-header-flush artifact —
+                // tolerated (like the empty-file case below) only when
+                // nothing follows it. A header that *does* parse but
+                // names a different campaign is a hard error: resuming
+                // must never hijack another campaign's journal.
+                match Json::parse(trimmed)
+                    .and_then(|v| CampaignMeta::from_json(&v))
+                {
+                    Ok(got) => anyhow::ensure!(
+                        got == *meta,
+                        "journal {} belongs to a different campaign \
+                         (journal: suite '{}' seed {} n_jobs {} config \
+                         0x{:016x}; this run: suite '{}' seed {} \
+                         n_jobs {} config 0x{:016x})",
+                        path.display(),
+                        got.suite,
+                        got.campaign_seed,
+                        got.n_jobs,
+                        got.config,
+                        meta.suite,
+                        meta.campaign_seed,
+                        meta.n_jobs,
+                        meta.config,
+                    ),
+                    Err(e) if is_last => {
+                        eprintln!(
+                            "campaign: dropping torn journal header \
+                             ({} bytes): {e}",
+                            line.len()
+                        );
+                        break;
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "corrupt journal header in {}",
+                                path.display()
+                            )
+                        })
+                    }
+                }
+            } else {
+                match Json::parse(trimmed)
+                    .and_then(|v| JobRecord::from_json(&v))
+                {
+                    Ok(rec) => records.push(rec),
+                    // A bad *final* line is the expected crash artifact
+                    // (torn write); drop it. Anywhere else: corruption.
+                    Err(e) if is_last => {
+                        eprintln!(
+                            "campaign: dropping torn trailing journal \
+                             line ({} bytes): {e}",
+                            line.len()
+                        );
+                        break;
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "corrupt journal line in {}",
+                                path.display()
+                            )
+                        })
+                    }
+                }
+            }
+            first = false;
+            keep += line.len();
+        }
+        // Truncate the torn tail before appending — otherwise the next
+        // record would concatenate onto the fragment.
+        if keep < text.len() {
+            let f = OpenOptions::new().write(true).open(path)?;
+            f.set_len(keep as u64)?;
+        }
+        let mut f = OpenOptions::new().append(true).open(path)?;
+        // A *parseable* final line can still be missing its newline
+        // (the flush raced the crash mid-line): restore the line
+        // boundary so the next append starts a fresh line.
+        if keep > 0 && !text[..keep].ends_with('\n') {
+            f.write_all(b"\n")?;
+        }
+        let j = Journal {
+            path: path.to_path_buf(),
+            w: Mutex::new(std::io::BufWriter::new(f)),
+        };
+        // An empty file (the crash beat the header flush) resumes as a
+        // fresh journal — write the header it never got.
+        if first {
+            j.line(&meta.to_json())?;
+        }
+        Ok((j, records))
+    }
+
+    /// Append one completed job. Write + flush under the lock: the line
+    /// is durable before the scheduler counts the job as done.
+    pub fn append(&self, rec: &JobRecord) -> Result<()> {
+        self.line(&rec.to_json())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn line(&self, v: &Json) -> Result<()> {
+        let mut w = self.w.lock().unwrap();
+        writeln!(w, "{}", v.to_string())?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: &str) -> JobRecord {
+        JobRecord {
+            id: id.to_string(),
+            spec: "catch?wind=0.15".into(),
+            method: "hts".into(),
+            seed_index: 3,
+            seed: 0xdead_beef_cafe_f00d, // exercises the > 2^53 range
+            steps: 12_000,
+            updates: 75,
+            wall_s: 1.25,
+            signature: 0xffff_ffff_ffff_fffe,
+            final_metric: 0.625,
+            final_scores: vec![0.5, 0.75, 0.625],
+            required: vec![Some(0.5), None],
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let r = rec("catch?wind=0.15|hts|s3");
+        let line = r.to_json().to_string();
+        let back = JobRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn nan_final_metric_roundtrips_as_null() {
+        let mut r = rec("x|hts|s0");
+        r.final_metric = f64::NAN;
+        let line = r.to_json().to_string();
+        assert!(line.contains("\"final_metric\":null"), "{line}");
+        let back = JobRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert!(back.final_metric.is_nan());
+    }
+
+    #[test]
+    fn resume_replays_and_rejects_foreign_meta() {
+        let dir = std::env::temp_dir().join("htsrl_journal_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("j.jsonl");
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 42,
+            n_jobs: 2,
+            config: 0,
+        };
+        let j = Journal::create(&path, &meta).unwrap();
+        j.append(&rec("a|hts|s0")).unwrap();
+        j.append(&rec("b|hts|s0")).unwrap();
+        drop(j);
+        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].id, "a|hts|s0");
+        let other = CampaignMeta { campaign_seed: 43, ..meta.clone() };
+        assert!(Journal::resume(&path, &other).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_and_truncated() {
+        let dir = std::env::temp_dir().join("htsrl_journal_torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("j.jsonl");
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 1,
+            n_jobs: 3,
+            config: 0,
+        };
+        let j = Journal::create(&path, &meta).unwrap();
+        j.append(&rec("a|hts|s0")).unwrap();
+        drop(j);
+        // simulate a crash mid-write: a fragment with no newline
+        use std::io::Write;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"v\":1,\"id\":\"torn").unwrap();
+        drop(f);
+        let (j2, records) = Journal::resume(&path, &meta).unwrap();
+        assert_eq!(records.len(), 1, "torn line must not become a record");
+        j2.append(&rec("b|hts|s0")).unwrap();
+        drop(j2);
+        // the fragment is gone: a second resume sees two clean records
+        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[1].id, "b|hts|s0");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn complete_final_line_missing_newline_keeps_record() {
+        // the flush can race the crash *after* the closing brace but
+        // before the newline — the record is whole, only the line
+        // boundary is missing; appends must not concatenate onto it
+        let dir = std::env::temp_dir().join("htsrl_journal_nonl");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("j.jsonl");
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 1,
+            n_jobs: 3,
+            config: 0,
+        };
+        let j = Journal::create(&path, &meta).unwrap();
+        drop(j);
+        use std::io::Write;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{}", rec("a|hts|s0").to_json().to_string()).unwrap();
+        drop(f); // note: no newline written
+        let (j2, records) = Journal::resume(&path, &meta).unwrap();
+        assert_eq!(records.len(), 1);
+        j2.append(&rec("b|hts|s0")).unwrap();
+        drop(j2);
+        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].id, "a|hts|s0");
+        assert_eq!(records[1].id, "b|hts|s0");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_header_resumes_as_fresh_journal() {
+        // the crash can also land mid-header-flush: a lone partial
+        // header line resumes as a fresh journal (header rewritten),
+        // exactly like the empty-file variant of the same crash window
+        let dir = std::env::temp_dir().join("htsrl_journal_torn_hdr");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        std::fs::write(&path, "{\"campaign\":{\"su").unwrap();
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 1,
+            n_jobs: 3,
+            config: 0,
+        };
+        let (j, records) = Journal::resume(&path, &meta).unwrap();
+        assert!(records.is_empty());
+        j.append(&rec("a|hts|s0")).unwrap();
+        drop(j);
+        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        assert_eq!(records.len(), 1, "rewritten header + record parse");
+        // a VALID header naming a different campaign is never treated
+        // as torn — resuming must not hijack foreign journals
+        let other = CampaignMeta { campaign_seed: 9, ..meta.clone() };
+        assert!(Journal::resume(&path, &other).is_err());
+        // and a torn header with lines *after* it is corruption
+        std::fs::write(&path, "{\"campaign\":{\"su\nnot a header\n")
+            .unwrap();
+        assert!(Journal::resume(&path, &meta).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_middle_line_is_an_error() {
+        let dir = std::env::temp_dir().join("htsrl_journal_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("j.jsonl");
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 1,
+            n_jobs: 3,
+            config: 0,
+        };
+        let j = Journal::create(&path, &meta).unwrap();
+        drop(j);
+        use std::io::Write;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "not json at all").unwrap();
+        writeln!(f, "{}", rec("a|hts|s0").to_json().to_string()).unwrap();
+        drop(f);
+        assert!(Journal::resume(&path, &meta).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,42 @@
+//! Campaign orchestration — run a whole suite in one invocation
+//! (DESIGN.md §10).
+//!
+//! The paper's evaluation is a *campaign*, not a run: Tables 1–5 sweep
+//! envs × methods × seeds under shared budgets. This subsystem is the
+//! engine that executes PR 4's suite/curriculum *data* at that scale,
+//! one layer above the drivers:
+//!
+//! * [`plan`] — expand (suite × methods × seeds) into a deterministic
+//!   job list; derive every per-job seed as a pure function of
+//!   (campaign seed, spec, method, seed index); apply fair budget
+//!   shares at plan time.
+//! * [`scheduler`] — claim jobs across `--jobs N` worker threads and
+//!   run each through a pluggable runner (`coordinator::run` in
+//!   production, the stand-in fleet when artifacts are absent).
+//! * [`journal`] — append-only JSONL of completed jobs; `--resume`
+//!   replays it, skipping finished work after a crash (torn final
+//!   lines are truncated away).
+//! * [`report`] — aggregate per-job records into one cross-spec
+//!   report: jobs CSV, per-(spec, method) summary CSV with
+//!   mean ± bootstrap-CI over seeds, and a markdown table.
+//!
+//! **Jobs-invariance** (the subsystem's acceptance obligation): per-job
+//! trajectory signatures and the rendered report are byte-identical
+//! for every `--jobs` value, every scheduling order, and across a
+//! kill/`--resume` cycle — pinned in `rust/tests/campaign.rs` and
+//! argued in DESIGN.md §10.
+
+pub mod journal;
+pub mod plan;
+pub mod report;
+pub mod scheduler;
+
+pub use journal::{CampaignMeta, JobRecord, Journal};
+pub use plan::{
+    derive_seed, expand, job_id, job_run_config, Budget, CampaignConfig,
+    CampaignPlan, Job, SharePolicy,
+};
+pub use report::{render, write_files, CampaignReport};
+pub use scheduler::{
+    coordinator_runner, run_campaign, CampaignOutcome, Runner,
+};

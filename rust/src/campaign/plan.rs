@@ -1,0 +1,444 @@
+//! Campaign plans: expand a suite × methods × seeds grid into a
+//! deterministic job list (DESIGN.md §10).
+//!
+//! The plan layer is pure data → data: no scheduling, no I/O. Its one
+//! obligation is **jobs-invariance**: everything that can influence a
+//! job's trajectory — the spec, the method, the per-job [`StopCond`],
+//! and above all the per-job seed — is fixed here, as a pure function
+//! of the campaign configuration, *before* any worker thread exists.
+//! The scheduler may then run jobs in any order on any number of
+//! workers without being able to change a single result byte.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::algo::{Algo, AlgoConfig};
+use crate::coordinator::common::{default_artifacts_dir, Fnv};
+use crate::coordinator::{Method, RunConfig, StopCond};
+use crate::envs::{suite, EnvSpec, StepTimeModel};
+use crate::rng::SplitMix64;
+
+/// How a campaign-wide step budget is divided among jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharePolicy {
+    /// Split the total evenly across all planned jobs at *plan* time.
+    /// Every job's budget is a pure function of the plan, so per-job
+    /// trajectories are byte-identical for any `--jobs` value — the
+    /// reproducible default.
+    Fair,
+    /// Jobs reserve steps from a shared pool as they start and return
+    /// what they didn't use; when the pool runs dry remaining jobs are
+    /// skipped. Maximizes budget utilization but ties each job's
+    /// granted budget to scheduling order — **not** jobs-invariant
+    /// (documented in DESIGN.md §10).
+    FirstExhausted,
+}
+
+impl SharePolicy {
+    pub fn parse(s: &str) -> Result<SharePolicy> {
+        match s {
+            "fair" => Ok(SharePolicy::Fair),
+            "first-exhausted" => Ok(SharePolicy::FirstExhausted),
+            other => Err(anyhow!(
+                "unknown share policy '{other}' (want fair|first-exhausted)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SharePolicy::Fair => "fair",
+            SharePolicy::FirstExhausted => "first-exhausted",
+        }
+    }
+}
+
+/// Campaign-wide shared budgets (on top of each job's own [`StopCond`]).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    /// Total environment steps across every job of the campaign.
+    pub total_steps: Option<u64>,
+    /// Total campaign wall-clock: jobs *starting* after this many
+    /// seconds are skipped (running jobs are never interrupted — a
+    /// killed job would journal nothing and redo its work on resume).
+    pub total_wall_s: Option<f64>,
+    pub share: SharePolicy,
+}
+
+impl Default for Budget {
+    fn default() -> Budget {
+        Budget { total_steps: None, total_wall_s: None, share: SharePolicy::Fair }
+    }
+}
+
+/// Everything a campaign needs: which grid to run and how to configure
+/// each job. Pure data — `hts-rl campaign` builds one from flags, the
+/// experiment runners build theirs in code.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Registered suite/curriculum name (`suite::SUITES`).
+    pub suite: String,
+    /// Methods to run per spec (plan order: spec-major, then method,
+    /// then seed index).
+    pub methods: Vec<Method>,
+    /// Seeds per (spec, method) cell.
+    pub seeds: usize,
+    /// Root seed every per-job seed derives from ([`derive_seed`]).
+    pub campaign_seed: u64,
+    /// Concurrent worker slots (`--jobs N`); plan-irrelevant, recorded
+    /// here so one struct carries the whole invocation.
+    pub jobs: usize,
+    /// `--quick`: keep only the first N suite specs (prefix-stable).
+    pub max_specs: Option<usize>,
+    /// Per-job stop condition before budget sharing.
+    pub stop: StopCond,
+    /// Campaign-shared budgets.
+    pub budget: Budget,
+    /// Algorithm for the synchronous methods (hts, sync).
+    pub algo: AlgoConfig,
+    /// Algorithm for async jobs (IMPALA baseline; default V-trace).
+    pub async_algo: AlgoConfig,
+    /// Step-time override applied to every suite spec (e.g. Tab. 1's
+    /// Atari-sim engine cost); `None` keeps each spec's registry model.
+    pub steptime: Option<StepTimeModel>,
+    pub n_envs: usize,
+    pub n_actors: usize,
+    /// HTS replica pooling (baseline methods always run K = 1).
+    pub replicas_per_executor: usize,
+    pub eval_every: u64,
+    pub eval_episodes: usize,
+    /// Required-time thresholds reported per job (Tab. 2 metric).
+    pub rt_targets: Vec<f64>,
+    pub artifacts: PathBuf,
+}
+
+impl CampaignConfig {
+    /// FNV fingerprint of every knob that shapes job *results* (stop
+    /// conditions, budgets, algos, topology, eval protocol, grid
+    /// shape). The journal meta records it so `--resume` refuses to
+    /// mix records produced under a different configuration into one
+    /// report — same suite and seed, different `--updates`, is still a
+    /// different campaign. Deliberately excludes `jobs` (worker count
+    /// is jobs-invariant by construction) and the artifacts path.
+    pub fn fingerprint(&self) -> u64 {
+        let canon = format!(
+            "{:?}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{:?}",
+            self.methods,
+            self.seeds,
+            self.campaign_seed,
+            self.max_specs,
+            self.stop,
+            self.budget,
+            self.algo,
+            self.async_algo,
+            self.steptime,
+            self.n_envs,
+            self.n_actors,
+            self.replicas_per_executor,
+            self.eval_every,
+            self.eval_episodes,
+            self.rt_targets,
+        );
+        let mut f = Fnv::default();
+        for &b in canon.as_bytes() {
+            f.update(b as u64);
+        }
+        f.finish()
+    }
+
+    pub fn new(suite: &str) -> CampaignConfig {
+        CampaignConfig {
+            suite: suite.to_string(),
+            methods: vec![Method::Hts],
+            seeds: 1,
+            campaign_seed: 1,
+            jobs: 1,
+            max_specs: None,
+            stop: StopCond::updates(50),
+            budget: Budget::default(),
+            algo: AlgoConfig::a2c(Algo::A2cDelayed),
+            async_algo: AlgoConfig::a2c(Algo::Vtrace),
+            steptime: None,
+            n_envs: 16,
+            n_actors: 4,
+            replicas_per_executor: 1,
+            eval_every: 10,
+            eval_episodes: 10,
+            rt_targets: Vec::new(),
+            artifacts: default_artifacts_dir(),
+        }
+    }
+}
+
+/// One fully-determined unit of work: a `coordinator::run` invocation.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Position in plan order (journal/report row identity).
+    pub index: usize,
+    /// Canonical id: `spec_str|method|s<seed_index>` — the journal key
+    /// and the [`derive_seed`] input.
+    pub id: String,
+    pub spec: EnvSpec,
+    pub method: Method,
+    pub seed_index: usize,
+    /// Derived run seed — a pure function of
+    /// (campaign seed, spec, method, seed index), never of scheduling.
+    pub seed: u64,
+    /// This job's own stop condition (after fair budget sharing).
+    /// Mutable by callers that shape budgets across phases (tab1 turns
+    /// phase-1 wall times into phase-2 budgets).
+    pub stop: StopCond,
+}
+
+/// The expanded, deterministic job list.
+#[derive(Debug, Clone)]
+pub struct CampaignPlan {
+    pub jobs: Vec<Job>,
+}
+
+/// Canonical job id: `spec_str|method|s<seed_index>`. Spec strings
+/// cannot contain `|` (the registry grammar is
+/// `family[/scenario][?key=val,...]`), so the id is unambiguous.
+pub fn job_id(spec: &EnvSpec, method: Method, seed_index: usize) -> String {
+    format!("{}|{}|s{seed_index}", spec.spec_str(), method.name())
+}
+
+/// Per-job seed: FNV-1a over the job id's bytes, mixed through a
+/// SplitMix64 stream keyed by the campaign seed. Transliterated in
+/// `python/tools/pin_signatures.py` (the campaign pin block) — keep the
+/// two in lockstep.
+pub fn derive_seed(campaign_seed: u64, id: &str) -> u64 {
+    let mut f = Fnv::default();
+    for &b in id.as_bytes() {
+        f.update(b as u64);
+    }
+    SplitMix64::stream(campaign_seed, f.finish()).next_u64()
+}
+
+/// Expand a campaign config into its job list. Deterministic order:
+/// spec-major, then method, then seed index — the row order of every
+/// paper table. Validates the grid and applies fair budget sharing.
+pub fn expand(cfg: &CampaignConfig) -> Result<CampaignPlan> {
+    anyhow::ensure!(!cfg.methods.is_empty(), "campaign needs >= 1 method");
+    for (i, m) in cfg.methods.iter().enumerate() {
+        anyhow::ensure!(
+            !cfg.methods[..i].contains(m),
+            "duplicate method '{}' in campaign",
+            m.name()
+        );
+    }
+    anyhow::ensure!(cfg.seeds >= 1, "campaign needs >= 1 seed per cell");
+    anyhow::ensure!(cfg.jobs >= 1, "campaign needs >= 1 worker slot");
+    let specs = suite::suite_specs_capped(&cfg.suite, cfg.max_specs)?;
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "campaign '{}' expands to zero specs",
+        cfg.suite
+    );
+
+    let mut jobs = Vec::with_capacity(specs.len() * cfg.methods.len() * cfg.seeds);
+    for spec in specs {
+        let spec = match cfg.steptime {
+            Some(st) => spec.with_steptime(st),
+            None => spec,
+        };
+        for &method in &cfg.methods {
+            for seed_index in 0..cfg.seeds {
+                let id = job_id(&spec, method, seed_index);
+                let seed = derive_seed(cfg.campaign_seed, &id);
+                jobs.push(Job {
+                    index: jobs.len(),
+                    id,
+                    spec: spec.clone(),
+                    method,
+                    seed_index,
+                    seed,
+                    stop: cfg.stop,
+                });
+            }
+        }
+    }
+
+    // Fair sharing happens at plan time so every job's budget is a pure
+    // function of the plan — the jobs-invariance keystone.
+    if let Some(total) = cfg.budget.total_steps {
+        match cfg.budget.share {
+            SharePolicy::Fair => {
+                let share = total / jobs.len() as u64;
+                anyhow::ensure!(
+                    share >= 1,
+                    "campaign step budget {total} is smaller than the \
+                     job count {}",
+                    jobs.len()
+                );
+                for job in &mut jobs {
+                    job.stop.max_steps = Some(match job.stop.max_steps {
+                        Some(own) => own.min(share),
+                        None => share,
+                    });
+                }
+            }
+            SharePolicy::FirstExhausted => {
+                // The pool reservation needs a per-job ask; without one
+                // the first job would drain the whole pool.
+                anyhow::ensure!(
+                    jobs.iter().all(|j| j.stop.max_steps.is_some()),
+                    "first-exhausted budget sharing needs a per-job \
+                     --steps cap"
+                );
+            }
+        }
+    } else {
+        anyhow::ensure!(
+            cfg.budget.share == SharePolicy::Fair,
+            "first-exhausted sharing without --total-steps has nothing \
+             to share"
+        );
+    }
+
+    Ok(CampaignPlan { jobs })
+}
+
+/// Build the `RunConfig` a job hands to its driver. Pure function of
+/// (config, job) — workers call it, but nothing here may depend on
+/// scheduling state.
+pub fn job_run_config(cfg: &CampaignConfig, job: &Job) -> RunConfig {
+    let algo = if job.method == Method::Async {
+        cfg.async_algo.clone()
+    } else {
+        cfg.algo.clone()
+    };
+    let mut rc = RunConfig::new(job.spec.clone(), algo);
+    rc.n_envs = cfg.n_envs;
+    rc.n_actors = cfg.n_actors;
+    // replica pooling is an HTS executor feature (coordinator::run
+    // rejects K > 1 for the baselines rather than silently ignoring it)
+    rc.replicas_per_executor = if job.method == Method::Hts {
+        cfg.replicas_per_executor
+    } else {
+        1
+    };
+    rc.seed = job.seed;
+    rc.stop = job.stop;
+    rc.eval_every = cfg.eval_every;
+    rc.eval_episodes = cfg.eval_episodes;
+    rc.artifacts = cfg.artifacts.clone();
+    rc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CampaignConfig {
+        let mut c = CampaignConfig::new("catch_wind");
+        c.methods = vec![Method::Hts, Method::Sync];
+        c.seeds = 2;
+        c.campaign_seed = 7;
+        c
+    }
+
+    #[test]
+    fn expansion_is_spec_major_then_method_then_seed() {
+        let plan = expand(&cfg()).unwrap();
+        // catch_wind has 7 wind levels × 2 methods × 2 seeds
+        assert_eq!(plan.jobs.len(), 28);
+        assert_eq!(plan.jobs[0].id, "catch?wind=0|hts|s0");
+        assert_eq!(plan.jobs[1].id, "catch?wind=0|hts|s1");
+        assert_eq!(plan.jobs[2].id, "catch?wind=0|sync|s0");
+        assert_eq!(plan.jobs[4].id, "catch?wind=0.05|hts|s0");
+        for (i, j) in plan.jobs.iter().enumerate() {
+            assert_eq!(j.index, i);
+        }
+    }
+
+    #[test]
+    fn derived_seeds_are_stable_and_distinct() {
+        let plan = expand(&cfg()).unwrap();
+        let again = expand(&cfg()).unwrap();
+        let seeds: Vec<u64> = plan.jobs.iter().map(|j| j.seed).collect();
+        let seeds2: Vec<u64> = again.jobs.iter().map(|j| j.seed).collect();
+        assert_eq!(seeds, seeds2, "seeds must be pure plan functions");
+        let set: std::collections::BTreeSet<u64> =
+            seeds.iter().copied().collect();
+        assert_eq!(set.len(), seeds.len(), "per-job seeds collide");
+        // a different campaign seed moves every job seed
+        let mut c2 = cfg();
+        c2.campaign_seed = 8;
+        let other = expand(&c2).unwrap();
+        assert!(plan
+            .jobs
+            .iter()
+            .zip(&other.jobs)
+            .all(|(a, b)| a.seed != b.seed));
+    }
+
+    #[test]
+    fn fair_share_caps_every_job() {
+        let mut c = cfg();
+        c.stop = StopCond::steps(10_000);
+        c.budget.total_steps = Some(2_800); // 28 jobs -> 100 steps each
+        let plan = expand(&c).unwrap();
+        assert!(plan
+            .jobs
+            .iter()
+            .all(|j| j.stop.max_steps == Some(100)));
+        // a job's own tighter cap survives sharing
+        c.stop = StopCond::steps(50);
+        let plan = expand(&c).unwrap();
+        assert!(plan.jobs.iter().all(|j| j.stop.max_steps == Some(50)));
+        // budget smaller than the job count is a config error
+        c.budget.total_steps = Some(10);
+        assert!(expand(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_grids() {
+        let mut c = cfg();
+        c.methods.clear();
+        assert!(expand(&c).is_err(), "empty methods");
+        let mut c = cfg();
+        c.methods = vec![Method::Hts, Method::Hts];
+        assert!(expand(&c).is_err(), "duplicate method");
+        let mut c = cfg();
+        c.seeds = 0;
+        assert!(expand(&c).is_err(), "zero seeds");
+        let mut c = cfg();
+        c.suite = "no_such_suite".into();
+        assert!(expand(&c).is_err(), "unknown suite");
+        let mut c = cfg();
+        c.budget.share = SharePolicy::FirstExhausted;
+        assert!(expand(&c).is_err(), "first-exhausted needs total steps");
+        c.budget.total_steps = Some(1_000);
+        assert!(expand(&c).is_err(), "first-exhausted needs per-job cap");
+        c.stop = StopCond::steps(100);
+        assert!(expand(&c).is_ok());
+    }
+
+    #[test]
+    fn quick_truncation_is_prefix_stable() {
+        let full = expand(&cfg()).unwrap();
+        let mut c = cfg();
+        c.max_specs = Some(3);
+        let quick = expand(&c).unwrap();
+        assert_eq!(quick.jobs.len(), 12);
+        for (q, f) in quick.jobs.iter().zip(&full.jobs) {
+            assert_eq!(q.id, f.id);
+            assert_eq!(q.seed, f.seed);
+        }
+    }
+
+    #[test]
+    fn baseline_jobs_never_pool_replicas() {
+        let mut c = cfg();
+        c.replicas_per_executor = 4;
+        let plan = expand(&c).unwrap();
+        let hts = plan.jobs.iter().find(|j| j.method == Method::Hts).unwrap();
+        let sync =
+            plan.jobs.iter().find(|j| j.method == Method::Sync).unwrap();
+        assert_eq!(job_run_config(&c, hts).replicas_per_executor, 4);
+        assert_eq!(job_run_config(&c, sync).replicas_per_executor, 1);
+        assert_eq!(job_run_config(&c, hts).seed, hts.seed);
+    }
+}

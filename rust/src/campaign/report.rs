@@ -1,0 +1,443 @@
+//! Cross-spec campaign reports (DESIGN.md §10).
+//!
+//! Pure rendering: `(config, plan, outcome) → strings`. No I/O and no
+//! clocks, so for a fixed set of job records the emitted bytes are a
+//! pure function of the plan — the half of the jobs-invariance
+//! obligation the report layer owns (the scheduler owns the other
+//! half: records land at their plan index regardless of worker count
+//! or completion order). `rust/tests/campaign.rs` compares these
+//! strings byte-for-byte across `--jobs` values and across a resume.
+//!
+//! Three artifacts per campaign:
+//! * `campaign_<suite>_jobs.csv` — one row per planned job
+//!   (spec × method × seed), self-describing spec strings included.
+//! * `campaign_<suite>_summary.csv` — one row per (spec, method) with
+//!   mean ± bootstrap CI of the final metric over seeds, mean SPS,
+//!   and required-time aggregates.
+//! * `campaign_<suite>_report.md` — the summary as a markdown table.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::campaign::journal::JobRecord;
+use crate::campaign::plan::{CampaignConfig, CampaignPlan};
+use crate::campaign::scheduler::CampaignOutcome;
+use crate::stats::bootstrap_ci;
+use crate::util::csv::{csv_cell, markdown_table};
+
+/// The rendered artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CampaignReport {
+    pub jobs_csv: String,
+    pub summary_csv: String,
+    pub markdown: String,
+}
+
+/// Render all three artifacts from a finished (or resumed) campaign.
+pub fn render(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    outcome: &CampaignOutcome,
+) -> CampaignReport {
+    CampaignReport {
+        jobs_csv: render_jobs_csv(cfg, plan, outcome),
+        summary_csv: render_summary_csv(cfg, plan, outcome),
+        markdown: render_markdown(cfg, plan, outcome),
+    }
+}
+
+/// Write the artifacts into `dir`; returns the paths written.
+pub fn write_files(
+    dir: &Path,
+    suite: &str,
+    rep: &CampaignReport,
+) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let files = [
+        (format!("campaign_{suite}_jobs.csv"), &rep.jobs_csv),
+        (format!("campaign_{suite}_summary.csv"), &rep.summary_csv),
+        (format!("campaign_{suite}_report.md"), &rep.markdown),
+    ];
+    let mut out = Vec::new();
+    for (name, text) in files {
+        let path = dir.join(name);
+        std::fs::write(&path, text)?;
+        out.push(path);
+    }
+    Ok(out)
+}
+
+/// Shortest-roundtrip float cell; NaN (no evals) renders empty so the
+/// CSV stays numeric-parseable.
+fn cell(v: f64) -> String {
+    if v.is_nan() {
+        String::new()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn opt_cell(v: Option<f64>) -> String {
+    v.map_or_else(String::new, cell)
+}
+
+fn rt_headers(cfg: &CampaignConfig, suffixes: &[&str]) -> Vec<String> {
+    cfg.rt_targets
+        .iter()
+        .flat_map(|t| suffixes.iter().map(move |s| format!("rt_{t}{s}")))
+        .collect()
+}
+
+fn render_jobs_csv(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    outcome: &CampaignOutcome,
+) -> String {
+    let mut header: Vec<String> = [
+        "job", "spec", "method", "seed_index", "seed", "status", "steps",
+        "updates", "wall_s", "sps", "final_metric", "signature",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    header.extend(rt_headers(cfg, &["_s"]));
+    let mut out = header.join(",");
+    out.push('\n');
+    for (job, rec) in plan.jobs.iter().zip(&outcome.records) {
+        let mut row: Vec<String> = vec![
+            job.index.to_string(),
+            // spec strings carry commas (`slip=0,agents=2`) — quote
+            csv_cell(&job.spec.spec_str()),
+            job.method.name().to_string(),
+            job.seed_index.to_string(),
+            format!("0x{:016x}", job.seed),
+        ];
+        match rec {
+            Some(r) => {
+                row.push("done".to_string());
+                row.push(r.steps.to_string());
+                row.push(r.updates.to_string());
+                row.push(cell(r.wall_s));
+                row.push(cell(r.sps()));
+                row.push(cell(r.final_metric));
+                row.push(format!("0x{:016x}", r.signature));
+                row.extend(r.required.iter().map(|t| opt_cell(*t)));
+            }
+            None => {
+                let status = outcome
+                    .skipped
+                    .iter()
+                    .find(|&&(i, _)| i == job.index)
+                    .map_or("not-run", |_| "skipped");
+                row.push(status.to_string());
+                row.extend(
+                    (0..6 + cfg.rt_targets.len()).map(|_| String::new()),
+                );
+            }
+        }
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// One (spec, method) aggregate over its seed records.
+struct Group<'a> {
+    spec: String,
+    method: &'static str,
+    records: Vec<&'a JobRecord>,
+    planned: usize,
+}
+
+fn groups<'a>(
+    plan: &CampaignPlan,
+    outcome: &'a CampaignOutcome,
+) -> Vec<Group<'a>> {
+    let mut out: Vec<Group<'a>> = Vec::new();
+    for (job, rec) in plan.jobs.iter().zip(&outcome.records) {
+        let spec = job.spec.spec_str();
+        let method = job.method.name();
+        let g = match out
+            .iter_mut()
+            .find(|g| g.spec == spec && g.method == method)
+        {
+            Some(g) => g,
+            None => {
+                out.push(Group {
+                    spec,
+                    method,
+                    records: Vec::new(),
+                    planned: 0,
+                });
+                out.last_mut().unwrap()
+            }
+        };
+        g.planned += 1;
+        if let Some(r) = rec {
+            g.records.push(r);
+        }
+    }
+    out
+}
+
+/// Mean ± bootstrap CI over the group's per-seed final metrics; a
+/// single record falls back to its last-100 evaluation scores (the
+/// Tab. 1 protocol), so one-seed campaigns still report a CI.
+fn final_ci(g: &Group<'_>) -> (f64, f64, f64) {
+    let fms: Vec<f64> = g
+        .records
+        .iter()
+        .map(|r| r.final_metric)
+        .filter(|m| !m.is_nan())
+        .collect();
+    if fms.is_empty() {
+        return (f64::NAN, f64::NAN, f64::NAN);
+    }
+    if fms.len() == 1 && g.records.len() == 1 {
+        let scores = &g.records[0].final_scores;
+        if scores.len() > 1 {
+            return bootstrap_ci(scores, 10_000, 0.95, 42);
+        }
+    }
+    bootstrap_ci(&fms, 10_000, 0.95, 42)
+}
+
+fn mean_of(vals: impl Iterator<Item = f64>) -> f64 {
+    crate::stats::mean(&vals.collect::<Vec<f64>>())
+}
+
+fn render_summary_csv(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    outcome: &CampaignOutcome,
+) -> String {
+    let mut header: Vec<String> = [
+        "spec", "method", "seeds_done", "seeds_planned", "steps_total",
+        "wall_s_mean", "sps_mean", "final_mean", "final_lo", "final_hi",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    header.extend(rt_headers(cfg, &["_mean_s", "_reached"]));
+    let mut out = header.join(",");
+    out.push('\n');
+    for g in groups(plan, outcome) {
+        let (fm, lo, hi) = final_ci(&g);
+        let mut row = vec![
+            csv_cell(&g.spec),
+            g.method.to_string(),
+            g.records.len().to_string(),
+            g.planned.to_string(),
+            g.records
+                .iter()
+                .map(|r| r.steps)
+                .sum::<u64>()
+                .to_string(),
+            cell(mean_of(g.records.iter().map(|r| r.wall_s))),
+            cell(mean_of(g.records.iter().map(|r| r.sps()))),
+            cell(fm),
+            cell(lo),
+            cell(hi),
+        ];
+        for (ti, _) in cfg.rt_targets.iter().enumerate() {
+            let hits: Vec<f64> = g
+                .records
+                .iter()
+                .filter_map(|r| r.required.get(ti).copied().flatten())
+                .collect();
+            row.push(if hits.is_empty() {
+                String::new()
+            } else {
+                cell(crate::stats::mean(&hits))
+            });
+            row.push(format!("{}/{}", hits.len(), g.records.len()));
+        }
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn render_markdown(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    outcome: &CampaignOutcome,
+) -> String {
+    let completed = outcome.completed().count();
+    // No `resumed` count here: how many records came from the journal
+    // is a property of *this invocation*, not of the campaign — a
+    // resumed run's report must be byte-identical to an uninterrupted
+    // one (the CLI reports resume progress on stderr instead).
+    let mut out = format!(
+        "# Campaign '{}'\n\nmethods: {} · seeds/cell: {} · campaign \
+         seed: {} · jobs: {} planned, {} completed, {} skipped\n\n",
+        cfg.suite,
+        cfg.methods
+            .iter()
+            .map(|m| m.name())
+            .collect::<Vec<_>>()
+            .join(","),
+        cfg.seeds,
+        cfg.campaign_seed,
+        plan.jobs.len(),
+        completed,
+        outcome.skipped.len(),
+    );
+    let mut header = vec![
+        "spec".to_string(),
+        "method".to_string(),
+        "final (95% CI)".to_string(),
+    ];
+    for t in &cfg.rt_targets {
+        header.push(format!("rt {t} (s)"));
+    }
+    header.push("SPS".to_string());
+    header.push("steps".to_string());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut rows = Vec::new();
+    for g in groups(plan, outcome) {
+        let (fm, lo, hi) = final_ci(&g);
+        let mut row = vec![
+            g.spec.clone(),
+            g.method.to_string(),
+            if fm.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{fm:.3} [{lo:.3},{hi:.3}]")
+            },
+        ];
+        for (ti, _) in cfg.rt_targets.iter().enumerate() {
+            let hits: Vec<f64> = g
+                .records
+                .iter()
+                .filter_map(|r| r.required.get(ti).copied().flatten())
+                .collect();
+            row.push(if hits.is_empty() {
+                "-".to_string()
+            } else {
+                format!(
+                    "{:.2} ({}/{})",
+                    crate::stats::mean(&hits),
+                    hits.len(),
+                    g.records.len()
+                )
+            });
+        }
+        let sps = mean_of(g.records.iter().map(|r| r.sps()));
+        row.push(if sps.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{sps:.0}")
+        });
+        row.push(
+            g.records
+                .iter()
+                .map(|r| r.steps)
+                .sum::<u64>()
+                .to_string(),
+        );
+        rows.push(row);
+    }
+    out.push_str(&markdown_table(&header_refs, &rows));
+    if !outcome.skipped.is_empty() {
+        out.push_str("\nskipped jobs:\n");
+        for (i, reason) in &outcome.skipped {
+            let _ = writeln!(out, "* `{}` — {reason}", plan.jobs[*i].id);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::plan::{self, CampaignConfig};
+    use crate::coordinator::{Method, RunConfig, StopCond};
+    use crate::metrics::report::EvalPoint;
+    use crate::metrics::TrainReport;
+
+    fn outcome(
+        cfg: &CampaignConfig,
+    ) -> (CampaignPlan, CampaignOutcome) {
+        let plan = plan::expand(cfg).unwrap();
+        let runner = |job: &plan::Job,
+                      rc: &RunConfig|
+         -> anyhow::Result<TrainReport> {
+            let mut r = TrainReport {
+                steps: 100,
+                updates: 2,
+                wall_s: 2.0,
+                signature: job.seed,
+                ..TrainReport::default()
+            };
+            r.evals.push(EvalPoint {
+                steps: 100,
+                wall_s: 1.0,
+                update: 1,
+                scores: vec![0.25, 0.5, 0.75, 1.0],
+            });
+            Ok(r)
+        };
+        let out = crate::campaign::scheduler::run_campaign(
+            cfg, &plan, &runner, None, &[], None,
+        )
+        .unwrap();
+        (plan, out)
+    }
+
+    fn cfg() -> CampaignConfig {
+        let mut c = CampaignConfig::new("catch_wind");
+        c.methods = vec![Method::Hts];
+        c.seeds = 2;
+        c.max_specs = Some(2);
+        c.stop = StopCond::steps(100);
+        c.rt_targets = vec![0.4];
+        c
+    }
+
+    #[test]
+    fn report_shapes_and_determinism() {
+        let c = cfg();
+        let (plan, out) = outcome(&c);
+        let a = render(&c, &plan, &out);
+        let b = render(&c, &plan, &out);
+        assert_eq!(a, b, "render must be pure");
+        // jobs CSV: header + one row per job, spec strings included
+        let lines: Vec<&str> = a.jobs_csv.lines().collect();
+        assert_eq!(lines.len(), 1 + plan.jobs.len());
+        assert!(lines[0].starts_with("job,spec,method"));
+        assert!(lines[0].ends_with("rt_0.4_s"), "{}", lines[0]);
+        assert!(lines[1].contains("catch?wind=0"), "{}", lines[1]);
+        assert!(lines[1].contains(",done,"));
+        // summary: one row per (spec, method), CI present
+        let s: Vec<&str> = a.summary_csv.lines().collect();
+        assert_eq!(s.len(), 1 + 2);
+        assert!(s[1].contains(",2,2,200,"), "{}", s[1]); // seeds, steps
+        assert!(a.markdown.contains("# Campaign 'catch_wind'"));
+        assert!(a.markdown.contains("| catch?wind=0 "));
+    }
+
+    #[test]
+    fn missing_records_render_as_skipped() {
+        let mut c = cfg();
+        c.budget.total_wall_s = Some(0.0);
+        let plan = plan::expand(&c).unwrap();
+        let runner = |_: &plan::Job,
+                      _: &RunConfig|
+         -> anyhow::Result<TrainReport> {
+            Ok(TrainReport::default())
+        };
+        let out = crate::campaign::scheduler::run_campaign(
+            &c, &plan, &runner, None, &[], None,
+        )
+        .unwrap();
+        let rep = render(&c, &plan, &out);
+        assert!(rep.jobs_csv.contains(",skipped,"));
+        assert!(rep.markdown.contains("skipped jobs:"));
+        // numeric summary cells are empty, not fabricated
+        let s: Vec<&str> = rep.summary_csv.lines().collect();
+        assert!(s[1].starts_with("catch?wind=0,hts,0,2,0,,,"), "{}", s[1]);
+    }
+}

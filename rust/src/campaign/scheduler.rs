@@ -1,0 +1,375 @@
+//! The campaign worker pool (DESIGN.md §10).
+//!
+//! Runs a [`CampaignPlan`]'s jobs across `--jobs N` worker threads.
+//! Each worker claims the next un-run plan index from an atomic
+//! counter, builds the job's `RunConfig` (a pure function of the plan),
+//! invokes the *runner*, journals the finished record, and stores it at
+//! the job's plan index. Because every input a job sees was fixed at
+//! plan time, the worker count and the claim order can only change
+//! *when* a job runs, never *what* it computes — the jobs-invariance
+//! property pinned in `rust/tests/campaign.rs`.
+//!
+//! The runner is pluggable: the CLI passes `coordinator::run`
+//! ([`coordinator_runner`]); tests, benches, and artifact-less CI pass
+//! the deterministic stand-in fleet
+//! (`executor::harness::run_standin_job` — doc-hidden test plumbing).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::campaign::journal::{JobRecord, Journal};
+use crate::campaign::plan::{self, CampaignConfig, CampaignPlan, Job, SharePolicy};
+use crate::coordinator::RunConfig;
+use crate::metrics::report::Stopwatch;
+use crate::metrics::TrainReport;
+
+/// A job runner: everything between "the plan says run this" and "here
+/// is its `TrainReport`". Must be `Sync` — workers share one reference.
+pub type Runner<'a> = dyn Fn(&Job, &RunConfig) -> Result<TrainReport> + Sync + 'a;
+
+/// The production runner: a full `coordinator::run` per job.
+pub fn coordinator_runner(
+) -> impl Fn(&Job, &RunConfig) -> Result<TrainReport> + Sync {
+    |job: &Job, rc: &RunConfig| crate::coordinator::run(job.method, rc)
+}
+
+/// What a campaign hands back: one slot per plan index (`None` = the
+/// job was skipped by a shared budget or never reached before an
+/// abort), plus the skip reasons and how many jobs the journal
+/// satisfied without running.
+#[derive(Debug)]
+pub struct CampaignOutcome {
+    pub records: Vec<Option<JobRecord>>,
+    /// `(plan index, reason)` in plan order.
+    pub skipped: Vec<(usize, String)>,
+    pub resumed: usize,
+}
+
+impl CampaignOutcome {
+    /// Completed records in plan order (resumed + freshly run).
+    pub fn completed(&self) -> impl Iterator<Item = &JobRecord> {
+        self.records.iter().flatten()
+    }
+}
+
+/// Run a campaign. `done` holds journal-replayed records from
+/// [`Journal::resume`]; their jobs are skipped and the records reused
+/// verbatim, which is what makes a resumed report byte-identical to an
+/// uninterrupted one. `curves_out`, when set, gets a per-job training
+/// curve CSV via the shared `metrics::report` helper (the same writer
+/// `hts-rl train --out` uses, so the two cannot drift). Episode logs
+/// are *not* journaled (unbounded), so resumed jobs write no new curve
+/// CSV — they rely on the file the pre-crash run already wrote into
+/// the same `--out` dir, which the crash doesn't remove.
+pub fn run_campaign(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    runner: &Runner<'_>,
+    journal: Option<&Journal>,
+    done: &[JobRecord],
+    curves_out: Option<&Path>,
+) -> Result<CampaignOutcome> {
+    // Resume records key on the job id; an id the plan doesn't know
+    // means the journal belongs to a differently-shaped campaign (the
+    // meta check catches most of this, but a plan edit between runs
+    // must not silently misattribute results).
+    let mut by_id: std::collections::BTreeMap<&str, &JobRecord> =
+        std::collections::BTreeMap::new();
+    for rec in done {
+        anyhow::ensure!(
+            plan.jobs.iter().any(|j| j.id == rec.id),
+            "journal record '{}' matches no job of this campaign plan",
+            rec.id
+        );
+        by_id.insert(&rec.id, rec);
+    }
+
+    let mut n_workers = cfg.jobs.min(plan.jobs.len());
+    if n_workers == 0 {
+        n_workers = 1;
+    }
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let resumed = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<JobRecord>>> =
+        Mutex::new(vec![None; plan.jobs.len()]);
+    let skipped: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+    // First-exhausted sharing: the shared step pool jobs reserve from.
+    let steps_pool: Option<AtomicU64> =
+        match (cfg.budget.total_steps, cfg.budget.share) {
+            (Some(total), SharePolicy::FirstExhausted) => {
+                Some(AtomicU64::new(total))
+            }
+            _ => None,
+        };
+    let watch = Stopwatch::new();
+
+    let worker = |_w: usize| -> Result<()> {
+        loop {
+            if abort.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            let Some(job) = plan.jobs.get(i) else { return Ok(()) };
+            if let Some(rec) = by_id.get(job.id.as_str()) {
+                if let Some(pool) = &steps_pool {
+                    // a journaled job's consumption still debits the
+                    // shared pool — otherwise --resume would refill the
+                    // --total-steps budget and overspend it
+                    reserve_steps(pool, rec.steps);
+                }
+                results.lock().unwrap()[i] = Some((*rec).clone());
+                resumed.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if let Some(limit) = cfg.budget.total_wall_s {
+                if watch.elapsed_s() >= limit {
+                    skipped.lock().unwrap().push((
+                        i,
+                        "campaign wall-clock budget exhausted".to_string(),
+                    ));
+                    continue;
+                }
+            }
+            let mut rc = plan::job_run_config(cfg, job);
+            let mut granted = None;
+            if let Some(pool) = &steps_pool {
+                // per-job ask is validated at plan time
+                let want = rc.stop.max_steps.expect("plan::expand checked");
+                let take = reserve_steps(pool, want);
+                if take == 0 {
+                    skipped.lock().unwrap().push((
+                        i,
+                        "campaign step budget exhausted".to_string(),
+                    ));
+                    continue;
+                }
+                rc.stop.max_steps = Some(take);
+                granted = Some(take);
+            }
+            let report = match runner(job, &rc) {
+                Ok(r) => r,
+                Err(e) => {
+                    // Stop claiming new jobs; journaled work survives
+                    // for --resume.
+                    abort.store(true, Ordering::Relaxed);
+                    return Err(e).with_context(|| {
+                        format!("campaign job '{}' failed", job.id)
+                    });
+                }
+            };
+            if let (Some(pool), Some(take)) = (&steps_pool, granted) {
+                // drivers stop at batch granularity: return unused
+                // grant to the pool, and charge any overshoot so later
+                // jobs shrink instead of the cap silently inflating
+                if report.steps < take {
+                    pool.fetch_add(take - report.steps, Ordering::Relaxed);
+                } else {
+                    reserve_steps(pool, report.steps - take);
+                }
+            }
+            let rec = JobRecord::from_report(job, &report, &cfg.rt_targets);
+            if let Some(j) = journal {
+                if let Err(e) = j.append(&rec) {
+                    abort.store(true, Ordering::Relaxed);
+                    return Err(e).with_context(|| {
+                        format!("journaling campaign job '{}'", job.id)
+                    });
+                }
+            }
+            if let Some(dir) = curves_out {
+                if !report.episodes.is_empty() {
+                    let stem = format!(
+                        "curve_{}_{}_s{}",
+                        job.method.name(),
+                        crate::metrics::report::sanitize_spec_name(
+                            &job.spec.spec_str(),
+                        ),
+                        job.seed_index,
+                    );
+                    if let Err(e) = crate::metrics::report::write_curve_csv(
+                        dir, &stem, &report, 200,
+                    ) {
+                        abort.store(true, Ordering::Relaxed);
+                        return Err(e).with_context(|| {
+                            format!("writing curve for job '{}'", job.id)
+                        });
+                    }
+                }
+            }
+            results.lock().unwrap()[i] = Some(rec);
+        }
+    };
+
+    // shared reference (Copy) so every scoped thread can call the one
+    // worker closure
+    let worker = &worker;
+    let errors: Vec<anyhow::Error> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_workers)
+            .map(|w| s.spawn(move || worker(w)))
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("campaign worker panicked").err())
+            .collect()
+    });
+    if let Some(e) = errors.into_iter().next() {
+        return Err(e);
+    }
+
+    let mut skipped = skipped.into_inner().unwrap();
+    skipped.sort_by_key(|&(i, _)| i);
+    Ok(CampaignOutcome {
+        records: results.into_inner().unwrap(),
+        skipped,
+        resumed: resumed.into_inner(),
+    })
+}
+
+/// Atomically reserve up to `want` steps from the shared pool; returns
+/// the granted amount (0 = pool dry).
+fn reserve_steps(pool: &AtomicU64, want: u64) -> u64 {
+    loop {
+        let cur = pool.load(Ordering::Relaxed);
+        let take = want.min(cur);
+        if take == 0 {
+            return 0;
+        }
+        if pool
+            .compare_exchange(
+                cur,
+                cur - take,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            )
+            .is_ok()
+        {
+            return take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Method, StopCond};
+
+    fn tiny_report(job: &Job, rc: &RunConfig) -> TrainReport {
+        TrainReport {
+            method: job.method.name().to_string(),
+            env: job.spec.spec_str(),
+            seed: rc.seed,
+            steps: rc.stop.max_steps.unwrap_or(64),
+            updates: 1,
+            wall_s: 0.5,
+            signature: rc.seed ^ 0xabcd,
+            ..TrainReport::default()
+        }
+    }
+
+    fn cfg() -> CampaignConfig {
+        let mut c = CampaignConfig::new("catch_wind");
+        c.methods = vec![Method::Hts];
+        c.seeds = 2;
+        c.max_specs = Some(2);
+        c.stop = StopCond::steps(100);
+        c
+    }
+
+    fn runner(job: &Job, rc: &RunConfig) -> Result<TrainReport> {
+        Ok(tiny_report(job, rc))
+    }
+
+    #[test]
+    fn runs_every_job_and_keeps_plan_order() {
+        let c = cfg();
+        let plan = plan::expand(&c).unwrap();
+        let out = run_campaign(&c, &plan, &runner, None, &[], None).unwrap();
+        assert_eq!(out.records.len(), 4);
+        assert_eq!(out.skipped.len(), 0);
+        for (job, rec) in plan.jobs.iter().zip(&out.records) {
+            let rec = rec.as_ref().unwrap();
+            assert_eq!(rec.id, job.id);
+            assert_eq!(rec.seed, job.seed);
+        }
+    }
+
+    #[test]
+    fn first_exhausted_pool_skips_when_dry() {
+        let mut c = cfg();
+        c.budget.total_steps = Some(250);
+        c.budget.share = SharePolicy::FirstExhausted;
+        let plan = plan::expand(&c).unwrap();
+        // jobs ask 100 each and use everything granted: 100 + 100 + 50,
+        // then the pool is dry and the 4th job is skipped
+        let out = run_campaign(&c, &plan, &runner, None, &[], None).unwrap();
+        let steps: Vec<Option<u64>> =
+            out.records.iter().map(|r| r.as_ref().map(|r| r.steps)).collect();
+        assert_eq!(steps, vec![Some(100), Some(100), Some(50), None]);
+        assert_eq!(out.skipped.len(), 1);
+        assert_eq!(out.skipped[0].0, 3);
+    }
+
+    #[test]
+    fn resume_debits_first_exhausted_pool() {
+        let mut c = cfg();
+        c.budget.total_steps = Some(250);
+        c.budget.share = SharePolicy::FirstExhausted;
+        let plan = plan::expand(&c).unwrap();
+        // journaled jobs 0 and 1 already consumed 100 steps each — the
+        // resumed campaign must start from a 50-step pool, not 250
+        let done: Vec<JobRecord> = plan.jobs[..2]
+            .iter()
+            .map(|j| {
+                JobRecord::from_report(
+                    j,
+                    &TrainReport {
+                        steps: 100,
+                        wall_s: 0.5,
+                        ..TrainReport::default()
+                    },
+                    &[],
+                )
+            })
+            .collect();
+        let out =
+            run_campaign(&c, &plan, &runner, None, &done, None).unwrap();
+        assert_eq!(out.resumed, 2);
+        let steps: Vec<Option<u64>> = out
+            .records
+            .iter()
+            .map(|r| r.as_ref().map(|r| r.steps))
+            .collect();
+        assert_eq!(steps, vec![Some(100), Some(100), Some(50), None]);
+        assert_eq!(out.skipped, vec![(3, "campaign step budget \
+                                         exhausted".to_string())]);
+    }
+
+    #[test]
+    fn exhausted_wall_budget_skips_every_job() {
+        let mut c = cfg();
+        c.budget.total_wall_s = Some(0.0);
+        let plan = plan::expand(&c).unwrap();
+        let out = run_campaign(&c, &plan, &runner, None, &[], None).unwrap();
+        assert!(out.records.iter().all(|r| r.is_none()));
+        assert_eq!(out.skipped.len(), 4);
+    }
+
+    #[test]
+    fn foreign_resume_record_is_rejected() {
+        let c = cfg();
+        let plan = plan::expand(&c).unwrap();
+        let mut rec = JobRecord::from_report(
+            &plan.jobs[0],
+            &TrainReport::default(),
+            &[],
+        );
+        rec.id = "not_in_plan|hts|s0".into();
+        assert!(
+            run_campaign(&c, &plan, &runner, None, &[rec], None).is_err()
+        );
+    }
+}

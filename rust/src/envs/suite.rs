@@ -132,6 +132,24 @@ pub fn suite_specs(name: &str) -> Result<Vec<EnvSpec>> {
     Ok(specs)
 }
 
+/// [`suite_specs`] truncated to the first `cap` specs — the `--quick`
+/// path of the campaign engine and the experiment runners. Truncation
+/// is prefix-stable (expansion order is deterministic), so a quick
+/// run's jobs are always a prefix of the full campaign's; outputs must
+/// still carry spec *strings*, not bare indices, because the index of
+/// a given spec is only meaningful relative to the cap.
+pub fn suite_specs_capped(
+    name: &str,
+    cap: Option<usize>,
+) -> Result<Vec<EnvSpec>> {
+    let mut specs = suite_specs(name)?;
+    if let Some(cap) = cap {
+        anyhow::ensure!(cap >= 1, "suite cap must be >= 1");
+        specs.truncate(cap);
+    }
+    Ok(specs)
+}
+
 /// Resolve every registered suite through the registry; returns the
 /// total spec count. The CI gate behind `hts-rl list --check-suites`: a
 /// suite that stops parsing fails the build, not the experiment run.
@@ -459,6 +477,24 @@ mod tests {
                     .unwrap_or_else(|e| panic!("'{s}' of '{pattern}': {e}"));
             }
         });
+    }
+
+    #[test]
+    fn capped_suite_is_a_prefix() {
+        let full = suite_specs("catch_wind").unwrap();
+        let capped = suite_specs_capped("catch_wind", Some(3)).unwrap();
+        assert_eq!(capped.len(), 3);
+        for (c, f) in capped.iter().zip(&full) {
+            assert_eq!(c.spec_str(), f.spec_str());
+        }
+        // no cap / oversized cap = the full suite; a zero cap is a bug
+        assert_eq!(suite_specs_capped("catch_wind", None).unwrap().len(),
+                   full.len());
+        assert_eq!(
+            suite_specs_capped("catch_wind", Some(99)).unwrap().len(),
+            full.len()
+        );
+        assert!(suite_specs_capped("catch_wind", Some(0)).is_err());
     }
 
     #[test]

@@ -12,6 +12,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::buffers::{ActionBuffer, RolloutStorage, StateBuffer, StripedSwap};
+use crate::coordinator::RunConfig;
+use crate::metrics::report::{EvalPoint, SpsMeter, Stopwatch};
+use crate::metrics::TrainReport;
+use crate::rng::SplitMix64;
+use crate::Result;
 
 /// Deterministic stand-in policy: sampled action from the observation
 /// and the executor-drawn seed (the deferred-randomness contract the
@@ -48,6 +53,149 @@ pub fn spawn_standin_actors(
             })
         })
         .collect()
+}
+
+/// Artifact-free stand-in *job* runner for the campaign engine
+/// (DESIGN.md §10): the full executor/actor/swap machinery — real envs,
+/// real replica pools, real mailboxes — under the integer
+/// `seed % act_dim` stand-in policy, so campaigns can run (and CI can
+/// smoke-test) without PJRT artifacts. The per-replica draw order is
+/// exactly the pinned protocol of `rust/tests/pool.rs`, and the
+/// campaign pins in `python/tools/pin_signatures.py` transliterate this
+/// function: seed stream `2000+r`, env stream `1000+r`, α = 5 (unless
+/// `sync_interval` overrides), one iteration per requested update.
+///
+/// The report's timeline is *virtual* (`wall_s = steps / 1e5`): a
+/// stand-in job must be a pure function of its `RunConfig` so campaign
+/// reports stay byte-identical across `--jobs` values and resumes.
+/// Evaluation scores are synthesized from a dedicated seed stream for
+/// the same reason — this runner exercises orchestration, not learning.
+pub fn run_standin_job(cfg: &RunConfig) -> Result<TrainReport> {
+    let spec = cfg.spec.clone();
+    let probe = spec.build()?;
+    let (obs_dim, act_dim) = (probe.obs_dim(), probe.act_dim());
+    drop(probe);
+    let n_envs = cfg.n_envs;
+    let k = cfg.replicas_per_executor.max(1);
+    anyhow::ensure!(
+        n_envs % k == 0,
+        "replicas-per-exec {k} must divide n_envs {n_envs}"
+    );
+    let alpha = if cfg.sync_interval == 0 { 5 } else { cfg.sync_interval };
+    let steps_per_iter = (alpha * n_envs) as u64;
+    let iters = if let Some(u) = cfg.stop.max_updates {
+        u.max(1)
+    } else if let Some(steps) = cfg.stop.max_steps {
+        // floor, not ceil: stay *within* a granted step budget (the
+        // scheduler charges overshoot against shared pools). One
+        // iteration is the machinery's minimum — a grant below
+        // steps_per_iter overshoots by at most one batch, which the
+        // scheduler accounts for.
+        (steps / steps_per_iter).max(1)
+    } else if let Some(wall_s) = cfg.stop.max_wall_s {
+        // a wall-clock budget is honored on the *virtual* clock
+        // (1e5 steps/s), so stand-in campaigns stay deterministic;
+        // capped so a huge budget can't spin the fleet forever
+        ((wall_s * 1e5) as u64 / steps_per_iter).clamp(1, 100_000)
+    } else {
+        4
+    };
+
+    let b_cols = n_envs * spec.n_agents;
+    let n_threads = n_envs / k;
+    let swap = Arc::new(StripedSwap::with_parties(
+        alpha, b_cols, obs_dim, n_envs, n_threads,
+    ));
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(b_cols));
+    let sps = Arc::new(SpsMeter::new());
+    let watch = Stopwatch::new();
+
+    let policy: StandInPolicy =
+        Arc::new(move |_obs, seed| (seed % act_dim as u64) as usize);
+    let actor_handles = spawn_standin_actors(
+        cfg.n_actors.max(1),
+        &state_buf,
+        &act_buf,
+        b_cols,
+        &policy,
+    );
+    let mut pool_handles = Vec::new();
+    for t in 0..n_threads {
+        let spec = spec.clone();
+        let shared = super::PoolShared {
+            swap: swap.clone(),
+            state_buf: state_buf.clone(),
+            act_buf: act_buf.clone(),
+            sps: sps.clone(),
+            watch,
+        };
+        let seed = cfg.seed;
+        pool_handles.push(std::thread::spawn(move || {
+            super::ReplicaPool::new(
+                &spec,
+                seed,
+                alpha,
+                t * k..(t + 1) * k,
+                shared,
+            )?
+            .run()
+        }));
+    }
+
+    let mut gathered = RolloutStorage::new(alpha, b_cols, obs_dim);
+    drive_learner_barrier(
+        &swap, &state_buf, &act_buf, &mut gathered, iters, |_| {},
+    );
+
+    let mut signature = 0u64;
+    let mut episodes = Vec::new();
+    for h in pool_handles {
+        let report = h.join().expect("stand-in pool thread panicked")?;
+        signature ^= report.signature;
+        episodes.extend(report.episodes);
+    }
+    for h in actor_handles {
+        h.join().expect("stand-in actor thread panicked");
+    }
+
+    let steps = steps_per_iter * iters;
+    let wall_s = steps as f64 / 1e5;
+    // virtual episode timestamps, derived from step counts
+    for ep in &mut episodes {
+        ep.wall_s = ep.steps as f64 / 1e5;
+    }
+    let mut evals = Vec::new();
+    if cfg.eval_every > 0 {
+        let mut rng = SplitMix64::stream(cfg.seed, 9_001);
+        for u in 1..=iters {
+            if u % cfg.eval_every == 0 || u == iters {
+                let scores = (0..cfg.eval_episodes.max(1))
+                    .map(|_| rng.next_f64())
+                    .collect();
+                evals.push(EvalPoint {
+                    steps: steps_per_iter * u,
+                    wall_s: (steps_per_iter * u) as f64 / 1e5,
+                    update: u,
+                    scores,
+                });
+            }
+        }
+    }
+    Ok(TrainReport {
+        method: "standin".to_string(),
+        env: spec.spec_str(),
+        seed: cfg.seed,
+        steps,
+        updates: iters,
+        wall_s,
+        episodes,
+        evals,
+        signature,
+        staleness: Vec::new(),
+        final_loss: 0.0,
+        final_entropy: 0.0,
+    })
 }
 
 /// Learner stand-in: drive `iters` two-phase barrier iterations, calling

@@ -1,17 +1,19 @@
 //! Curriculum sweep runner (ISSUE 4): train HTS-RL across a
 //! registry-expanded difficulty curriculum and report how the final
-//! metric degrades with difficulty. The sweep itself is pure spec-string
-//! data (`suite::SUITES`) — this runner owns *no* env loop of its own,
-//! it just walks whatever the suite expands to
-//! (`hts-rl list --suite catch_wind` shows the exact listing).
+//! metric degrades with difficulty. Since ISSUE 5 this runner owns *no*
+//! run loop at all: the `catch_wind` suite is campaign data and the
+//! campaign engine (`crate::campaign`) executes it — `curr` only shapes
+//! the config and renders its CSV/table from the job records
+//! (`hts-rl campaign --suite catch_wind` runs the same plan from the
+//! CLI, with `--jobs`/`--resume` on top).
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::algo::{Algo, AlgoConfig};
-use crate::coordinator::{run, Method, RunConfig, StopCond};
-use crate::envs::suite;
+use crate::campaign;
+use crate::coordinator::{Method, StopCond};
 use crate::util::csv::{markdown_table, CsvWriter};
 
 /// `--id curr`: the `catch_wind` curriculum — seven wind levels from
@@ -19,35 +21,56 @@ use crate::util::csv::{markdown_table, CsvWriter};
 /// final metric decreases (roughly) monotonically with wind while SPS
 /// stays flat: difficulty is a *learning* knob, not a throughput knob.
 pub fn curr(out: &Path, quick: bool) -> Result<()> {
-    let mut specs = suite::suite_specs("catch_wind")?;
+    let mut cfg = campaign::CampaignConfig::new("catch_wind");
+    cfg.methods = vec![Method::Hts];
+    cfg.algo = AlgoConfig::a2c(Algo::A2cDelayed);
+    cfg.n_envs = 16;
+    cfg.n_actors = 1;
+    cfg.eval_every = 10;
+    cfg.eval_episodes = 10;
+    cfg.stop = StopCond::steps(if quick { 3_000 } else { 12_000 });
     if quick {
-        specs.truncate(3);
+        cfg.max_specs = Some(3);
     }
-    let steps: u64 = if quick { 3_000 } else { 12_000 };
+    let plan = campaign::expand(&cfg)?;
+    let outcome = campaign::run_campaign(
+        &cfg,
+        &plan,
+        &campaign::coordinator_runner(),
+        None,
+        &[],
+        None,
+    )?;
+
+    // ISSUE 5 satellite: rows carry the spec *string*, not just the
+    // index — `spec_idx` alone silently shifts meaning when `--quick`
+    // truncates the suite.
     let mut w = CsvWriter::create(
         out.join("curr.csv"),
-        &["spec_idx", "final_metric", "sps"],
+        &["spec_idx", "spec", "final_metric", "sps"],
     )?;
     let mut rows = Vec::new();
-    for (i, spec) in specs.iter().enumerate() {
-        let mut cfg = RunConfig::new(
-            spec.clone(),
-            AlgoConfig::a2c(Algo::A2cDelayed),
-        );
-        cfg.n_envs = 16;
-        cfg.n_actors = 1;
-        cfg.eval_every = 10;
-        cfg.eval_episodes = 10;
-        cfg.stop = StopCond::steps(steps);
-        let r = run(Method::Hts, &cfg)?;
-        let fm = r.final_metric();
-        w.row(&[i as f64, fm, r.sps()])?;
+    for (job, rec) in plan.jobs.iter().zip(&outcome.records) {
+        let rec = rec.as_ref().ok_or_else(|| {
+            anyhow!("campaign job '{}' did not complete", job.id)
+        })?;
+        w.row_mixed(&[
+            job.index.to_string(),
+            crate::util::csv::csv_cell(&rec.spec),
+            format!("{}", rec.final_metric),
+            format!("{}", rec.sps()),
+        ])?;
         rows.push(vec![
-            spec.spec_str(),
-            format!("{fm:.3}"),
-            format!("{:.0}", r.sps()),
+            rec.spec.clone(),
+            format!("{:.3}", rec.final_metric),
+            format!("{:.0}", rec.sps()),
         ]);
-        println!("curr {spec}: final {fm:.3} ({:.0} sps)", r.sps());
+        println!(
+            "curr {}: final {:.3} ({:.0} sps)",
+            rec.spec,
+            rec.final_metric,
+            rec.sps()
+        );
     }
     w.flush()?;
     println!(

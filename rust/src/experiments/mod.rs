@@ -1,5 +1,11 @@
 //! Experiment runners — one per paper table/figure (DESIGN.md §5).
 //! Each runner emits CSV into `results/` plus a markdown table on stdout.
+//!
+//! Suite-shaped runners (`tab1`, `tab2`, `curr`) own no run loops: they
+//! shape a [`crate::campaign::CampaignConfig`], let the campaign engine
+//! execute the plan (DESIGN.md §10), and render their tables from the
+//! returned job records. Single-figure runners still drive
+//! `coordinator::run` directly.
 
 pub mod curr;
 pub mod fig3;

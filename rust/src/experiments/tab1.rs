@@ -5,14 +5,24 @@
 //! synchronous A2C baseline and HTS-RL(A2C). Report the final metric
 //! (mean of the last 100 evaluation episodes) for each method. Expected
 //! shape: Ours ≥ A2C > IMPALA.
+//!
+//! Since ISSUE 5 both phases run on the campaign engine
+//! (`crate::campaign`) instead of a bespoke loop: phase 1 is an
+//! async-only campaign over the `atari` suite; its per-spec wall times
+//! are stamped onto phase 2's job stops (the plan's per-job `StopCond`
+//! is exactly the knob a budget-shaping experiment needs). Jobs run on
+//! one worker — wall-clock *is* the metric here, so jobs must not
+//! contend for cores.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::algo::{Algo, AlgoConfig};
-use crate::coordinator::{run, Method, RunConfig, StopCond};
-use crate::envs::{suite, EnvSpec, StepTimeModel};
+use crate::campaign::{self, CampaignConfig, JobRecord};
+use crate::coordinator::{Method, StopCond};
+use crate::envs::StepTimeModel;
 use crate::stats::bootstrap_ci;
 use crate::util::csv::{markdown_table, CsvWriter};
 
@@ -21,73 +31,101 @@ use crate::util::csv::{markdown_table, CsvWriter};
 pub const ATARI_STEPTIME: StepTimeModel =
     StepTimeModel::Gamma { shape: 8.0, mean_us: 2_000.0 };
 
-fn base_cfg(spec: &EnvSpec, algo: Algo, seed: u64) -> RunConfig {
-    let spec = spec.clone().with_steptime(ATARI_STEPTIME);
-    let mut cfg = RunConfig::new(spec, AlgoConfig::a2c(algo));
+fn base_cfg(quick: bool) -> CampaignConfig {
+    let mut cfg = CampaignConfig::new("atari");
+    cfg.steptime = Some(ATARI_STEPTIME);
     cfg.n_envs = 16;
     cfg.n_actors = 1;
-    cfg.seed = seed;
     cfg.eval_every = 10;
     cfg.eval_episodes = 10;
+    if quick {
+        cfg.max_specs = Some(2);
+    }
     cfg
 }
 
-pub fn tab1(out: &Path, quick: bool) -> Result<()> {
-    // The suite is registry data (`suite::SUITES`), not a hand-rolled
-    // env loop — `hts-rl list --suite atari` shows exactly this listing.
-    let mut envs = suite::suite_specs("atari")?;
-    if quick {
-        envs.truncate(2);
+/// 95% bootstrap CI over a record's last-100 evaluation scores.
+fn ci(rec: &JobRecord) -> (f64, f64, f64) {
+    if rec.final_scores.is_empty() {
+        (f64::NAN, f64::NAN, f64::NAN)
+    } else {
+        bootstrap_ci(&rec.final_scores, 10_000, 0.95, 42)
     }
+}
+
+pub fn tab1(out: &Path, quick: bool) -> Result<()> {
     let async_steps: u64 = if quick { 4_000 } else { 24_000 };
+    let runner = campaign::coordinator_runner();
+
+    // phase 1: the async baseline defines each spec's wall budget
+    let mut cfg = base_cfg(quick);
+    cfg.methods = vec![Method::Async];
+    cfg.async_algo = AlgoConfig::a2c(Algo::Vtrace);
+    cfg.stop = StopCond::steps(async_steps);
+    let plan_a = campaign::expand(&cfg)?;
+    let out_a =
+        campaign::run_campaign(&cfg, &plan_a, &runner, None, &[], None)?;
+    let mut impala: BTreeMap<String, JobRecord> = BTreeMap::new();
+    for (job, rec) in plan_a.jobs.iter().zip(&out_a.records) {
+        let rec = rec.as_ref().ok_or_else(|| {
+            anyhow!("async job '{}' did not complete", job.id)
+        })?;
+        impala.insert(job.spec.spec_str(), rec.clone());
+    }
+
+    // phase 2: both synchronous methods under that wall budget
+    let mut cfg = base_cfg(quick);
+    cfg.methods = vec![Method::Sync, Method::Hts];
+    cfg.algo = AlgoConfig::a2c(Algo::A2cDelayed);
+    let mut plan_b = campaign::expand(&cfg)?;
+    for job in &mut plan_b.jobs {
+        let budget = impala[&job.spec.spec_str()].wall_s;
+        job.stop = StopCond::wall_s(budget);
+    }
+    let out_b =
+        campaign::run_campaign(&cfg, &plan_b, &runner, None, &[], None)?;
+    let mut by_key: BTreeMap<(String, &str), JobRecord> = BTreeMap::new();
+    for (job, rec) in plan_b.jobs.iter().zip(&out_b.records) {
+        let rec = rec.as_ref().ok_or_else(|| {
+            anyhow!("sync job '{}' did not complete", job.id)
+        })?;
+        by_key.insert(
+            (job.spec.spec_str(), job.method.name()),
+            rec.clone(),
+        );
+    }
+
     let mut w = CsvWriter::create(
         out.join("tab1.csv"),
-        &["env_idx", "budget_s", "impala", "impala_lo", "impala_hi", "a2c",
-          "a2c_lo", "a2c_hi", "ours", "ours_lo", "ours_hi"],
+        &["env_idx", "spec", "budget_s", "impala", "impala_lo",
+          "impala_hi", "a2c", "a2c_lo", "a2c_hi", "ours", "ours_lo",
+          "ours_hi"],
     )?;
     let mut rows = Vec::new();
-    for (i, env) in envs.iter().enumerate() {
-        // 1. async baseline defines the wall budget
-        let mut cfg = base_cfg(env, Algo::Vtrace, 1);
-        cfg.stop = StopCond::steps(async_steps);
-        let impala = run(Method::Async, &cfg)?;
-        let budget = impala.wall_s;
-
-        // 2. both synchronous methods get the same wall budget
-        let mut cfg_sync = base_cfg(env, Algo::A2cDelayed, 1);
-        cfg_sync.stop = StopCond::wall_s(budget);
-        let a2c = run(Method::Sync, &cfg_sync)?;
-        let ours = run(Method::Hts, &cfg_sync)?;
-
-        let last100 = |r: &crate::metrics::TrainReport| -> Vec<f64> {
-            r.evals
-                .iter()
-                .rev()
-                .take(10)
-                .flat_map(|e| e.scores.iter().copied())
-                .collect()
-        };
-        let ci = |scores: &[f64]| -> (f64, f64, f64) {
-            if scores.is_empty() {
-                (f64::NAN, f64::NAN, f64::NAN)
-            } else {
-                bootstrap_ci(scores, 10_000, 0.95, 42)
-            }
-        };
-        let (im, ilo, ihi) = ci(&last100(&impala));
-        let (am, alo, ahi) = ci(&last100(&a2c));
-        let (om, olo, ohi) = ci(&last100(&ours));
-        w.row(&[i as f64, budget, im, ilo, ihi, am, alo, ahi, om, olo, ohi])?;
+    for (i, job) in plan_a.jobs.iter().enumerate() {
+        let spec = job.spec.spec_str();
+        let im_rec = &impala[&spec];
+        let budget = im_rec.wall_s;
+        let a2c_rec = &by_key[&(spec.clone(), "sync")];
+        let ours_rec = &by_key[&(spec.clone(), "hts")];
+        let (im, ilo, ihi) = ci(im_rec);
+        let (am, alo, ahi) = ci(a2c_rec);
+        let (om, olo, ohi) = ci(ours_rec);
+        let nums = [budget, im, ilo, ihi, am, alo, ahi, om, olo, ohi];
+        let mut row =
+            vec![i.to_string(), crate::util::csv::csv_cell(&spec)];
+        row.extend(nums.iter().map(|v| format!("{v}")));
+        w.row_mixed(&row)?;
         rows.push(vec![
-            env.to_string(),
+            spec.clone(),
             format!("{im:.2} [{ilo:.2},{ihi:.2}]"),
             format!("{am:.2} [{alo:.2},{ahi:.2}]"),
             format!("{om:.2} [{olo:.2},{ohi:.2}]"),
         ]);
         println!(
-            "tab1 {env}: budget {budget:.1}s impala={im:.2} a2c={am:.2} \
+            "tab1 {spec}: budget {budget:.1}s impala={im:.2} a2c={am:.2} \
              ours={om:.2} (steps: impala {} a2c {} ours {})",
-            impala.steps, a2c.steps, ours.steps
+            im_rec.steps, a2c_rec.steps, ours_rec.steps
         );
     }
     w.flush()?;

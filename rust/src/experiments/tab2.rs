@@ -1,14 +1,21 @@
 //! Tab. 2 / Tab. A10 — the *required time metric* on the football suite:
 //! wall-clock minutes until the running 100-episode eval average reaches
 //! 0.4 / 0.8. Expected shape: Ours(PPO) ≪ PPO, IMPALA (often '-').
+//!
+//! Since ISSUE 5 this is a single three-method campaign over the
+//! `football` suite (`crate::campaign`): the required-time thresholds
+//! are campaign data (`rt_targets`), so the per-job records already
+//! carry both crossings and this runner only renders the table
+//! (`--quick` keeps the first two academy scenarios — the campaign
+//! prefix — instead of the old hand-picked pair).
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::algo::{Algo, AlgoConfig};
-use crate::coordinator::{run, Method, RunConfig, StopCond};
-use crate::envs::{suite, EnvSpec};
+use crate::campaign::{self, JobRecord};
+use crate::coordinator::{Method, StopCond};
 use crate::util::csv::{markdown_table, CsvWriter};
 
 fn fmt_rt(t: Option<f64>) -> String {
@@ -18,64 +25,84 @@ fn fmt_rt(t: Option<f64>) -> String {
     }
 }
 
+fn csv_rt(t: Option<f64>) -> String {
+    match t {
+        Some(s) => format!("{s}"),
+        None => "-1".to_string(),
+    }
+}
+
 pub fn tab2(out: &Path, quick: bool) -> Result<()> {
-    // Suite as registry data: the `football` entry of `suite::SUITES`
-    // is the `football/*` glob — all 11 academy scenarios.
-    let all = suite::suite_specs("football")?;
-    let scenarios: Vec<EnvSpec> = if quick {
-        vec![all[0].clone(), all[6].clone()]
-    } else {
-        all
-    };
-    let steps: u64 = if quick { 4_000 } else { 10_000 };
+    let mut cfg = campaign::CampaignConfig::new("football");
+    // method order is the table's column order; algo per method is
+    // campaign data (sync/hts run PPO, async runs V-trace)
+    cfg.methods = vec![Method::Async, Method::Sync, Method::Hts];
+    cfg.algo = AlgoConfig::ppo();
+    cfg.async_algo = AlgoConfig::a2c(Algo::Vtrace);
+    cfg.n_envs = 16;
+    cfg.n_actors = 1;
+    cfg.eval_every = 4;
+    cfg.eval_episodes = 10;
+    cfg.stop = StopCond::steps(if quick { 4_000 } else { 10_000 });
+    cfg.rt_targets = vec![0.4, 0.8];
+    if quick {
+        cfg.max_specs = Some(2);
+    }
+    let plan = campaign::expand(&cfg)?;
+    let outcome = campaign::run_campaign(
+        &cfg,
+        &plan,
+        &campaign::coordinator_runner(),
+        None,
+        &[],
+        None,
+    )?;
+    let records: Vec<&JobRecord> = plan
+        .jobs
+        .iter()
+        .zip(&outcome.records)
+        .map(|(job, rec)| {
+            rec.as_ref().ok_or_else(|| {
+                anyhow!("campaign job '{}' did not complete", job.id)
+            })
+        })
+        .collect::<Result<_>>()?;
+
     let mut w = CsvWriter::create(
         out.join("tab2.csv"),
-        &["scenario_idx", "impala_04", "impala_08", "ppo_04", "ppo_08",
-          "ours_04", "ours_08"],
+        &["scenario_idx", "spec", "impala_04", "impala_08", "ppo_04",
+          "ppo_08", "ours_04", "ours_08"],
     )?;
     let mut rows = Vec::new();
-    for (i, spec) in scenarios.iter().enumerate() {
-        let scenario = &spec.name;
-        let mk = |algo: AlgoConfig| -> RunConfig {
-            let mut cfg = RunConfig::new(spec.clone(), algo);
-            cfg.n_envs = 16;
-            cfg.n_actors = 1;
-            cfg.eval_every = 4;
-            cfg.eval_episodes = 10;
-            cfg.stop = StopCond::steps(steps);
-            cfg
+    // plan order is spec-major with the three methods contiguous
+    for (i, chunk) in records.chunks(cfg.methods.len()).enumerate() {
+        let [impala, ppo, ours] = chunk else {
+            anyhow::bail!("campaign plan is not method-contiguous")
         };
-        let impala = run(Method::Async, &mk(AlgoConfig::a2c(Algo::Vtrace)))?;
-        let ppo = run(Method::Sync, &mk(AlgoConfig::ppo()))?;
-        let ours = run(Method::Hts, &mk(AlgoConfig::ppo()))?;
+        let spec = &impala.spec;
         let vals = [
-            impala.required_time(0.4),
-            impala.required_time(0.8),
-            ppo.required_time(0.4),
-            ppo.required_time(0.8),
-            ours.required_time(0.4),
-            ours.required_time(0.8),
+            impala.required[0],
+            impala.required[1],
+            ppo.required[0],
+            ppo.required[1],
+            ours.required[0],
+            ours.required[1],
         ];
-        w.row(&[
-            i as f64,
-            vals[0].unwrap_or(-1.0),
-            vals[1].unwrap_or(-1.0),
-            vals[2].unwrap_or(-1.0),
-            vals[3].unwrap_or(-1.0),
-            vals[4].unwrap_or(-1.0),
-            vals[5].unwrap_or(-1.0),
-        ])?;
+        let mut row =
+            vec![i.to_string(), crate::util::csv::csv_cell(spec)];
+        row.extend(vals.iter().map(|&v| csv_rt(v)));
+        w.row_mixed(&row)?;
         rows.push(vec![
-            scenario.trim_start_matches("football/").to_string(),
+            spec.trim_start_matches("football/").to_string(),
             format!("{}/{}", fmt_rt(vals[0]), fmt_rt(vals[1])),
             format!("{}/{}", fmt_rt(vals[2]), fmt_rt(vals[3])),
             format!("{}/{}", fmt_rt(vals[4]), fmt_rt(vals[5])),
         ]);
         println!(
-            "tab2 {scenario}: ours 0.4@{} 0.8@{} (final {:.2})",
+            "tab2 {spec}: ours 0.4@{} 0.8@{} (final {:.2})",
             fmt_rt(vals[4]),
             fmt_rt(vals[5]),
-            ours.final_metric()
+            ours.final_metric
         );
     }
     w.flush()?;

@@ -21,6 +21,7 @@
 
 pub mod algo;
 pub mod buffers;
+pub mod campaign;
 pub mod coordinator;
 pub mod envs;
 pub mod executor;

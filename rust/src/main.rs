@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train        one training run (method/env/algo/stop configurable)
 //!   compare      HTS vs sync vs async on one env, same budget
+//!   campaign     run a whole suite: specs x methods x seeds, concurrent
+//!                jobs, shared budgets, resume, cross-spec report
 //!   exp          regenerate a paper table/figure (`--id tab1`, `--id all`)
 //!   sim          Claim-1/Claim-2 analytic + simulated numbers
 //!   determinism  run the Tab. 4 determinism check
@@ -10,9 +12,10 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use hts_rl::algo::{Algo, AlgoConfig};
+use hts_rl::campaign;
 use hts_rl::coordinator::{run, Method, RunConfig, StopCond};
 use hts_rl::envs::EnvSpec;
 use hts_rl::experiments;
@@ -20,11 +23,18 @@ use hts_rl::simulator::{claim1, claim2};
 use hts_rl::util::cli::Args;
 
 fn usage() -> &'static str {
-    "usage: hts-rl <train|compare|exp|sim|determinism|list> [flags]\n\
+    "usage: hts-rl <train|compare|campaign|exp|sim|determinism|list> [flags]\n\
      train flags: --env catch --method hts|sync|async --algo a2c|ppo|...\n\
        --steps N | --wall-s S | --updates N   --n-envs 16 --n-actors 4\n\
        --replicas-per-exec K (hts only: pool K replicas per exec thread)\n\
        --alpha K --seed 1 --eval-every U --out results/\n\
+     campaign flags: --suite <name> [--methods hts,sync,async] [--seeds K]\n\
+       [--jobs N] [--resume] [--quick] --out results/\n\
+       per-job budget: --steps N | --wall-s S | --updates N\n\
+       shared budget: --total-steps N [--share fair|first-exhausted]\n\
+       --campaign-wall-s S   --algo a2c --async-algo vtrace --seed 1\n\
+       --standin (force the artifact-free stand-in fleet; auto when\n\
+       artifacts are absent)\n\
      exp flags: --id fig3a|...|all  --quick  --out results/\n\
      sim flags: --claim 1|2 [--n 16 --alpha 4 --beta 2.0]\n\
      determinism flags: --k-sweep 1,2,4 (replica-pool factors to check)\n\
@@ -97,21 +107,143 @@ fn cmd_train(a: &Args) -> Result<()> {
         );
     }
     if let Some(out) = a.str_opt("out") {
-        let dir = PathBuf::from(out);
-        std::fs::create_dir_all(&dir)?;
-        // registry spec names may carry `/scenario` and `?key=val,...` —
-        // keep the filename filesystem- and glob-safe
-        let safe_name =
-            cfg.spec.name.replace(['/', '?', '=', ','], "_");
-        let mut w = hts_rl::util::csv::CsvWriter::create(
-            dir.join(format!("curve_{}_{safe_name}.csv", method.name())),
-            &["steps", "wall_s", "reward_ma100"],
+        // shared curve writer + spec-name sanitization (the campaign
+        // per-job output path uses the same helpers)
+        let stem = format!(
+            "curve_{}_{}",
+            method.name(),
+            hts_rl::metrics::report::sanitize_spec_name(&cfg.spec.name)
+        );
+        hts_rl::metrics::report::write_curve_csv(
+            &PathBuf::from(out),
+            &stem,
+            &r,
+            200,
         )?;
-        for (s, t, rew) in r.curve(200) {
-            w.row(&[s as f64, t, rew])?;
-        }
-        w.flush()?;
     }
+    Ok(())
+}
+
+/// `hts-rl campaign`: the whole-suite engine (DESIGN.md §10). Expands
+/// suite × methods × seeds into a deterministic plan, runs it across
+/// `--jobs` workers with an append-only journal (`--resume` skips
+/// finished jobs), and writes the cross-spec report.
+fn cmd_campaign(a: &Args) -> Result<()> {
+    let suite = a
+        .str_opt("suite")
+        .ok_or_else(|| anyhow!("campaign needs --suite <name>"))?;
+    let mut cfg = campaign::CampaignConfig::new(suite);
+    cfg.methods = a
+        .str_or("methods", "hts")
+        .split(',')
+        .map(|m| Method::parse(m.trim()))
+        .collect::<Result<_>>()?;
+    cfg.seeds = a.usize_or("seeds", 1)?;
+    cfg.campaign_seed = a.u64_or("seed", 1)?;
+    cfg.jobs = a.usize_or("jobs", 1)?;
+    cfg.algo = AlgoConfig::for_algo(Algo::parse(&a.str_or("algo", "a2c"))?);
+    cfg.async_algo =
+        AlgoConfig::for_algo(Algo::parse(&a.str_or("async-algo", "vtrace"))?);
+    cfg.n_envs = a.usize_or("n-envs", 16)?;
+    cfg.n_actors = a.usize_or("n-actors", 4)?;
+    cfg.replicas_per_executor = a.usize_or("replicas-per-exec", 1)?;
+    cfg.eval_every = a.u64_or("eval-every", 10)?;
+    cfg.eval_episodes = a.usize_or("eval-episodes", 10)?;
+    if let Some(dir) = a.str_opt("artifacts") {
+        cfg.artifacts = PathBuf::from(dir);
+    }
+    cfg.stop = StopCond {
+        max_steps: a.str_opt("steps").map(|s| s.parse()).transpose()?,
+        max_wall_s: a.str_opt("wall-s").map(|s| s.parse()).transpose()?,
+        max_updates: a.str_opt("updates").map(|s| s.parse()).transpose()?,
+    };
+    let quick = a.bool("quick");
+    if quick {
+        cfg.max_specs = Some(2);
+    }
+    if cfg.stop.max_steps.is_none()
+        && cfg.stop.max_wall_s.is_none()
+        && cfg.stop.max_updates.is_none()
+    {
+        cfg.stop = StopCond::updates(if quick { 3 } else { 50 });
+    }
+    cfg.budget.total_steps =
+        a.str_opt("total-steps").map(|s| s.parse()).transpose()?;
+    cfg.budget.total_wall_s =
+        a.str_opt("campaign-wall-s").map(|s| s.parse()).transpose()?;
+    cfg.budget.share =
+        campaign::SharePolicy::parse(&a.str_or("share", "fair"))?;
+    cfg.rt_targets = vec![0.4, 0.8];
+
+    let plan = campaign::expand(&cfg)?;
+    let out = PathBuf::from(a.str_or("out", "results"));
+
+    // Artifact-free fallback: without PJRT artifacts the coordinator
+    // cannot run; the deterministic stand-in fleet exercises the full
+    // campaign machinery instead (CI smokes the engine this way).
+    let have_artifacts = cfg.artifacts.join("manifest.json").exists();
+    let standin = a.bool("standin") || !have_artifacts;
+    if standin && !a.bool("standin") {
+        eprintln!(
+            "campaign: no artifacts at {} — running the deterministic \
+             stand-in fleet (pass --standin to silence this note)",
+            cfg.artifacts.display()
+        );
+    }
+
+    let meta = campaign::CampaignMeta {
+        suite: cfg.suite.clone(),
+        campaign_seed: cfg.campaign_seed,
+        n_jobs: plan.jobs.len(),
+        // the stand-in marker keeps stand-in and real-coordinator
+        // records from ever mixing in one journal
+        config: cfg.fingerprint()
+            ^ if standin { 0x7374_616e_6469_6e21 } else { 0 },
+    };
+    let journal_path = out.join(format!("campaign_{}.jsonl", cfg.suite));
+    let (journal, done) = if a.bool("resume") {
+        campaign::Journal::resume(&journal_path, &meta)?
+    } else {
+        (campaign::Journal::create(&journal_path, &meta)?, Vec::new())
+    };
+    let real = campaign::coordinator_runner();
+    let fake = |_job: &campaign::Job, rc: &RunConfig| {
+        hts_rl::executor::harness::run_standin_job(rc)
+    };
+    let runner: &campaign::Runner<'_> =
+        if standin { &fake } else { &real };
+
+    eprintln!(
+        "campaign '{}': {} jobs ({} specs x {} methods x {} seeds) on {} \
+         worker(s){}",
+        cfg.suite,
+        plan.jobs.len(),
+        plan.jobs.len() / (cfg.methods.len() * cfg.seeds),
+        cfg.methods.len(),
+        cfg.seeds,
+        cfg.jobs,
+        if done.is_empty() {
+            String::new()
+        } else {
+            format!(", {} already journaled", done.len())
+        }
+    );
+    let curves = out.join("curves");
+    let outcome = campaign::run_campaign(
+        &cfg,
+        &plan,
+        runner,
+        Some(&journal),
+        &done,
+        Some(&curves),
+    )?;
+    let report = campaign::render(&cfg, &plan, &outcome);
+    let files = campaign::write_files(&out, &cfg.suite, &report)?;
+    println!("{}", report.markdown);
+    for f in files {
+        println!("wrote {}", f.display());
+    }
+    println!("journal {}", journal.path().display());
     Ok(())
 }
 
@@ -295,6 +427,7 @@ fn main() -> Result<()> {
     match a.subcommand.as_deref() {
         Some("train") => cmd_train(&a),
         Some("compare") => cmd_compare(&a),
+        Some("campaign") => cmd_campaign(&a),
         Some("exp") => {
             let id = a.str_or("id", "all");
             let out = PathBuf::from(a.str_or("out", "results"));

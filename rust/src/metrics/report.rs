@@ -143,6 +143,37 @@ impl TrainReport {
     }
 }
 
+/// Filesystem- and glob-safe stem for a registry spec name: spec
+/// strings may carry `/scenario` and `?key=val,...` segments.
+///
+/// The one sanitization rule for every run artifact — `hts-rl train
+/// --out` and the campaign per-job curve path both call this, so the
+/// two can't drift.
+pub fn sanitize_spec_name(name: &str) -> String {
+    name.replace(['/', '?', '=', ','], "_")
+}
+
+/// Write one run's training-curve CSV (`steps,wall_s,reward_ma100`,
+/// the paper's Fig. 5 shape) as `<dir>/<stem>.csv`. Shared by
+/// `cmd_train` and the campaign scheduler's per-job output path.
+pub fn write_curve_csv(
+    dir: &std::path::Path,
+    stem: &str,
+    r: &TrainReport,
+    n_points: usize,
+) -> crate::Result<std::path::PathBuf> {
+    let path = dir.join(format!("{stem}.csv"));
+    let mut w = crate::util::csv::CsvWriter::create(
+        &path,
+        &["steps", "wall_s", "reward_ma100"],
+    )?;
+    for (s, t, rew) in r.curve(n_points) {
+        w.row(&[s as f64, t, rew])?;
+    }
+    w.flush()?;
+    Ok(path)
+}
+
 /// Wall-clock helper. `Copy` so a run's single watch can be handed to
 /// every executor thread — episode timestamps must share the run origin
 /// with eval/report timestamps (a per-thread watch started after spawn

@@ -41,6 +41,19 @@ impl CsvWriter {
     }
 }
 
+/// RFC 4180-style cell escaping: quote a cell containing the
+/// separator, a quote, or a line break, doubling any inner quotes.
+/// Registry spec strings carry commas (`...?slip=0,agents=2`), so
+/// every spec-string CSV column must pass through here or the row
+/// silently gains columns.
+pub fn csv_cell(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
 /// Render an aligned markdown table (for EXPERIMENTS.md blocks and stdout).
 pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
     let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
@@ -95,6 +108,16 @@ mod tests {
         let dir = std::env::temp_dir().join("htsrl_csv_test2");
         let mut w = CsvWriter::create(dir.join("t.csv"), &["a"]).unwrap();
         let _ = w.row(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn csv_cell_quotes_commas_and_quotes() {
+        assert_eq!(csv_cell("plain"), "plain");
+        assert_eq!(
+            csv_cell("gridworld_team/gather?slip=0,agents=2"),
+            "\"gridworld_team/gather?slip=0,agents=2\""
+        );
+        assert_eq!(csv_cell("a\"b"), "\"a\"\"b\"");
     }
 
     #[test]

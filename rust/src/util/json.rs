@@ -63,6 +63,20 @@ impl Json {
         Ok(self.as_f64()? as usize)
     }
 
+    /// Exact non-negative integer accessor. Numbers ride through the
+    /// parser as f64, which is only exact below 2⁵³ — counts (steps,
+    /// seeds-as-numbers) must fail loudly past that rather than round
+    /// (full-width u64s like seeds/signatures are stored as hex
+    /// strings instead; see the campaign journal schema).
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(
+            n >= 0.0 && n.fract() == 0.0 && n <= 9_007_199_254_740_992.0,
+            "not an exact u64: {n}"
+        );
+        Ok(n as u64)
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -400,6 +414,17 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let out = v.to_string();
         assert_eq!(Json::parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn u64_accessor_is_exact() {
+        assert_eq!(Json::parse("42").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(Json::parse("0").unwrap().as_u64().unwrap(), 0);
+        assert!(Json::parse("-1").unwrap().as_u64().is_err());
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
+        // past 2^53 an f64 can silently round — must refuse
+        assert!(Json::parse("1e16").unwrap().as_u64().is_err());
+        assert!(Json::parse("\"7\"").unwrap().as_u64().is_err());
     }
 
     #[test]

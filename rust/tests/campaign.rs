@@ -1,0 +1,313 @@
+//! Campaign-engine integration tests — artifact-free, pure L3+ (the
+//! ISSUE 5 acceptance surface).
+//!
+//! Jobs run the *real* stand-in fleet
+//! (`executor::harness::run_standin_job`): real envs, real replica
+//! pools, real mailboxes/swap, deterministic `seed % act_dim` policy —
+//! so per-job trajectory signatures are real trajectory signatures.
+//!
+//! The tentpole obligations:
+//! * **jobs-invariance** — per-job signatures and every rendered report
+//!   byte are identical across `--jobs ∈ {1, 4}`, pinned to constants
+//!   from the independent Python transliteration
+//!   (`python/tools/pin_signatures.py`, campaign block).
+//! * **resume** — a campaign killed mid-way (including a torn final
+//!   journal line) resumes, skips completed jobs, and produces a
+//!   byte-identical report.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use hts_rl::campaign::{
+    self, CampaignConfig, CampaignMeta, Job, Journal,
+};
+use hts_rl::coordinator::{Method, RunConfig, StopCond};
+use hts_rl::executor::harness::run_standin_job;
+use hts_rl::metrics::TrainReport;
+
+/// The quick `gridworld_team` campaign: first two suite specs (gather,
+/// agents=2, slip 0 / 0.15) × hts × 2 seeds, campaign seed 42 — the
+/// grid the Python pins are generated for.
+fn team_cfg() -> CampaignConfig {
+    let mut cfg = CampaignConfig::new("gridworld_team");
+    cfg.methods = vec![Method::Hts];
+    cfg.seeds = 2;
+    cfg.campaign_seed = 42;
+    cfg.max_specs = Some(2);
+    cfg.n_envs = 8;
+    cfg.n_actors = 2;
+    cfg.stop = StopCond::updates(4);
+    cfg.eval_every = 2;
+    cfg.eval_episodes = 5;
+    cfg.rt_targets = vec![0.5];
+    cfg
+}
+
+fn standin(_job: &Job, rc: &RunConfig) -> anyhow::Result<TrainReport> {
+    run_standin_job(rc)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("htsrl_campaign_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// ISSUE 5 acceptance: the same campaign at `--jobs 1` and `--jobs 4`
+/// yields identical per-job trajectory signatures — pinned to the
+/// independent transliteration — and byte-identical rendered reports.
+#[test]
+fn campaign_jobs_invariance_pinned() {
+    // python/tools/pin_signatures.py (campaign block): derived per-job
+    // seeds and the stand-in fleet's trajectory signatures, plan order
+    const PINNED_JOB_SEEDS: [u64; 4] = [
+        0x997a8d5250c1bbcb,
+        0xbb8643a14f3974c8,
+        0xde82f220da554965,
+        0x02b4fcc483598ecf,
+    ];
+    const PINNED_JOB_SIGNATURES: [u64; 4] = [
+        0x535763c191a25960,
+        0x94e5566e3f245123,
+        0xcef405bf29c4d4ab,
+        0x4760bb44b684645a,
+    ];
+
+    let cfg1 = team_cfg();
+    let plan1 = campaign::expand(&cfg1).unwrap();
+    assert_eq!(plan1.jobs.len(), 4);
+    assert_eq!(
+        plan1.jobs[0].id,
+        "gridworld_team/gather?slip=0,agents=2|hts|s0"
+    );
+    assert_eq!(
+        plan1.jobs[2].id,
+        "gridworld_team/gather?slip=0.15,agents=2|hts|s0"
+    );
+    let seeds: Vec<u64> = plan1.jobs.iter().map(|j| j.seed).collect();
+    assert_eq!(seeds, PINNED_JOB_SEEDS, "seed derivation regressed");
+
+    let out1 =
+        campaign::run_campaign(&cfg1, &plan1, &standin, None, &[], None)
+            .unwrap();
+    let sigs: Vec<u64> = out1
+        .records
+        .iter()
+        .map(|r| r.as_ref().unwrap().signature)
+        .collect();
+    assert_eq!(
+        sigs,
+        PINNED_JOB_SIGNATURES.to_vec(),
+        "per-job trajectory signatures regressed"
+    );
+
+    let mut cfg4 = team_cfg();
+    cfg4.jobs = 4;
+    let plan4 = campaign::expand(&cfg4).unwrap();
+    let out4 =
+        campaign::run_campaign(&cfg4, &plan4, &standin, None, &[], None)
+            .unwrap();
+    assert_eq!(
+        out1.records, out4.records,
+        "job records diverged across --jobs"
+    );
+    let rep1 = campaign::render(&cfg1, &plan1, &out1);
+    let rep4 = campaign::render(&cfg4, &plan4, &out4);
+    // comma-bearing spec strings must land as one quoted CSV cell
+    assert!(
+        rep1.jobs_csv
+            .contains("\"gridworld_team/gather?slip=0,agents=2\""),
+        "{}",
+        rep1.jobs_csv
+    );
+    assert_eq!(rep1.jobs_csv, rep4.jobs_csv);
+    assert_eq!(rep1.summary_csv, rep4.summary_csv);
+    // the markdown header names the worker count's *plan* stats only —
+    // it must also be byte-identical
+    assert_eq!(rep1.markdown, rep4.markdown);
+}
+
+/// The invariance above is not a constant-output artifact: a different
+/// campaign seed moves every per-job seed and signature.
+#[test]
+fn campaign_seed_sensitivity() {
+    let cfg_a = team_cfg();
+    let mut cfg_b = team_cfg();
+    cfg_b.campaign_seed = 43;
+    let plan_a = campaign::expand(&cfg_a).unwrap();
+    let plan_b = campaign::expand(&cfg_b).unwrap();
+    let out_a =
+        campaign::run_campaign(&cfg_a, &plan_a, &standin, None, &[], None)
+            .unwrap();
+    let out_b =
+        campaign::run_campaign(&cfg_b, &plan_b, &standin, None, &[], None)
+            .unwrap();
+    for (a, b) in out_a.records.iter().zip(&out_b.records) {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_ne!(a.seed, b.seed);
+        assert_ne!(a.signature, b.signature);
+    }
+}
+
+/// ISSUE 5 acceptance: a campaign killed mid-way — with a torn final
+/// journal line — resumes, skips completed jobs, and produces a report
+/// byte-identical to an uninterrupted run.
+#[test]
+fn campaign_resume_matches_uninterrupted_run() {
+    let dir = tmp_dir("resume");
+    let cfg = team_cfg();
+    let plan = campaign::expand(&cfg).unwrap();
+    let meta = CampaignMeta {
+        suite: cfg.suite.clone(),
+        campaign_seed: cfg.campaign_seed,
+        n_jobs: plan.jobs.len(),
+        config: cfg.fingerprint(),
+    };
+
+    // reference: one uninterrupted run
+    let out_ref =
+        campaign::run_campaign(&cfg, &plan, &standin, None, &[], None)
+            .unwrap();
+    let rep_ref = campaign::render(&cfg, &plan, &out_ref);
+
+    // crashed run: the 3rd job dies after two jobs were journaled
+    let jpath = dir.join("campaign.jsonl");
+    let journal = Journal::create(&jpath, &meta).unwrap();
+    let fail_id = plan.jobs[2].id.clone();
+    let dying = |job: &Job, rc: &RunConfig| {
+        if job.id == fail_id {
+            anyhow::bail!("injected crash");
+        }
+        run_standin_job(rc)
+    };
+    let err = campaign::run_campaign(
+        &cfg,
+        &plan,
+        &dying,
+        Some(&journal),
+        &[],
+        None,
+    );
+    assert!(err.is_err(), "the injected crash must surface");
+    drop(journal);
+    // ... and the crash tore the final journal line mid-write
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&jpath)
+            .unwrap();
+        write!(f, "{{\"v\":1,\"id\":\"gridworld_team/gather?sl").unwrap();
+    }
+
+    // resume: replay the journal, run only what's missing
+    let (journal2, done) = Journal::resume(&jpath, &meta).unwrap();
+    assert_eq!(done.len(), 2, "two clean records, torn line dropped");
+    let ran = AtomicUsize::new(0);
+    let counting = |_job: &Job, rc: &RunConfig| {
+        ran.fetch_add(1, Ordering::Relaxed);
+        run_standin_job(rc)
+    };
+    let out2 = campaign::run_campaign(
+        &cfg,
+        &plan,
+        &counting,
+        Some(&journal2),
+        &done,
+        None,
+    )
+    .unwrap();
+    assert_eq!(
+        ran.load(Ordering::Relaxed),
+        plan.jobs.len() - done.len(),
+        "resume must skip journaled jobs"
+    );
+    assert_eq!(out2.resumed, done.len());
+
+    let rep2 = campaign::render(&cfg, &plan, &out2);
+    assert_eq!(rep_ref.jobs_csv, rep2.jobs_csv);
+    assert_eq!(rep_ref.summary_csv, rep2.summary_csv);
+    assert_eq!(rep_ref.markdown, rep2.markdown);
+
+    // a second resume of the now-complete journal runs nothing at all
+    let (journal3, done3) = Journal::resume(&jpath, &meta).unwrap();
+    assert_eq!(done3.len(), plan.jobs.len());
+    let ran3 = AtomicUsize::new(0);
+    let counting3 = |_job: &Job, rc: &RunConfig| {
+        ran3.fetch_add(1, Ordering::Relaxed);
+        run_standin_job(rc)
+    };
+    let out3 = campaign::run_campaign(
+        &cfg,
+        &plan,
+        &counting3,
+        Some(&journal3),
+        &done3,
+        None,
+    )
+    .unwrap();
+    assert_eq!(ran3.load(Ordering::Relaxed), 0);
+    assert_eq!(out3.resumed, plan.jobs.len());
+    let rep3 = campaign::render(&cfg, &plan, &out3);
+    assert_eq!(rep_ref.jobs_csv, rep3.jobs_csv);
+
+    // a changed run configuration (same suite, seed, and grid size)
+    // must not reuse this journal — the config fingerprint differs
+    let mut cfg2 = team_cfg();
+    cfg2.stop = StopCond::updates(8);
+    let meta2 = CampaignMeta {
+        suite: cfg2.suite.clone(),
+        campaign_seed: cfg2.campaign_seed,
+        n_jobs: plan.jobs.len(),
+        config: cfg2.fingerprint(),
+    };
+    assert!(Journal::resume(&jpath, &meta2).is_err());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The per-job curve CSVs flow through the shared
+/// `metrics::report::write_curve_csv` helper — the same writer
+/// `hts-rl train --out` uses — named by sanitized spec and seed index.
+#[test]
+fn campaign_writes_per_job_curves_via_shared_helper() {
+    let dir = tmp_dir("curves");
+    // catch episodes complete every 9 steps, so every stand-in job is
+    // guaranteed an episode log (team episodes rarely finish inside the
+    // tiny 20-step budget)
+    let mut cfg = CampaignConfig::new("catch_wind");
+    cfg.methods = vec![Method::Hts];
+    cfg.seeds = 1;
+    cfg.campaign_seed = 7;
+    cfg.max_specs = Some(2);
+    cfg.n_envs = 4;
+    cfg.n_actors = 1;
+    cfg.stop = StopCond::updates(4);
+    cfg.eval_every = 2;
+    cfg.eval_episodes = 3;
+    let plan = campaign::expand(&cfg).unwrap();
+    let out = campaign::run_campaign(
+        &cfg,
+        &plan,
+        &standin,
+        None,
+        &[],
+        Some(&dir),
+    )
+    .unwrap();
+    for (job, rec) in plan.jobs.iter().zip(&out.records) {
+        let rec = rec.as_ref().unwrap();
+        let path = dir.join(format!(
+            "curve_hts_{}_s{}.csv",
+            hts_rl::metrics::report::sanitize_spec_name(&rec.spec),
+            job.seed_index
+        ));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(text.starts_with("steps,wall_s,reward_ma100\n"));
+        assert!(text.lines().count() >= 2, "curve has data rows");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
