@@ -337,7 +337,59 @@ def emit(label, sig, hashes):
     print("];")
 
 
+def emit_lane_width():
+    """Pins for tests/pool.rs::lane_width_signatures_pinned (ISSUE 6).
+
+    The lane-width invariance run: n_envs = 32 so the harness can be
+    factored as K ∈ {1, 8, 32} lanes per executor pool. Per-replica
+    streams key on the *global* replica index and each SoA lane draws in
+    scalar order from its own stream, so ONE sequential simulation pins
+    every width — the Rust test asserts all three widths reproduce these
+    constants (and the W = 1 run exercises the pre-refactor path).
+    """
+    for name, make_env in (
+        ("LANE_CATCH", Catch),
+        ("LANE_TEAM", lambda: TeamGridWorld(2, 0.15)),
+    ):
+        sig, hashes = simulate(make_env, n_envs=32)
+        print(f"// tests/pool.rs::lane_width_signatures_pinned — "
+              f"{name.lower()}, n_envs=32, W ∈ {{1, 8, 32}}")
+        print(f"const {name}_SIGNATURE: u64 = 0x{sig:016x};")
+        print(f"const {name}_BATCH_HASHES: [u64; {len(hashes)}] = [")
+        for h in hashes:
+            print(f"    0x{h:016x},")
+        print("];")
+
+
+def self_check():
+    """Refuse to emit if the legacy pins stop regenerating byte-identically.
+
+    These constants are the PR 2/4/5 pins committed in rust/tests/; any
+    transliteration edit that moves them is a semantics change, not a
+    refactor, and must fail loudly here before new pins get pasted.
+    """
+    sig, hashes = simulate(Catch)
+    assert sig == 0xC9567D1A817F0564, hex(sig)
+    assert hashes == [
+        0x60FF0BC8027EA625, 0xD7DF0C258C254067,
+        0xF806391C6F0AB8E4, 0x505165E9ED735EA6,
+    ], [hex(h) for h in hashes]
+    sig, hashes = simulate(lambda: TeamGridWorld(2, 0.15))
+    assert sig == 0x9A123A8E466BA605, hex(sig)
+    assert hashes == [
+        0xC60AFB8C8CAAD2D0, 0xB460B78AA8A8D3AB,
+        0xA54CEE67AC83DF3E, 0xD8718BF4CB3A393B,
+    ], [hex(h) for h in hashes]
+    job = "gridworld_team/gather?slip=0,agents=2|hts|s0"
+    assert derive_seed(42, job) == 0x997A8D5250C1BBCB
+    sig, _ = simulate(
+        lambda: TeamGridWorld(2, 0.0), seed=0x997A8D5250C1BBCB
+    )
+    assert sig == 0x535763C191A25960, hex(sig)
+
+
 if __name__ == "__main__":
+    self_check()
     emit(
         "tests/pool.rs::pool_signatures_pinned — catch, 1 agent",
         *simulate(Catch),
@@ -347,4 +399,5 @@ if __name__ == "__main__":
         "gridworld_team/gather?slip=0.15, 2 agents",
         *simulate(lambda: TeamGridWorld(2, 0.15)),
     )
+    emit_lane_width()
     emit_campaign()

@@ -289,11 +289,7 @@ fn blocking_executors(
                 for _t in 0..alpha {
                     let mut buf = state_buf.rent(obs_dim);
                     buf.extend_from_slice(&obs);
-                    state_buf.push(ObsMsg {
-                        slot: e,
-                        obs: buf,
-                        seed: seed_rng.next_u64(),
-                    });
+                    state_buf.push(ObsMsg::single(e, buf, seed_rng.next_u64()));
                     let act = match act_buf.take(e) {
                         Some(a) => a,
                         None => break 'outer,
@@ -364,6 +360,7 @@ fn pooled_executors(
             act_buf: act_buf.clone(),
             sps: sps.clone(),
             watch,
+            col_offset: 0,
         };
         handles.push(std::thread::spawn(move || {
             ReplicaPool::new(&spec, seed, alpha, t * k..(t + 1) * k, shared)
@@ -560,12 +557,135 @@ fn bench_campaign_scheduler(rec: &mut Recorder) {
     }
 }
 
+/// ISSUE 6 acceptance benchmark: struct-of-arrays lane stepping. Every
+/// vectorized registry family at widths {1, 8, 32}: batched
+/// `step_lanes_into` steps/s (per-lane steps, not batched calls), with
+/// on-done per-lane resets inline like the executor path. The timed loop
+/// is *asserted* allocation-free — the SoA planes, per-lane RNGs, and
+/// action/info slices are all caller-owned, so a single heap allocation
+/// in a family's step path is a regression and fails CI naming it.
+fn bench_vec_lanes(rec: &mut Recorder) {
+    use hts_rl::envs::{StepInfo, VecEnv};
+
+    println!("== vectorized lane stepping: steps/s per family x width ==");
+    let specs = [
+        ("catch?wind=0.1", 1usize, "vec_catch"),
+        ("cartpole?noise=0.1", 1, "vec_cartpole"),
+        ("gridworld", 1, "vec_gridworld"),
+        ("gridworld_team/gather?slip=0.15", 2, "vec_gridworld_team"),
+    ];
+    for (spec_str, n_agents, key) in specs {
+        let spec = EnvSpec::by_name(spec_str)
+            .unwrap()
+            .with_agents(n_agents)
+            .unwrap();
+        for &w in &[1usize, 8, 32] {
+            let mut lanes = spec.build_lanes(w).unwrap();
+            let lane_dim = lanes.lane_dim();
+            let act_dim = lanes.act_dim() as u64;
+            let mut rngs: Vec<SplitMix64> = (0..w)
+                .map(|l| SplitMix64::stream(11, 1_000 + l as u64))
+                .collect();
+            let mut plane = vec![0.0f32; w * lane_dim];
+            let mut acts = vec![0usize; w * n_agents];
+            let mut infos = vec![StepInfo { reward: 0.0, done: false }; w];
+            let mut act_rng = SplitMix64::new(7);
+            lanes.reset_lanes_into(&mut rngs, &mut plane);
+            let iters = if w == 1 { 60_000u64 } else { 20_000 };
+            let mut run = |n: u64,
+                           lanes: &mut Box<dyn VecEnv>,
+                           rngs: &mut [SplitMix64],
+                           plane: &mut [f32]| {
+                for _ in 0..n {
+                    for a in acts.iter_mut() {
+                        *a = (act_rng.next_u64() % act_dim) as usize;
+                    }
+                    lanes.step_lanes_into(
+                        &acts, rngs, &mut infos, plane,
+                    );
+                    for (l, info) in infos.iter().enumerate() {
+                        if info.done {
+                            lanes.reset_lane_into(
+                                l,
+                                &mut rngs[l],
+                                &mut plane
+                                    [l * lane_dim..(l + 1) * lane_dim],
+                            );
+                        }
+                    }
+                }
+            };
+            run(iters / 10, &mut lanes, &mut rngs, &mut plane); // warmup
+            let allocs0 = allocations();
+            let t0 = Instant::now();
+            run(iters, &mut lanes, &mut rngs, &mut plane);
+            let dt = t0.elapsed().as_secs_f64();
+            let allocs = allocations() - allocs0;
+            let sps = (iters * w as u64) as f64 / dt;
+            println!(
+                "{:<44} {sps:>12.0} steps/s  {allocs} allocs",
+                format!("{spec_str} W={w}")
+            );
+            rec.record(&format!("{key}_w{w}_steps_per_s"), sps);
+            assert_eq!(
+                allocs, 0,
+                "{spec_str} W={w}: vectorized step path allocated"
+            );
+        }
+    }
+}
+
+/// ISSUE 6 satellite: the actors' batched grab (`grab_into` →
+/// `pop_batch_into`) and the executors' publish path must stay
+/// allocation-free at steady state — obs buffers cycle through the
+/// free-list ring and the caller's batch vec is reused in place.
+fn bench_state_buffer_grab(rec: &mut Recorder) {
+    println!("== state buffer batched grab (pop_batch_into path) ==");
+    const B: usize = 64;
+    const DIM: usize = 50;
+    let sb = StateBuffer::new();
+    let obs = vec![0.25f32; DIM];
+    let mut batch = Vec::new();
+    let mut round = |sb: &StateBuffer, batch: &mut Vec<ObsMsg>, r: u64| {
+        for e in 0..B {
+            let mut buf = sb.rent(DIM);
+            buf.extend_from_slice(&obs);
+            let _ = sb.push(ObsMsg::single(e, buf, r));
+        }
+        sb.grab_into(batch, B);
+        sb.recycle_batch(batch);
+    };
+    for r in 0..4 {
+        round(&sb, &mut batch, r); // warm the free lists + queue ring
+    }
+    const N: u64 = 2_000;
+    let allocs0 = allocations();
+    let t0 = Instant::now();
+    for r in 0..N {
+        round(&sb, &mut batch, r);
+    }
+    let per_us = t0.elapsed().as_secs_f64() / (N * B as u64) as f64 * 1e6;
+    let allocs = allocations() - allocs0;
+    println!(
+        "{:<44} {per_us:>12.3} µs/msg  {allocs} allocs",
+        format!("publish+grab_into+recycle ({B}-msg batch)")
+    );
+    rec.record("state_buffer_grab_us_per_msg", per_us);
+    rec.record("state_buffer_grab_allocs", allocs as f64);
+    assert_eq!(
+        allocs, 0,
+        "batched publish/grab path must be allocation-free at steady state"
+    );
+}
+
 fn main() {
     let mut rec = Recorder::new();
     println!("== component micro-benchmarks ==");
 
     bench_contended_write_path(&mut rec);
     bench_pool_vs_blocking(&mut rec);
+    bench_vec_lanes(&mut rec);
+    bench_state_buffer_grab(&mut rec);
     bench_spec_resolution(&mut rec);
     bench_campaign_scheduler(&mut rec);
 

@@ -14,21 +14,71 @@ use std::sync::Mutex;
 
 use super::queue::BlockingQueue;
 
-/// One observation awaiting an action.
+/// One observation awaiting an action — or, when `group_seeds` is
+/// non-empty, a whole *lane group's* observations in one message.
+///
+/// Group messages (ISSUE 6) are how a replica pool ships a vectorized
+/// lane group's contiguous plane in a single push: `obs` then holds
+/// `1 + group_seeds.len()` consecutive batch columns starting at `slot`
+/// (lane-major, agent-major within a lane — the `VecEnv` plane layout
+/// verbatim), `seed` belongs to the first column and `group_seeds[i]` to
+/// column `slot + 1 + i`. Every seed is still executor-drawn in the
+/// scalar publish order, so an actor serving the group column-by-column
+/// produces byte-identical actions to per-column messages — one grab,
+/// one (optional) forward, no per-replica flatten copies.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObsMsg {
-    /// Global batch column: env_index * n_agents + agent_index.
+    /// Global batch column: env_index * n_agents + agent_index (the
+    /// *first* column of a group message).
     pub slot: usize,
     pub obs: Vec<f32>,
-    /// Executor-drawn sampling seed (deferred randomness).
+    /// Executor-drawn sampling seed (deferred randomness) for the first
+    /// column.
     pub seed: u64,
+    /// Seeds for the trailing columns of a group message; empty for the
+    /// classic single-column message.
+    pub group_seeds: Vec<u64>,
+}
+
+impl ObsMsg {
+    /// Classic single-column message.
+    pub fn single(slot: usize, obs: Vec<f32>, seed: u64) -> ObsMsg {
+        ObsMsg { slot, obs, seed, group_seeds: Vec::new() }
+    }
+
+    /// Number of batch columns this message carries.
+    pub fn cols(&self) -> usize {
+        1 + self.group_seeds.len()
+    }
+
+    /// Per-column obs length (each column is one agent's observation).
+    pub fn col_dim(&self) -> usize {
+        debug_assert_eq!(self.obs.len() % self.cols(), 0);
+        self.obs.len() / self.cols()
+    }
+
+    /// Seed for column `c` (0-based within the message).
+    pub fn col_seed(&self, c: usize) -> u64 {
+        if c == 0 {
+            self.seed
+        } else {
+            self.group_seeds[c - 1]
+        }
+    }
+}
+
+/// Both recycled-storage pools, behind the one free-list lock.
+#[derive(Default)]
+struct FreeLists {
+    obs: Vec<Vec<f32>>,
+    seeds: Vec<Vec<u64>>,
 }
 
 pub struct StateBuffer {
     q: BlockingQueue<ObsMsg>,
-    /// Recycled observation buffers (capacity is bounded by the number
-    /// of in-flight observations, i.e. the batch-column count).
-    free: Mutex<Vec<Vec<f32>>>,
+    /// Recycled observation/seed buffers (capacity is bounded by the
+    /// number of in-flight observations, i.e. the batch-column count).
+    free: Mutex<FreeLists>,
 }
 
 impl Default for StateBuffer {
@@ -39,7 +89,10 @@ impl Default for StateBuffer {
 
 impl StateBuffer {
     pub fn new() -> StateBuffer {
-        StateBuffer { q: BlockingQueue::new(), free: Mutex::new(Vec::new()) }
+        StateBuffer {
+            q: BlockingQueue::new(),
+            free: Mutex::new(FreeLists::default()),
+        }
     }
 
     /// Pop one recycled buffer off the (locked) free list — or allocate
@@ -54,7 +107,7 @@ impl StateBuffer {
     /// Take an empty observation buffer off the free list (or allocate
     /// one during warm-up), with capacity for at least `dim` floats.
     pub fn rent(&self, dim: usize) -> Vec<f32> {
-        Self::pop_cleared(&mut self.free.lock().unwrap(), dim)
+        Self::pop_cleared(&mut self.free.lock().unwrap().obs, dim)
     }
 
     /// [`StateBuffer::rent`] × `n` under **one** lock acquisition
@@ -62,15 +115,39 @@ impl StateBuffer {
     /// step's buffers without hammering the free-list lock per agent.
     pub fn rent_into(&self, out: &mut Vec<Vec<f32>>, n: usize, dim: usize) {
         let mut g = self.free.lock().unwrap();
-        out.extend((0..n).map(|_| Self::pop_cleared(&mut g, dim)));
+        out.extend((0..n).map(|_| Self::pop_cleared(&mut g.obs, dim)));
+    }
+
+    /// Rent one group-message payload under one lock: an obs buffer with
+    /// capacity for `dim` floats plus a seed buffer with capacity for
+    /// `n_seeds` trailing-column seeds. The seed ring recycles through
+    /// [`StateBuffer::recycle_batch`] exactly like the obs ring, so group
+    /// publication is alloc-free at steady state too.
+    pub fn rent_group(
+        &self,
+        dim: usize,
+        n_seeds: usize,
+    ) -> (Vec<f32>, Vec<u64>) {
+        let mut g = self.free.lock().unwrap();
+        let obs = Self::pop_cleared(&mut g.obs, dim);
+        let mut seeds = g.seeds.pop().unwrap_or_default();
+        seeds.clear();
+        seeds.reserve(n_seeds);
+        (obs, seeds)
     }
 
     /// Return a whole served batch's buffers under one lock acquisition
     /// (the actor-side counterpart of [`StateBuffer::push_batch`]).
-    /// Leaves `batch` empty and reusable.
+    /// Group messages' seed buffers rejoin their own free ring. Leaves
+    /// `batch` empty and reusable.
     pub fn recycle_batch(&self, batch: &mut Vec<ObsMsg>) {
         let mut g = self.free.lock().unwrap();
-        g.extend(batch.drain(..).map(|m| m.obs));
+        for m in batch.drain(..) {
+            g.obs.push(m.obs);
+            if m.group_seeds.capacity() > 0 {
+                g.seeds.push(m.group_seeds);
+            }
+        }
     }
 
     pub fn push(&self, msg: ObsMsg) -> bool {
@@ -135,7 +212,7 @@ mod tests {
     fn grab_batches() {
         let sb = StateBuffer::new();
         for slot in 0..6 {
-            sb.push(ObsMsg { slot, obs: vec![slot as f32], seed: slot as u64 });
+            sb.push(ObsMsg::single(slot, vec![slot as f32], slot as u64));
         }
         let batch = sb.grab(4);
         assert_eq!(batch.len(), 4);
@@ -147,7 +224,7 @@ mod tests {
     fn push_batch_preserves_order_and_drains_scratch() {
         let sb = StateBuffer::new();
         let mut msgs: Vec<ObsMsg> = (0..3)
-            .map(|slot| ObsMsg { slot, obs: vec![0.0], seed: slot as u64 })
+            .map(|slot| ObsMsg::single(slot, vec![0.0], slot as u64))
             .collect();
         assert!(sb.push_batch(&mut msgs));
         assert!(msgs.is_empty(), "scratch must drain for reuse");
@@ -161,7 +238,7 @@ mod tests {
         let sb = StateBuffer::new();
         sb.close();
         let mut msgs =
-            vec![ObsMsg { slot: 0, obs: vec![1.0], seed: 0 }];
+            vec![ObsMsg::single(0, vec![1.0], 0)];
         assert!(!sb.push_batch(&mut msgs));
         assert!(msgs.is_empty(), "closed push must still empty the scratch");
     }
@@ -171,7 +248,7 @@ mod tests {
         let sb = StateBuffer::new();
         sb.close();
         assert!(sb.grab(8).is_empty());
-        let mut batch = vec![ObsMsg { slot: 0, obs: vec![], seed: 0 }];
+        let mut batch = vec![ObsMsg::single(0, vec![], 0)];
         sb.grab_into(&mut batch, 8);
         assert!(batch.is_empty());
     }
@@ -183,7 +260,7 @@ mod tests {
         buf.extend_from_slice(&[1.0, 2.0, 3.0, 4.0]);
         let cap = buf.capacity();
         let ptr = buf.as_ptr();
-        sb.push(ObsMsg { slot: 0, obs: buf, seed: 7 });
+        sb.push(ObsMsg::single(0, buf, 7));
         let mut batch = Vec::new();
         sb.grab_into(&mut batch, 8);
         assert_eq!(batch.len(), 1);
@@ -198,6 +275,30 @@ mod tests {
     }
 
     #[test]
+    fn group_message_accessors_and_seed_ring() {
+        let sb = StateBuffer::new();
+        let (mut obs, mut seeds) = sb.rent_group(6, 2);
+        assert!(obs.is_empty() && obs.capacity() >= 6);
+        assert!(seeds.is_empty() && seeds.capacity() >= 2);
+        obs.extend_from_slice(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        seeds.extend_from_slice(&[11, 12]);
+        let seeds_ptr = seeds.as_ptr();
+        sb.push(ObsMsg { slot: 4, obs, seed: 10, group_seeds: seeds });
+        let mut batch = Vec::new();
+        sb.grab_into(&mut batch, 8);
+        let m = &batch[0];
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.col_dim(), 2);
+        assert_eq!((m.col_seed(0), m.col_seed(1), m.col_seed(2)),
+                   (10, 11, 12));
+        assert_eq!(&m.obs[1 * m.col_dim()..2 * m.col_dim()], &[2.0, 3.0]);
+        sb.recycle_batch(&mut batch);
+        // the seed storage comes back through its own ring
+        let (_, again) = sb.rent_group(6, 2);
+        assert_eq!(again.as_ptr(), seeds_ptr);
+    }
+
+    #[test]
     fn rent_into_takes_n_buffers_at_once() {
         let sb = StateBuffer::new();
         let mut bufs = Vec::new();
@@ -209,7 +310,7 @@ mod tests {
         let mut batch: Vec<ObsMsg> = bufs
             .drain(..)
             .enumerate()
-            .map(|(slot, obs)| ObsMsg { slot, obs, seed: 0 })
+            .map(|(slot, obs)| ObsMsg::single(slot, obs, 0))
             .collect();
         sb.recycle_batch(&mut batch);
         sb.rent_into(&mut bufs, 4, 8);

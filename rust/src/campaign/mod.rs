@@ -38,5 +38,6 @@ pub use plan::{
 };
 pub use report::{render, write_files, CampaignReport};
 pub use scheduler::{
-    coordinator_runner, run_campaign, CampaignOutcome, Runner,
+    coordinator_runner, run_campaign, standin_hub_runner, CampaignOutcome,
+    Runner,
 };

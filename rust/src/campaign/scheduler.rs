@@ -36,6 +36,21 @@ pub fn coordinator_runner(
     |job: &Job, rc: &RunConfig| crate::coordinator::run(job.method, rc)
 }
 
+/// The artifact-free campaign runner backed by a shared
+/// [`StandInHub`](crate::executor::harness::StandInHub) fleet (ISSUE 6):
+/// one actor fleet per model config serves every concurrent job, batching
+/// inference across whatever mix of jobs is in flight. Per-job results
+/// are byte-identical to `run_standin_job`'s private-fleet path — the
+/// hub only shifts mailbox columns, never seeds or draw order (pinned in
+/// `rust/tests/campaign.rs`). Call `hub.finish()` after the campaign.
+pub fn standin_hub_runner(
+    hub: &crate::executor::harness::StandInHub,
+) -> impl Fn(&Job, &RunConfig) -> Result<TrainReport> + Sync + '_ {
+    move |job: &Job, rc: &RunConfig| {
+        crate::executor::harness::run_standin_job_shared(rc, hub, &job.id)
+    }
+}
+
 /// What a campaign hands back: one slot per plan index (`None` = the
 /// job was skipped by a shared budget or never reached before an
 /// abort), plus the skip reasons and how many jobs the journal

@@ -116,11 +116,11 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
                     state_buf.rent_into(&mut buf_scratch, n_agents, d);
                     for (a, mut buf) in buf_scratch.drain(..).enumerate() {
                         buf.extend_from_slice(&obs[a * d..(a + 1) * d]);
-                        msg_scratch.push(ObsMsg {
-                            slot: e * n_agents + a,
-                            obs: buf,
-                            seed: seed_rng.next_u64(),
-                        });
+                        msg_scratch.push(ObsMsg::single(
+                            e * n_agents + a,
+                            buf,
+                            seed_rng.next_u64(),
+                        ));
                     }
                     let _ = state_buf.push_batch(&mut msg_scratch);
                     act_scratch.clear();

@@ -194,7 +194,10 @@ pub fn spawn_actors(
                 let pool = ForwardPool::new(&rt, &model)?;
                 let d = pool.info.obs_dim;
                 let a_dim = pool.info.act_dim;
-                let grab = max_grab.min(pool.max_batch());
+                // `grab` counts *messages*; a lane-group message carries a
+                // whole pool's columns, so the forward below chunks by
+                // columns against `max_batch` instead of capping the grab.
+                let grab = max_grab.max(1);
                 // §Perf: cache the parameter literal per published version
                 // (rebuilding it per batch showed up in the profile).
                 let mut cached: Option<(u64, xla::Literal)> = None;
@@ -236,22 +239,50 @@ pub fn spawn_actors(
                             &cached.as_ref().unwrap().1
                         }
                     };
-                    flat.clear();
-                    for m in &batch {
-                        flat.extend_from_slice(&m.obs);
-                    }
-                    let t0 = std::time::Instant::now();
-                    let (logits, _values) =
-                        pool.forward_lit(lit, &flat, batch.len())?;
-                    fwd_s += t0.elapsed().as_secs_f64();
-                    n_calls += 1;
-                    n_obs += batch.len() as u64;
-                    for (i, m) in batch.iter().enumerate() {
-                        let a = sample_action(
-                            &logits[i * a_dim..(i + 1) * a_dim],
-                            m.seed,
-                        );
-                        act_buf.post(m.slot, a);
+                    // Total mailbox columns in the grab (a lane-group
+                    // message publishes `cols()` of them at once).
+                    let total_cols: usize =
+                        batch.iter().map(|m| m.cols()).sum();
+                    // A lone message's plane is already the contiguous
+                    // `[cols × d]` the forward wants — serve it in place.
+                    // Only a multi-message grab pays the flatten copy.
+                    let obs: &[f32] = if batch.len() == 1 {
+                        &batch[0].obs
+                    } else {
+                        flat.clear();
+                        for m in &batch {
+                            flat.extend_from_slice(&m.obs);
+                        }
+                        &flat
+                    };
+                    let cap = pool.max_batch().max(1);
+                    let mut cols = batch.iter().flat_map(|m| {
+                        (0..m.cols()).map(move |c| {
+                            (m.slot + c, m.col_seed(c))
+                        })
+                    });
+                    let mut served = 0usize;
+                    while served < total_cols {
+                        let n = cap.min(total_cols - served);
+                        let t0 = std::time::Instant::now();
+                        let (logits, _values) = pool.forward_lit(
+                            lit,
+                            &obs[served * d..(served + n) * d],
+                            n,
+                        )?;
+                        fwd_s += t0.elapsed().as_secs_f64();
+                        n_calls += 1;
+                        n_obs += n as u64;
+                        for i in 0..n {
+                            let (slot, seed) =
+                                cols.next().expect("column count mismatch");
+                            let a = sample_action(
+                                &logits[i * a_dim..(i + 1) * a_dim],
+                                seed,
+                            );
+                            act_buf.post(slot, a);
+                        }
+                        served += n;
                     }
                     // Hand the served buffers back to the executors.
                     state_buf.recycle_batch(&mut batch);

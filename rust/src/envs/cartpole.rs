@@ -7,16 +7,18 @@ use super::{Env, StepInfo};
 use crate::rng::SplitMix64;
 use anyhow::Result;
 
-const GRAVITY: f32 = 9.8;
-const MASS_CART: f32 = 1.0;
-const MASS_POLE: f32 = 0.1;
-const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
-const LENGTH: f32 = 0.5; // half pole length
-const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
-const FORCE_MAG: f32 = 10.0;
-const TAU: f32 = 0.02;
-const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
-const X_LIMIT: f32 = 2.4;
+// Shared with the SoA lane impl in `envs::vec` — both paths must run the
+// exact same f32 expression tree for bit-identical trajectories.
+pub(crate) const GRAVITY: f32 = 9.8;
+pub(crate) const MASS_CART: f32 = 1.0;
+pub(crate) const MASS_POLE: f32 = 0.1;
+pub(crate) const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+pub(crate) const LENGTH: f32 = 0.5; // half pole length
+pub(crate) const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
+pub(crate) const FORCE_MAG: f32 = 10.0;
+pub(crate) const TAU: f32 = 0.02;
+pub(crate) const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+pub(crate) const X_LIMIT: f32 = 2.4;
 pub const MAX_STEPS: usize = 200;
 
 pub struct CartPole {

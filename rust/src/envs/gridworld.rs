@@ -186,40 +186,7 @@ impl TeamGridWorld {
     }
 
     fn write_obs_for(&self, agent: usize, o: &mut [f32]) {
-        debug_assert_eq!(o.len(), OBS_DIM);
-        o.fill(0.0);
-        for (g, &(gr, gc)) in self.goals.iter().enumerate() {
-            if !self.captured[g] {
-                o[gr * N + gc] = 0.5;
-            }
-        }
-        for (i, &(ar, ac)) in self.agents.iter().enumerate() {
-            if i != agent {
-                o[ar * N + ac] = -0.5;
-            }
-        }
-        let me = self.agents[agent];
-        o[me.0 * N + me.1] = 1.0;
-        // nearest uncaptured goal: first strict minimum of the squared
-        // distance, in goal-index order (deterministic tie-break)
-        let (mut best_d2, mut best_g) = (i64::MAX, usize::MAX);
-        for (g, &(gr, gc)) in self.goals.iter().enumerate() {
-            if self.captured[g] {
-                continue;
-            }
-            let dr = gr as i64 - me.0 as i64;
-            let dc = gc as i64 - me.1 as i64;
-            let d2 = dr * dr + dc * dc;
-            if d2 < best_d2 {
-                best_d2 = d2;
-                best_g = g;
-            }
-        }
-        if best_g != usize::MAX {
-            let (gr, gc) = self.goals[best_g];
-            o[N * N] = (gr as f32 - me.0 as f32) / N as f32;
-            o[N * N + 1] = (gc as f32 - me.1 as f32) / N as f32;
-        }
+        team_obs_for(&self.goals, &self.captured, &self.agents, agent, o);
     }
 
     fn write_all_obs(&self, out: &mut [f32]) {
@@ -229,7 +196,7 @@ impl TeamGridWorld {
         }
     }
 
-    fn mv(pos: (usize, usize), act: usize) -> (usize, usize) {
+    pub(crate) fn mv(pos: (usize, usize), act: usize) -> (usize, usize) {
         let (r, c) = pos;
         match act {
             0 => (r.saturating_sub(1), c),
@@ -237,6 +204,52 @@ impl TeamGridWorld {
             2 => (r, c.saturating_sub(1)),
             _ => (r, (c + 1).min(N - 1)),
         }
+    }
+}
+
+/// Per-agent team observation writer, shared by the scalar env above and
+/// the SoA lane impl in `envs::vec` — a single transliteration source so
+/// the pinned layout can never drift between the two paths.
+pub(crate) fn team_obs_for(
+    goals: &[(usize, usize)],
+    captured: &[bool],
+    agents: &[(usize, usize)],
+    agent: usize,
+    o: &mut [f32],
+) {
+    debug_assert_eq!(o.len(), OBS_DIM);
+    o.fill(0.0);
+    for (g, &(gr, gc)) in goals.iter().enumerate() {
+        if !captured[g] {
+            o[gr * N + gc] = 0.5;
+        }
+    }
+    for (i, &(ar, ac)) in agents.iter().enumerate() {
+        if i != agent {
+            o[ar * N + ac] = -0.5;
+        }
+    }
+    let me = agents[agent];
+    o[me.0 * N + me.1] = 1.0;
+    // nearest uncaptured goal: first strict minimum of the squared
+    // distance, in goal-index order (deterministic tie-break)
+    let (mut best_d2, mut best_g) = (i64::MAX, usize::MAX);
+    for (g, &(gr, gc)) in goals.iter().enumerate() {
+        if captured[g] {
+            continue;
+        }
+        let dr = gr as i64 - me.0 as i64;
+        let dc = gc as i64 - me.1 as i64;
+        let d2 = dr * dr + dc * dc;
+        if d2 < best_d2 {
+            best_d2 = d2;
+            best_g = g;
+        }
+    }
+    if best_g != usize::MAX {
+        let (gr, gc) = goals[best_g];
+        o[N * N] = (gr as f32 - me.0 as f32) / N as f32;
+        o[N * N + 1] = (gc as f32 - me.1 as f32) / N as f32;
     }
 }
 

@@ -38,11 +38,13 @@ pub mod gridworld;
 pub mod registry;
 pub mod steptime;
 pub mod suite;
+pub mod vec;
 
 use crate::rng::SplitMix64;
 use anyhow::Result;
 pub use registry::{registry, EnvRegistry, ResolvedSpec};
 pub use steptime::StepTimeModel;
+pub use vec::{ScalarLanes, VecEnv};
 
 /// Scalar outcome of a single environment step. Reward and done are
 /// per-environment; the per-agent observations land in the caller's flat
@@ -147,6 +149,20 @@ impl EnvSpec {
     /// map allocation happens here.
     pub fn build(&self) -> Result<Box<dyn Env>> {
         self.resolved.build(self.n_agents)
+    }
+
+    /// Instantiate `width` replica lanes behind one [`VecEnv`] (ISSUE 6):
+    /// a native SoA impl when the family registered one, otherwise
+    /// `width` scalar replicas behind [`ScalarLanes`]. Bit-identical to
+    /// `width` independent [`EnvSpec::build`] envs fed the same per-lane
+    /// RNG streams (the lane-invariance property, `envs/vec.rs` tests).
+    pub fn build_lanes(&self, width: usize) -> Result<Box<dyn VecEnv>> {
+        self.resolved.build_lanes(self.n_agents, width)
+    }
+
+    /// Whether `build_lanes` gets a native SoA impl for this family.
+    pub fn is_vectorized(&self) -> bool {
+        self.resolved.is_vectorized()
     }
 }
 

@@ -41,7 +41,8 @@ use std::sync::OnceLock;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{cartpole, catch, football, gridworld};
+use super::vec::VecEnv;
+use super::{cartpole, catch, football, gridworld, vec};
 use super::{Env, EnvSpec, StepTimeModel};
 
 /// A named parameter preset (`catch_windy` ≡ `catch?wind=0.2`).
@@ -113,6 +114,42 @@ impl ResolvedSpec {
             params: &self.params,
         })
     }
+
+    /// Whether the family registered a native SoA lane constructor
+    /// (`false` means [`Self::build_lanes`] degrades to per-lane scalar
+    /// envs behind [`vec::ScalarLanes`]).
+    pub fn is_vectorized(&self) -> bool {
+        self.family.vec_build.is_some()
+    }
+
+    /// Instantiate `width` lanes behind one [`VecEnv`] — native SoA when
+    /// the family registered a vec constructor, [`vec::ScalarLanes`]
+    /// otherwise. Parse-free like `build`.
+    pub(crate) fn build_lanes(
+        &self,
+        n_agents: usize,
+        width: usize,
+    ) -> Result<Box<dyn VecEnv>> {
+        self.check_agents(n_agents)?;
+        anyhow::ensure!(
+            width >= 1,
+            "lane width must be >= 1, got {width}"
+        );
+        let args = EnvArgs {
+            scenario: self.scenario,
+            n_agents,
+            params: &self.params,
+        };
+        match self.family.vec_build {
+            Some(vb) => vb(&args, width),
+            None => {
+                let envs = (0..width)
+                    .map(|_| (self.family.build)(&args))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Box::new(vec::ScalarLanes::new(envs)?))
+            }
+        }
+    }
 }
 
 impl PartialEq for ResolvedSpec {
@@ -150,6 +187,9 @@ pub struct EnvFamily {
     agent_bounds: fn(Option<&str>) -> Result<RangeInclusive<usize>>,
     steptime: fn(Option<&str>) -> Result<StepTimeModel>,
     build: fn(&EnvArgs<'_>) -> Result<Box<dyn Env>>,
+    /// Optional SoA lane constructor (ISSUE 6): `Some` for families with
+    /// a native [`VecEnv`] impl, `None` to fall back to scalar lanes.
+    vec_build: Option<fn(&EnvArgs<'_>, usize) -> Result<Box<dyn VecEnv>>>,
 }
 
 /// The resolved pieces of a spec string. Scenario strings are interned
@@ -388,6 +428,7 @@ impl EnvRegistry {
                     agent_bounds: single_agent,
                     steptime: no_steptime,
                     build: build_catch,
+                    vec_build: Some(vec_catch),
                 },
                 EnvFamily {
                     name: "gridworld",
@@ -404,6 +445,7 @@ impl EnvRegistry {
                     agent_bounds: single_agent,
                     steptime: no_steptime,
                     build: build_gridworld,
+                    vec_build: Some(vec_gridworld),
                 },
                 EnvFamily {
                     name: "cartpole",
@@ -420,6 +462,7 @@ impl EnvRegistry {
                     agent_bounds: single_agent,
                     steptime: no_steptime,
                     build: build_cartpole,
+                    vec_build: Some(vec_cartpole),
                 },
                 EnvFamily {
                     name: "gridworld_team",
@@ -430,6 +473,7 @@ impl EnvRegistry {
                     agent_bounds: team_agents,
                     steptime: no_steptime,
                     build: build_gridworld_team,
+                    vec_build: Some(vec_gridworld_team),
                 },
                 EnvFamily {
                     name: "football",
@@ -440,6 +484,9 @@ impl EnvRegistry {
                     agent_bounds: football_agents,
                     steptime: football_steptime,
                     build: build_football,
+                    // Full-pitch sim with deeply branchy per-player
+                    // logic — stays scalar behind `ScalarLanes`.
+                    vec_build: None,
                 },
             ],
         }
@@ -518,6 +565,35 @@ fn build_football(a: &EnvArgs<'_>) -> Result<Box<dyn Env>> {
     Ok(Box::new(football::Football::new(
         require_scenario("football", a.scenario)?,
         a.n_agents,
+    )?))
+}
+
+fn vec_catch(a: &EnvArgs<'_>, w: usize) -> Result<Box<dyn VecEnv>> {
+    Ok(Box::new(vec::CatchLanes::new(
+        w,
+        a.f("wind", 0.0),
+        a.flag("narrow"),
+    )?))
+}
+
+fn vec_gridworld(a: &EnvArgs<'_>, w: usize) -> Result<Box<dyn VecEnv>> {
+    Ok(Box::new(vec::GridWorldLanes::new(w, a.flag("sparse"))?))
+}
+
+fn vec_cartpole(a: &EnvArgs<'_>, w: usize) -> Result<Box<dyn VecEnv>> {
+    Ok(Box::new(vec::CartPoleLanes::new(w, a.f("noise", 0.0))?))
+}
+
+fn vec_gridworld_team(
+    a: &EnvArgs<'_>,
+    w: usize,
+) -> Result<Box<dyn VecEnv>> {
+    Ok(Box::new(vec::TeamGridWorldLanes::new(
+        w,
+        require_scenario("gridworld_team", a.scenario)?,
+        a.n_agents,
+        a.f("slip", 0.0),
+        a.flag("sparse"),
     )?))
 }
 

@@ -1,0 +1,1136 @@
+//! Vectorized lane-stepping environments (DESIGN.md §11).
+//!
+//! The scalar [`Env`] trait steps one replica at a time through a
+//! `Box<dyn Env>` vtable — for the cheap families that vtable hop plus
+//! the branchy per-replica state is the floor on steps/sec. This module
+//! adds a batch API: a [`VecEnv`] owns `width` independent replica
+//! *lanes* in struct-of-arrays layout and steps all of them in one call
+//! over a lane-major `[width × n_agents × obs_dim]` observation plane.
+//! The inner loops iterate parallel state arrays with the stochasticity
+//! gates hoisted out, so the common (deterministic) paths are
+//! branch-light and autovectorizable.
+//!
+//! **Lane invariance is the load-bearing contract**: each lane keeps its
+//! *own* `SplitMix64` stream and draws from it in exactly the scalar
+//! impl's order, and no lane reads another lane's state. Stepping lanes
+//! one at a time, in any order, or all at once is therefore bit-identical
+//! to `width` independent scalar envs — the same obligation the replica
+//! pool carries for `(n_threads, K)` factorizations, extended down into
+//! the env layer and pinned by the property tests below plus the
+//! width-pinned signatures in `rust/tests/pool.rs`.
+//!
+//! Families without a native SoA impl (football) ride through
+//! [`ScalarLanes`], which lifts any `Box<dyn Env>` collection into the
+//! lane API one vtable call per lane — same semantics, no speedup.
+
+use super::gridworld::{team_obs_for, TeamGridWorld};
+use super::{cartpole, catch, gridworld, Env, StepInfo};
+use crate::rng::SplitMix64;
+use anyhow::Result;
+
+/// Batch-stepping environment: `width` independent replica lanes behind
+/// one object. Observations live on a lane-major plane of
+/// `width * lane_dim()` f32s; lane `i` owns `out[i*lane_dim .. (i+1)*lane_dim]`
+/// (agent-major within the lane, exactly the PR 3 flat plane layout).
+///
+/// The per-lane methods are the semantic ground truth; the `*_lanes_into`
+/// batch methods have default per-lane-loop impls and may be overridden
+/// with fused loops **only** when the override preserves each lane's
+/// within-stream draw order (see module doc).
+pub trait VecEnv: Send {
+    /// Number of independent replica lanes.
+    fn width(&self) -> usize;
+    /// Per-agent observation length (matches the scalar family).
+    fn obs_dim(&self) -> usize;
+    /// Action space size (uniform across lanes).
+    fn act_dim(&self) -> usize;
+    /// Controlled agents per lane (uniform across lanes).
+    fn n_agents(&self) -> usize {
+        1
+    }
+    /// Floats one lane contributes to the plane.
+    fn lane_dim(&self) -> usize {
+        self.n_agents() * self.obs_dim()
+    }
+
+    /// Reset a single lane, writing its `lane_dim()` observation slice.
+    fn reset_lane_into(
+        &mut self,
+        lane: usize,
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    );
+
+    /// Step a single lane (`actions` holds its `n_agents()` actions),
+    /// writing its `lane_dim()` observation slice.
+    fn step_lane_into(
+        &mut self,
+        lane: usize,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo;
+
+    /// Reset every lane. `rngs[i]` is lane `i`'s private stream; `out`
+    /// is the full `width * lane_dim()` plane.
+    fn reset_lanes_into(
+        &mut self,
+        rngs: &mut [SplitMix64],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(rngs.len(), self.width());
+        debug_assert_eq!(out.len(), self.width() * self.lane_dim());
+        let d = self.lane_dim();
+        for lane in 0..self.width() {
+            self.reset_lane_into(
+                lane,
+                &mut rngs[lane],
+                &mut out[lane * d..(lane + 1) * d],
+            );
+        }
+    }
+
+    /// Step every lane in one call. `actions` is lane-major
+    /// (`width * n_agents()` entries), `infos[i]` receives lane `i`'s
+    /// step outcome, `out` is the full plane. Default: per-lane loop —
+    /// bit-identical by definition; SoA impls override with fused loops.
+    fn step_lanes_into(
+        &mut self,
+        actions: &[usize],
+        rngs: &mut [SplitMix64],
+        infos: &mut [StepInfo],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(actions.len(), self.width() * self.n_agents());
+        debug_assert_eq!(rngs.len(), self.width());
+        debug_assert_eq!(infos.len(), self.width());
+        debug_assert_eq!(out.len(), self.width() * self.lane_dim());
+        let d = self.lane_dim();
+        let na = self.n_agents();
+        for lane in 0..self.width() {
+            infos[lane] = self.step_lane_into(
+                lane,
+                &actions[lane * na..(lane + 1) * na],
+                &mut rngs[lane],
+                &mut out[lane * d..(lane + 1) * d],
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Catch
+// ---------------------------------------------------------------------
+
+/// SoA lanes for [`catch::Catch`]: three parallel `usize` arrays.
+pub struct CatchLanes {
+    wind: f64,
+    /// Mirrors the scalar env's reserved knob (see `catch.rs`).
+    #[allow(dead_code)]
+    narrow: bool,
+    ball_row: Vec<usize>,
+    ball_col: Vec<usize>,
+    paddle_col: Vec<usize>,
+}
+
+impl CatchLanes {
+    pub fn new(width: usize, wind: f64, narrow: bool) -> Result<CatchLanes> {
+        anyhow::ensure!(width >= 1, "lane width must be >= 1, got {width}");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&wind),
+            "catch wind must be in [0, 1], got {wind}"
+        );
+        Ok(CatchLanes {
+            wind,
+            narrow,
+            ball_row: vec![0; width],
+            ball_col: vec![0; width],
+            paddle_col: vec![0; width],
+        })
+    }
+
+    fn write_obs(&self, lane: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), catch::OBS_DIM);
+        out.fill(0.0);
+        out[self.ball_row[lane] * catch::WIDTH + self.ball_col[lane]] = 1.0;
+        out[(catch::HEIGHT - 1) * catch::WIDTH + self.paddle_col[lane]] =
+            -1.0;
+    }
+
+    /// Post-move outcome for one lane (scalar `step_into`'s tail).
+    fn outcome(&self, lane: usize) -> StepInfo {
+        if self.ball_row[lane] == catch::HEIGHT - 1 {
+            let caught = self.ball_col[lane] == self.paddle_col[lane];
+            let reward = if caught { 1.0 } else { -1.0 };
+            StepInfo { reward, done: true }
+        } else {
+            StepInfo { reward: 0.0, done: false }
+        }
+    }
+
+    /// Paddle + gravity update for one lane (draw-free).
+    fn advance(&mut self, lane: usize, action: usize) {
+        match action {
+            0 => {
+                self.paddle_col[lane] =
+                    self.paddle_col[lane].saturating_sub(1)
+            }
+            2 => {
+                self.paddle_col[lane] =
+                    (self.paddle_col[lane] + 1).min(catch::WIDTH - 1)
+            }
+            _ => {}
+        }
+        self.ball_row[lane] += 1;
+    }
+
+    /// Wind drift for one lane — identical draw order to the scalar env:
+    /// one gate draw whenever `wind > 0`, a second for direction.
+    fn drift(&mut self, lane: usize, rng: &mut SplitMix64) {
+        if rng.next_f64() < self.wind {
+            if rng.next_f64() < 0.5 {
+                self.ball_col[lane] = self.ball_col[lane].saturating_sub(1);
+            } else {
+                self.ball_col[lane] =
+                    (self.ball_col[lane] + 1).min(catch::WIDTH - 1);
+            }
+        }
+    }
+}
+
+impl VecEnv for CatchLanes {
+    fn width(&self) -> usize {
+        self.ball_row.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        catch::OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        3
+    }
+
+    fn reset_lane_into(
+        &mut self,
+        lane: usize,
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) {
+        self.ball_row[lane] = 0;
+        self.ball_col[lane] = rng.below(catch::WIDTH as u64) as usize;
+        self.paddle_col[lane] = catch::WIDTH / 2;
+        self.write_obs(lane, out);
+    }
+
+    fn step_lane_into(
+        &mut self,
+        lane: usize,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
+        self.advance(lane, actions[0]);
+        if self.wind > 0.0 {
+            self.drift(lane, rng);
+        }
+        let info = self.outcome(lane);
+        self.write_obs(lane, out);
+        info
+    }
+
+    fn step_lanes_into(
+        &mut self,
+        actions: &[usize],
+        rngs: &mut [SplitMix64],
+        infos: &mut [StepInfo],
+        out: &mut [f32],
+    ) {
+        let w = self.width();
+        debug_assert_eq!(actions.len(), w);
+        debug_assert_eq!(rngs.len(), w);
+        // Phase 1: draw-free paddle/gravity sweep over the parallel
+        // arrays (the calm-weather hot loop).
+        for lane in 0..w {
+            self.advance(lane, actions[lane]);
+        }
+        // Phase 2: wind draws — gate hoisted; each lane draws only from
+        // its own stream in scalar order, so fusing keeps lane identity.
+        if self.wind > 0.0 {
+            for (lane, rng) in rngs.iter_mut().enumerate() {
+                self.drift(lane, rng);
+            }
+        }
+        // Phase 3: outcomes + obs planes.
+        for (lane, o) in out.chunks_mut(catch::OBS_DIM).enumerate() {
+            infos[lane] = self.outcome(lane);
+            self.write_obs(lane, o);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CartPole
+// ---------------------------------------------------------------------
+
+/// SoA lanes for [`cartpole::CartPole`]: the 4 state components as
+/// parallel f32 arrays. The integrator is the exact scalar expression
+/// tree (shared constants), so trajectories are bit-identical.
+pub struct CartPoleLanes {
+    noise: f64,
+    x: Vec<f32>,
+    x_dot: Vec<f32>,
+    theta: Vec<f32>,
+    theta_dot: Vec<f32>,
+    t: Vec<usize>,
+}
+
+impl CartPoleLanes {
+    pub fn new(width: usize, noise: f64) -> Result<CartPoleLanes> {
+        anyhow::ensure!(width >= 1, "lane width must be >= 1, got {width}");
+        anyhow::ensure!(
+            noise >= 0.0 && noise.is_finite(),
+            "cartpole noise must be >= 0, got {noise}"
+        );
+        Ok(CartPoleLanes {
+            noise,
+            x: vec![0.0; width],
+            x_dot: vec![0.0; width],
+            theta: vec![0.0; width],
+            theta_dot: vec![0.0; width],
+            t: vec![0; width],
+        })
+    }
+
+    /// One Euler step for one lane — transliterates the scalar
+    /// `step_into` body (same constants, same operation order).
+    fn integrate(&mut self, lane: usize, force: f32) {
+        use cartpole::{
+            GRAVITY, LENGTH, MASS_POLE, POLE_MASS_LENGTH, TAU, TOTAL_MASS,
+        };
+        let (x, x_dot) = (self.x[lane], self.x_dot[lane]);
+        let (theta, theta_dot) = (self.theta[lane], self.theta_dot[lane]);
+        let cos = theta.cos();
+        let sin = theta.sin();
+        let temp =
+            (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin)
+                / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin - cos * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos * cos / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos / TOTAL_MASS;
+        self.x[lane] = x + TAU * x_dot;
+        self.x_dot[lane] = x_dot + TAU * x_acc;
+        self.theta[lane] = theta + TAU * theta_dot;
+        self.theta_dot[lane] = theta_dot + TAU * theta_acc;
+    }
+
+    /// Advance the step counter and emit outcome + obs for one lane.
+    fn finish_step(&mut self, lane: usize, out: &mut [f32]) -> StepInfo {
+        self.t[lane] += 1;
+        let fell = self.x[lane].abs() > cartpole::X_LIMIT
+            || self.theta[lane].abs() > cartpole::THETA_LIMIT;
+        let done = fell || self.t[lane] >= cartpole::MAX_STEPS;
+        self.write_obs(lane, out);
+        StepInfo { reward: 1.0, done }
+    }
+
+    fn write_obs(&self, lane: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 4);
+        out[0] = self.x[lane];
+        out[1] = self.x_dot[lane];
+        out[2] = self.theta[lane];
+        out[3] = self.theta_dot[lane];
+    }
+}
+
+impl VecEnv for CartPoleLanes {
+    fn width(&self) -> usize {
+        self.t.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn reset_lane_into(
+        &mut self,
+        lane: usize,
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) {
+        // Scalar reset draws in state order: x, x_dot, theta, theta_dot.
+        self.x[lane] = (rng.next_f64() * 0.1 - 0.05) as f32;
+        self.x_dot[lane] = (rng.next_f64() * 0.1 - 0.05) as f32;
+        self.theta[lane] = (rng.next_f64() * 0.1 - 0.05) as f32;
+        self.theta_dot[lane] = (rng.next_f64() * 0.1 - 0.05) as f32;
+        self.t[lane] = 0;
+        self.write_obs(lane, out);
+    }
+
+    fn step_lane_into(
+        &mut self,
+        lane: usize,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
+        let mut force = if actions[0] == 1 {
+            cartpole::FORCE_MAG
+        } else {
+            -cartpole::FORCE_MAG
+        };
+        if self.noise > 0.0 {
+            force += (rng.normal() * self.noise) as f32 * cartpole::FORCE_MAG;
+        }
+        self.integrate(lane, force);
+        self.finish_step(lane, out)
+    }
+
+    fn step_lanes_into(
+        &mut self,
+        actions: &[usize],
+        rngs: &mut [SplitMix64],
+        infos: &mut [StepInfo],
+        out: &mut [f32],
+    ) {
+        let w = self.width();
+        debug_assert_eq!(actions.len(), w);
+        debug_assert_eq!(rngs.len(), w);
+        // Phase 1: integration — noise gate hoisted so the calm path is
+        // a pure arithmetic sweep over the parallel state arrays.
+        if self.noise > 0.0 {
+            for lane in 0..w {
+                let mut force = if actions[lane] == 1 {
+                    cartpole::FORCE_MAG
+                } else {
+                    -cartpole::FORCE_MAG
+                };
+                force += (rngs[lane].normal() * self.noise) as f32
+                    * cartpole::FORCE_MAG;
+                self.integrate(lane, force);
+            }
+        } else {
+            for lane in 0..w {
+                let force = if actions[lane] == 1 {
+                    cartpole::FORCE_MAG
+                } else {
+                    -cartpole::FORCE_MAG
+                };
+                self.integrate(lane, force);
+            }
+        }
+        // Phase 2: outcomes + obs planes.
+        for (lane, o) in out.chunks_mut(4).enumerate() {
+            infos[lane] = self.finish_step(lane, o);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// GridWorld (single-agent)
+// ---------------------------------------------------------------------
+
+/// SoA lanes for [`gridworld::GridWorld`]: agent/goal coordinates as four
+/// parallel `usize` arrays. Stepping draws nothing, so the fused sweep is
+/// trivially lane-invariant.
+pub struct GridWorldLanes {
+    sparse: bool,
+    ar: Vec<usize>,
+    ac: Vec<usize>,
+    gr: Vec<usize>,
+    gc: Vec<usize>,
+    t: Vec<usize>,
+}
+
+impl GridWorldLanes {
+    pub fn new(width: usize, sparse: bool) -> Result<GridWorldLanes> {
+        anyhow::ensure!(width >= 1, "lane width must be >= 1, got {width}");
+        Ok(GridWorldLanes {
+            sparse,
+            ar: vec![0; width],
+            ac: vec![0; width],
+            gr: vec![gridworld::N - 1; width],
+            gc: vec![gridworld::N - 1; width],
+            t: vec![0; width],
+        })
+    }
+
+    fn write_obs(&self, lane: usize, out: &mut [f32]) {
+        use gridworld::N;
+        debug_assert_eq!(out.len(), gridworld::OBS_DIM);
+        out.fill(0.0);
+        out[self.ar[lane] * N + self.ac[lane]] = 1.0;
+        out[N * N] =
+            (self.gr[lane] as f32 - self.ar[lane] as f32) / N as f32;
+        out[N * N + 1] =
+            (self.gc[lane] as f32 - self.ac[lane] as f32) / N as f32;
+    }
+
+    /// Draw-free move + clock tick for one lane.
+    fn advance(&mut self, lane: usize, action: usize) {
+        use gridworld::N;
+        let (r, c) = (self.ar[lane], self.ac[lane]);
+        let (nr, nc) = match action {
+            0 => (r.saturating_sub(1), c),
+            1 => ((r + 1).min(N - 1), c),
+            2 => (r, c.saturating_sub(1)),
+            _ => (r, (c + 1).min(N - 1)),
+        };
+        self.ar[lane] = nr;
+        self.ac[lane] = nc;
+        self.t[lane] += 1;
+    }
+
+    fn outcome(&self, lane: usize) -> StepInfo {
+        if (self.ar[lane], self.ac[lane]) == (self.gr[lane], self.gc[lane])
+        {
+            return StepInfo { reward: 1.0, done: true };
+        }
+        let reward = if self.sparse { 0.0 } else { -0.01 };
+        StepInfo { reward, done: self.t[lane] >= gridworld::MAX_STEPS }
+    }
+}
+
+impl VecEnv for GridWorldLanes {
+    fn width(&self) -> usize {
+        self.t.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        gridworld::OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        4
+    }
+
+    fn reset_lane_into(
+        &mut self,
+        lane: usize,
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) {
+        use gridworld::N;
+        self.ar[lane] = rng.below(N as u64) as usize;
+        self.ac[lane] = rng.below(N as u64) as usize;
+        loop {
+            let gr = rng.below(N as u64) as usize;
+            let gc = rng.below(N as u64) as usize;
+            if (gr, gc) != (self.ar[lane], self.ac[lane]) {
+                self.gr[lane] = gr;
+                self.gc[lane] = gc;
+                break;
+            }
+        }
+        self.t[lane] = 0;
+        self.write_obs(lane, out);
+    }
+
+    fn step_lane_into(
+        &mut self,
+        lane: usize,
+        actions: &[usize],
+        _rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
+        self.advance(lane, actions[0]);
+        self.write_obs(lane, out);
+        self.outcome(lane)
+    }
+
+    fn step_lanes_into(
+        &mut self,
+        actions: &[usize],
+        _rngs: &mut [SplitMix64],
+        infos: &mut [StepInfo],
+        out: &mut [f32],
+    ) {
+        let w = self.width();
+        debug_assert_eq!(actions.len(), w);
+        // Phase 1: fused draw-free move sweep.
+        for lane in 0..w {
+            self.advance(lane, actions[lane]);
+        }
+        // Phase 2: outcomes + obs planes.
+        for (lane, o) in out.chunks_mut(gridworld::OBS_DIM).enumerate() {
+            self.write_obs(lane, o);
+            infos[lane] = self.outcome(lane);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TeamGridWorld (multi-agent)
+// ---------------------------------------------------------------------
+
+/// SoA lanes for [`gridworld::TeamGridWorld`]: per-lane agent/goal/
+/// captured blocks packed into flat arrays (`agents[lane*na..]`,
+/// `goals[lane*4..]`, ...). Obs writes go through the shared
+/// [`team_obs_for`] so the pinned layout has one source of truth.
+pub struct TeamGridWorldLanes {
+    n_agents: usize,
+    slip: f64,
+    sparse: bool,
+    fixed_goals: bool,
+    agents: Vec<(usize, usize)>,
+    goals: Vec<(usize, usize)>,
+    captured: Vec<bool>,
+    t: Vec<usize>,
+}
+
+impl TeamGridWorldLanes {
+    pub fn new(
+        width: usize,
+        scenario: &str,
+        n_agents: usize,
+        slip: f64,
+        sparse: bool,
+    ) -> Result<TeamGridWorldLanes> {
+        anyhow::ensure!(width >= 1, "lane width must be >= 1, got {width}");
+        // Reuse the scalar constructor's validation verbatim (agent
+        // bounds per scenario, slip range, scenario names).
+        let probe = TeamGridWorld::new(scenario, n_agents, slip, sparse)?;
+        drop(probe);
+        Ok(TeamGridWorldLanes {
+            n_agents,
+            slip,
+            sparse,
+            fixed_goals: scenario == "corners",
+            agents: vec![(0, 0); width * n_agents],
+            goals: vec![(0, 0); width * gridworld::TEAM_N_GOALS],
+            captured: vec![false; width * gridworld::TEAM_N_GOALS],
+            t: vec![0; width],
+        })
+    }
+
+    fn goal_range(&self, lane: usize) -> std::ops::Range<usize> {
+        lane * gridworld::TEAM_N_GOALS..(lane + 1) * gridworld::TEAM_N_GOALS
+    }
+
+    fn agent_range(&self, lane: usize) -> std::ops::Range<usize> {
+        lane * self.n_agents..(lane + 1) * self.n_agents
+    }
+
+    /// Capture scan + reward/done for one lane (post-move, draw-free).
+    fn settle(&mut self, lane: usize) -> StepInfo {
+        let gr = self.goal_range(lane);
+        let ar = self.agent_range(lane);
+        let mut new_caps = 0usize;
+        for a in ar.clone() {
+            for g in gr.clone() {
+                if !self.captured[g] && self.agents[a] == self.goals[g] {
+                    self.captured[g] = true;
+                    new_caps += 1;
+                }
+            }
+        }
+        self.t[lane] += 1;
+        let reward = if new_caps > 0 {
+            0.25 * new_caps as f32
+        } else if self.sparse {
+            0.0
+        } else {
+            -0.01
+        };
+        let done = self.captured[gr].iter().all(|&c| c)
+            || self.t[lane] >= gridworld::TEAM_MAX_STEPS;
+        StepInfo { reward, done }
+    }
+
+    /// Write one lane's `n_agents * OBS_DIM` plane slice.
+    fn write_lane_obs(&self, lane: usize, out: &mut [f32]) {
+        let goals = &self.goals[self.goal_range(lane)];
+        let captured = &self.captured[self.goal_range(lane)];
+        let agents = &self.agents[self.agent_range(lane)];
+        for (a, o) in out.chunks_mut(gridworld::OBS_DIM).enumerate() {
+            team_obs_for(goals, captured, agents, a, o);
+        }
+    }
+}
+
+impl VecEnv for TeamGridWorldLanes {
+    fn width(&self) -> usize {
+        self.t.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        gridworld::OBS_DIM
+    }
+
+    fn act_dim(&self) -> usize {
+        4
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    fn reset_lane_into(
+        &mut self,
+        lane: usize,
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) {
+        use gridworld::{N, TEAM_N_GOALS};
+        // Scalar draw order: goals first (gather only, distinct cells by
+        // rejection), then agents (never on a goal, by rejection).
+        let gr = self.goal_range(lane);
+        if self.fixed_goals {
+            self.goals[gr.clone()].copy_from_slice(&[
+                (0, 0),
+                (0, N - 1),
+                (N - 1, 0),
+                (N - 1, N - 1),
+            ]);
+        } else {
+            for g in 0..TEAM_N_GOALS {
+                loop {
+                    let pos = (
+                        rng.below(N as u64) as usize,
+                        rng.below(N as u64) as usize,
+                    );
+                    if !self.goals[gr.start..gr.start + g].contains(&pos) {
+                        self.goals[gr.start + g] = pos;
+                        break;
+                    }
+                }
+            }
+        }
+        self.captured[gr.clone()].fill(false);
+        let ar = self.agent_range(lane);
+        for a in ar {
+            loop {
+                let pos = (
+                    rng.below(N as u64) as usize,
+                    rng.below(N as u64) as usize,
+                );
+                if !self.goals[gr.clone()].contains(&pos) {
+                    self.agents[a] = pos;
+                    break;
+                }
+            }
+        }
+        self.t[lane] = 0;
+        self.write_lane_obs(lane, out);
+    }
+
+    fn step_lane_into(
+        &mut self,
+        lane: usize,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
+        assert_eq!(actions.len(), self.n_agents);
+        let base = lane * self.n_agents;
+        for (a, &chosen) in actions.iter().enumerate() {
+            let act = if self.slip > 0.0 && rng.next_f64() < self.slip {
+                rng.below(4) as usize
+            } else {
+                chosen
+            };
+            self.agents[base + a] =
+                TeamGridWorld::mv(self.agents[base + a], act);
+        }
+        let info = self.settle(lane);
+        self.write_lane_obs(lane, out);
+        info
+    }
+
+    fn step_lanes_into(
+        &mut self,
+        actions: &[usize],
+        rngs: &mut [SplitMix64],
+        infos: &mut [StepInfo],
+        out: &mut [f32],
+    ) {
+        let w = self.width();
+        let na = self.n_agents;
+        debug_assert_eq!(actions.len(), w * na);
+        debug_assert_eq!(rngs.len(), w);
+        // Phase 1: moves — slip gate hoisted. With slip off the whole
+        // batch is one draw-free zip over the packed agent array; with
+        // slip on, each lane draws gate(+direction) per agent in index
+        // order from its own stream, exactly the scalar sequence.
+        if self.slip > 0.0 {
+            for (lane, rng) in rngs.iter_mut().enumerate() {
+                let base = lane * na;
+                for a in 0..na {
+                    let chosen = actions[base + a];
+                    let act = if rng.next_f64() < self.slip {
+                        rng.below(4) as usize
+                    } else {
+                        chosen
+                    };
+                    self.agents[base + a] =
+                        TeamGridWorld::mv(self.agents[base + a], act);
+                }
+            }
+        } else {
+            for (pos, &chosen) in self.agents.iter_mut().zip(actions) {
+                *pos = TeamGridWorld::mv(*pos, chosen);
+            }
+        }
+        // Phase 2: captures + rewards + obs per lane.
+        let ld = na * gridworld::OBS_DIM;
+        for (lane, o) in out.chunks_mut(ld).enumerate() {
+            infos[lane] = self.settle(lane);
+            self.write_lane_obs(lane, o);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar fallback
+// ---------------------------------------------------------------------
+
+/// Lifts any homogeneous collection of scalar [`Env`]s into the lane
+/// API — one vtable call per lane, no SoA speedup, identical semantics.
+/// This is how families without a native vec impl (football) stay
+/// drivable through the same executor path.
+pub struct ScalarLanes {
+    envs: Vec<Box<dyn Env>>,
+    obs_dim: usize,
+    act_dim: usize,
+    n_agents: usize,
+}
+
+impl ScalarLanes {
+    pub fn new(envs: Vec<Box<dyn Env>>) -> Result<ScalarLanes> {
+        anyhow::ensure!(
+            !envs.is_empty(),
+            "ScalarLanes needs at least one lane env"
+        );
+        let obs_dim = envs[0].obs_dim();
+        let act_dim = envs[0].act_dim();
+        let n_agents = envs[0].n_agents();
+        for (i, e) in envs.iter().enumerate().skip(1) {
+            anyhow::ensure!(
+                e.obs_dim() == obs_dim
+                    && e.act_dim() == act_dim
+                    && e.n_agents() == n_agents,
+                "ScalarLanes lane {i} shape mismatch: \
+                 ({}, {}, {}) vs lane 0's ({obs_dim}, {act_dim}, {n_agents})",
+                e.obs_dim(),
+                e.act_dim(),
+                e.n_agents()
+            );
+        }
+        Ok(ScalarLanes { envs, obs_dim, act_dim, n_agents })
+    }
+}
+
+impl VecEnv for ScalarLanes {
+    fn width(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    fn reset_lane_into(
+        &mut self,
+        lane: usize,
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) {
+        self.envs[lane].reset_into(rng, out);
+    }
+
+    fn step_lane_into(
+        &mut self,
+        lane: usize,
+        actions: &[usize],
+        rng: &mut SplitMix64,
+        out: &mut [f32],
+    ) -> StepInfo {
+        self.envs[lane].step_into(actions, rng, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::EnvSpec;
+
+    /// Spec strings covering every registry family × scenario plus
+    /// stochastic and multi-agent parameterizations — the lane
+    /// invariance surface.
+    fn lane_specs() -> Vec<String> {
+        let reg = crate::envs::registry::registry();
+        let mut specs: Vec<String> = reg.variant_names();
+        for fam in reg.families() {
+            specs.extend(reg.scenario_specs(fam.name).unwrap());
+        }
+        specs.extend(
+            [
+                "catch?wind=0.25",
+                "cartpole?noise=0.1",
+                "gridworld_team/gather?agents=3,slip=0.2",
+                "gridworld_team/corners?agents=2,slip=0.1,sparse=1",
+            ]
+            .map(String::from),
+        );
+        specs
+    }
+
+    /// Core property: W lanes through a `VecEnv` (batched entry point)
+    /// bit-match W independent scalar `Env`s fed the same per-lane
+    /// streams — rewards, dones, and full obs planes.
+    #[test]
+    fn lanes_bit_match_independent_scalar_envs() {
+        for spec_str in lane_specs() {
+            let spec = EnvSpec::by_name(&spec_str).unwrap();
+            // Football is huge and scalar-only; a thin slice of steps
+            // still proves the ScalarLanes plumbing.
+            let (widths, steps): (&[usize], usize) =
+                if spec_str.starts_with("football") {
+                    (&[2], 12)
+                } else {
+                    (&[1, 3, 8], 120)
+                };
+            for &w in widths {
+                check_spec_width(&spec, &spec_str, w, steps);
+            }
+        }
+    }
+
+    fn check_spec_width(
+        spec: &EnvSpec,
+        spec_str: &str,
+        width: usize,
+        steps: usize,
+    ) {
+        let na = spec.n_agents;
+        let mut vec_env = spec.build_lanes(width).unwrap();
+        assert_eq!(vec_env.width(), width, "{spec_str}");
+        assert_eq!(vec_env.n_agents(), na, "{spec_str}");
+        let ld = vec_env.lane_dim();
+
+        let mut scalar: Vec<Box<dyn Env>> =
+            (0..width).map(|_| spec.build().unwrap()).collect();
+        assert_eq!(vec_env.obs_dim(), scalar[0].obs_dim(), "{spec_str}");
+        assert_eq!(vec_env.act_dim(), scalar[0].act_dim(), "{spec_str}");
+
+        // Identically-seeded per-lane streams for both sides.
+        let mk_rngs = || -> Vec<crate::rng::SplitMix64> {
+            (0..width)
+                .map(|l| {
+                    crate::rng::SplitMix64::stream(99, 1000 + l as u64)
+                })
+                .collect()
+        };
+        let (mut vr, mut sr) = (mk_rngs(), mk_rngs());
+
+        let mut plane = vec![0.0f32; width * ld];
+        let mut s_obs = vec![0.0f32; ld];
+        let mut infos =
+            vec![crate::envs::StepInfo { reward: 0.0, done: false }; width];
+        vec_env.reset_lanes_into(&mut vr, &mut plane);
+        for (l, env) in scalar.iter_mut().enumerate() {
+            env.reset_into(&mut sr[l], &mut s_obs);
+            assert_planes_eq(
+                &plane[l * ld..(l + 1) * ld],
+                &s_obs,
+                spec_str,
+                width,
+                l,
+                "reset",
+            );
+        }
+
+        let mut act_rng = crate::rng::SplitMix64::new(7);
+        let act_dim = vec_env.act_dim() as u64;
+        let mut actions = vec![0usize; width * na];
+        for t in 0..steps {
+            for a in actions.iter_mut() {
+                *a = act_rng.below(act_dim) as usize;
+            }
+            vec_env.step_lanes_into(
+                &actions,
+                &mut vr,
+                &mut infos,
+                &mut plane,
+            );
+            for (l, env) in scalar.iter_mut().enumerate() {
+                let si = env.step_into(
+                    &actions[l * na..(l + 1) * na],
+                    &mut sr[l],
+                    &mut s_obs,
+                );
+                assert_eq!(
+                    (si.reward.to_bits(), si.done),
+                    (infos[l].reward.to_bits(), infos[l].done),
+                    "{spec_str} w={width} lane={l} t={t} info diverged"
+                );
+                assert_planes_eq(
+                    &plane[l * ld..(l + 1) * ld],
+                    &s_obs,
+                    spec_str,
+                    width,
+                    l,
+                    "step",
+                );
+                if si.done {
+                    vec_env.reset_lane_into(
+                        l,
+                        &mut vr[l],
+                        &mut plane[l * ld..(l + 1) * ld],
+                    );
+                    env.reset_into(&mut sr[l], &mut s_obs);
+                    assert_planes_eq(
+                        &plane[l * ld..(l + 1) * ld],
+                        &s_obs,
+                        spec_str,
+                        width,
+                        l,
+                        "re-reset",
+                    );
+                }
+            }
+        }
+    }
+
+    fn assert_planes_eq(
+        lane: &[f32],
+        scalar: &[f32],
+        spec_str: &str,
+        width: usize,
+        l: usize,
+        at: &str,
+    ) {
+        assert_eq!(lane.len(), scalar.len());
+        for (i, (a, b)) in lane.iter().zip(scalar).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{spec_str} w={width} lane={l} obs[{i}] diverged at {at}: \
+                 {a} vs {b}"
+            );
+        }
+    }
+
+    /// Per-lane stepping through the trait's scalar entry point must
+    /// also match the batched entry point (order independence).
+    #[test]
+    fn batched_equals_per_lane_stepping() {
+        for spec_str in
+            ["catch?wind=0.3", "cartpole?noise=0.1",
+             "gridworld_team/gather?agents=2,slip=0.25", "gridworld"]
+        {
+            let spec = EnvSpec::by_name(spec_str).unwrap();
+            let width = 5;
+            let na = spec.n_agents;
+            let mut batched = spec.build_lanes(width).unwrap();
+            let mut lanewise = spec.build_lanes(width).unwrap();
+            let ld = batched.lane_dim();
+            let mk = || -> Vec<crate::rng::SplitMix64> {
+                (0..width)
+                    .map(|l| crate::rng::SplitMix64::stream(5, l as u64))
+                    .collect()
+            };
+            let (mut br, mut lr) = (mk(), mk());
+            let mut bp = vec![0.0f32; width * ld];
+            let mut lp = vec![0.0f32; width * ld];
+            let mut infos = vec![
+                crate::envs::StepInfo { reward: 0.0, done: false };
+                width
+            ];
+            batched.reset_lanes_into(&mut br, &mut bp);
+            // reset per-lane in REVERSE order: streams are private, so
+            // order must not matter
+            for l in (0..width).rev() {
+                lanewise.reset_lane_into(
+                    l,
+                    &mut lr[l],
+                    &mut lp[l * ld..(l + 1) * ld],
+                );
+            }
+            assert_eq!(
+                bp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                lp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{spec_str}: reset order dependence"
+            );
+            let mut act_rng = crate::rng::SplitMix64::new(3);
+            let ad = batched.act_dim() as u64;
+            let mut actions = vec![0usize; width * na];
+            for t in 0..90 {
+                for a in actions.iter_mut() {
+                    *a = act_rng.below(ad) as usize;
+                }
+                batched.step_lanes_into(
+                    &actions,
+                    &mut br,
+                    &mut infos,
+                    &mut bp,
+                );
+                for l in (0..width).rev() {
+                    let si = lanewise.step_lane_into(
+                        l,
+                        &actions[l * na..(l + 1) * na],
+                        &mut lr[l],
+                        &mut lp[l * ld..(l + 1) * ld],
+                    );
+                    assert_eq!(
+                        (si.reward.to_bits(), si.done),
+                        (infos[l].reward.to_bits(), infos[l].done),
+                        "{spec_str} lane={l} t={t}"
+                    );
+                    if si.done {
+                        lanewise.reset_lane_into(
+                            l,
+                            &mut lr[l],
+                            &mut lp[l * ld..(l + 1) * ld],
+                        );
+                        batched.reset_lane_into(
+                            l,
+                            &mut br[l],
+                            &mut bp[l * ld..(l + 1) * ld],
+                        );
+                    }
+                }
+                assert_eq!(
+                    bp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    lp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{spec_str} t={t}: batched vs per-lane divergence"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_lanes_rejects_empty_and_mixed() {
+        assert!(ScalarLanes::new(vec![]).is_err());
+        let a = EnvSpec::by_name("catch").unwrap().build().unwrap();
+        let b = EnvSpec::by_name("cartpole").unwrap().build().unwrap();
+        assert!(ScalarLanes::new(vec![a, b]).is_err());
+    }
+
+    #[test]
+    fn lane_constructors_validate_like_scalar() {
+        assert!(CatchLanes::new(0, 0.0, false).is_err());
+        assert!(CatchLanes::new(4, 1.5, false).is_err());
+        assert!(CartPoleLanes::new(4, -0.1).is_err());
+        assert!(GridWorldLanes::new(0, false).is_err());
+        assert!(TeamGridWorldLanes::new(4, "maze", 2, 0.0, false).is_err());
+        assert!(
+            TeamGridWorldLanes::new(4, "corners", 1, 0.0, false).is_err()
+        );
+        assert!(
+            TeamGridWorldLanes::new(4, "gather", 2, 1.5, false).is_err()
+        );
+    }
+}

@@ -6,8 +6,14 @@
 //! exact shutdown sequence the HTS driver uses. Kept in one place so
 //! the swap/close protocol can never drift between the two harnesses.
 //!
+//! Since ISSUE 6 this also hosts the [`StandInHub`]: a cross-job actor
+//! fleet for campaign runs, where concurrent jobs sharing a model
+//! config post into one mailbox space (per-job column offsets) so a
+//! single actor batch can serve several jobs at once.
+//!
 //! Hidden from docs: this is test/bench support, not runtime API.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -24,7 +30,10 @@ use crate::Result;
 pub type StandInPolicy = Arc<dyn Fn(&[f32], u64) -> usize + Send + Sync>;
 
 /// Spawn actor stand-ins: batch-grab observations, answer each with
-/// `policy(obs, seed)`, exit when the state buffer closes.
+/// `policy(obs, seed)`, exit when the state buffer closes. A group
+/// message (lane-group publish, `msg.cols() > 1`) is served column by
+/// column from its contiguous plane — same actions as per-replica
+/// messages by the deferred-randomness contract.
 pub fn spawn_standin_actors(
     n_actors: usize,
     state_buf: &Arc<StateBuffer>,
@@ -45,7 +54,16 @@ pub fn spawn_standin_actors(
                         return; // shutdown
                     }
                     for m in &batch {
-                        ab.post(m.slot, policy(&m.obs, m.seed));
+                        let d = m.col_dim();
+                        for c in 0..m.cols() {
+                            ab.post(
+                                m.slot + c,
+                                policy(
+                                    &m.obs[c * d..(c + 1) * d],
+                                    m.col_seed(c),
+                                ),
+                            );
+                        }
                     }
                     // close the allocation ring, like the PJRT actors
                     sb.recycle_batch(&mut batch);
@@ -54,6 +72,10 @@ pub fn spawn_standin_actors(
         })
         .collect()
 }
+
+/// A shared actor fleet serving one job (`None`: the job spawns and
+/// tears down its own) — `(state_buf, act_buf, first mailbox column)`.
+type SharedFleet<'a> = Option<(&'a Arc<StateBuffer>, &'a Arc<ActionBuffer>, usize)>;
 
 /// Artifact-free stand-in *job* runner for the campaign engine
 /// (DESIGN.md §10): the full executor/actor/swap machinery — real envs,
@@ -71,6 +93,30 @@ pub fn spawn_standin_actors(
 /// Evaluation scores are synthesized from a dedicated seed stream for
 /// the same reason — this runner exercises orchestration, not learning.
 pub fn run_standin_job(cfg: &RunConfig) -> Result<TrainReport> {
+    run_standin_job_inner(cfg, None)
+}
+
+/// Run a stand-in job against a [`StandInHub`] fleet instead of a
+/// private one. Bit-identical to [`run_standin_job`]: the job's seeds,
+/// draw order, and rollout storage are untouched — only the mailbox
+/// columns shift by the hub-assigned offset, and the fleet outlives
+/// the job (the hub closes its buffers in [`StandInHub::finish`]).
+pub fn run_standin_job_shared(
+    cfg: &RunConfig,
+    hub: &StandInHub,
+    job_id: &str,
+) -> Result<TrainReport> {
+    let (group, col_offset) = hub.lookup(job_id)?;
+    run_standin_job_inner(
+        cfg,
+        Some((&group.state_buf, &group.act_buf, col_offset)),
+    )
+}
+
+fn run_standin_job_inner(
+    cfg: &RunConfig,
+    fleet: SharedFleet<'_>,
+) -> Result<TrainReport> {
     let spec = cfg.spec.clone();
     let probe = spec.build()?;
     let (obs_dim, act_dim) = (probe.obs_dim(), probe.act_dim());
@@ -106,20 +152,29 @@ pub fn run_standin_job(cfg: &RunConfig) -> Result<TrainReport> {
     let swap = Arc::new(StripedSwap::with_parties(
         alpha, b_cols, obs_dim, n_envs, n_threads,
     ));
-    let state_buf = Arc::new(StateBuffer::new());
-    let act_buf = Arc::new(ActionBuffer::new(b_cols));
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
 
-    let policy: StandInPolicy =
-        Arc::new(move |_obs, seed| (seed % act_dim as u64) as usize);
-    let actor_handles = spawn_standin_actors(
-        cfg.n_actors.max(1),
-        &state_buf,
-        &act_buf,
-        b_cols,
-        &policy,
-    );
+    // Private fleet unless the hub provides one.
+    let (state_buf, act_buf, col_offset, actor_handles) = match fleet {
+        Some((sb, ab, off)) => (sb.clone(), ab.clone(), off, Vec::new()),
+        None => {
+            let sb = Arc::new(StateBuffer::new());
+            let ab = Arc::new(ActionBuffer::new(b_cols));
+            let policy: StandInPolicy =
+                Arc::new(move |_obs, seed| (seed % act_dim as u64) as usize);
+            let handles = spawn_standin_actors(
+                cfg.n_actors.max(1),
+                &sb,
+                &ab,
+                b_cols,
+                &policy,
+            );
+            (sb, ab, 0, handles)
+        }
+    };
+    let own_fleet = !actor_handles.is_empty();
+
     let mut pool_handles = Vec::new();
     for t in 0..n_threads {
         let spec = spec.clone();
@@ -129,6 +184,7 @@ pub fn run_standin_job(cfg: &RunConfig) -> Result<TrainReport> {
             act_buf: act_buf.clone(),
             sps: sps.clone(),
             watch,
+            col_offset,
         };
         let seed = cfg.seed;
         pool_handles.push(std::thread::spawn(move || {
@@ -144,8 +200,12 @@ pub fn run_standin_job(cfg: &RunConfig) -> Result<TrainReport> {
     }
 
     let mut gathered = RolloutStorage::new(alpha, b_cols, obs_dim);
-    drive_learner_barrier(
-        &swap, &state_buf, &act_buf, &mut gathered, iters, |_| {},
+    // A shared fleet must survive this job: the swap shutdown alone
+    // unwinds the pools (they're parked at the barrier when the final
+    // window closes), so buffer closes are only needed to stop a
+    // private fleet's actors.
+    drive_barrier_inner(
+        &swap, &state_buf, &act_buf, &mut gathered, iters, own_fleet, |_| {},
     );
 
     let mut signature = 0u64;
@@ -198,6 +258,101 @@ pub fn run_standin_job(cfg: &RunConfig) -> Result<TrainReport> {
     })
 }
 
+/// One shared fleet: jobs with the same model config (same stand-in
+/// policy) post into one mailbox space and are served by one set of
+/// actor threads.
+pub struct HubGroup {
+    pub state_buf: Arc<StateBuffer>,
+    pub act_buf: Arc<ActionBuffer>,
+    actors: Vec<JoinHandle<()>>,
+}
+
+/// Cross-job actor fleets for stand-in campaigns (ISSUE 6): jobs are
+/// grouped by `(model, act_dim)` and each group gets one mailbox space
+/// — every job a static column window, assigned in plan order — and one
+/// actor fleet batching across whatever mix of jobs is in flight.
+/// Column assignment depends only on the plan, so per-job results are
+/// byte-identical across `--jobs` values and resumes (a resume-skipped
+/// job simply leaves its window silent).
+pub struct StandInHub {
+    groups: Vec<HubGroup>,
+    /// job id → (group index, first mailbox column)
+    jobs: HashMap<String, (usize, usize)>,
+}
+
+impl StandInHub {
+    /// Build fleets for `jobs` (`(job id, resolved run config)` in plan
+    /// order) with `n_actors` actor threads per fleet.
+    pub fn new(
+        jobs: &[(String, RunConfig)],
+        n_actors: usize,
+    ) -> Result<StandInHub> {
+        // (model, act_dim) → index into groups; columns accrue in plan
+        // order within each group.
+        let mut keys: HashMap<(String, usize), usize> = HashMap::new();
+        let mut cols: Vec<usize> = Vec::new();
+        let mut dims: Vec<usize> = Vec::new();
+        let mut map = HashMap::new();
+        for (id, cfg) in jobs {
+            let probe = cfg.spec.build()?;
+            let act_dim = probe.act_dim();
+            drop(probe);
+            let key = (cfg.spec.model.clone(), act_dim);
+            let g = *keys.entry(key).or_insert_with(|| {
+                cols.push(0);
+                dims.push(act_dim);
+                cols.len() - 1
+            });
+            anyhow::ensure!(
+                map.insert(id.clone(), (g, cols[g])).is_none(),
+                "duplicate campaign job id {id:?}"
+            );
+            cols[g] += cfg.n_envs * cfg.spec.n_agents;
+        }
+        let groups = cols
+            .iter()
+            .zip(&dims)
+            .map(|(&total_cols, &act_dim)| {
+                let state_buf = Arc::new(StateBuffer::new());
+                let act_buf = Arc::new(ActionBuffer::new(total_cols));
+                let policy: StandInPolicy = Arc::new(move |_obs, seed| {
+                    (seed % act_dim as u64) as usize
+                });
+                let actors = spawn_standin_actors(
+                    n_actors.max(1),
+                    &state_buf,
+                    &act_buf,
+                    total_cols,
+                    &policy,
+                );
+                HubGroup { state_buf, act_buf, actors }
+            })
+            .collect();
+        Ok(StandInHub { groups, jobs: map })
+    }
+
+    fn lookup(&self, job_id: &str) -> Result<(&HubGroup, usize)> {
+        let &(g, off) = self.jobs.get(job_id).ok_or_else(|| {
+            anyhow::anyhow!("job {job_id:?} not registered with the hub")
+        })?;
+        Ok((&self.groups[g], off))
+    }
+
+    /// Close every fleet and join its actors. Call after the campaign
+    /// returns; jobs themselves never close a shared fleet's buffers.
+    pub fn finish(self) {
+        for g in &self.groups {
+            g.state_buf.close();
+            g.act_buf.close();
+        }
+        for g in self.groups {
+            for h in g.actors {
+                h.join().expect("hub actor thread panicked");
+            }
+        }
+    }
+}
+
 /// Learner stand-in: drive `iters` two-phase barrier iterations, calling
 /// `on_gather` on the gathered view inside each publication window, then
 /// shut down exactly the way the HTS learner does — shutdown + close
@@ -208,6 +363,23 @@ pub fn drive_learner_barrier(
     act_buf: &ActionBuffer,
     gathered: &mut RolloutStorage,
     iters: u64,
+    on_gather: impl FnMut(&RolloutStorage),
+) {
+    drive_barrier_inner(
+        swap, state_buf, act_buf, gathered, iters, true, on_gather,
+    );
+}
+
+/// `close_buffers = false` leaves the state/action buffers open for a
+/// fleet that outlives this run (shared-hub mode); the swap shutdown
+/// still unwinds the executors.
+fn drive_barrier_inner(
+    swap: &StripedSwap,
+    state_buf: &StateBuffer,
+    act_buf: &ActionBuffer,
+    gathered: &mut RolloutStorage,
+    iters: u64,
+    close_buffers: bool,
     mut on_gather: impl FnMut(&RolloutStorage),
 ) {
     let mut it = 0u64;
@@ -217,8 +389,10 @@ pub fn drive_learner_barrier(
         on_gather(gathered);
         if i + 1 == iters {
             swap.shutdown();
-            state_buf.close();
-            act_buf.close();
+            if close_buffers {
+                state_buf.close();
+                act_buf.close();
+            }
         } else {
             it = swap.learner_release(it);
         }

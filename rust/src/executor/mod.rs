@@ -27,4 +27,4 @@ pub mod pool;
 pub mod slot;
 
 pub use pool::{PoolReport, PoolShared, ReplicaPool};
-pub use slot::{Polled, ReplicaSlot, SlotState};
+pub use slot::{LaneGroup, Polled, ReplicaSlot, SlotState};

@@ -15,6 +15,17 @@
 //! * a **ready queue** of replicas whose deadline has passed — stepped,
 //!   recorded into their private stripes, and re-published.
 //!
+//! Since ISSUE 6 the pool's replicas are *lanes* of one [`LaneGroup`]
+//! (a struct-of-arrays [`VecEnv`](crate::envs::VecEnv)). Whenever the
+//! whole pool is ready at once — the common case at iteration starts and
+//! with fast or uniform step times — the pool steps every lane in one
+//! batched env call and ships one group observation message, so a
+//! K-replica pool costs one vtable hop and one queue push per step
+//! instead of K. When deadlines split the group, each replica falls back
+//! to stepping its own lane scalar-style — bit-identical by the lane
+//! invariance contract, so the deadline/parking semantics (and the
+//! pinned trajectories) are unchanged.
+//!
 //! When no replica can make progress the thread parks on the action
 //! buffer's epoch (`wait_any`), bounded by the earliest cooking deadline,
 //! so a pool thread burns no CPU while its replicas' requests are in
@@ -29,8 +40,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::slot::{Polled, ReplicaSlot};
-use crate::buffers::{ActionBuffer, ShardWriter, StateBuffer, StripedSwap};
+use super::slot::{LaneGroup, Polled, ReplicaSlot};
+use crate::buffers::{
+    ActionBuffer, ObsMsg, ShardWriter, StateBuffer, StripedSwap,
+};
 use crate::envs::{EnvSpec, StepTimeModel};
 use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch};
 
@@ -44,6 +57,11 @@ pub struct PoolShared {
     /// The run's stopwatch (copied, same origin) so episode timestamps
     /// line up with eval/report timestamps.
     pub watch: Stopwatch,
+    /// First mailbox column this *job* owns in the action/state buffer
+    /// space — non-zero only when several campaign jobs share one actor
+    /// fleet's buffers (ISSUE 6). Rollout storage stays replica-indexed;
+    /// only the mailbox columns shift.
+    pub col_offset: usize,
 }
 
 /// What a pool thread hands back at join: its replicas' episode log and
@@ -56,18 +74,20 @@ pub struct PoolReport {
     pub signature: u64,
 }
 
-/// One executor thread's pool of K replicas.
+/// One executor thread's pool of K replicas (lanes of one group).
 pub struct ReplicaPool {
     shared: PoolShared,
     steptime: StepTimeModel,
     alpha: usize,
+    group: LaneGroup,
     slots: Vec<ReplicaSlot>,
     episodes: Vec<EpisodePoint>,
 }
 
 impl ReplicaPool {
     /// Build the pool owning global replicas `replicas` (a contiguous
-    /// range; each brings its own RNG streams, batch columns, and stripe).
+    /// range; each brings its own RNG streams, batch columns, and stripe
+    /// — the env state lives in the pool's [`LaneGroup`]).
     pub fn new(
         spec: &EnvSpec,
         seed: u64,
@@ -77,13 +97,25 @@ impl ReplicaPool {
     ) -> Result<ReplicaPool> {
         anyhow::ensure!(alpha > 0, "alpha must be positive");
         anyhow::ensure!(!replicas.is_empty(), "pool needs >= 1 replica");
+        let group = LaneGroup::new(spec, seed, replicas.clone())?;
         let slots = replicas
-            .map(|r| ReplicaSlot::new(spec, seed, r))
-            .collect::<Result<Vec<_>>>()?;
+            .enumerate()
+            .map(|(lane, r)| {
+                ReplicaSlot::new(
+                    seed,
+                    r,
+                    lane,
+                    spec.n_agents,
+                    group.obs_dim(),
+                    shared.col_offset,
+                )
+            })
+            .collect();
         Ok(ReplicaPool {
             shared,
             steptime: spec.steptime,
             alpha,
+            group,
             slots,
             episodes: Vec::new(),
         })
@@ -113,7 +145,8 @@ impl ReplicaPool {
         let mut it = 0u64;
         'outer: loop {
             let mut writer = swap.writer(self.slots[0].replica);
-            self.slots[0].begin_iteration(&self.shared.state_buf);
+            self.slots[0]
+                .begin_iteration(&self.group, &self.shared.state_buf);
             for _t in 0..self.alpha {
                 if !self.slots[0]
                     .take_actions_blocking(&self.shared.act_buf)
@@ -122,16 +155,18 @@ impl ReplicaPool {
                 }
                 self.slots[0].cook_blocking(&self.steptime);
                 self.slots[0].step(
+                    &mut self.group,
                     &mut writer,
                     &self.shared.sps,
                     &self.shared.watch,
                     &mut self.episodes,
                 );
                 if self.slots[0].steps_done() < self.alpha {
-                    self.slots[0].publish_obs(&self.shared.state_buf);
+                    self.slots[0]
+                        .publish_obs(&self.group, &self.shared.state_buf);
                 }
             }
-            self.slots[0].finish_iteration(&mut writer);
+            self.slots[0].finish_iteration(&self.group, &mut writer);
             drop(writer);
             match swap.executor_arrive(it) {
                 Some(next) => it = next,
@@ -151,9 +186,12 @@ impl ReplicaPool {
             // replica per iteration — never on the step path).
             let mut writers: Vec<ShardWriter<'_>> =
                 self.slots.iter().map(|s| swap.writer(s.replica)).collect();
+            // Iteration start: every lane publishes together — one group
+            // message instead of K.
             for slot in &mut self.slots {
-                slot.begin_iteration(&self.shared.state_buf);
+                slot.reset_steps();
             }
+            self.publish_group();
             let mut waiting: Vec<usize> = (0..n_slots).collect();
             let mut cooking: BinaryHeap<Reverse<(Instant, usize)>> =
                 BinaryHeap::new();
@@ -201,19 +239,39 @@ impl ReplicaPool {
                 // 3. step everything ready; finished replicas park at
                 //    the barrier, the rest republish and wait again
                 let progressed = !ready.is_empty();
-                while let Some(i) = ready.pop_front() {
-                    self.slots[i].step(
-                        &mut writers[i],
-                        &self.shared.sps,
-                        &self.shared.watch,
-                        &mut self.episodes,
+                if ready.len() == n_slots {
+                    // Lockstep: the whole pool is ready together — one
+                    // batched env call, one group publish.
+                    ready.clear();
+                    self.step_group(
+                        &mut writers,
+                        &mut waiting,
+                        &mut at_barrier,
                     );
-                    if self.slots[i].steps_done() == self.alpha {
-                        self.slots[i].finish_iteration(&mut writers[i]);
-                        at_barrier += 1;
-                    } else {
-                        self.slots[i].publish_obs(&self.shared.state_buf);
-                        waiting.push(i);
+                } else {
+                    // Deadlines split the group: scalar-degrade, each
+                    // ready replica steps its own lane.
+                    while let Some(i) = ready.pop_front() {
+                        self.slots[i].step(
+                            &mut self.group,
+                            &mut writers[i],
+                            &self.shared.sps,
+                            &self.shared.watch,
+                            &mut self.episodes,
+                        );
+                        if self.slots[i].steps_done() == self.alpha {
+                            self.slots[i].finish_iteration(
+                                &self.group,
+                                &mut writers[i],
+                            );
+                            at_barrier += 1;
+                        } else {
+                            self.slots[i].publish_obs(
+                                &self.group,
+                                &self.shared.state_buf,
+                            );
+                            waiting.push(i);
+                        }
                     }
                 }
                 // 4. nothing runnable: park until an action posts, the
@@ -234,6 +292,96 @@ impl ReplicaPool {
             }
         }
         Ok(self.into_report())
+    }
+
+    /// Step every lane in one batched env call (all replicas ready).
+    /// Replicas may sit at different α positions (earlier deadline
+    /// splits), so finishing/republishing is still decided per lane —
+    /// but when all republish (the common case) they ship one group
+    /// message.
+    fn step_group(
+        &mut self,
+        writers: &mut [ShardWriter<'_>],
+        waiting: &mut Vec<usize>,
+        at_barrier: &mut usize,
+    ) {
+        let n = self.slots.len();
+        let alpha = self.alpha;
+        // Stage every lane's pre-step obs before the env advances.
+        for slot in self.slots.iter_mut() {
+            slot.stage_pre_obs(&self.group);
+        }
+        self.group
+            .gather_actions(self.slots.iter().map(|s| s.staged_actions()));
+        self.group.step_lanes();
+        for i in 0..n {
+            let info = self.group.info(i);
+            self.slots[i].after_step(
+                &mut self.group,
+                info,
+                &mut writers[i],
+                &self.shared.sps,
+                &self.shared.watch,
+                &mut self.episodes,
+            );
+        }
+        if self.slots.iter().all(|s| s.steps_done() < alpha) {
+            self.publish_group();
+            waiting.extend(0..n);
+        } else {
+            for i in 0..n {
+                if self.slots[i].steps_done() == alpha {
+                    self.slots[i]
+                        .finish_iteration(&self.group, &mut writers[i]);
+                    *at_barrier += 1;
+                } else {
+                    self.slots[i].publish_obs(
+                        &self.group,
+                        &self.shared.state_buf,
+                    );
+                    waiting.push(i);
+                }
+            }
+        }
+    }
+
+    /// Publish the whole group's plane as one [`ObsMsg`]: the plane is
+    /// copied once into a rented buffer (no per-replica flatten later —
+    /// an actor forwards the contiguous columns directly), and the
+    /// sampling seeds are drawn lane-asc/agent-asc from each slot's own
+    /// seed stream — per-slot draw order identical to per-slot
+    /// publishes, so actions are byte-identical (deferred randomness).
+    fn publish_group(&mut self) {
+        let w = self.group.width();
+        let na = self.group.n_agents();
+        let n_cols = w * na;
+        let (mut obs, mut seeds) = self
+            .shared
+            .state_buf
+            .rent_group(w * self.group.lane_dim(), n_cols - 1);
+        obs.extend_from_slice(self.group.plane());
+        let mut first = 0u64;
+        for (lane, slot) in self.slots.iter_mut().enumerate() {
+            for a in 0..na {
+                let s = slot.draw_seed();
+                if lane == 0 && a == 0 {
+                    first = s;
+                } else {
+                    seeds.push(s);
+                }
+            }
+        }
+        // A false return means the buffer closed mid-shutdown; the next
+        // poll observes Closed and the pool unwinds.
+        let _ = self.shared.state_buf.push(ObsMsg {
+            slot: self.slots[0].mailbox_base(),
+            obs,
+            seed: first,
+            group_seeds: seeds,
+        });
+        for slot in self.slots.iter_mut() {
+            slot.mark_awaiting();
+        }
     }
 
     fn into_report(self) -> PoolReport {

@@ -1,24 +1,35 @@
 //! One environment replica as a schedulable unit: a tiny state machine
 //! the pool scheduler drives through the HTS-RL step protocol.
 //!
-//! A slot owns everything the old one-thread-per-replica executor loop
-//! owned — the env instance, the three private PRNG streams, the batch
-//! columns `replica·A..(replica+1)·A`, its stripe of the rollout, and
-//! its FNV trajectory hash — so a replica's trajectory is a pure
-//! function of `(run_seed, replica_index, params_versions)` no matter
-//! which thread happens to drive it, or how many sibling replicas that
-//! thread multiplexes. That purity is the whole K-invariance argument
-//! (DESIGN.md §6).
+//! Since ISSUE 6 the env state itself lives in a [`LaneGroup`] — one
+//! [`VecEnv`] holding every replica of a pool as a struct-of-arrays
+//! *lane*, plus each lane's private env stream and the shared lane-major
+//! observation plane. A [`ReplicaSlot`] keeps everything per-replica
+//! that is *not* env state: the mailbox columns, the seed/delay streams,
+//! the FNV trajectory hash, and the α-step iteration position. When all
+//! of a group's replicas are ready together the pool steps the whole
+//! group in one `step_lanes_into` call; when deadlines split the group,
+//! each slot steps its own lane scalar-style through the same `VecEnv` —
+//! bit-identical either way, because every lane draws only from its own
+//! stream in scalar order (the lane-invariance contract, `envs/vec.rs`).
 //!
-//! Observations live on the **flat plane** (DESIGN.md §7): two
-//! slot-owned `[n_agents * obs_dim]` scratch planes the env writes into
-//! (`obs` holds the pending step's input, `next_obs` receives the
-//! post-step output, and the two are pointer-swapped). Publishing rents
-//! recycled buffers from the state buffer and reuses one `ObsMsg`
-//! scratch vec, so a slot performs **zero heap allocations per step** at
-//! steady state. RNG draw order is byte-identical to the historical
-//! allocating loop (step draws, then the on-done reset draws), pinned by
-//! `rust/tests/pool.rs`.
+//! A replica's trajectory therefore stays a pure function of
+//! `(run_seed, replica_index, params_versions)` no matter which thread
+//! drives it, how many siblings share the thread, or whether its lane
+//! stepped batched or solo. That purity is the whole K-invariance and
+//! width-invariance argument (DESIGN.md §6, §11).
+//!
+//! Observations live on the **flat plane** (DESIGN.md §7), now owned by
+//! the group: lane `i` holds `plane[i*n_agents*obs_dim ..]`, written in
+//! place by the env (envs never read `out`, so in-place overwrite is
+//! legal). Because the rollout shard wants the *pre*-step observation
+//! next to the post-step reward, each slot stages its lane slice into a
+//! reused `pre_obs` scratch before stepping — one `lane_dim` copy per
+//! step, replacing the old two-plane pointer swap. Publishing rents
+//! recycled buffers and reuses scratch vecs, so a slot still performs
+//! **zero heap allocations per step** at steady state. RNG draw order is
+//! byte-identical to the historical loop (step draws, then the on-done
+//! reset draws), pinned by `rust/tests/pool.rs`.
 
 use std::time::{Duration, Instant};
 
@@ -26,7 +37,7 @@ use anyhow::Result;
 
 use crate::buffers::{ActionBuffer, ObsMsg, ShardWriter, StateBuffer, TryTake};
 use crate::coordinator::common::Fnv;
-use crate::envs::{Env, EnvSpec, StepTimeModel};
+use crate::envs::{EnvSpec, StepInfo, StepTimeModel, VecEnv};
 use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch};
 use crate::rng::SplitMix64;
 
@@ -55,22 +66,159 @@ pub enum Polled {
     Closed,
 }
 
+/// A pool's replicas as lanes of one [`VecEnv`]: the env state, each
+/// lane's private env stream (keyed by *global* replica index, exactly
+/// the classic `1000 + r` ids), and the shared lane-major observation
+/// plane holding every lane's pending input.
+pub struct LaneGroup {
+    env: Box<dyn VecEnv>,
+    /// Lane `i`'s env stream — `SplitMix64::stream(seed, 1000 + base+i)`.
+    env_rngs: Vec<SplitMix64>,
+    /// Lane-major `[width * n_agents * obs_dim]` plane: always the
+    /// pending input observations (the env overwrites in place).
+    plane: Vec<f32>,
+    /// Gathered lane-major action scratch for batched stepping.
+    acts: Vec<usize>,
+    /// Per-lane outcome scratch for batched stepping.
+    infos: Vec<StepInfo>,
+    /// Global replica index of lane 0.
+    base_replica: usize,
+    n_agents: usize,
+    obs_dim: usize,
+}
+
+impl LaneGroup {
+    /// Build lanes for global replicas `replicas` (one lane per replica,
+    /// lane order = replica order). Resets every lane at construction
+    /// with per-lane draws identical to the scalar slots' constructor.
+    pub fn new(
+        spec: &EnvSpec,
+        seed: u64,
+        replicas: std::ops::Range<usize>,
+    ) -> Result<LaneGroup> {
+        anyhow::ensure!(!replicas.is_empty(), "empty lane group");
+        let width = replicas.len();
+        let base_replica = replicas.start;
+        let mut env = spec.build_lanes(width)?;
+        let n_agents = spec.n_agents;
+        debug_assert_eq!(env.n_agents(), n_agents, "spec/env agent drift");
+        let obs_dim = env.obs_dim();
+        let mut env_rngs: Vec<SplitMix64> = replicas
+            .map(|r| SplitMix64::stream(seed, 1_000 + r as u64))
+            .collect();
+        let mut plane = vec![0.0f32; width * n_agents * obs_dim];
+        env.reset_lanes_into(&mut env_rngs, &mut plane);
+        Ok(LaneGroup {
+            env,
+            env_rngs,
+            plane,
+            acts: Vec::with_capacity(width * n_agents),
+            infos: vec![StepInfo { reward: 0.0, done: false }; width],
+            base_replica,
+            n_agents,
+            obs_dim,
+        })
+    }
+
+    pub fn width(&self) -> usize {
+        self.infos.len()
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    /// Floats per lane on the plane.
+    pub fn lane_dim(&self) -> usize {
+        self.n_agents * self.obs_dim
+    }
+
+    /// Global replica index of lane 0.
+    pub fn base_replica(&self) -> usize {
+        self.base_replica
+    }
+
+    /// The whole lane-major plane (all lanes' pending observations).
+    pub fn plane(&self) -> &[f32] {
+        &self.plane
+    }
+
+    /// Lane `lane`'s `[n_agents * obs_dim]` plane slice.
+    pub fn lane(&self, lane: usize) -> &[f32] {
+        let d = self.lane_dim();
+        &self.plane[lane * d..(lane + 1) * d]
+    }
+
+    /// Outcome of lane `lane` from the last [`LaneGroup::step_lanes`].
+    pub fn info(&self, lane: usize) -> StepInfo {
+        self.infos[lane]
+    }
+
+    /// Step a single lane (the scalar-degrade path: deadlines split the
+    /// group, so this replica steps alone).
+    pub fn step_lane(&mut self, lane: usize, actions: &[usize]) -> StepInfo {
+        let d = self.n_agents * self.obs_dim;
+        let LaneGroup { env, env_rngs, plane, .. } = self;
+        env.step_lane_into(
+            lane,
+            actions,
+            &mut env_rngs[lane],
+            &mut plane[lane * d..(lane + 1) * d],
+        )
+    }
+
+    /// Reset a single lane (on-done, mid-iteration).
+    pub fn reset_lane(&mut self, lane: usize) {
+        let d = self.n_agents * self.obs_dim;
+        let LaneGroup { env, env_rngs, plane, .. } = self;
+        env.reset_lane_into(
+            lane,
+            &mut env_rngs[lane],
+            &mut plane[lane * d..(lane + 1) * d],
+        );
+    }
+
+    /// Stage every lane's actions (lane order) for a batched step.
+    pub fn gather_actions<'a>(
+        &mut self,
+        lanes: impl Iterator<Item = &'a [usize]>,
+    ) {
+        self.acts.clear();
+        for acts in lanes {
+            self.acts.extend_from_slice(acts);
+        }
+        debug_assert_eq!(self.acts.len(), self.infos.len() * self.n_agents);
+    }
+
+    /// Step every lane in one `VecEnv` call (the lockstep fast path).
+    /// Per-lane outcomes land in [`LaneGroup::info`].
+    pub fn step_lanes(&mut self) {
+        let LaneGroup { env, env_rngs, acts, infos, plane, .. } = self;
+        env.step_lanes_into(acts, env_rngs, infos, plane);
+    }
+}
+
 pub struct ReplicaSlot {
     /// Global replica index (RNG stream id, stripe id, column base).
     pub replica: usize,
     pub state: SlotState,
+    /// This replica's lane in its pool's [`LaneGroup`].
+    lane: usize,
+    /// First mailbox column: `col_offset + replica * n_agents`. The
+    /// offset is non-zero only when several jobs share one actor fleet's
+    /// buffers (campaign hub) — rollout storage stays `replica`-based.
+    mailbox_base: usize,
     n_agents: usize,
     obs_dim: usize,
-    env: Box<dyn Env>,
-    env_rng: SplitMix64,
     seed_rng: SplitMix64,
     delay_rng: SplitMix64,
-    /// Flat plane of the pending step's input observations
-    /// (`[n_agents * obs_dim]`, agent-major).
-    obs: Vec<f32>,
-    /// Scratch plane the env writes the post-step observations into;
-    /// swapped with `obs` after every step.
-    next_obs: Vec<f32>,
+    /// Pre-step observation staging (the rollout shard pairs the
+    /// *input* observation with the step's reward/done).
+    pre_obs: Vec<f32>,
     /// Per-agent actions received so far this step.
     actions: Vec<Option<usize>>,
     /// Unwrapped copy of `actions` once complete (step scratch).
@@ -87,33 +235,33 @@ pub struct ReplicaSlot {
 }
 
 impl ReplicaSlot {
-    /// Build replica `replica` with the same stream ids the classic
-    /// executor used (`1000/2000/3000 + replica`), so a pooled run is
-    /// bit-identical to the historical one-thread-per-replica run.
-    pub fn new(spec: &EnvSpec, seed: u64, replica: usize) -> Result<ReplicaSlot> {
-        let mut env_rng = SplitMix64::stream(seed, 1_000 + replica as u64);
+    /// Build replica `replica` (driving lane `lane` of its pool's
+    /// group) with the same stream ids the classic executor used
+    /// (`2000/3000 + replica`; the env stream lives in the group), so a
+    /// pooled run is bit-identical to the historical
+    /// one-thread-per-replica run.
+    pub fn new(
+        seed: u64,
+        replica: usize,
+        lane: usize,
+        n_agents: usize,
+        obs_dim: usize,
+        col_offset: usize,
+    ) -> ReplicaSlot {
         let seed_rng = SplitMix64::stream(seed, 2_000 + replica as u64);
         let delay_rng = SplitMix64::stream(seed, 3_000 + replica as u64);
-        let mut env = spec.build()?;
-        let n_agents = spec.n_agents;
-        let obs_dim = env.obs_dim();
-        debug_assert_eq!(env.n_agents(), n_agents, "spec/env agent drift");
-        let mut obs = vec![0.0f32; n_agents * obs_dim];
-        env.reset_into(&mut env_rng, &mut obs);
-        let next_obs = vec![0.0f32; n_agents * obs_dim];
         let mut sig = Fnv::default();
         sig.update(replica as u64);
-        Ok(ReplicaSlot {
+        ReplicaSlot {
             replica,
             state: SlotState::AtBarrier,
+            lane,
+            mailbox_base: col_offset + replica * n_agents,
             n_agents,
             obs_dim,
-            env,
-            env_rng,
             seed_rng,
             delay_rng,
-            obs,
-            next_obs,
+            pre_obs: Vec::with_capacity(n_agents * obs_dim),
             actions: vec![None; n_agents],
             act_scratch: Vec::with_capacity(n_agents),
             msg_scratch: Vec::with_capacity(n_agents),
@@ -121,7 +269,7 @@ impl ReplicaSlot {
             steps_done: 0,
             ep_reward: 0.0,
             sig,
-        })
+        }
     }
 
     pub fn steps_done(&self) -> usize {
@@ -133,11 +281,53 @@ impl ReplicaSlot {
         self.sig.finish()
     }
 
+    /// First mailbox column this replica publishes to.
+    pub(crate) fn mailbox_base(&self) -> usize {
+        self.mailbox_base
+    }
+
+    /// Reset the α-step counter at an iteration boundary.
+    pub(crate) fn reset_steps(&mut self) {
+        self.steps_done = 0;
+    }
+
+    /// Draw one sampling seed from this replica's seed stream (group
+    /// publication draws per slot in lane-asc, agent-asc order — the
+    /// per-slot sequence is identical to per-slot publishes).
+    pub(crate) fn draw_seed(&mut self) -> u64 {
+        self.seed_rng.next_u64()
+    }
+
+    /// Transition to `AwaitingActions` after observations were shipped
+    /// on this slot's behalf (group publication path).
+    pub(crate) fn mark_awaiting(&mut self) {
+        debug_assert!(
+            matches!(
+                self.state,
+                SlotState::AtBarrier | SlotState::Cooking { .. }
+            ),
+            "publish from {:?}",
+            self.state
+        );
+        self.actions.fill(None);
+        self.state = SlotState::AwaitingActions;
+    }
+
+    /// The actions staged for the pending step (valid after a
+    /// `Polled::Complete` or successful blocking take).
+    pub(crate) fn staged_actions(&self) -> &[usize] {
+        &self.act_scratch
+    }
+
     /// Start a fresh iteration: reset the step counter and publish the
     /// first observations.
-    pub fn begin_iteration(&mut self, state_buf: &StateBuffer) {
+    pub fn begin_iteration(
+        &mut self,
+        group: &LaneGroup,
+        state_buf: &StateBuffer,
+    ) {
         self.steps_done = 0;
-        self.publish_obs(state_buf);
+        self.publish_obs(group, state_buf);
     }
 
     /// Publish this step's observations with executor-drawn sampling
@@ -145,7 +335,7 @@ impl ReplicaSlot {
     /// the actions. Buffers are rented from the state buffer's free
     /// list and the message vec is a reused slot scratch — no per-step
     /// allocation at steady state.
-    pub fn publish_obs(&mut self, state_buf: &StateBuffer) {
+    pub fn publish_obs(&mut self, group: &LaneGroup, state_buf: &StateBuffer) {
         // Legal from AtBarrier (iteration start) or Cooking (the step
         // that just ran); publishing while actions are still in flight
         // is a scheduler bug.
@@ -158,16 +348,16 @@ impl ReplicaSlot {
             self.state
         );
         debug_assert!(self.msg_scratch.is_empty(), "unsent publish scratch");
-        let base = self.replica * self.n_agents;
         let d = self.obs_dim;
+        let lane_obs = group.lane(self.lane);
         state_buf.rent_into(&mut self.buf_scratch, self.n_agents, d);
         for (a, mut buf) in self.buf_scratch.drain(..).enumerate() {
-            buf.extend_from_slice(&self.obs[a * d..(a + 1) * d]);
-            self.msg_scratch.push(ObsMsg {
-                slot: base + a,
-                obs: buf,
-                seed: self.seed_rng.next_u64(),
-            });
+            buf.extend_from_slice(&lane_obs[a * d..(a + 1) * d]);
+            self.msg_scratch.push(ObsMsg::single(
+                self.mailbox_base + a,
+                buf,
+                self.seed_rng.next_u64(),
+            ));
         }
         // A false return means the buffer closed mid-shutdown; the next
         // `poll_actions` observes Closed and the pool unwinds. Either
@@ -184,7 +374,7 @@ impl ReplicaSlot {
             "poll from {:?}",
             self.state
         );
-        let base = self.replica * self.n_agents;
+        let base = self.mailbox_base;
         let mut missing = 0usize;
         for (a, got) in self.actions.iter_mut().enumerate() {
             if got.is_some() {
@@ -215,7 +405,7 @@ impl ReplicaSlot {
             "take from {:?}",
             self.state
         );
-        let base = self.replica * self.n_agents;
+        let base = self.mailbox_base;
         for (a, got) in self.actions.iter_mut().enumerate() {
             match act_buf.take(base + a) {
                 Some(act) => *got = Some(act),
@@ -272,33 +462,55 @@ impl ReplicaSlot {
         deadline
     }
 
-    /// The deadline passed: apply the step to the env, record the
-    /// transition in this replica's stripe, and update telemetry and the
-    /// trajectory signature. Caller decides what happens next
-    /// (publish the next observations, or finish the iteration).
-    pub fn step(
-        &mut self,
-        writer: &mut ShardWriter<'_>,
-        sps: &SpsMeter,
-        watch: &Stopwatch,
-        episodes: &mut Vec<EpisodePoint>,
-    ) {
+    /// Stage this lane's pre-step observations for the rollout shard
+    /// (must run before the lane's env state advances).
+    pub(crate) fn stage_pre_obs(&mut self, group: &LaneGroup) {
         debug_assert!(
             matches!(self.state, SlotState::Cooking { .. }),
             "step from {:?}",
             self.state
         );
-        let info = self.env.step_into(
-            &self.act_scratch,
-            &mut self.env_rng,
-            &mut self.next_obs,
-        );
+        self.pre_obs.clear();
+        self.pre_obs.extend_from_slice(group.lane(self.lane));
+    }
+
+    /// The deadline passed and this replica steps alone (its group
+    /// siblings aren't ready): apply the step to its lane, then record
+    /// and account via [`ReplicaSlot::after_step`].
+    pub fn step(
+        &mut self,
+        group: &mut LaneGroup,
+        writer: &mut ShardWriter<'_>,
+        sps: &SpsMeter,
+        watch: &Stopwatch,
+        episodes: &mut Vec<EpisodePoint>,
+    ) {
+        self.stage_pre_obs(group);
+        let info = group.step_lane(self.lane, &self.act_scratch);
+        self.after_step(group, info, writer, sps, watch, episodes);
+    }
+
+    /// Post-step bookkeeping, shared by solo and group-batched stepping:
+    /// record the transition in this replica's stripe, update telemetry
+    /// and the trajectory signature, and reset the lane on episode end
+    /// (reset draws come after the step's draws — the pinned stream
+    /// order). Requires [`ReplicaSlot::stage_pre_obs`] this step.
+    pub(crate) fn after_step(
+        &mut self,
+        group: &mut LaneGroup,
+        info: StepInfo,
+        writer: &mut ShardWriter<'_>,
+        sps: &SpsMeter,
+        watch: &Stopwatch,
+        episodes: &mut Vec<EpisodePoint>,
+    ) {
+        debug_assert_eq!(self.pre_obs.len(), self.n_agents * self.obs_dim);
         let base = self.replica * self.n_agents;
         let d = self.obs_dim;
         for a in 0..self.n_agents {
             writer.push(
                 base + a,
-                &self.obs[a * d..(a + 1) * d],
+                &self.pre_obs[a * d..(a + 1) * d],
                 self.act_scratch[a],
                 info.reward,
                 info.done,
@@ -320,15 +532,18 @@ impl ReplicaSlot {
             self.ep_reward = 0.0;
             // Same stream position as the historical loop: the on-done
             // reset draws *after* the step's draws.
-            self.env.reset_into(&mut self.env_rng, &mut self.next_obs);
+            group.reset_lane(self.lane);
         }
-        std::mem::swap(&mut self.obs, &mut self.next_obs);
         self.steps_done += 1;
     }
 
     /// α steps done: record the bootstrap observations and park until
     /// the pool's barrier rendezvous.
-    pub fn finish_iteration(&mut self, writer: &mut ShardWriter<'_>) {
+    pub fn finish_iteration(
+        &mut self,
+        group: &LaneGroup,
+        writer: &mut ShardWriter<'_>,
+    ) {
         debug_assert!(
             matches!(self.state, SlotState::Cooking { .. }),
             "finish from {:?}",
@@ -336,8 +551,9 @@ impl ReplicaSlot {
         );
         let base = self.replica * self.n_agents;
         let d = self.obs_dim;
+        let lane_obs = group.lane(self.lane);
         for a in 0..self.n_agents {
-            writer.set_last_obs(base + a, &self.obs[a * d..(a + 1) * d]);
+            writer.set_last_obs(base + a, &lane_obs[a * d..(a + 1) * d]);
         }
         self.state = SlotState::AtBarrier;
     }

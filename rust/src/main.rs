@@ -207,11 +207,29 @@ fn cmd_campaign(a: &Args) -> Result<()> {
         (campaign::Journal::create(&journal_path, &meta)?, Vec::new())
     };
     let real = campaign::coordinator_runner();
-    let fake = |_job: &campaign::Job, rc: &RunConfig| {
-        hts_rl::executor::harness::run_standin_job(rc)
+    // Stand-in campaigns share one actor fleet per model config across
+    // concurrent jobs (ISSUE 6): every job gets a static mailbox-column
+    // window assigned at plan time, so one actor batch can serve
+    // whatever mix of jobs is in flight without touching seeds or draw
+    // order (results stay byte-identical to private fleets).
+    let hub = if standin {
+        let jobs: Vec<(String, RunConfig)> = plan
+            .jobs
+            .iter()
+            .map(|j| (j.id.clone(), campaign::job_run_config(&cfg, j)))
+            .collect();
+        Some(hts_rl::executor::harness::StandInHub::new(
+            &jobs,
+            cfg.n_actors.max(1),
+        )?)
+    } else {
+        None
     };
-    let runner: &campaign::Runner<'_> =
-        if standin { &fake } else { &real };
+    let fake = hub.as_ref().map(campaign::standin_hub_runner);
+    let runner: &campaign::Runner<'_> = match &fake {
+        Some(f) => f,
+        None => &real,
+    };
 
     eprintln!(
         "campaign '{}': {} jobs ({} specs x {} methods x {} seeds) on {} \
@@ -237,6 +255,10 @@ fn cmd_campaign(a: &Args) -> Result<()> {
         &done,
         Some(&curves),
     )?;
+    drop(fake);
+    if let Some(h) = hub {
+        h.finish();
+    }
     let report = campaign::render(&cfg, &plan, &outcome);
     let files = campaign::write_files(&out, &cfg.suite, &report)?;
     println!("{}", report.markdown);

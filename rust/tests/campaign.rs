@@ -113,6 +113,42 @@ fn campaign_jobs_invariance_pinned() {
         out1.records, out4.records,
         "job records diverged across --jobs"
     );
+    // ISSUE 6: the same campaign through a shared cross-job actor fleet
+    // (one StandInHub fleet per model config, per-job mailbox-column
+    // windows, concurrent workers) must reproduce the pinned per-job
+    // signatures exactly — sharing a fleet shifts columns, never seeds
+    // or draw order.
+    let mut cfg_hub = team_cfg();
+    cfg_hub.jobs = 4;
+    let plan_hub = campaign::expand(&cfg_hub).unwrap();
+    let hub_jobs: Vec<(String, RunConfig)> = plan_hub
+        .jobs
+        .iter()
+        .map(|j| (j.id.clone(), campaign::job_run_config(&cfg_hub, j)))
+        .collect();
+    let hub = hts_rl::executor::harness::StandInHub::new(&hub_jobs, 2)
+        .unwrap();
+    let hub_runner = campaign::standin_hub_runner(&hub);
+    let out_hub = campaign::run_campaign(
+        &cfg_hub, &plan_hub, &hub_runner, None, &[], None,
+    )
+    .unwrap();
+    hub.finish();
+    let hub_sigs: Vec<u64> = out_hub
+        .records
+        .iter()
+        .map(|r| r.as_ref().unwrap().signature)
+        .collect();
+    assert_eq!(
+        hub_sigs,
+        PINNED_JOB_SIGNATURES.to_vec(),
+        "shared-fleet per-job signatures diverged from private fleets"
+    );
+    assert_eq!(
+        out1.records, out_hub.records,
+        "job records diverged between private and shared fleets"
+    );
+
     let rep1 = campaign::render(&cfg1, &plan1, &out1);
     let rep4 = campaign::render(&cfg4, &plan4, &out4);
     // comma-bearing spec strings must land as one quoted CSV cell

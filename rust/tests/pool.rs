@@ -111,6 +111,7 @@ fn run_harness_with(
             act_buf: act_buf.clone(),
             sps: sps.clone(),
             watch,
+            col_offset: 0,
         };
         pool_handles.push(std::thread::spawn(move || {
             ReplicaPool::new(&spec, seed, alpha, t * k..(t + 1) * k, shared)
@@ -338,6 +339,73 @@ fn team_gridworld_signatures_pinned() {
     }
 }
 
+/// ISSUE 6 acceptance: lane-width invariance, pinned to absolute values.
+/// n_envs = 32 so the harness can be factored as W ∈ {1, 8, 32} lanes
+/// per pool — W = 1 runs the classic blocking loop, W = 8 / 32 run the
+/// multiplexed scheduler whose lockstep path steps the whole SoA lane
+/// group in one batched `VecEnv` call and publishes one group message.
+/// The constants come from the same sequential transliteration that
+/// pins the n_envs = 8 runs above (`python/tools/pin_signatures.py`,
+/// lane-width block): per-lane streams key on the global replica index
+/// and each lane draws in scalar order, so the pin is width-independent
+/// by construction — any SoA drift in a vectorized family (catch here;
+/// the multi-agent team family below) moves these values and fails CI
+/// naming the family.
+#[test]
+fn lane_width_signatures_pinned() {
+    const LANE_CATCH_SIGNATURE: u64 = 0xeef518d3914ac0b5;
+    const LANE_CATCH_BATCH_HASHES: [u64; 4] = [
+        0x182b2da035376646,
+        0x8c9113539573b625,
+        0x1a02f78d7251f2c7,
+        0xd68fdf3b63611525,
+    ];
+    const LANE_TEAM_SIGNATURE: u64 = 0xbbcb74ac3c47edf0;
+    const LANE_TEAM_BATCH_HASHES: [u64; 4] = [
+        0x2a3e6c6e52771145,
+        0x550180d08f014187,
+        0xad018b1bed8a6d76,
+        0xb0a765657eb3c323,
+    ];
+    for w in [1usize, 8, 32] {
+        let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
+        let r = run_harness_with(
+            policy, "catch", 1, StepTimeModel::None, 32, w, 2, 5, 4, 42,
+        );
+        assert_eq!(
+            r.signature, LANE_CATCH_SIGNATURE,
+            "catch lane signature drifted at W={w}"
+        );
+        assert_eq!(
+            r.batch_hashes,
+            LANE_CATCH_BATCH_HASHES.to_vec(),
+            "catch gathered [T, B] bytes drifted at W={w}"
+        );
+        let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 4) as usize);
+        let r = run_harness_with(
+            policy,
+            "gridworld_team/gather?slip=0.15",
+            2,
+            StepTimeModel::None,
+            32,
+            w,
+            2,
+            5,
+            4,
+            42,
+        );
+        assert_eq!(
+            r.signature, LANE_TEAM_SIGNATURE,
+            "gridworld_team lane signature drifted at W={w}"
+        );
+        assert_eq!(
+            r.batch_hashes,
+            LANE_TEAM_BATCH_HASHES.to_vec(),
+            "gridworld_team gathered [T, B] bytes drifted at W={w}"
+        );
+    }
+}
+
 /// Different seeds must still produce different runs through the pool
 /// (the invariance above is not a constant-output artifact).
 #[test]
@@ -363,6 +431,7 @@ fn pool_parked_executor_wakes_on_close() {
         act_buf: act_buf.clone(),
         sps: Arc::new(SpsMeter::new()),
         watch: Stopwatch::new(),
+        col_offset: 0,
     };
     let h = std::thread::spawn(move || {
         ReplicaPool::new(&spec, 3, 4, 0..2, shared).unwrap().run().unwrap()

@@ -43,7 +43,7 @@ fn state_action_pingpong_routes_correctly() {
             execs.push(std::thread::spawn(move || {
                 for i in 0..steps {
                     let seed = (e as u64) << 32 | i as u64;
-                    sb.push(ObsMsg { slot: e, obs: vec![0.0], seed });
+                    sb.push(ObsMsg::single(e, vec![0.0], seed));
                     let a = ab.take(e).unwrap();
                     assert_eq!(a, (seed % 97) as usize,
                                "slot {e} step {i} got foreign action");
