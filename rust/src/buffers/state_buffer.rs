@@ -10,9 +10,11 @@
 //! [`StateBuffer::recycle_batch`] the buffers back. After warm-up the
 //! ring is closed — the state plane performs no heap allocation per step.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::queue::BlockingQueue;
+use crate::telemetry::{Counter, TelemetryScope};
 
 /// One observation awaiting an action — or, when `group_seeds` is
 /// non-empty, a whole *lane group's* observations in one message.
@@ -67,11 +69,40 @@ impl ObsMsg {
     }
 }
 
-/// Both recycled-storage pools, behind the one free-list lock.
+/// Both recycled-storage pools, behind the one free-list lock — plus the
+/// free-list hit/miss counters, which ride inside the lock the pops
+/// already hold (no extra synchronization when telemetry is on, one
+/// untaken branch when it is off).
 #[derive(Default)]
 struct FreeLists {
     obs: Vec<Vec<f32>>,
     seeds: Vec<Vec<u64>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl FreeLists {
+    /// Pop one recycled buffer off the obs free list — or allocate
+    /// during warm-up — cleared, with capacity for `dim` floats.
+    fn pop_cleared(&mut self, dim: usize, tel: bool) -> Vec<f32> {
+        let mut buf = match self.obs.pop() {
+            Some(b) => {
+                if tel {
+                    self.hits += 1;
+                }
+                b
+            }
+            None => {
+                if tel {
+                    self.misses += 1;
+                }
+                Vec::new()
+            }
+        };
+        buf.clear();
+        buf.reserve(dim);
+        buf
+    }
 }
 
 pub struct StateBuffer {
@@ -79,6 +110,11 @@ pub struct StateBuffer {
     /// Recycled observation/seed buffers (capacity is bounded by the
     /// number of in-flight observations, i.e. the batch-column count).
     free: Mutex<FreeLists>,
+    /// Telemetry gate (DESIGN.md §12). The batch-push counters are
+    /// relaxed atomics because `push_batch` never takes the free lock.
+    tel: bool,
+    push_calls: AtomicU64,
+    push_msgs: AtomicU64,
 }
 
 impl Default for StateBuffer {
@@ -89,25 +125,45 @@ impl Default for StateBuffer {
 
 impl StateBuffer {
     pub fn new() -> StateBuffer {
+        StateBuffer::with_telemetry(false)
+    }
+
+    /// A buffer that counts free-list hit rates and `push_batch` sizes
+    /// when `telemetry` is set ([`StateBuffer::new`] never counts).
+    pub fn with_telemetry(telemetry: bool) -> StateBuffer {
         StateBuffer {
             q: BlockingQueue::new(),
             free: Mutex::new(FreeLists::default()),
+            tel: telemetry,
+            push_calls: AtomicU64::new(0),
+            push_msgs: AtomicU64::new(0),
         }
     }
 
-    /// Pop one recycled buffer off the (locked) free list — or allocate
-    /// during warm-up — cleared, with capacity for `dim` floats.
-    fn pop_cleared(free: &mut Vec<Vec<f32>>, dim: usize) -> Vec<f32> {
-        let mut buf = free.pop().unwrap_or_default();
-        buf.clear();
-        buf.reserve(dim);
-        buf
+    /// Snapshot the buffer's counters into a scope (empty/disabled when
+    /// the buffer was built without telemetry).
+    pub fn telemetry(&self) -> TelemetryScope {
+        let mut out = TelemetryScope::new(self.tel);
+        if self.tel {
+            let g = self.free.lock().unwrap();
+            out.add(Counter::FreeListHits, g.hits);
+            out.add(Counter::FreeListMisses, g.misses);
+            out.add(
+                Counter::PushBatchCalls,
+                self.push_calls.load(Ordering::Relaxed),
+            );
+            out.add(
+                Counter::PushBatchMessages,
+                self.push_msgs.load(Ordering::Relaxed),
+            );
+        }
+        out
     }
 
     /// Take an empty observation buffer off the free list (or allocate
     /// one during warm-up), with capacity for at least `dim` floats.
     pub fn rent(&self, dim: usize) -> Vec<f32> {
-        Self::pop_cleared(&mut self.free.lock().unwrap().obs, dim)
+        self.free.lock().unwrap().pop_cleared(dim, self.tel)
     }
 
     /// [`StateBuffer::rent`] × `n` under **one** lock acquisition
@@ -115,7 +171,7 @@ impl StateBuffer {
     /// step's buffers without hammering the free-list lock per agent.
     pub fn rent_into(&self, out: &mut Vec<Vec<f32>>, n: usize, dim: usize) {
         let mut g = self.free.lock().unwrap();
-        out.extend((0..n).map(|_| Self::pop_cleared(&mut g.obs, dim)));
+        out.extend((0..n).map(|_| g.pop_cleared(dim, self.tel)));
     }
 
     /// Rent one group-message payload under one lock: an obs buffer with
@@ -129,8 +185,21 @@ impl StateBuffer {
         n_seeds: usize,
     ) -> (Vec<f32>, Vec<u64>) {
         let mut g = self.free.lock().unwrap();
-        let obs = Self::pop_cleared(&mut g.obs, dim);
-        let mut seeds = g.seeds.pop().unwrap_or_default();
+        let obs = g.pop_cleared(dim, self.tel);
+        let mut seeds = match g.seeds.pop() {
+            Some(s) => {
+                if self.tel {
+                    g.hits += 1;
+                }
+                s
+            }
+            None => {
+                if self.tel {
+                    g.misses += 1;
+                }
+                Vec::new()
+            }
+        };
         seeds.clear();
         seeds.reserve(n_seeds);
         (obs, seeds)
@@ -160,6 +229,11 @@ impl StateBuffer {
     /// (leaving the caller's scratch vec empty and reusable) whether or
     /// not the buffer is already closed; returns false when closed.
     pub fn push_batch(&self, msgs: &mut Vec<ObsMsg>) -> bool {
+        if self.tel {
+            self.push_calls.fetch_add(1, Ordering::Relaxed);
+            self.push_msgs
+                .fetch_add(msgs.len() as u64, Ordering::Relaxed);
+        }
         // On the closed path `push_all` never consumes the iterator, but
         // dropping the `Drain` still empties `msgs` — shutdown simply
         // drops the in-flight buffers.
@@ -296,6 +370,33 @@ mod tests {
         // the seed storage comes back through its own ring
         let (_, again) = sb.rent_group(6, 2);
         assert_eq!(again.as_ptr(), seeds_ptr);
+    }
+
+    #[test]
+    fn telemetry_counts_freelist_and_push_batch() {
+        let sb = StateBuffer::with_telemetry(true);
+        let buf = sb.rent(4); // cold free list: miss
+        sb.push(ObsMsg::single(0, buf, 1));
+        let mut batch = Vec::new();
+        sb.grab_into(&mut batch, 8);
+        sb.recycle_batch(&mut batch);
+        let _warm = sb.rent(4); // recycled: hit
+        let mut msgs = vec![
+            ObsMsg::single(1, vec![], 2),
+            ObsMsg::single(2, vec![], 3),
+        ];
+        assert!(sb.push_batch(&mut msgs));
+        let t = sb.telemetry();
+        assert!(t.enabled());
+        assert_eq!(t.get(Counter::FreeListMisses), 1);
+        assert_eq!(t.get(Counter::FreeListHits), 1);
+        assert_eq!(t.get(Counter::PushBatchCalls), 1);
+        assert_eq!(t.get(Counter::PushBatchMessages), 2);
+        // a plain buffer counts nothing
+        let off = StateBuffer::new();
+        let _ = off.rent(4);
+        assert!(!off.telemetry().enabled());
+        assert_eq!(off.telemetry().get(Counter::FreeListMisses), 0);
     }
 
     #[test]

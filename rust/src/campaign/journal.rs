@@ -16,6 +16,9 @@
 //!  "seed_index":N,"seed":"0x…","signature":"0x…",
 //!  "steps":N,"updates":N,"wall_s":F,"final_metric":F|null,
 //!  "final_scores":[F…],"required":[F|null…]}                  per job
+//! {"telemetry":{"v":1,"id":"spec|method|sK",
+//!               "counters":{K:"0x…"…},"hists":{K:[N…]…}}}     per job,
+//!                                                   telemetry runs only
 //! ```
 //!
 //! `seed`/`signature` are hex *strings*: they are full-width u64s and
@@ -27,12 +30,14 @@
 use std::fs::OpenOptions;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::campaign::plan::Job;
 use crate::metrics::TrainReport;
+use crate::telemetry::{Counter, Hist, TelemetryReport, TelemetryScope};
 use crate::util::json::{obj, Json};
 
 /// Campaign identity, checked on resume so a journal can never be
@@ -222,6 +227,44 @@ fn num_or_nan(v: &Json) -> Result<f64> {
     }
 }
 
+/// One job's merged run telemetry, journaled as its own line right
+/// after the [`JobRecord`] (telemetry campaigns only). A separate line
+/// — not a `JobRecord` field — so non-telemetry journals stay
+/// byte-identical to every journal written before telemetry existed,
+/// and resume tolerates either shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTelemetry {
+    pub id: String,
+    pub report: TelemetryReport,
+}
+
+impl JobTelemetry {
+    pub fn to_json(&self) -> Json {
+        let rep = self.report.to_json();
+        obj(vec![(
+            "telemetry",
+            obj(vec![
+                ("v", Json::Num(1.0)),
+                ("id", Json::Str(self.id.clone())),
+                ("counters", rep.get("counters").unwrap().clone()),
+                ("hists", rep.get("hists").unwrap().clone()),
+            ]),
+        )])
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobTelemetry> {
+        let t = v.get("telemetry")?;
+        anyhow::ensure!(
+            t.get("v")?.as_u64()? == 1,
+            "unknown telemetry record version"
+        );
+        Ok(JobTelemetry {
+            id: t.get("id")?.as_str()?.to_string(),
+            report: TelemetryReport::from_json(t)?,
+        })
+    }
+}
+
 /// The append handle. Interior mutex: scheduler workers append
 /// concurrently; each line is written and flushed in one critical
 /// section so lines never interleave and a crash tears at most the
@@ -229,6 +272,14 @@ fn num_or_nan(v: &Json) -> Result<f64> {
 pub struct Journal {
     path: PathBuf,
     w: Mutex<std::io::BufWriter<std::fs::File>>,
+    /// Journal self-telemetry (append count, write+flush latency).
+    /// Off by default; [`Journal::enable_telemetry`] turns it on. Read
+    /// before taking the writer lock so the timed section covers the
+    /// lock wait too — contention IS flush latency to the waiting
+    /// worker. Reported to stderr only, never into deterministic
+    /// artifacts.
+    tel_on: AtomicBool,
+    tel: Mutex<TelemetryScope>,
 }
 
 impl Journal {
@@ -243,6 +294,8 @@ impl Journal {
         let j = Journal {
             path: path.to_path_buf(),
             w: Mutex::new(std::io::BufWriter::new(f)),
+            tel_on: AtomicBool::new(false),
+            tel: Mutex::new(TelemetryScope::default()),
         };
         j.line(&meta.to_json())?;
         Ok(j)
@@ -256,13 +309,21 @@ impl Journal {
     pub fn resume(
         path: &Path,
         meta: &CampaignMeta,
-    ) -> Result<(Journal, Vec<JobRecord>)> {
+    ) -> Result<(Journal, Vec<JobRecord>, Vec<JobTelemetry>)> {
         if !path.exists() {
-            return Ok((Journal::create(path, meta)?, Vec::new()));
+            return Ok((Journal::create(path, meta)?, Vec::new(), Vec::new()));
         }
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading journal {}", path.display()))?;
+        // Records and telemetry lines parse independently: a telemetry
+        // line whose job record got lost can't exist (the record is
+        // flushed first), and the scheduler re-pairs them by id.
+        enum Parsed {
+            Rec(JobRecord),
+            Tel(JobTelemetry),
+        }
         let mut records = Vec::new();
+        let mut tels = Vec::new();
         let mut keep = 0usize; // byte length of the valid prefix
         let lines: Vec<&str> = text.split_inclusive('\n').collect();
         let mut first = true;
@@ -317,10 +378,15 @@ impl Journal {
                     }
                 }
             } else {
-                match Json::parse(trimmed)
-                    .and_then(|v| JobRecord::from_json(&v))
-                {
-                    Ok(rec) => records.push(rec),
+                match Json::parse(trimmed).and_then(|v| {
+                    if v.get("telemetry").is_ok() {
+                        JobTelemetry::from_json(&v).map(Parsed::Tel)
+                    } else {
+                        JobRecord::from_json(&v).map(Parsed::Rec)
+                    }
+                }) {
+                    Ok(Parsed::Rec(rec)) => records.push(rec),
+                    Ok(Parsed::Tel(t)) => tels.push(t),
                     // A bad *final* line is the expected crash artifact
                     // (torn write); drop it. Anywhere else: corruption.
                     Err(e) if is_last => {
@@ -360,13 +426,15 @@ impl Journal {
         let j = Journal {
             path: path.to_path_buf(),
             w: Mutex::new(std::io::BufWriter::new(f)),
+            tel_on: AtomicBool::new(false),
+            tel: Mutex::new(TelemetryScope::default()),
         };
         // An empty file (the crash beat the header flush) resumes as a
         // fresh journal — write the header it never got.
         if first {
             j.line(&meta.to_json())?;
         }
-        Ok((j, records))
+        Ok((j, records, tels))
     }
 
     /// Append one completed job. Write + flush under the lock: the line
@@ -375,14 +443,46 @@ impl Journal {
         self.line(&rec.to_json())
     }
 
+    /// Append one job's telemetry record (its own line, after the job
+    /// record — see [`JobTelemetry`]).
+    pub fn append_telemetry(&self, t: &JobTelemetry) -> Result<()> {
+        self.line(&t.to_json())
+    }
+
+    /// Turn on journal self-telemetry (resets any prior counts).
+    pub fn enable_telemetry(&self) {
+        *self.tel.lock().unwrap() = TelemetryScope::new(true);
+        self.tel_on.store(true, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the journal's own append/flush telemetry.
+    pub fn telemetry(&self) -> TelemetryScope {
+        self.tel.lock().unwrap().clone()
+    }
+
     pub fn path(&self) -> &Path {
         &self.path
     }
 
     fn line(&self, v: &Json) -> Result<()> {
-        let mut w = self.w.lock().unwrap();
-        writeln!(w, "{}", v.to_string())?;
-        w.flush()?;
+        let t0 = if self.tel_on.load(Ordering::Relaxed) {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+        {
+            let mut w = self.w.lock().unwrap();
+            writeln!(w, "{}", v.to_string())?;
+            w.flush()?;
+        }
+        if let Some(t0) = t0 {
+            let mut tel = self.tel.lock().unwrap();
+            tel.incr(Counter::JournalAppends);
+            tel.record_ns(
+                Hist::JournalFlushNs,
+                t0.elapsed().as_nanos() as u64,
+            );
+        }
         Ok(())
     }
 }
@@ -441,7 +541,7 @@ mod tests {
         j.append(&rec("a|hts|s0")).unwrap();
         j.append(&rec("b|hts|s0")).unwrap();
         drop(j);
-        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        let (_, records, _) = Journal::resume(&path, &meta).unwrap();
         assert_eq!(records.len(), 2);
         assert_eq!(records[0].id, "a|hts|s0");
         let other = CampaignMeta { campaign_seed: 43, ..meta.clone() };
@@ -468,12 +568,12 @@ mod tests {
         let mut f = OpenOptions::new().append(true).open(&path).unwrap();
         write!(f, "{{\"v\":1,\"id\":\"torn").unwrap();
         drop(f);
-        let (j2, records) = Journal::resume(&path, &meta).unwrap();
+        let (j2, records, _) = Journal::resume(&path, &meta).unwrap();
         assert_eq!(records.len(), 1, "torn line must not become a record");
         j2.append(&rec("b|hts|s0")).unwrap();
         drop(j2);
         // the fragment is gone: a second resume sees two clean records
-        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        let (_, records, _) = Journal::resume(&path, &meta).unwrap();
         assert_eq!(records.len(), 2);
         assert_eq!(records[1].id, "b|hts|s0");
         let _ = std::fs::remove_dir_all(&dir);
@@ -499,11 +599,11 @@ mod tests {
         let mut f = OpenOptions::new().append(true).open(&path).unwrap();
         write!(f, "{}", rec("a|hts|s0").to_json().to_string()).unwrap();
         drop(f); // note: no newline written
-        let (j2, records) = Journal::resume(&path, &meta).unwrap();
+        let (j2, records, _) = Journal::resume(&path, &meta).unwrap();
         assert_eq!(records.len(), 1);
         j2.append(&rec("b|hts|s0")).unwrap();
         drop(j2);
-        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        let (_, records, _) = Journal::resume(&path, &meta).unwrap();
         assert_eq!(records.len(), 2);
         assert_eq!(records[0].id, "a|hts|s0");
         assert_eq!(records[1].id, "b|hts|s0");
@@ -526,11 +626,11 @@ mod tests {
             n_jobs: 3,
             config: 0,
         };
-        let (j, records) = Journal::resume(&path, &meta).unwrap();
+        let (j, records, _) = Journal::resume(&path, &meta).unwrap();
         assert!(records.is_empty());
         j.append(&rec("a|hts|s0")).unwrap();
         drop(j);
-        let (_, records) = Journal::resume(&path, &meta).unwrap();
+        let (_, records, _) = Journal::resume(&path, &meta).unwrap();
         assert_eq!(records.len(), 1, "rewritten header + record parse");
         // a VALID header naming a different campaign is never treated
         // as torn — resuming must not hijack foreign journals
@@ -540,6 +640,43 @@ mod tests {
         std::fs::write(&path, "{\"campaign\":{\"su\nnot a header\n")
             .unwrap();
         assert!(Journal::resume(&path, &meta).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn telemetry_lines_roundtrip_and_resume() {
+        let dir = std::env::temp_dir().join("htsrl_journal_tel");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("j.jsonl");
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 7,
+            n_jobs: 2,
+            config: 0,
+        };
+        let mut rep = TelemetryReport::default();
+        rep.counters.insert("steps_total".into(), u64::MAX);
+        rep.counters.insert("parks".into(), 3);
+        rep.hists.insert("park_ns".into(), vec![0, 1, 4]);
+        let t = JobTelemetry { id: "a|hts|s0".into(), report: rep };
+        let back =
+            JobTelemetry::from_json(&Json::parse(&t.to_json().to_string())
+                .unwrap())
+            .unwrap();
+        assert_eq!(t, back);
+
+        let j = Journal::create(&path, &meta).unwrap();
+        j.enable_telemetry();
+        j.append(&rec("a|hts|s0")).unwrap();
+        j.append_telemetry(&t).unwrap();
+        j.append(&rec("b|hts|s0")).unwrap();
+        let own = j.telemetry();
+        assert_eq!(own.get(Counter::JournalAppends), 3);
+        drop(j);
+        let (_, records, tels) = Journal::resume(&path, &meta).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(tels.len(), 1);
+        assert_eq!(tels[0], t);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -31,7 +31,7 @@ pub mod plan;
 pub mod report;
 pub mod scheduler;
 
-pub use journal::{CampaignMeta, JobRecord, Journal};
+pub use journal::{CampaignMeta, JobRecord, JobTelemetry, Journal};
 pub use plan::{
     derive_seed, expand, job_id, job_run_config, Budget, CampaignConfig,
     CampaignPlan, Job, SharePolicy,

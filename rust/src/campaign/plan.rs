@@ -111,6 +111,18 @@ pub struct CampaignConfig {
     /// Required-time thresholds reported per job (Tab. 2 metric).
     pub rt_targets: Vec<f64>,
     pub artifacts: PathBuf,
+    /// Collect per-job run telemetry (DESIGN.md §12). Deliberately NOT
+    /// part of [`CampaignConfig::fingerprint`]: telemetry never shapes
+    /// results (byte-identity pinned in `rust/tests/campaign.rs`), so
+    /// a telemetry re-run may resume a non-telemetry journal and vice
+    /// versa.
+    pub telemetry: bool,
+    /// The jobs ran on the stand-in fleet, whose `wall_s` is a virtual
+    /// clock (steps / 1e5), not wall time. Report rendering shows those
+    /// rates in the `sps_virtual` column instead of `sps`. Display-only
+    /// — excluded from the fingerprint (the CLI already marks stand-in
+    /// journals via the meta config XOR).
+    pub standin: bool,
 }
 
 impl CampaignConfig {
@@ -167,6 +179,8 @@ impl CampaignConfig {
             eval_episodes: 10,
             rt_targets: Vec::new(),
             artifacts: default_artifacts_dir(),
+            telemetry: false,
+            standin: false,
         }
     }
 }
@@ -324,6 +338,7 @@ pub fn job_run_config(cfg: &CampaignConfig, job: &Job) -> RunConfig {
     rc.eval_every = cfg.eval_every;
     rc.eval_episodes = cfg.eval_episodes;
     rc.artifacts = cfg.artifacts.clone();
+    rc.telemetry = cfg.telemetry;
     rc
 }
 
@@ -427,6 +442,21 @@ mod tests {
             assert_eq!(q.id, f.id);
             assert_eq!(q.seed, f.seed);
         }
+    }
+
+    #[test]
+    fn fingerprint_ignores_telemetry_and_standin() {
+        // telemetry/standin are display/diagnostic toggles: a telemetry
+        // re-run must be able to --resume a non-telemetry journal
+        let base = cfg().fingerprint();
+        let mut c = cfg();
+        c.telemetry = true;
+        c.standin = true;
+        assert_eq!(c.fingerprint(), base);
+        assert!(job_run_config(&c, &expand(&c).unwrap().jobs[0]).telemetry);
+        let mut c = cfg();
+        c.seeds = 3;
+        assert_ne!(c.fingerprint(), base, "result-shaping knob must move it");
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //!   mean ± bootstrap CI of the final metric over seeds, mean SPS,
 //!   and required-time aggregates.
 //! * `campaign_<suite>_report.md` — the summary as a markdown table.
+//!
+//! Telemetry campaigns add a fourth, `campaign_<suite>_telemetry.csv`:
+//! per-(spec, method) utilization derived from the merged run counters
+//! (DESIGN.md §12). It is a *separate* artifact because its values are
+//! wall-clock shaped (lockstep vs. degraded fractions, poll miss
+//! rates) — folding them into the three core artifacts would break
+//! their byte-identity across `--jobs` values, resume, and telemetry
+//! on/off, which `rust/tests/campaign.rs` pins.
 
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
@@ -25,17 +33,21 @@ use crate::campaign::journal::JobRecord;
 use crate::campaign::plan::{CampaignConfig, CampaignPlan};
 use crate::campaign::scheduler::CampaignOutcome;
 use crate::stats::bootstrap_ci;
+use crate::telemetry::TelemetryReport;
 use crate::util::csv::{csv_cell, markdown_table};
 
-/// The rendered artifacts.
+/// The rendered artifacts. `telemetry_csv` is `Some` only when the
+/// outcome carries telemetry — the three core artifacts never change
+/// shape with it (byte-identity, see module doc).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CampaignReport {
     pub jobs_csv: String,
     pub summary_csv: String,
     pub markdown: String,
+    pub telemetry_csv: Option<String>,
 }
 
-/// Render all three artifacts from a finished (or resumed) campaign.
+/// Render all artifacts from a finished (or resumed) campaign.
 pub fn render(
     cfg: &CampaignConfig,
     plan: &CampaignPlan,
@@ -45,6 +57,7 @@ pub fn render(
         jobs_csv: render_jobs_csv(cfg, plan, outcome),
         summary_csv: render_summary_csv(cfg, plan, outcome),
         markdown: render_markdown(cfg, plan, outcome),
+        telemetry_csv: render_telemetry_csv(plan, outcome),
     }
 }
 
@@ -55,11 +68,14 @@ pub fn write_files(
     rep: &CampaignReport,
 ) -> Result<Vec<PathBuf>> {
     std::fs::create_dir_all(dir)?;
-    let files = [
+    let mut files = vec![
         (format!("campaign_{suite}_jobs.csv"), &rep.jobs_csv),
         (format!("campaign_{suite}_summary.csv"), &rep.summary_csv),
         (format!("campaign_{suite}_report.md"), &rep.markdown),
     ];
+    if let Some(tel) = &rep.telemetry_csv {
+        files.push((format!("campaign_{suite}_telemetry.csv"), tel));
+    }
     let mut out = Vec::new();
     for (name, text) in files {
         let path = dir.join(name);
@@ -97,7 +113,8 @@ fn render_jobs_csv(
 ) -> String {
     let mut header: Vec<String> = [
         "job", "spec", "method", "seed_index", "seed", "status", "steps",
-        "updates", "wall_s", "sps", "final_metric", "signature",
+        "updates", "wall_s", "sps", "sps_virtual", "final_metric",
+        "signature",
     ]
     .iter()
     .map(|s| s.to_string())
@@ -120,7 +137,16 @@ fn render_jobs_csv(
                 row.push(r.steps.to_string());
                 row.push(r.updates.to_string());
                 row.push(cell(r.wall_s));
-                row.push(cell(r.sps()));
+                // Stand-in jobs report a *virtual* clock (steps / 1e5),
+                // not wall time — their rate goes in its own column so
+                // real and simulated throughput can never be confused.
+                if cfg.standin {
+                    row.push(String::new());
+                    row.push(cell(r.sps()));
+                } else {
+                    row.push(cell(r.sps()));
+                    row.push(String::new());
+                }
                 row.push(cell(r.final_metric));
                 row.push(format!("0x{:016x}", r.signature));
                 row.extend(r.required.iter().map(|t| opt_cell(*t)));
@@ -133,7 +159,7 @@ fn render_jobs_csv(
                     .map_or("not-run", |_| "skipped");
                 row.push(status.to_string());
                 row.extend(
-                    (0..6 + cfg.rt_targets.len()).map(|_| String::new()),
+                    (0..7 + cfg.rt_targets.len()).map(|_| String::new()),
                 );
             }
         }
@@ -215,7 +241,8 @@ fn render_summary_csv(
 ) -> String {
     let mut header: Vec<String> = [
         "spec", "method", "seeds_done", "seeds_planned", "steps_total",
-        "wall_s_mean", "sps_mean", "final_mean", "final_lo", "final_hi",
+        "wall_s_mean", "sps_mean", "sps_virtual_mean", "final_mean",
+        "final_lo", "final_hi",
     ]
     .iter()
     .map(|s| s.to_string())
@@ -225,6 +252,13 @@ fn render_summary_csv(
     out.push('\n');
     for g in groups(plan, outcome) {
         let (fm, lo, hi) = final_ci(&g);
+        let sps_mean = cell(mean_of(g.records.iter().map(|r| r.sps())));
+        // see render_jobs_csv: stand-in rates are virtual-clock rates
+        let (sps_col, sps_virtual_col) = if cfg.standin {
+            (String::new(), sps_mean)
+        } else {
+            (sps_mean, String::new())
+        };
         let mut row = vec![
             csv_cell(&g.spec),
             g.method.to_string(),
@@ -236,7 +270,8 @@ fn render_summary_csv(
                 .sum::<u64>()
                 .to_string(),
             cell(mean_of(g.records.iter().map(|r| r.wall_s))),
-            cell(mean_of(g.records.iter().map(|r| r.sps()))),
+            sps_col,
+            sps_virtual_col,
             cell(fm),
             cell(lo),
             cell(hi),
@@ -293,7 +328,13 @@ fn render_markdown(
     for t in &cfg.rt_targets {
         header.push(format!("rt {t} (s)"));
     }
-    header.push("SPS".to_string());
+    header.push(if cfg.standin {
+        // stand-in rates come off the virtual clock — label them so a
+        // reader can't mistake simulated throughput for measured SPS
+        "SPS (virtual)".to_string()
+    } else {
+        "SPS".to_string()
+    });
     header.push("steps".to_string());
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut rows = Vec::new();
@@ -350,6 +391,96 @@ fn render_markdown(
     out
 }
 
+/// NaN-safe fixed-precision ratio cell for the telemetry CSV (the
+/// shortest-roundtrip `cell` is for measured values; ratios are derived
+/// and a stable width reads better in wide tables).
+fn ratio(num: u64, den: u64) -> String {
+    if den == 0 {
+        String::new()
+    } else {
+        format!("{:.4}", num as f64 / den as f64)
+    }
+}
+
+/// Per-(spec, method) utilization columns from the merged run counters
+/// (DESIGN.md §12). `None` when the outcome carries no telemetry — the
+/// artifact only exists for telemetry campaigns.
+fn render_telemetry_csv(
+    plan: &CampaignPlan,
+    outcome: &CampaignOutcome,
+) -> Option<String> {
+    if outcome.telemetry.iter().all(Option::is_none) {
+        return None;
+    }
+    struct TGroup {
+        spec: String,
+        method: &'static str,
+        jobs: usize,
+        rep: TelemetryReport,
+    }
+    let mut gs: Vec<TGroup> = Vec::new();
+    for (job, tel) in plan.jobs.iter().zip(&outcome.telemetry) {
+        let Some(t) = tel else { continue };
+        let spec = job.spec.spec_str();
+        let method = job.method.name();
+        let g = match gs
+            .iter_mut()
+            .find(|g| g.spec == spec && g.method == method)
+        {
+            Some(g) => g,
+            None => {
+                gs.push(TGroup {
+                    spec,
+                    method,
+                    jobs: 0,
+                    rep: TelemetryReport::default(),
+                });
+                gs.last_mut().unwrap()
+            }
+        };
+        g.jobs += 1;
+        g.rep.merge(&t.report);
+    }
+    let mut out = String::from(
+        "spec,method,jobs,steps_total,solo_frac,lockstep_frac,\
+         degraded_frac,lockstep_batch_cols,poll_miss_rate,\
+         parks_per_kstep,grab_batch_cols,forward_occupancy,\
+         freelist_hit_rate,push_batch_msgs\n",
+    );
+    for g in gs {
+        let r = &g.rep;
+        let c = |k: &str| r.counter(k);
+        let steps = c("steps_total");
+        let row = [
+            csv_cell(&g.spec),
+            g.method.to_string(),
+            g.jobs.to_string(),
+            steps.to_string(),
+            // how the pool spent its steps: blocking K = 1 loop,
+            // whole-group lockstep lanes, or scalar degradation
+            ratio(c("solo_steps"), steps),
+            ratio(c("lockstep_lane_steps"), steps),
+            ratio(c("degraded_steps"), steps),
+            ratio(c("lockstep_lane_steps"), c("lockstep_calls")),
+            // wasted mailbox sweeps and parks per thousand steps
+            ratio(c("poll_pending"), c("poll_pending") + c("poll_complete")),
+            ratio(c("parks") * 1_000, steps),
+            // actor fan-in and forward-chunk fill vs. max_batch
+            ratio(c("grab_columns"), c("grab_batches")),
+            ratio(c("forward_columns"), c("forward_capacity")),
+            // buffer recycling effectiveness and publish batching
+            ratio(
+                c("freelist_hits"),
+                c("freelist_hits") + c("freelist_misses"),
+            ),
+            ratio(c("push_batch_messages"), c("push_batch_calls")),
+        ];
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    Some(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,7 +512,7 @@ mod tests {
             Ok(r)
         };
         let out = crate::campaign::scheduler::run_campaign(
-            cfg, &plan, &runner, None, &[], None,
+            cfg, &plan, &runner, None, &[], &[], None,
         )
         .unwrap();
         (plan, out)
@@ -430,7 +561,7 @@ mod tests {
             Ok(TrainReport::default())
         };
         let out = crate::campaign::scheduler::run_campaign(
-            &c, &plan, &runner, None, &[], None,
+            &c, &plan, &runner, None, &[], &[], None,
         )
         .unwrap();
         let rep = render(&c, &plan, &out);
@@ -438,6 +569,63 @@ mod tests {
         assert!(rep.markdown.contains("skipped jobs:"));
         // numeric summary cells are empty, not fabricated
         let s: Vec<&str> = rep.summary_csv.lines().collect();
-        assert!(s[1].starts_with("catch?wind=0,hts,0,2,0,,,"), "{}", s[1]);
+        assert!(s[1].starts_with("catch?wind=0,hts,0,2,0,,,,"), "{}", s[1]);
+    }
+
+    #[test]
+    fn standin_flag_routes_sps_into_virtual_column() {
+        let c = cfg();
+        let (plan, out) = outcome(&c);
+        let real = render(&c, &plan, &out);
+        let mut c2 = cfg();
+        c2.standin = true;
+        let standin = render(&c2, &plan, &out);
+        // 100 steps / 2.0 s -> 50; real runs fill `sps`, stand-in runs
+        // fill `sps_virtual` (same value, different column)
+        assert!(real.jobs_csv.contains(",50,,"), "{}", real.jobs_csv);
+        assert!(standin.jobs_csv.contains(",,50,"), "{}", standin.jobs_csv);
+        let rs: Vec<&str> = real.summary_csv.lines().collect();
+        let ss: Vec<&str> = standin.summary_csv.lines().collect();
+        assert!(rs[1].contains(",50,,"), "{}", rs[1]);
+        assert!(ss[1].contains(",,50,"), "{}", ss[1]);
+        assert!(real.markdown.contains("| SPS "));
+        assert!(!real.markdown.contains("SPS (virtual)"));
+        assert!(standin.markdown.contains("SPS (virtual)"));
+        // the virtual clock never leaks into the real-SPS column
+        assert_eq!(real.jobs_csv.lines().next(), standin.jobs_csv.lines().next());
+    }
+
+    #[test]
+    fn telemetry_csv_renders_only_for_telemetry_outcomes() {
+        use crate::campaign::journal::JobTelemetry;
+        let c = cfg();
+        let (plan, mut out) = outcome(&c);
+        let plain = render(&c, &plan, &out);
+        assert!(plain.telemetry_csv.is_none());
+        // attach synthetic telemetry to every job
+        for (job, slot) in plan.jobs.iter().zip(&mut out.telemetry) {
+            let mut rep = crate::telemetry::TelemetryReport::default();
+            rep.counters.insert("steps_total".into(), 100);
+            rep.counters.insert("solo_steps".into(), 100);
+            rep.counters.insert("poll_complete".into(), 80);
+            rep.counters.insert("poll_pending".into(), 20);
+            rep.counters.insert("grab_batches".into(), 10);
+            rep.counters.insert("grab_columns".into(), 40);
+            *slot = Some(JobTelemetry { id: job.id.clone(), report: rep });
+        }
+        let tel = render(&c, &plan, &out);
+        let csv = tel.telemetry_csv.as_ref().unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("spec,method,jobs,steps_total"));
+        // 2 specs x 1 method, 2 seeds merged per group
+        assert_eq!(lines.len(), 1 + 2);
+        assert!(lines[1].contains(",2,200,1.0000,"), "{}", lines[1]);
+        assert!(lines[1].contains(",0.2000,"), "miss rate: {}", lines[1]);
+        assert!(lines[1].contains(",4.0000,"), "grab cols: {}", lines[1]);
+        // the three core artifacts are byte-identical with or without
+        // telemetry attached — it is strictly additive
+        assert_eq!(plain.jobs_csv, tel.jobs_csv);
+        assert_eq!(plain.summary_csv, tel.summary_csv);
+        assert_eq!(plain.markdown, tel.markdown);
     }
 }

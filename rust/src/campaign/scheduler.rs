@@ -20,7 +20,7 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use crate::campaign::journal::{JobRecord, Journal};
+use crate::campaign::journal::{JobRecord, JobTelemetry, Journal};
 use crate::campaign::plan::{self, CampaignConfig, CampaignPlan, Job, SharePolicy};
 use crate::coordinator::RunConfig;
 use crate::metrics::report::Stopwatch;
@@ -58,6 +58,11 @@ pub fn standin_hub_runner(
 #[derive(Debug)]
 pub struct CampaignOutcome {
     pub records: Vec<Option<JobRecord>>,
+    /// Per-job merged run telemetry, plan-indexed like `records`.
+    /// `Some` only for telemetry campaigns, and only where the job's
+    /// driver is instrumented (fresh runs) or the journal replayed a
+    /// telemetry line (resumed runs).
+    pub telemetry: Vec<Option<JobTelemetry>>,
     /// `(plan index, reason)` in plan order.
     pub skipped: Vec<(usize, String)>,
     pub resumed: usize,
@@ -73,18 +78,22 @@ impl CampaignOutcome {
 /// Run a campaign. `done` holds journal-replayed records from
 /// [`Journal::resume`]; their jobs are skipped and the records reused
 /// verbatim, which is what makes a resumed report byte-identical to an
-/// uninterrupted one. `curves_out`, when set, gets a per-job training
-/// curve CSV via the shared `metrics::report` helper (the same writer
-/// `hts-rl train --out` uses, so the two cannot drift). Episode logs
-/// are *not* journaled (unbounded), so resumed jobs write no new curve
-/// CSV — they rely on the file the pre-crash run already wrote into
-/// the same `--out` dir, which the crash doesn't remove.
+/// uninterrupted one. `done_tel` holds the matching replayed telemetry
+/// lines, re-paired to jobs by id (unmatched lines are dropped —
+/// telemetry is diagnostics, never a correctness input). `curves_out`,
+/// when set, gets a per-job training curve CSV via the shared
+/// `metrics::report` helper (the same writer `hts-rl train --out`
+/// uses, so the two cannot drift). Episode logs are *not* journaled
+/// (unbounded), so resumed jobs write no new curve CSV — they rely on
+/// the file the pre-crash run already wrote into the same `--out` dir,
+/// which the crash doesn't remove.
 pub fn run_campaign(
     cfg: &CampaignConfig,
     plan: &CampaignPlan,
     runner: &Runner<'_>,
     journal: Option<&Journal>,
     done: &[JobRecord],
+    done_tel: &[JobTelemetry],
     curves_out: Option<&Path>,
 ) -> Result<CampaignOutcome> {
     // Resume records key on the job id; an id the plan doesn't know
@@ -101,6 +110,8 @@ pub fn run_campaign(
         );
         by_id.insert(&rec.id, rec);
     }
+    let tel_by_id: std::collections::BTreeMap<&str, &JobTelemetry> =
+        done_tel.iter().map(|t| (t.id.as_str(), t)).collect();
 
     let mut n_workers = cfg.jobs.min(plan.jobs.len());
     if n_workers == 0 {
@@ -110,6 +121,8 @@ pub fn run_campaign(
     let abort = AtomicBool::new(false);
     let resumed = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<JobRecord>>> =
+        Mutex::new(vec![None; plan.jobs.len()]);
+    let tel_results: Mutex<Vec<Option<JobTelemetry>>> =
         Mutex::new(vec![None; plan.jobs.len()]);
     let skipped: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
     // First-exhausted sharing: the shared step pool jobs reserve from.
@@ -137,6 +150,8 @@ pub fn run_campaign(
                     reserve_steps(pool, rec.steps);
                 }
                 results.lock().unwrap()[i] = Some((*rec).clone());
+                tel_results.lock().unwrap()[i] =
+                    tel_by_id.get(job.id.as_str()).map(|t| (*t).clone());
                 resumed.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
@@ -195,6 +210,27 @@ pub fn run_campaign(
                     });
                 }
             }
+            // Telemetry rides as its own journal line, *after* the job
+            // record — resume re-pairs the two by id, and a crash
+            // between the lines loses only diagnostics.
+            if let Some(rep) = &report.telemetry {
+                let t = JobTelemetry {
+                    id: job.id.clone(),
+                    report: rep.clone(),
+                };
+                if let Some(j) = journal {
+                    if let Err(e) = j.append_telemetry(&t) {
+                        abort.store(true, Ordering::Relaxed);
+                        return Err(e).with_context(|| {
+                            format!(
+                                "journaling telemetry for job '{}'",
+                                job.id
+                            )
+                        });
+                    }
+                }
+                tel_results.lock().unwrap()[i] = Some(t);
+            }
             if let Some(dir) = curves_out {
                 if !report.episodes.is_empty() {
                     let stem = format!(
@@ -239,6 +275,7 @@ pub fn run_campaign(
     skipped.sort_by_key(|&(i, _)| i);
     Ok(CampaignOutcome {
         records: results.into_inner().unwrap(),
+        telemetry: tel_results.into_inner().unwrap(),
         skipped,
         resumed: resumed.into_inner(),
     })
@@ -302,7 +339,7 @@ mod tests {
     fn runs_every_job_and_keeps_plan_order() {
         let c = cfg();
         let plan = plan::expand(&c).unwrap();
-        let out = run_campaign(&c, &plan, &runner, None, &[], None).unwrap();
+        let out = run_campaign(&c, &plan, &runner, None, &[], &[], None).unwrap();
         assert_eq!(out.records.len(), 4);
         assert_eq!(out.skipped.len(), 0);
         for (job, rec) in plan.jobs.iter().zip(&out.records) {
@@ -320,7 +357,7 @@ mod tests {
         let plan = plan::expand(&c).unwrap();
         // jobs ask 100 each and use everything granted: 100 + 100 + 50,
         // then the pool is dry and the 4th job is skipped
-        let out = run_campaign(&c, &plan, &runner, None, &[], None).unwrap();
+        let out = run_campaign(&c, &plan, &runner, None, &[], &[], None).unwrap();
         let steps: Vec<Option<u64>> =
             out.records.iter().map(|r| r.as_ref().map(|r| r.steps)).collect();
         assert_eq!(steps, vec![Some(100), Some(100), Some(50), None]);
@@ -351,7 +388,7 @@ mod tests {
             })
             .collect();
         let out =
-            run_campaign(&c, &plan, &runner, None, &done, None).unwrap();
+            run_campaign(&c, &plan, &runner, None, &done, &[], None).unwrap();
         assert_eq!(out.resumed, 2);
         let steps: Vec<Option<u64>> = out
             .records
@@ -368,9 +405,42 @@ mod tests {
         let mut c = cfg();
         c.budget.total_wall_s = Some(0.0);
         let plan = plan::expand(&c).unwrap();
-        let out = run_campaign(&c, &plan, &runner, None, &[], None).unwrap();
+        let out = run_campaign(&c, &plan, &runner, None, &[], &[], None).unwrap();
         assert!(out.records.iter().all(|r| r.is_none()));
         assert_eq!(out.skipped.len(), 4);
+    }
+
+    #[test]
+    fn telemetry_flows_into_outcome_and_resume_repairs_by_id() {
+        let c = cfg();
+        let plan = plan::expand(&c).unwrap();
+        let tel_runner = |job: &Job, rc: &RunConfig| -> Result<TrainReport> {
+            let mut r = tiny_report(job, rc);
+            let mut scope = crate::telemetry::TelemetryScope::new(true);
+            scope.add(
+                crate::telemetry::Counter::StepsTotal,
+                (rc.seed & 0xff) + 1,
+            );
+            r.telemetry = Some(scope.report());
+            Ok(r)
+        };
+        let out = run_campaign(&c, &plan, &tel_runner, None, &[], &[], None)
+            .unwrap();
+        assert!(out.telemetry.iter().all(|t| t.is_some()));
+        for (job, t) in plan.jobs.iter().zip(&out.telemetry) {
+            assert_eq!(t.as_ref().unwrap().id, job.id);
+        }
+        // a resumed campaign re-pairs the replayed telemetry lines to
+        // their jobs by id — same outcome as the uninterrupted run
+        let done: Vec<JobRecord> =
+            out.records.iter().flatten().cloned().collect();
+        let done_tel: Vec<JobTelemetry> =
+            out.telemetry.iter().flatten().cloned().collect();
+        let out2 =
+            run_campaign(&c, &plan, &runner, None, &done, &done_tel, None)
+                .unwrap();
+        assert_eq!(out2.resumed, 4);
+        assert_eq!(out2.telemetry, out.telemetry);
     }
 
     #[test]
@@ -384,7 +454,8 @@ mod tests {
         );
         rec.id = "not_in_plan|hts|s0".into();
         assert!(
-            run_campaign(&c, &plan, &runner, None, &[rec], None).is_err()
+            run_campaign(&c, &plan, &runner, None, &[rec], &[], None)
+                .is_err()
         );
     }
 }

@@ -57,7 +57,7 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
     let mut trainer =
         Trainer::new(&rt, &cfg.spec.model, cfg.algo, init.clone(), b_cols)?;
 
-    let state_buf = Arc::new(StateBuffer::new());
+    let state_buf = Arc::new(StateBuffer::with_telemetry(cfg.telemetry));
     let act_buf = Arc::new(ActionBuffer::new(b_cols));
     let params = Arc::new(ParamStore::with_history(init.clone(), 256));
     let traj_q: Arc<BlockingQueue<Traj>> = Arc::new(BlockingQueue::new());
@@ -172,6 +172,7 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         act_buf.clone(),
         params.clone(),
         b_cols,
+        cfg.telemetry,
     );
 
     let eval = if cfg.eval_every > 0 {
@@ -271,9 +272,12 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         episodes.extend(eps);
         signature ^= sig;
     }
+    let mut tel = crate::telemetry::TelemetryScope::new(false);
     for h in actor_handles {
-        h.join().expect("actor panicked")?;
+        let scope = h.join().expect("actor panicked")?;
+        tel.merge(&scope);
     }
+    tel.merge(&state_buf.telemetry());
     let evals = match eval {
         Some(ev) => {
             ev.submit(
@@ -301,5 +305,8 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         staleness,
         final_loss: last_out.total_loss,
         final_entropy: last_out.entropy,
+        // Actor/buffer counters only: the async executors are classic
+        // blocking threads, not instrumented pools.
+        telemetry: cfg.telemetry.then(|| tel.report()),
     })
 }

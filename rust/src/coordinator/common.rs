@@ -16,6 +16,7 @@ use crate::metrics::report::{EvalPoint, Stopwatch};
 use crate::model::manifest::Manifest;
 use crate::model::ParamStore;
 use crate::runtime::{ForwardPool, ModelRuntime};
+use crate::telemetry::{Counter, TelemetryScope};
 
 /// Which driver runs the training.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,6 +102,11 @@ pub struct RunConfig {
     pub eval_every: u64,
     pub eval_episodes: usize,
     pub artifacts: PathBuf,
+    /// Collect per-run telemetry (counters + duration histograms,
+    /// DESIGN.md §12). Off by default; the instrumented paths compile to
+    /// branch-on-a-bool no-ops, and the run's outputs are byte-identical
+    /// either way (pinned in `tests/pool.rs` / `tests/campaign.rs`).
+    pub telemetry: bool,
 }
 
 impl RunConfig {
@@ -117,6 +123,7 @@ impl RunConfig {
             eval_every: 0,
             eval_episodes: 10,
             artifacts: default_artifacts_dir(),
+            telemetry: false,
         }
     }
 
@@ -170,7 +177,9 @@ impl Fnv {
 
 /// Spawn the HTS-RL actor pool: each actor owns its own PJRT runtime,
 /// batch-grabs observations, forwards once per batch, and posts actions
-/// sampled with the executor-provided seeds.
+/// sampled with the executor-provided seeds. Each actor thread returns
+/// its private [`TelemetryScope`] (grab batch sizes, forward chunk
+/// occupancy) — empty unless `telemetry` is set.
 #[allow(clippy::too_many_arguments)]
 pub fn spawn_actors(
     n_actors: usize,
@@ -180,7 +189,8 @@ pub fn spawn_actors(
     act_buf: Arc<ActionBuffer>,
     params: Arc<ParamStore>,
     max_grab: usize,
-) -> Vec<JoinHandle<Result<()>>> {
+    telemetry: bool,
+) -> Vec<JoinHandle<Result<TelemetryScope>>> {
     (0..n_actors)
         .map(|_| {
             let model = model.clone();
@@ -188,7 +198,8 @@ pub fn spawn_actors(
             let state_buf = state_buf.clone();
             let act_buf = act_buf.clone();
             let params = params.clone();
-            std::thread::spawn(move || -> Result<()> {
+            std::thread::spawn(move || -> Result<TelemetryScope> {
+                let mut tel = TelemetryScope::new(telemetry);
                 let manifest = Manifest::load(&artifacts)?;
                 let rt = ModelRuntime::new(manifest)?;
                 let pool = ForwardPool::new(&rt, &model)?;
@@ -218,7 +229,7 @@ pub fn spawn_actors(
                                 1e3 * fwd_s / n_calls as f64
                             );
                         }
-                        return Ok(()); // shutdown
+                        return Ok(tel); // shutdown
                     }
                     // §Perf note: we deliberately do NOT wait to grow the
                     // batch. Executors block on their action mailbox, so
@@ -243,6 +254,9 @@ pub fn spawn_actors(
                     // message publishes `cols()` of them at once).
                     let total_cols: usize =
                         batch.iter().map(|m| m.cols()).sum();
+                    tel.incr(Counter::GrabBatches);
+                    tel.add(Counter::GrabMessages, batch.len() as u64);
+                    tel.add(Counter::GrabColumns, total_cols as u64);
                     // A lone message's plane is already the contiguous
                     // `[cols × d]` the forward wants — serve it in place.
                     // Only a multi-message grab pays the flatten copy.
@@ -273,6 +287,9 @@ pub fn spawn_actors(
                         fwd_s += t0.elapsed().as_secs_f64();
                         n_calls += 1;
                         n_obs += n as u64;
+                        tel.incr(Counter::ForwardChunks);
+                        tel.add(Counter::ForwardColumns, n as u64);
+                        tel.add(Counter::ForwardCapacity, cap as u64);
                         for i in 0..n {
                             let (slot, seed) =
                                 cols.next().expect("column count mismatch");

@@ -71,7 +71,7 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         cfg.n_envs,
         n_threads,
     ));
-    let state_buf = Arc::new(StateBuffer::new());
+    let state_buf = Arc::new(StateBuffer::with_telemetry(cfg.telemetry));
     let act_buf = Arc::new(ActionBuffer::new(b_cols));
     let params = Arc::new(ParamStore::new(init.clone()));
     let sps = Arc::new(SpsMeter::new());
@@ -89,6 +89,8 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
             act_buf: act_buf.clone(),
             sps: sps.clone(),
             watch,
+            col_offset: 0,
+            telemetry: cfg.telemetry,
         };
         let seed = cfg.seed;
         exec_handles.push(std::thread::spawn(move || -> Result<PoolReport> {
@@ -106,6 +108,7 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         act_buf.clone(),
         params.clone(),
         b_cols,
+        cfg.telemetry,
     );
 
     // ---- evaluation worker -------------------------------------------------
@@ -168,14 +171,18 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
     // trajectory signatures (combine order independent — DESIGN.md §6).
     let mut episodes = Vec::new();
     let mut signature = 0u64;
+    let mut tel = crate::telemetry::TelemetryScope::new(false);
     for h in exec_handles {
         let report = h.join().expect("executor panicked")?;
         signature ^= report.signature;
         episodes.extend(report.episodes);
+        tel.merge(&report.telemetry);
     }
     for h in actor_handles {
-        h.join().expect("actor panicked")?;
+        let scope = h.join().expect("actor panicked")?;
+        tel.merge(&scope);
     }
+    tel.merge(&state_buf.telemetry());
 
     let evals = match eval {
         Some(ev) => {
@@ -206,5 +213,6 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         staleness: vec![1.0], // guaranteed lag of one (paper §4.1)
         final_loss: last_out.total_loss,
         final_entropy: last_out.entropy,
+        telemetry: cfg.telemetry.then(|| tel.report()),
     })
 }

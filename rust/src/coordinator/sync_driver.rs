@@ -287,5 +287,8 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
         staleness: vec![0.0], // fully on-policy
         final_loss: last_out.total_loss,
         final_entropy: last_out.entropy,
+        // The sync baseline steps envs on the learner thread with no
+        // actor fleet or pools — nothing instrumented to report.
+        telemetry: None,
     })
 }

@@ -22,6 +22,7 @@ use crate::coordinator::RunConfig;
 use crate::metrics::report::{EvalPoint, SpsMeter, Stopwatch};
 use crate::metrics::TrainReport;
 use crate::rng::SplitMix64;
+use crate::telemetry::{Counter, TelemetryScope};
 use crate::Result;
 
 /// Deterministic stand-in policy: sampled action from the observation
@@ -33,27 +34,33 @@ pub type StandInPolicy = Arc<dyn Fn(&[f32], u64) -> usize + Send + Sync>;
 /// `policy(obs, seed)`, exit when the state buffer closes. A group
 /// message (lane-group publish, `msg.cols() > 1`) is served column by
 /// column from its contiguous plane — same actions as per-replica
-/// messages by the deferred-randomness contract.
+/// messages by the deferred-randomness contract. Each thread hands back
+/// its grab-size telemetry at join (empty unless `telemetry` is set).
 pub fn spawn_standin_actors(
     n_actors: usize,
     state_buf: &Arc<StateBuffer>,
     act_buf: &Arc<ActionBuffer>,
     grab: usize,
     policy: &StandInPolicy,
-) -> Vec<JoinHandle<()>> {
+    telemetry: bool,
+) -> Vec<JoinHandle<TelemetryScope>> {
     (0..n_actors)
         .map(|_| {
             let sb = state_buf.clone();
             let ab = act_buf.clone();
             let policy = policy.clone();
             std::thread::spawn(move || {
+                let mut tel = TelemetryScope::new(telemetry);
                 let mut batch = Vec::new();
                 loop {
                     sb.grab_into(&mut batch, grab);
                     if batch.is_empty() {
-                        return; // shutdown
+                        return tel; // shutdown
                     }
+                    tel.incr(Counter::GrabBatches);
+                    tel.add(Counter::GrabMessages, batch.len() as u64);
                     for m in &batch {
+                        tel.add(Counter::GrabColumns, m.cols() as u64);
                         let d = m.col_dim();
                         for c in 0..m.cols() {
                             ab.post(
@@ -155,11 +162,14 @@ fn run_standin_job_inner(
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
 
-    // Private fleet unless the hub provides one.
+    // Private fleet unless the hub provides one. A hub fleet serves
+    // many jobs at once, so its actor/buffer counters are not
+    // attributable to any one job — shared-fleet jobs report pool-side
+    // telemetry only (DESIGN.md §12).
     let (state_buf, act_buf, col_offset, actor_handles) = match fleet {
         Some((sb, ab, off)) => (sb.clone(), ab.clone(), off, Vec::new()),
         None => {
-            let sb = Arc::new(StateBuffer::new());
+            let sb = Arc::new(StateBuffer::with_telemetry(cfg.telemetry));
             let ab = Arc::new(ActionBuffer::new(b_cols));
             let policy: StandInPolicy =
                 Arc::new(move |_obs, seed| (seed % act_dim as u64) as usize);
@@ -169,6 +179,7 @@ fn run_standin_job_inner(
                 &ab,
                 b_cols,
                 &policy,
+                cfg.telemetry,
             );
             (sb, ab, 0, handles)
         }
@@ -185,6 +196,7 @@ fn run_standin_job_inner(
             sps: sps.clone(),
             watch,
             col_offset,
+            telemetry: cfg.telemetry,
         };
         let seed = cfg.seed;
         pool_handles.push(std::thread::spawn(move || {
@@ -210,13 +222,19 @@ fn run_standin_job_inner(
 
     let mut signature = 0u64;
     let mut episodes = Vec::new();
+    let mut tel = TelemetryScope::new(false);
     for h in pool_handles {
         let report = h.join().expect("stand-in pool thread panicked")?;
         signature ^= report.signature;
         episodes.extend(report.episodes);
+        tel.merge(&report.telemetry);
     }
     for h in actor_handles {
-        h.join().expect("stand-in actor thread panicked");
+        let scope = h.join().expect("stand-in actor thread panicked");
+        tel.merge(&scope);
+    }
+    if own_fleet {
+        tel.merge(&state_buf.telemetry());
     }
 
     let steps = steps_per_iter * iters;
@@ -255,6 +273,7 @@ fn run_standin_job_inner(
         staleness: Vec::new(),
         final_loss: 0.0,
         final_entropy: 0.0,
+        telemetry: cfg.telemetry.then(|| tel.report()),
     })
 }
 
@@ -264,7 +283,7 @@ fn run_standin_job_inner(
 pub struct HubGroup {
     pub state_buf: Arc<StateBuffer>,
     pub act_buf: Arc<ActionBuffer>,
-    actors: Vec<JoinHandle<()>>,
+    actors: Vec<JoinHandle<TelemetryScope>>,
 }
 
 /// Cross-job actor fleets for stand-in campaigns (ISSUE 6): jobs are
@@ -318,12 +337,15 @@ impl StandInHub {
                 let policy: StandInPolicy = Arc::new(move |_obs, seed| {
                     (seed % act_dim as u64) as usize
                 });
+                // Fleet-level telemetry is off: a shared fleet serves
+                // many jobs, so its counters are not job-attributable.
                 let actors = spawn_standin_actors(
                     n_actors.max(1),
                     &state_buf,
                     &act_buf,
                     total_cols,
                     &policy,
+                    false,
                 );
                 HubGroup { state_buf, act_buf, actors }
             })

@@ -46,6 +46,7 @@ use crate::buffers::{
 };
 use crate::envs::{EnvSpec, StepTimeModel};
 use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch};
+use crate::telemetry::{Counter, Hist, TelemetryScope};
 
 /// Handles a pool thread shares with the rest of the run.
 #[derive(Clone)]
@@ -62,6 +63,11 @@ pub struct PoolShared {
     /// fleet's buffers (ISSUE 6). Rollout storage stays replica-indexed;
     /// only the mailbox columns shift.
     pub col_offset: usize,
+    /// Collect scheduling telemetry into the pool's thread-private
+    /// [`TelemetryScope`] (DESIGN.md §12). Off: every count is an
+    /// inlined branch-and-return, no clock is read, and the trajectory
+    /// is byte-identical to an instrumented run.
+    pub telemetry: bool,
 }
 
 /// What a pool thread hands back at join: its replicas' episode log and
@@ -72,6 +78,9 @@ pub struct PoolShared {
 pub struct PoolReport {
     pub episodes: Vec<EpisodePoint>,
     pub signature: u64,
+    /// The thread's scheduling telemetry (empty unless
+    /// `PoolShared::telemetry` was set).
+    pub telemetry: TelemetryScope,
 }
 
 /// One executor thread's pool of K replicas (lanes of one group).
@@ -82,6 +91,7 @@ pub struct ReplicaPool {
     group: LaneGroup,
     slots: Vec<ReplicaSlot>,
     episodes: Vec<EpisodePoint>,
+    tel: TelemetryScope,
 }
 
 impl ReplicaPool {
@@ -111,6 +121,7 @@ impl ReplicaPool {
                 )
             })
             .collect();
+        let tel = TelemetryScope::new(shared.telemetry);
         Ok(ReplicaPool {
             shared,
             steptime: spec.steptime,
@@ -118,6 +129,7 @@ impl ReplicaPool {
             group,
             slots,
             episodes: Vec::new(),
+            tel,
         })
     }
 
@@ -161,6 +173,8 @@ impl ReplicaPool {
                     &self.shared.watch,
                     &mut self.episodes,
                 );
+                self.tel.incr(Counter::SoloSteps);
+                self.tel.incr(Counter::StepsTotal);
                 if self.slots[0].steps_done() < self.alpha {
                     self.slots[0]
                         .publish_obs(&self.group, &self.shared.state_buf);
@@ -168,7 +182,11 @@ impl ReplicaPool {
             }
             self.slots[0].finish_iteration(&self.group, &mut writer);
             drop(writer);
-            match swap.executor_arrive(it) {
+            self.tel.incr(Counter::BarrierArrivals);
+            let t0 = self.tel.start();
+            let arrived = swap.executor_arrive(it);
+            self.tel.stop(Hist::BarrierWaitNs, t0);
+            match arrived {
                 Some(next) => it = next,
                 None => break,
             }
@@ -221,6 +239,7 @@ impl ReplicaPool {
                             break;
                         }
                         Polled::Complete => {
+                            self.tel.incr(Counter::PollComplete);
                             let dl = self.slots[i]
                                 .start_cooking(now, &self.steptime);
                             if dl <= now {
@@ -229,7 +248,10 @@ impl ReplicaPool {
                                 cooking.push(Reverse((dl, i)));
                             }
                         }
-                        Polled::Pending => still.push(i),
+                        Polled::Pending => {
+                            self.tel.incr(Counter::PollPending);
+                            still.push(i);
+                        }
                     }
                 }
                 if closed {
@@ -259,6 +281,8 @@ impl ReplicaPool {
                             &self.shared.watch,
                             &mut self.episodes,
                         );
+                        self.tel.incr(Counter::DegradedSteps);
+                        self.tel.incr(Counter::StepsTotal);
                         if self.slots[i].steps_done() == self.alpha {
                             self.slots[i].finish_iteration(
                                 &self.group,
@@ -280,13 +304,20 @@ impl ReplicaPool {
                     let timeout = cooking.peek().map(|&Reverse((dl, _))| {
                         dl.saturating_duration_since(now)
                     });
+                    self.tel.incr(Counter::Parks);
+                    let t0 = self.tel.start();
                     self.shared.act_buf.wait_any(seen, timeout);
+                    self.tel.stop(Hist::ParkNs, t0);
                 }
             }
             // Release the stripes before parking — the learner gathers
             // them inside the publication window.
             drop(writers);
-            match swap.executor_arrive(it) {
+            self.tel.incr(Counter::BarrierArrivals);
+            let t0 = self.tel.start();
+            let arrived = swap.executor_arrive(it);
+            self.tel.stop(Hist::BarrierWaitNs, t0);
+            match arrived {
                 Some(next) => it = next,
                 None => break,
             }
@@ -314,6 +345,9 @@ impl ReplicaPool {
         self.group
             .gather_actions(self.slots.iter().map(|s| s.staged_actions()));
         self.group.step_lanes();
+        self.tel.incr(Counter::LockstepCalls);
+        self.tel.add(Counter::LockstepLaneSteps, n as u64);
+        self.tel.add(Counter::StepsTotal, n as u64);
         for i in 0..n {
             let info = self.group.info(i);
             self.slots[i].after_step(
@@ -389,6 +423,10 @@ impl ReplicaPool {
             .slots
             .iter()
             .fold(0u64, |acc, s| acc ^ s.signature());
-        PoolReport { episodes: self.episodes, signature }
+        PoolReport {
+            episodes: self.episodes,
+            signature,
+            telemetry: self.tel,
+        }
     }
 }

@@ -39,6 +39,7 @@ pub fn curr(out: &Path, quick: bool) -> Result<()> {
         &campaign::coordinator_runner(),
         None,
         &[],
+        &[],
         None,
     )?;
 

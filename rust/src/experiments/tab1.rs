@@ -64,7 +64,7 @@ pub fn tab1(out: &Path, quick: bool) -> Result<()> {
     cfg.stop = StopCond::steps(async_steps);
     let plan_a = campaign::expand(&cfg)?;
     let out_a =
-        campaign::run_campaign(&cfg, &plan_a, &runner, None, &[], None)?;
+        campaign::run_campaign(&cfg, &plan_a, &runner, None, &[], &[], None)?;
     let mut impala: BTreeMap<String, JobRecord> = BTreeMap::new();
     for (job, rec) in plan_a.jobs.iter().zip(&out_a.records) {
         let rec = rec.as_ref().ok_or_else(|| {
@@ -83,7 +83,7 @@ pub fn tab1(out: &Path, quick: bool) -> Result<()> {
         job.stop = StopCond::wall_s(budget);
     }
     let out_b =
-        campaign::run_campaign(&cfg, &plan_b, &runner, None, &[], None)?;
+        campaign::run_campaign(&cfg, &plan_b, &runner, None, &[], &[], None)?;
     let mut by_key: BTreeMap<(String, &str), JobRecord> = BTreeMap::new();
     for (job, rec) in plan_b.jobs.iter().zip(&out_b.records) {
         let rec = rec.as_ref().ok_or_else(|| {

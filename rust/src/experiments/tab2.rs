@@ -55,6 +55,7 @@ pub fn tab2(out: &Path, quick: bool) -> Result<()> {
         &campaign::coordinator_runner(),
         None,
         &[],
+        &[],
         None,
     )?;
     let records: Vec<&JobRecord> = plan

@@ -28,10 +28,12 @@ pub mod executor;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod perf;
 pub mod rng;
 pub mod runtime;
 pub mod simulator;
 pub mod stats;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result alias (anyhow is the only error substrate available

@@ -8,6 +8,7 @@
 //!   exp          regenerate a paper table/figure (`--id tab1`, `--id all`)
 //!   sim          Claim-1/Claim-2 analytic + simulated numbers
 //!   determinism  run the Tab. 4 determinism check
+//!   bench        component suite; --check gates vs BENCH_baseline.json
 //!   list         registered envs, algos, experiments
 
 use std::path::PathBuf;
@@ -22,19 +23,30 @@ use hts_rl::experiments;
 use hts_rl::simulator::{claim1, claim2};
 use hts_rl::util::cli::Args;
 
+// Same counting allocator as the bench binary, so `hts-rl bench` (the
+// perf ratchet) enforces the suite's 0-allocs/step assertions too.
+#[global_allocator]
+static ALLOCATOR: hts_rl::perf::CountingAlloc = hts_rl::perf::CountingAlloc;
+
 fn usage() -> &'static str {
-    "usage: hts-rl <train|compare|campaign|exp|sim|determinism|list> [flags]\n\
+    "usage: hts-rl <train|compare|campaign|exp|sim|determinism|bench|list> \
+     [flags]\n\
      train flags: --env catch --method hts|sync|async --algo a2c|ppo|...\n\
        --steps N | --wall-s S | --updates N   --n-envs 16 --n-actors 4\n\
        --replicas-per-exec K (hts only: pool K replicas per exec thread)\n\
        --alpha K --seed 1 --eval-every U --out results/\n\
+       --telemetry (per-run counters/histograms; never changes results)\n\
      campaign flags: --suite <name> [--methods hts,sync,async] [--seeds K]\n\
-       [--jobs N] [--resume] [--quick] --out results/\n\
+       [--jobs N] [--resume] [--quick] [--telemetry] --out results/\n\
        per-job budget: --steps N | --wall-s S | --updates N\n\
        shared budget: --total-steps N [--share fair|first-exhausted]\n\
        --campaign-wall-s S   --algo a2c --async-algo vtrace --seed 1\n\
        --standin (force the artifact-free stand-in fleet; auto when\n\
        artifacts are absent)\n\
+     bench flags: --check (gate vs committed baseline; nonzero exit on\n\
+       significant regression) --update-baseline --quick\n\
+       --baseline BENCH_baseline.json --tolerance 0.2\n\
+       --repeats N (default 3 with --check, else 1) --out FILE\n\
      exp flags: --id fig3a|...|all  --quick  --out results/\n\
      sim flags: --claim 1|2 [--n 16 --alpha 4 --beta 2.0]\n\
      determinism flags: --k-sweep 1,2,4 (replica-pool factors to check)\n\
@@ -59,6 +71,7 @@ fn build_run_config(a: &Args) -> Result<RunConfig> {
     cfg.seed = a.u64_or("seed", 1)?;
     cfg.eval_every = a.u64_or("eval-every", 0)?;
     cfg.eval_episodes = a.usize_or("eval-episodes", 10)?;
+    cfg.telemetry = a.bool("telemetry");
     if let Some(dir) = a.str_opt("artifacts") {
         cfg.artifacts = PathBuf::from(dir);
     }
@@ -90,6 +103,21 @@ fn cmd_train(a: &Args) -> Result<()> {
         r.steps, r.updates, r.wall_s, r.sps()
     );
     println!("trajectory signature: {:016x}", r.signature);
+    if let Some(tel) = &r.telemetry {
+        let steps = tel.counter("steps_total");
+        if steps > 0 {
+            eprintln!(
+                "telemetry: {steps} env steps ({:.1}% solo, {:.1}% \
+                 lockstep, {:.1}% degraded), {} parks, {} actor grab \
+                 batches",
+                100.0 * tel.frac("solo_steps", "steps_total"),
+                100.0 * tel.frac("lockstep_lane_steps", "steps_total"),
+                100.0 * tel.frac("degraded_steps", "steps_total"),
+                tel.counter("parks"),
+                tel.counter("grab_batches"),
+            );
+        }
+    }
     if !r.evals.is_empty() {
         println!("final metric: {:.3}", r.final_metric());
     }
@@ -174,6 +202,7 @@ fn cmd_campaign(a: &Args) -> Result<()> {
     cfg.budget.share =
         campaign::SharePolicy::parse(&a.str_or("share", "fair"))?;
     cfg.rt_targets = vec![0.4, 0.8];
+    cfg.telemetry = a.bool("telemetry");
 
     let plan = campaign::expand(&cfg)?;
     let out = PathBuf::from(a.str_or("out", "results"));
@@ -183,6 +212,7 @@ fn cmd_campaign(a: &Args) -> Result<()> {
     // campaign machinery instead (CI smokes the engine this way).
     let have_artifacts = cfg.artifacts.join("manifest.json").exists();
     let standin = a.bool("standin") || !have_artifacts;
+    cfg.standin = standin;
     if standin && !a.bool("standin") {
         eprintln!(
             "campaign: no artifacts at {} — running the deterministic \
@@ -201,11 +231,18 @@ fn cmd_campaign(a: &Args) -> Result<()> {
             ^ if standin { 0x7374_616e_6469_6e21 } else { 0 },
     };
     let journal_path = out.join(format!("campaign_{}.jsonl", cfg.suite));
-    let (journal, done) = if a.bool("resume") {
+    let (journal, done, done_tel) = if a.bool("resume") {
         campaign::Journal::resume(&journal_path, &meta)?
     } else {
-        (campaign::Journal::create(&journal_path, &meta)?, Vec::new())
+        (
+            campaign::Journal::create(&journal_path, &meta)?,
+            Vec::new(),
+            Vec::new(),
+        )
     };
+    if cfg.telemetry {
+        journal.enable_telemetry();
+    }
     let real = campaign::coordinator_runner();
     // Stand-in campaigns share one actor fleet per model config across
     // concurrent jobs (ISSUE 6): every job gets a static mailbox-column
@@ -253,6 +290,7 @@ fn cmd_campaign(a: &Args) -> Result<()> {
         runner,
         Some(&journal),
         &done,
+        &done_tel,
         Some(&curves),
     )?;
     drop(fake);
@@ -266,7 +304,69 @@ fn cmd_campaign(a: &Args) -> Result<()> {
         println!("wrote {}", f.display());
     }
     println!("journal {}", journal.path().display());
+    if cfg.telemetry {
+        // The journal's own self-telemetry: append count + flush-latency
+        // histogram spread (diagnostics, stderr only — never an artifact).
+        let own = journal.telemetry().report();
+        eprintln!(
+            "journal telemetry: {} appends",
+            own.counter("journal_appends")
+        );
+    }
     Ok(())
+}
+
+/// `hts-rl bench`: the component suite as a CLI. Plain runs print the
+/// table; `--check` gates the fresh numbers against the committed
+/// baseline (the perf ratchet, DESIGN.md §12) and exits non-zero on a
+/// statistically significant regression; `--update-baseline` rewrites
+/// the baseline from this machine's numbers.
+fn cmd_bench(a: &Args) -> Result<()> {
+    use hts_rl::perf::ratchet::{compare, Baseline};
+    use hts_rl::perf::suite::SuiteOpts;
+
+    let check = a.bool("check");
+    let baseline_path =
+        PathBuf::from(a.str_or("baseline", "BENCH_baseline.json"));
+    let tolerance = a.f64_or("tolerance", 0.2)?;
+    let repeats = a.usize_or("repeats", if check { 3 } else { 1 })?;
+    let opts = SuiteOpts { quick: a.bool("quick") };
+
+    let measured = Baseline::measure(&opts, repeats);
+    if let Some(out) = a.str_opt("out") {
+        measured.save(&PathBuf::from(&out))?;
+        println!("wrote {out}");
+    }
+    if a.bool("update-baseline") {
+        measured.save(&baseline_path)?;
+        println!("baseline updated: {}", baseline_path.display());
+        return Ok(());
+    }
+    if !check {
+        return Ok(());
+    }
+    let baseline = Baseline::load(&baseline_path)?;
+    let cmp = compare(&measured, &baseline, tolerance)?;
+    for note in &cmp.notes {
+        eprintln!("note: {note}");
+    }
+    if cmp.ok() {
+        println!(
+            "perf ratchet: {} metric(s) checked against {} — ok",
+            cmp.checked,
+            baseline_path.display()
+        );
+        Ok(())
+    } else {
+        for r in &cmp.regressions {
+            eprintln!("REGRESSION: {r}");
+        }
+        bail!(
+            "perf ratchet: {} significant regression(s) vs {}",
+            cmp.regressions.len(),
+            baseline_path.display()
+        );
+    }
 }
 
 fn cmd_compare(a: &Args) -> Result<()> {
@@ -457,6 +557,7 @@ fn main() -> Result<()> {
         }
         Some("sim") => cmd_sim(&a),
         Some("determinism") => cmd_determinism(&a),
+        Some("bench") => cmd_bench(&a),
         Some("list") => cmd_list(&a),
         _ => {
             println!("{}", usage());

@@ -71,6 +71,9 @@ pub struct TrainReport {
     /// Mean loss metrics of the last few updates (diagnostics).
     pub final_loss: f32,
     pub final_entropy: f32,
+    /// Merged run telemetry (DESIGN.md §12); `Some` only when
+    /// `RunConfig::telemetry` was set and the driver is instrumented.
+    pub telemetry: Option<crate::telemetry::TelemetryReport>,
 }
 
 impl TrainReport {

@@ -1,0 +1,65 @@
+//! Performance infrastructure: the component benchmark suite as a
+//! library (so both the bench binary and `hts-rl bench` run the same
+//! code), the committed-baseline regression ratchet, and the counting
+//! global allocator behind the 0-allocs/step acceptance numbers.
+//!
+//! * [`suite`] — the artifact-free component benchmarks
+//!   (`rust/benches/bench_components.rs` is a thin wrapper that adds
+//!   the PJRT/manifest benches and the JSON emission).
+//! * [`ratchet`] — `BENCH_baseline.json` compare logic: fail-closed
+//!   CI gating on *statistically significant* regressions only
+//!   (bootstrap CIs, DESIGN.md §12).
+//!
+//! The allocator lives here (not in the bench binary) so `hts-rl
+//! bench` gets the same allocation accounting; binaries opt in with
+//! `#[global_allocator] static A: hts_rl::perf::CountingAlloc =
+//! hts_rl::perf::CountingAlloc;`. Without that install (e.g. under
+//! `cargo test`) [`allocations`] stays 0 and the suite's alloc
+//! assertions are vacuous — the bench binary and CLI are the enforcing
+//! entry points.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub mod ratchet;
+pub mod suite;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Counts every heap allocation in the process (frees are uncounted —
+/// the metric is allocation *pressure* on the hot path).
+pub struct CountingAlloc;
+
+// SAFETY: defers to `System` for all actual memory management; the
+// wrapper only bumps a relaxed counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Process-wide allocation count since start (0 unless a
+/// [`CountingAlloc`] is installed as the global allocator).
+pub fn allocations() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}

@@ -1,0 +1,471 @@
+//! The performance ratchet: compare a fresh bench-suite run against the
+//! committed `rust/BENCH_baseline.json` and fail **only** on
+//! statistically significant regressions (DESIGN.md §12).
+//!
+//! Point-estimate gating on shared CI runners is a flake machine — a
+//! noisy neighbor turns every third run red and the gate gets deleted
+//! within a month. The rule here instead:
+//!
+//! 1. Both sides carry *samples* (repeated suite runs), not points.
+//! 2. Each side gets a bootstrap 95% CI over its samples
+//!    ([`crate::stats::bootstrap_ci`], fixed resample seed so the
+//!    verdict is deterministic given the samples).
+//! 3. A metric regresses iff the candidate CI lies **wholly** on the
+//!    bad side of the baseline CI widened by `--tolerance` (default
+//!    20%): overlapping CIs are statistical ties and pass.
+//!
+//! Fail-closed where it matters: a metric present in the baseline but
+//! *missing* from the candidate run is a regression (a silently
+//! deleted benchmark must not pass the gate), and schema or
+//! quick-vs-full mismatches are hard errors — quick mode shrinks fleet
+//! sizes, so its numbers live in a different metric universe and
+//! comparing them is meaningless. New candidate metrics are notices
+//! (the baseline just predates them). A baseline stamped
+//! `placeholder: true` passes with a regenerate notice, so the gate
+//! can be wired into CI before the first real baseline is captured on
+//! the target runner class.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::stats::bootstrap_ci;
+use crate::util::json::{obj, Json};
+
+use super::suite::{run_suite, SuiteOpts};
+
+/// Bootstrap parameters for the ratchet verdict. Fewer resamples than
+/// the campaign report's 10k — the gate runs in CI on every push and
+/// 2k is plenty for a pass/fail CI on ≤ 10 samples.
+const N_RESAMPLES: usize = 2_000;
+const CONFIDENCE: f64 = 0.95;
+const RESAMPLE_SEED: u64 = 42;
+
+/// Provenance header shared by `BENCH_baseline.json` and
+/// `BENCH_components.json` (satellite: bench output is
+/// self-describing).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchMeta {
+    /// Schema version of the surrounding file; bump on layout changes.
+    pub schema: u32,
+    /// Git commit the numbers were measured at ("unknown" outside a
+    /// checkout).
+    pub commit: String,
+    /// Unix seconds at measurement time (informational only — never
+    /// compared).
+    pub timestamp: u64,
+    /// Quick mode shrinks fleet sizes and iteration counts; its
+    /// numbers are incomparable with full runs and [`compare`] refuses
+    /// to cross the marker.
+    pub quick: bool,
+    /// True for the committed stand-in written where no benchmarks
+    /// have run yet (e.g. authored in a container without the
+    /// toolchain); [`compare`] passes against it with a regenerate
+    /// notice instead of gating on fictional numbers.
+    pub placeholder: bool,
+    /// Suite repetitions backing each metric's sample vector.
+    pub repeats: usize,
+    /// Executor-bench fleet size (the `…{n}replicas…` keys).
+    pub n_replicas: usize,
+    /// Lane widths exercised by the vectorized-env benches.
+    pub widths: Vec<usize>,
+}
+
+/// Current schema version written by this build.
+pub const SCHEMA_VERSION: u32 = 1;
+
+impl BenchMeta {
+    /// Meta for a suite run performed now, in this checkout.
+    pub fn current(quick: bool, repeats: usize) -> BenchMeta {
+        BenchMeta {
+            schema: SCHEMA_VERSION,
+            commit: current_commit(),
+            timestamp: unix_now(),
+            quick,
+            placeholder: false,
+            repeats,
+            n_replicas: if quick { 16 } else { 64 },
+            widths: vec![1, 8, 32],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("commit", Json::Str(self.commit.clone())),
+            ("timestamp", Json::Num(self.timestamp as f64)),
+            ("quick", Json::Bool(self.quick)),
+            ("placeholder", Json::Bool(self.placeholder)),
+            ("repeats", Json::Num(self.repeats as f64)),
+            ("n_replicas", Json::Num(self.n_replicas as f64)),
+            (
+                "widths",
+                Json::Arr(
+                    self.widths
+                        .iter()
+                        .map(|&w| Json::Num(w as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchMeta> {
+        Ok(BenchMeta {
+            schema: v.get("schema")?.as_u64()? as u32,
+            commit: v.get("commit")?.as_str()?.to_string(),
+            timestamp: v.get("timestamp")?.as_u64()?,
+            quick: match v.get("quick")? {
+                Json::Bool(b) => *b,
+                _ => bail!("meta.quick: not a bool"),
+            },
+            placeholder: match v.get("placeholder")? {
+                Json::Bool(b) => *b,
+                _ => bail!("meta.placeholder: not a bool"),
+            },
+            repeats: v.get("repeats")?.as_usize()?,
+            n_replicas: v.get("n_replicas")?.as_usize()?,
+            widths: v.get("widths")?.as_usize_vec()?,
+        })
+    }
+}
+
+/// A committed (or freshly measured) set of bench samples:
+/// `metric key -> one value per suite repetition`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    pub meta: BenchMeta,
+    pub metrics: BTreeMap<String, Vec<f64>>,
+}
+
+impl Baseline {
+    /// Run the suite `repeats` times and collect per-metric samples.
+    pub fn measure(opts: &SuiteOpts, repeats: usize) -> Baseline {
+        let mut metrics: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for r in 0..repeats.max(1) {
+            eprintln!("[bench] suite repeat {}/{}", r + 1, repeats.max(1));
+            for (k, v) in run_suite(opts) {
+                metrics.entry(k).or_default().push(v);
+            }
+        }
+        Baseline {
+            meta: BenchMeta::current(opts.quick, repeats.max(1)),
+            metrics,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let metrics = Json::Obj(
+            self.metrics
+                .iter()
+                .map(|(k, xs)| (k.clone(), crate::util::json::arr_f64(xs)))
+                .collect(),
+        );
+        obj(vec![("meta", self.meta.to_json()), ("metrics", metrics)])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Baseline> {
+        let meta = BenchMeta::from_json(v.get("meta")?)?;
+        let mut metrics = BTreeMap::new();
+        for (k, xs) in v.get("metrics")?.as_obj()? {
+            let xs: Vec<f64> = xs
+                .as_arr()
+                .with_context(|| format!("metric '{k}'"))?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_>>()
+                .with_context(|| format!("metric '{k}'"))?;
+            if xs.is_empty() {
+                bail!("metric '{k}': empty sample vector");
+            }
+            metrics.insert(k.clone(), xs);
+        }
+        Ok(Baseline { meta, metrics })
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Baseline::from_json(
+            &Json::parse(&text)
+                .with_context(|| format!("parsing {}", path.display()))?,
+        )
+        .with_context(|| format!("loading baseline {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Larger-is-better metrics end in a throughput suffix; everything
+/// else in the suite is a latency/cost (µs, ns, allocs) where smaller
+/// is better.
+fn higher_is_better(key: &str) -> bool {
+    key.ends_with("_sps") || key.ends_with("_steps_per_s")
+}
+
+/// Outcome of one [`compare`] run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Comparison {
+    /// Human-readable line per significant regression (empty = pass).
+    pub regressions: Vec<String>,
+    /// Non-gating notices: new metrics, placeholder baseline, ties
+    /// that moved.
+    pub notes: Vec<String>,
+    /// Metrics actually gated (present on both sides).
+    pub checked: usize,
+}
+
+impl Comparison {
+    pub fn ok(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Gate `candidate` against `baseline` with relative `tolerance`
+/// (0.2 = the baseline CI is widened 20% in the bad direction before
+/// the candidate CI must clear it). Errors on incomparable inputs
+/// (schema or quick-vs-full mismatch); regressions are reported in the
+/// returned [`Comparison`], not as errors.
+pub fn compare(
+    candidate: &Baseline,
+    baseline: &Baseline,
+    tolerance: f64,
+) -> Result<Comparison> {
+    if baseline.meta.schema != SCHEMA_VERSION {
+        bail!(
+            "baseline schema v{} != supported v{SCHEMA_VERSION} — \
+             regenerate with --update-baseline",
+            baseline.meta.schema
+        );
+    }
+    if !tolerance.is_finite() || tolerance < 0.0 {
+        bail!("tolerance must be a finite non-negative fraction");
+    }
+    let mut cmp = Comparison::default();
+    if baseline.meta.placeholder {
+        cmp.notes.push(
+            "baseline is a placeholder (no measured samples) — gate \
+             passes vacuously; regenerate with `hts-rl bench \
+             --update-baseline` on the target runner class"
+                .to_string(),
+        );
+        return Ok(cmp);
+    }
+    if baseline.meta.quick != candidate.meta.quick {
+        bail!(
+            "quick-mode mismatch: baseline {} vs candidate {} — quick \
+             runs shrink fleet sizes and are incomparable with full runs",
+            if baseline.meta.quick { "quick" } else { "full" },
+            if candidate.meta.quick { "quick" } else { "full" },
+        );
+    }
+    for (key, base_xs) in &baseline.metrics {
+        let Some(cand_xs) = candidate.metrics.get(key) else {
+            cmp.regressions.push(format!(
+                "{key}: present in baseline but missing from this run \
+                 (deleted benchmarks must be removed from the baseline \
+                 explicitly)"
+            ));
+            continue;
+        };
+        cmp.checked += 1;
+        let (mean_b, lo_b, hi_b) =
+            bootstrap_ci(base_xs, N_RESAMPLES, CONFIDENCE, RESAMPLE_SEED);
+        let (mean_c, lo_c, hi_c) =
+            bootstrap_ci(cand_xs, N_RESAMPLES, CONFIDENCE, RESAMPLE_SEED);
+        let regressed = if higher_is_better(key) {
+            hi_c < lo_b * (1.0 - tolerance)
+        } else {
+            lo_c > hi_b * (1.0 + tolerance)
+        };
+        if regressed {
+            cmp.regressions.push(format!(
+                "{key}: {mean_c:.3} (CI [{lo_c:.3}, {hi_c:.3}]) vs \
+                 baseline {mean_b:.3} (CI [{lo_b:.3}, {hi_b:.3}]), \
+                 tolerance {:.0}% — {} significantly",
+                tolerance * 100.0,
+                if higher_is_better(key) { "slower" } else { "costlier" },
+            ));
+        }
+    }
+    for key in candidate.metrics.keys() {
+        if !baseline.metrics.contains_key(key) {
+            cmp.notes.push(format!(
+                "{key}: new metric, not in baseline (add it with \
+                 --update-baseline)"
+            ));
+        }
+    }
+    Ok(cmp)
+}
+
+/// Best-effort commit id: `GITHUB_SHA` in CI, `git rev-parse` in a
+/// checkout, "unknown" otherwise.
+pub fn current_commit() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha.chars().take(12).collect();
+        }
+    }
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            if let Ok(s) = String::from_utf8(out.stdout) {
+                let s = s.trim();
+                if !s.is_empty() {
+                    return s.to_string();
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(quick: bool) -> BenchMeta {
+        BenchMeta {
+            schema: SCHEMA_VERSION,
+            commit: "abc123".to_string(),
+            timestamp: 1_700_000_000,
+            quick,
+            placeholder: false,
+            repeats: 3,
+            n_replicas: 64,
+            widths: vec![1, 8, 32],
+        }
+    }
+
+    fn base(pairs: &[(&str, &[f64])]) -> Baseline {
+        Baseline {
+            meta: meta(false),
+            metrics: pairs
+                .iter()
+                .map(|(k, xs)| (k.to_string(), xs.to_vec()))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn baseline_json_roundtrip() {
+        let b = base(&[
+            ("queue_push_pop_us", &[0.11, 0.12, 0.13]),
+            ("vec_catch_w8_steps_per_s", &[1e6, 1.1e6, 0.9e6]),
+        ]);
+        let text = b.to_json().to_string();
+        let b2 = Baseline::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn clean_run_passes() {
+        let b = base(&[("gae_t5_b16_us", &[2.0, 2.1, 1.9])]);
+        let c = base(&[("gae_t5_b16_us", &[2.05, 1.95, 2.0])]);
+        let cmp = compare(&c, &b, 0.2).unwrap();
+        assert!(cmp.ok(), "{:?}", cmp.regressions);
+        assert_eq!(cmp.checked, 1);
+    }
+
+    #[test]
+    fn injected_regression_fails_lower_better() {
+        // Latency metric triples: far outside any CI overlap + 20%.
+        let b = base(&[("storage_push_50d_us", &[1.0, 1.05, 0.95])]);
+        let c = base(&[("storage_push_50d_us", &[3.0, 3.1, 2.9])]);
+        let cmp = compare(&c, &b, 0.2).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        assert!(cmp.regressions[0].contains("storage_push_50d_us"));
+    }
+
+    #[test]
+    fn injected_regression_fails_higher_better() {
+        // Throughput metric collapses: _sps keys gate downward moves.
+        let b = base(&[("exec_pooled_k4_64replicas_sps", &[1e5, 1.1e5])]);
+        let c = base(&[("exec_pooled_k4_64replicas_sps", &[2e4, 2.2e4])]);
+        let cmp = compare(&c, &b, 0.2).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+    }
+
+    #[test]
+    fn tolerance_absorbs_small_shifts() {
+        // 15% slower with tight CIs: significant at 0 tolerance,
+        // absorbed at 20%.
+        let b = base(&[("queue_push_pop_us", &[1.0, 1.0, 1.0])]);
+        let c = base(&[("queue_push_pop_us", &[1.15, 1.15, 1.15])]);
+        assert!(!compare(&c, &b, 0.0).unwrap().ok());
+        assert!(compare(&c, &b, 0.2).unwrap().ok());
+    }
+
+    #[test]
+    fn overlapping_cis_are_ties() {
+        // Wide, overlapping CIs: a worse mean alone must not gate.
+        let b = base(&[("gumbel_sample_19_us", &[1.0, 3.0, 2.0, 1.5])]);
+        let c = base(&[("gumbel_sample_19_us", &[2.0, 3.5, 1.2, 2.8])]);
+        assert!(compare(&c, &b, 0.0).unwrap().ok());
+    }
+
+    #[test]
+    fn missing_candidate_metric_fails_closed() {
+        let b = base(&[("gae_t5_b16_us", &[2.0, 2.1])]);
+        let c = base(&[("queue_push_pop_us", &[0.1, 0.1])]);
+        let cmp = compare(&c, &b, 0.2).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        assert!(cmp.regressions[0].contains("missing from this run"));
+        // The unmatched candidate metric is a notice, not a failure.
+        assert_eq!(cmp.notes.len(), 1);
+    }
+
+    #[test]
+    fn quick_vs_full_refused() {
+        let b = base(&[("gae_t5_b16_us", &[2.0])]);
+        let mut c = base(&[("gae_t5_b16_us", &[2.0])]);
+        c.meta.quick = true;
+        let err = compare(&c, &b, 0.2).unwrap_err().to_string();
+        assert!(err.contains("quick-mode mismatch"), "{err}");
+    }
+
+    #[test]
+    fn schema_mismatch_refused() {
+        let mut b = base(&[("gae_t5_b16_us", &[2.0])]);
+        b.meta.schema = SCHEMA_VERSION + 1;
+        let c = base(&[("gae_t5_b16_us", &[2.0])]);
+        assert!(compare(&c, &b, 0.2).is_err());
+    }
+
+    #[test]
+    fn placeholder_baseline_passes_with_notice() {
+        let mut b = base(&[]);
+        b.meta.placeholder = true;
+        // Candidate quick-ness doesn't matter against a placeholder.
+        let mut c = base(&[("gae_t5_b16_us", &[2.0])]);
+        c.meta.quick = true;
+        let cmp = compare(&c, &b, 0.2).unwrap();
+        assert!(cmp.ok());
+        assert!(cmp.notes[0].contains("placeholder"));
+        assert_eq!(cmp.checked, 0);
+    }
+
+    #[test]
+    fn empty_metric_vector_rejected_on_load() {
+        let mut b = base(&[]);
+        b.metrics.insert("x_us".to_string(), vec![]);
+        let text = b.to_json().to_string();
+        assert!(Baseline::from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+}

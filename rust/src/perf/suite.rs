@@ -1,0 +1,724 @@
+//! The artifact-free component benchmark suite (DESIGN.md §12).
+//!
+//! Extracted from `rust/benches/bench_components.rs` so the same
+//! measurements back three entry points: the bench binary (full run +
+//! JSON emission + PJRT extras), `hts-rl bench --check` (the perf
+//! ratchet), and `hts-rl bench --update-baseline`. Every metric lands
+//! in the returned map under the same keys the bench JSON uses.
+//!
+//! Quick mode (`SuiteOpts::quick`) shrinks iteration counts and fleet
+//! sizes for CI-speed runs. Some keys embed the fleet size
+//! (`exec_pooled_k4_16replicas_sps` vs `…64replicas…`), so quick and
+//! full runs are different metric universes — [`crate::perf::ratchet`]
+//! refuses to compare across the marker.
+//!
+//! The 0-allocs/step assertions call [`crate::perf::allocations`],
+//! which only counts when the embedding binary installed
+//! [`crate::perf::CountingAlloc`]; the bench binary and the CLI both
+//! do, so either entry point enforces the allocation contracts.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+use crate::algo::returns::gae;
+use crate::algo::sampling::sample_action;
+use crate::buffers::{
+    ActionBuffer, BlockingQueue, ObsMsg, RolloutStorage, StateBuffer,
+    StripedSwap,
+};
+use crate::envs::{EnvSpec, StepTimeModel};
+use crate::executor::harness::{
+    drive_learner_barrier, spawn_standin_actors, StandInPolicy,
+};
+use crate::executor::{PoolShared, ReplicaPool};
+use crate::metrics::report::{SpsMeter, Stopwatch};
+use crate::perf::allocations;
+use crate::rng::SplitMix64;
+
+/// Suite configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SuiteOpts {
+    /// Shrink iteration counts and fleet sizes ~10× for CI-speed runs.
+    pub quick: bool,
+}
+
+/// Metric collector: flat `key -> value` map, insertion is
+/// deterministic (BTreeMap) so emitted JSON key order is stable.
+struct Rec {
+    out: BTreeMap<String, f64>,
+}
+
+impl Rec {
+    fn record(&mut self, key: &str, value: f64) {
+        self.out.insert(key.to_string(), value);
+    }
+}
+
+fn bench<F: FnMut()>(
+    rec: &mut Rec,
+    name: &str,
+    key: &str,
+    iters: usize,
+    mut f: F,
+) -> f64 {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.3} µs/op", per * 1e6);
+    rec.record(&format!("{key}_us"), per * 1e6);
+    per
+}
+
+/// Pre-refactor write path: every executor step locks one shared
+/// `Mutex<RolloutStorage>`. Returns wall seconds for all pushes.
+fn contended_mutexed(
+    n_exec: usize,
+    t_len: usize,
+    rounds: usize,
+    obs: &[f32],
+) -> f64 {
+    let storage = Mutex::new(RolloutStorage::new(t_len, n_exec, obs.len()));
+    let start = Barrier::new(n_exec + 1);
+    let round_a = Barrier::new(n_exec);
+    let round_b = Barrier::new(n_exec);
+    let t0 = Cell::new(None);
+    std::thread::scope(|s| {
+        for e in 0..n_exec {
+            let (storage, start) = (&storage, &start);
+            let (round_a, round_b) = (&round_a, &round_b);
+            s.spawn(move || {
+                start.wait();
+                for _r in 0..rounds {
+                    for _t in 0..t_len {
+                        storage.lock().unwrap().push(e, obs, 1, 0.0, false);
+                    }
+                    round_a.wait();
+                    if e == 0 {
+                        storage.lock().unwrap().clear();
+                    }
+                    round_b.wait();
+                }
+            });
+        }
+        start.wait();
+        t0.set(Some(Instant::now()));
+    });
+    t0.get().unwrap().elapsed().as_secs_f64()
+}
+
+/// Striped write path: each executor claims its private column stripe
+/// once per round and pushes with no synchronization at all.
+fn contended_striped(
+    n_exec: usize,
+    t_len: usize,
+    rounds: usize,
+    obs: &[f32],
+) -> f64 {
+    let swap = StripedSwap::new(t_len, n_exec, obs.len(), n_exec);
+    let start = Barrier::new(n_exec + 1);
+    let round_a = Barrier::new(n_exec);
+    let round_b = Barrier::new(n_exec);
+    let t0 = Cell::new(None);
+    std::thread::scope(|s| {
+        for e in 0..n_exec {
+            let (swap, start) = (&swap, &start);
+            let (round_a, round_b) = (&round_a, &round_b);
+            s.spawn(move || {
+                start.wait();
+                for _r in 0..rounds {
+                    let mut w = swap.writer(e);
+                    for _t in 0..t_len {
+                        w.push(e, obs, 1, 0.0, false);
+                    }
+                    w.clear();
+                    drop(w);
+                    round_a.wait();
+                    round_b.wait();
+                }
+            });
+        }
+        start.wait();
+        t0.set(Some(Instant::now()));
+    });
+    t0.get().unwrap().elapsed().as_secs_f64()
+}
+
+fn t_total(t_len: usize, rounds: usize, n_exec: usize) -> usize {
+    t_len * rounds * n_exec
+}
+
+/// The ISSUE 1 acceptance benchmark: striped shards must beat the
+/// global-lock baseline by ≥2× at 16 executors (and the gap should grow
+/// with the executor count — the mutex serializes, stripes don't).
+fn bench_contended_write_path(rec: &mut Rec, quick: bool) {
+    println!("== contended write path: global mutex vs column stripes ==");
+    const T_LEN: usize = 512;
+    let rounds: usize = if quick { 8 } else { 40 };
+    let obs = vec![0.5f32; 16];
+    for &n_exec in &[1usize, 4, 16, 64] {
+        let total = t_total(T_LEN, rounds, n_exec) as f64;
+        let base_s = contended_mutexed(n_exec, T_LEN, rounds, &obs);
+        let strip_s = contended_striped(n_exec, T_LEN, rounds, &obs);
+        println!(
+            "{:<28} mutexed {:>8.1} ns/push ({:>6.1} Mpush/s)",
+            format!("contended push, {n_exec} exec"),
+            1e9 * base_s / total,
+            1e-6 * total / base_s,
+        );
+        println!(
+            "{:<28} striped {:>8.1} ns/push ({:>6.1} Mpush/s)  {:.1}x",
+            "",
+            1e9 * strip_s / total,
+            1e-6 * total / strip_s,
+            base_s / strip_s,
+        );
+        rec.record(
+            &format!("contended_push_mutexed_{n_exec}exec_ns"),
+            1e9 * base_s / total,
+        );
+        rec.record(
+            &format!("contended_push_striped_{n_exec}exec_ns"),
+            1e9 * strip_s / total,
+        );
+    }
+}
+
+/// Cheap stand-in policy for the executor benches (the point is the
+/// scheduling cost, not the sampling cost).
+fn modulo_policy(act_dim: usize) -> StandInPolicy {
+    Arc::new(move |_obs, seed| (seed % act_dim as u64) as usize)
+}
+
+/// One OS thread per replica, blocking mailbox take, `thread::sleep` for
+/// the engine delay — the classic executor loop the replica pool
+/// replaces, on the flat observation plane (recycled state-buffer
+/// buffers, zero per-step allocation). Returns (wall seconds, heap
+/// allocations during the run).
+#[allow(clippy::too_many_arguments)]
+fn blocking_executors(
+    spec: &EnvSpec,
+    n_replicas: usize,
+    alpha: usize,
+    iters: u64,
+    seed: u64,
+    n_actors: usize,
+    act_dim: usize,
+) -> (f64, u64) {
+    let obs_dim = spec.build().unwrap().obs_dim();
+    let swap =
+        Arc::new(StripedSwap::new(alpha, n_replicas, obs_dim, n_replicas));
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(n_replicas));
+    let actors = spawn_standin_actors(
+        n_actors,
+        &state_buf,
+        &act_buf,
+        n_replicas,
+        &modulo_policy(act_dim),
+        false,
+    );
+    let t0 = Instant::now();
+    let allocs0 = allocations();
+    let mut handles = Vec::new();
+    for e in 0..n_replicas {
+        let spec = spec.clone();
+        let swap = swap.clone();
+        let state_buf = state_buf.clone();
+        let act_buf = act_buf.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut env_rng = SplitMix64::stream(seed, 1_000 + e as u64);
+            let mut seed_rng = SplitMix64::stream(seed, 2_000 + e as u64);
+            let mut delay_rng = SplitMix64::stream(seed, 3_000 + e as u64);
+            let mut env = spec.build().unwrap();
+            let mut obs = vec![0.0f32; obs_dim];
+            env.reset_into(&mut env_rng, &mut obs);
+            let mut next = vec![0.0f32; obs_dim];
+            let mut it = 0u64;
+            'outer: loop {
+                let mut shard = swap.writer(e);
+                for _t in 0..alpha {
+                    let mut buf = state_buf.rent(obs_dim);
+                    buf.extend_from_slice(&obs);
+                    state_buf.push(ObsMsg::single(e, buf, seed_rng.next_u64()));
+                    let act = match act_buf.take(e) {
+                        Some(a) => a,
+                        None => break 'outer,
+                    };
+                    spec.steptime.sleep(&mut delay_rng);
+                    let info = env.step_into(&[act], &mut env_rng, &mut next);
+                    shard.push(e, &obs, act, info.reward, info.done);
+                    if info.done {
+                        env.reset_into(&mut env_rng, &mut next);
+                    }
+                    std::mem::swap(&mut obs, &mut next);
+                }
+                shard.set_last_obs(e, &obs);
+                drop(shard);
+                match swap.executor_arrive(it) {
+                    Some(next_it) => it = next_it,
+                    None => break,
+                }
+            }
+        }));
+    }
+    let mut gathered = RolloutStorage::new(alpha, n_replicas, obs_dim);
+    drive_learner_barrier(
+        &swap, &state_buf, &act_buf, &mut gathered, iters, |_| {},
+    );
+    for h in handles {
+        h.join().unwrap();
+    }
+    for h in actors {
+        h.join().unwrap();
+    }
+    (t0.elapsed().as_secs_f64(), allocations() - allocs0)
+}
+
+/// The replica-pool path: `n_replicas / k` threads, K replicas each,
+/// deadline-based delays. Returns (wall seconds, heap allocations).
+#[allow(clippy::too_many_arguments)]
+fn pooled_executors(
+    spec: &EnvSpec,
+    n_replicas: usize,
+    k: usize,
+    alpha: usize,
+    iters: u64,
+    seed: u64,
+    n_actors: usize,
+    act_dim: usize,
+) -> (f64, u64) {
+    let obs_dim = spec.build().unwrap().obs_dim();
+    let n_threads = n_replicas / k;
+    let swap = Arc::new(StripedSwap::with_parties(
+        alpha, n_replicas, obs_dim, n_replicas, n_threads,
+    ));
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(n_replicas));
+    let actors = spawn_standin_actors(
+        n_actors,
+        &state_buf,
+        &act_buf,
+        n_replicas,
+        &modulo_policy(act_dim),
+        false,
+    );
+    let sps = Arc::new(SpsMeter::new());
+    let watch = Stopwatch::new();
+    let t0 = Instant::now();
+    let allocs0 = allocations();
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let spec = spec.clone();
+        let shared = PoolShared {
+            swap: swap.clone(),
+            state_buf: state_buf.clone(),
+            act_buf: act_buf.clone(),
+            sps: sps.clone(),
+            watch,
+            col_offset: 0,
+            telemetry: false,
+        };
+        handles.push(std::thread::spawn(move || {
+            ReplicaPool::new(&spec, seed, alpha, t * k..(t + 1) * k, shared)
+                .unwrap()
+                .run()
+                .unwrap()
+        }));
+    }
+    let mut gathered = RolloutStorage::new(alpha, n_replicas, obs_dim);
+    drive_learner_barrier(
+        &swap, &state_buf, &act_buf, &mut gathered, iters, |_| {},
+    );
+    for h in handles {
+        h.join().unwrap();
+    }
+    for h in actors {
+        h.join().unwrap();
+    }
+    (t0.elapsed().as_secs_f64(), allocations() - allocs0)
+}
+
+/// The ISSUE 2 acceptance benchmark (throughput) extended with the
+/// ISSUE 3 acceptance number (allocation pressure): at 64 replicas with
+/// realistic step-time variance, pooled executors must beat
+/// one-thread-per-replica, and the flat observation plane must hold the
+/// per-step allocation count near zero at steady state (the reported
+/// figure includes warm-up: thread spawns, env construction, and the
+/// free-list filling once — amortize over more steps and it tends to 0).
+fn bench_pool_vs_blocking(rec: &mut Rec, quick: bool) {
+    println!("== executor scheduling: replica pool vs thread-per-replica ==");
+    let n_replicas: usize = if quick { 16 } else { 64 };
+    let iters: u64 = if quick { 2 } else { 4 };
+    const ALPHA: usize = 16;
+    let spec = EnvSpec::by_name("catch").unwrap().with_steptime(
+        StepTimeModel::Gamma { shape: 2.0, mean_us: 120.0 },
+    );
+    let act_dim = spec.build().unwrap().act_dim();
+    let total = (n_replicas * ALPHA) as f64 * iters as f64;
+    let (base_s, base_allocs) = blocking_executors(
+        &spec, n_replicas, ALPHA, iters, 5, 2, act_dim,
+    );
+    println!(
+        "{:<34} {:>10.0} SPS  ({} threads)  {:>6.2} allocs/step",
+        format!("blocking, {n_replicas} replicas"),
+        total / base_s,
+        n_replicas,
+        base_allocs as f64 / total,
+    );
+    rec.record(
+        &format!("exec_blocking_{n_replicas}replicas_sps"),
+        total / base_s,
+    );
+    rec.record(
+        &format!("exec_blocking_{n_replicas}replicas_allocs_per_step"),
+        base_allocs as f64 / total,
+    );
+    for &k in &[1usize, 4, 16] {
+        if k > n_replicas {
+            continue;
+        }
+        let (pool_s, pool_allocs) = pooled_executors(
+            &spec, n_replicas, k, ALPHA, iters, 5, 2, act_dim,
+        );
+        println!(
+            "{:<34} {:>10.0} SPS  ({} threads)  {:.2}x  {:>6.2} allocs/step",
+            format!("pooled K={k}, {n_replicas} replicas"),
+            total / pool_s,
+            n_replicas / k,
+            base_s / pool_s,
+            pool_allocs as f64 / total,
+        );
+        rec.record(
+            &format!("exec_pooled_k{k}_{n_replicas}replicas_sps"),
+            total / pool_s,
+        );
+        rec.record(
+            &format!("exec_pooled_k{k}_{n_replicas}replicas_allocs_per_step"),
+            pool_allocs as f64 / total,
+        );
+    }
+}
+
+/// ISSUE 4 satellite (perf): `EnvSpec::build` used to re-run the spec
+/// parser — string splits, `BTreeMap` allocation, bounds re-checks — on
+/// **every** replica construction, including once per episode in
+/// `evaluate_params`. Build now consumes the parse-time `ResolvedSpec`
+/// cache; this bench measures parse vs build and *asserts* the
+/// construction cost: a calm-catch build is one heap allocation (the
+/// `Box<dyn Env>`), a multi-agent team build a handful of `Vec`s —
+/// parser allocations on the build path trip the bound and fail CI.
+fn bench_spec_resolution(rec: &mut Rec, quick: bool) {
+    println!("== spec resolution: parse+probe vs parse-free build ==");
+    let n: u64 = if quick { 2_000 } else { 20_000 };
+    bench(
+        rec,
+        "EnvSpec::by_name (catch?wind=0.15)",
+        "spec_parse_catch",
+        n as usize,
+        || {
+            std::hint::black_box(
+                EnvSpec::by_name("catch?wind=0.15").unwrap(),
+            );
+        },
+    );
+    for (label, key, spec, max_allocs) in [
+        (
+            "spec.build catch?wind=0.15",
+            "env_build_catch",
+            EnvSpec::by_name("catch?wind=0.15").unwrap(),
+            2.0,
+        ),
+        (
+            "spec.build gridworld_team 2ag",
+            "env_build_team",
+            EnvSpec::by_name("gridworld_team/gather?slip=0.15")
+                .unwrap()
+                .with_agents(2)
+                .unwrap(),
+            8.0,
+        ),
+    ] {
+        for _ in 0..n / 10 {
+            std::hint::black_box(spec.build().unwrap()); // warm-up
+        }
+        let allocs0 = allocations();
+        let t0 = Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(spec.build().unwrap());
+        }
+        let per_us = t0.elapsed().as_secs_f64() / n as f64 * 1e6;
+        let per_allocs = (allocations() - allocs0) as f64 / n as f64;
+        println!(
+            "{label:<44} {per_us:>12.3} µs/op  {per_allocs:>6.2} \
+             allocs/build"
+        );
+        rec.record(&format!("{key}_us"), per_us);
+        rec.record(&format!("{key}_allocs"), per_allocs);
+        assert!(
+            per_allocs <= max_allocs,
+            "{label}: {per_allocs} allocs/build — EnvSpec::build must \
+             stay parse-free on the replica-construction path"
+        );
+    }
+}
+
+/// ISSUE 5: campaign orchestration overhead. Plan expansion cost, plus
+/// the scheduler's per-job cost with a no-op runner at `--jobs` 1 and 4
+/// — claiming, budget accounting, and record collection must stay
+/// invisible next to a real training run (µs against seconds).
+fn bench_campaign_scheduler(rec: &mut Rec, quick: bool) {
+    use crate::campaign::{self, CampaignConfig, Job};
+    use crate::coordinator::{Method, RunConfig, StopCond};
+    use crate::metrics::TrainReport;
+
+    println!("== campaign orchestration ==");
+    let mut cfg = CampaignConfig::new("catch_wind");
+    cfg.methods = vec![Method::Hts];
+    cfg.seeds = 2;
+    cfg.stop = StopCond::steps(100);
+    bench(
+        rec,
+        "campaign plan expand (catch_wind x 2 seeds)",
+        "campaign_expand",
+        if quick { 100 } else { 500 },
+        || {
+            std::hint::black_box(campaign::expand(&cfg).unwrap());
+        },
+    );
+    let plan = campaign::expand(&cfg).unwrap();
+    let n_jobs = plan.jobs.len();
+    let runner = |job: &Job, rc: &RunConfig| -> crate::Result<TrainReport> {
+        Ok(TrainReport {
+            steps: rc.stop.max_steps.unwrap_or(1),
+            wall_s: 1.0,
+            signature: job.seed,
+            ..TrainReport::default()
+        })
+    };
+    for jobs in [1usize, 4] {
+        let mut c = cfg.clone();
+        c.jobs = jobs;
+        let n: usize = if quick { 10 } else { 50 };
+        let t0 = Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(
+                campaign::run_campaign(
+                    &c, &plan, &runner, None, &[], &[], None,
+                )
+                .unwrap(),
+            );
+        }
+        let per_job_us =
+            t0.elapsed().as_secs_f64() / (n * n_jobs) as f64 * 1e6;
+        println!(
+            "campaign scheduler ({n_jobs} no-op jobs, --jobs {jobs})  \
+             {per_job_us:>12.3} µs/job"
+        );
+        rec.record(
+            &format!("campaign_sched_jobs{jobs}_us_per_job"),
+            per_job_us,
+        );
+    }
+}
+
+/// ISSUE 6 acceptance benchmark: struct-of-arrays lane stepping. Every
+/// vectorized registry family at widths {1, 8, 32}: batched
+/// `step_lanes_into` steps/s (per-lane steps, not batched calls), with
+/// on-done per-lane resets inline like the executor path. The timed loop
+/// is *asserted* allocation-free — the SoA planes, per-lane RNGs, and
+/// action/info slices are all caller-owned, so a single heap allocation
+/// in a family's step path is a regression and fails CI naming it.
+fn bench_vec_lanes(rec: &mut Rec, quick: bool) {
+    use crate::envs::{StepInfo, VecEnv};
+
+    println!("== vectorized lane stepping: steps/s per family x width ==");
+    let specs = [
+        ("catch?wind=0.1", 1usize, "vec_catch"),
+        ("cartpole?noise=0.1", 1, "vec_cartpole"),
+        ("gridworld", 1, "vec_gridworld"),
+        ("gridworld_team/gather?slip=0.15", 2, "vec_gridworld_team"),
+    ];
+    for (spec_str, n_agents, key) in specs {
+        let spec = EnvSpec::by_name(spec_str)
+            .unwrap()
+            .with_agents(n_agents)
+            .unwrap();
+        for &w in &[1usize, 8, 32] {
+            let mut lanes = spec.build_lanes(w).unwrap();
+            let lane_dim = lanes.lane_dim();
+            let act_dim = lanes.act_dim() as u64;
+            let mut rngs: Vec<SplitMix64> = (0..w)
+                .map(|l| SplitMix64::stream(11, 1_000 + l as u64))
+                .collect();
+            let mut plane = vec![0.0f32; w * lane_dim];
+            let mut acts = vec![0usize; w * n_agents];
+            let mut infos = vec![StepInfo { reward: 0.0, done: false }; w];
+            let mut act_rng = SplitMix64::new(7);
+            lanes.reset_lanes_into(&mut rngs, &mut plane);
+            let mut iters = if w == 1 { 60_000u64 } else { 20_000 };
+            if quick {
+                iters /= 10;
+            }
+            let mut run = |n: u64,
+                           lanes: &mut Box<dyn VecEnv>,
+                           rngs: &mut [SplitMix64],
+                           plane: &mut [f32]| {
+                for _ in 0..n {
+                    for a in acts.iter_mut() {
+                        *a = (act_rng.next_u64() % act_dim) as usize;
+                    }
+                    lanes.step_lanes_into(
+                        &acts, rngs, &mut infos, plane,
+                    );
+                    for (l, info) in infos.iter().enumerate() {
+                        if info.done {
+                            lanes.reset_lane_into(
+                                l,
+                                &mut rngs[l],
+                                &mut plane
+                                    [l * lane_dim..(l + 1) * lane_dim],
+                            );
+                        }
+                    }
+                }
+            };
+            run(iters / 10, &mut lanes, &mut rngs, &mut plane); // warmup
+            let allocs0 = allocations();
+            let t0 = Instant::now();
+            run(iters, &mut lanes, &mut rngs, &mut plane);
+            let dt = t0.elapsed().as_secs_f64();
+            let allocs = allocations() - allocs0;
+            let sps = (iters * w as u64) as f64 / dt;
+            println!(
+                "{:<44} {sps:>12.0} steps/s  {allocs} allocs",
+                format!("{spec_str} W={w}")
+            );
+            rec.record(&format!("{key}_w{w}_steps_per_s"), sps);
+            assert_eq!(
+                allocs, 0,
+                "{spec_str} W={w}: vectorized step path allocated"
+            );
+        }
+    }
+}
+
+/// ISSUE 6 satellite: the actors' batched grab (`grab_into` →
+/// `pop_batch_into`) and the executors' publish path must stay
+/// allocation-free at steady state — obs buffers cycle through the
+/// free-list ring and the caller's batch vec is reused in place.
+fn bench_state_buffer_grab(rec: &mut Rec, quick: bool) {
+    println!("== state buffer batched grab (pop_batch_into path) ==");
+    const B: usize = 64;
+    const DIM: usize = 50;
+    let sb = StateBuffer::new();
+    let obs = vec![0.25f32; DIM];
+    let mut batch = Vec::new();
+    let mut round = |sb: &StateBuffer, batch: &mut Vec<ObsMsg>, r: u64| {
+        for e in 0..B {
+            let mut buf = sb.rent(DIM);
+            buf.extend_from_slice(&obs);
+            let _ = sb.push(ObsMsg::single(e, buf, r));
+        }
+        sb.grab_into(batch, B);
+        sb.recycle_batch(batch);
+    };
+    for r in 0..4 {
+        round(&sb, &mut batch, r); // warm the free lists + queue ring
+    }
+    let n: u64 = if quick { 400 } else { 2_000 };
+    let allocs0 = allocations();
+    let t0 = Instant::now();
+    for r in 0..n {
+        round(&sb, &mut batch, r);
+    }
+    let per_us = t0.elapsed().as_secs_f64() / (n * B as u64) as f64 * 1e6;
+    let allocs = allocations() - allocs0;
+    println!(
+        "{:<44} {per_us:>12.3} µs/msg  {allocs} allocs",
+        format!("publish+grab_into+recycle ({B}-msg batch)")
+    );
+    rec.record("state_buffer_grab_us_per_msg", per_us);
+    rec.record("state_buffer_grab_allocs", allocs as f64);
+    assert_eq!(
+        allocs, 0,
+        "batched publish/grab path must be allocation-free at steady state"
+    );
+}
+
+/// Run the artifact-free suite; returns every metric keyed as in
+/// `BENCH_components.json`. PJRT and manifest benches stay in the
+/// bench binary (they need artifacts on disk).
+pub fn run_suite(opts: &SuiteOpts) -> BTreeMap<String, f64> {
+    let quick = opts.quick;
+    let mut rec = Rec { out: BTreeMap::new() };
+    println!("== component micro-benchmarks{} ==",
+             if quick { " (quick)" } else { "" });
+
+    bench_contended_write_path(&mut rec, quick);
+    bench_pool_vs_blocking(&mut rec, quick);
+    bench_vec_lanes(&mut rec, quick);
+    bench_state_buffer_grab(&mut rec, quick);
+    bench_spec_resolution(&mut rec, quick);
+    bench_campaign_scheduler(&mut rec, quick);
+
+    let sc = |iters: usize| if quick { (iters / 10).max(1) } else { iters };
+
+    // RNG + sampling
+    let mut rng = SplitMix64::new(1);
+    bench(&mut rec, "splitmix64::next_u64", "splitmix64_next",
+          sc(1_000_000), || {
+        std::hint::black_box(rng.next_u64());
+    });
+    let logits: Vec<f32> = (0..19).map(|i| (i as f32) * 0.1).collect();
+    let mut seed = 0u64;
+    bench(&mut rec, "gumbel sample (19 actions)", "gumbel_sample_19",
+          sc(200_000), || {
+        seed += 1;
+        std::hint::black_box(sample_action(&logits, seed));
+    });
+
+    // queue
+    let q: BlockingQueue<u64> = BlockingQueue::new();
+    bench(&mut rec, "blocking queue push+pop", "queue_push_pop",
+          sc(200_000), || {
+        q.push(1);
+        std::hint::black_box(q.try_pop());
+    });
+
+    // storage
+    let mut st = RolloutStorage::new(5, 16, 50);
+    let obs50 = vec![0.5f32; 50];
+    let mut col = 0usize;
+    let mut filled = 0usize;
+    bench(&mut rec, "storage push (50-dim obs)", "storage_push_50d",
+          sc(200_000), || {
+        if filled == 5 * 16 {
+            st.clear();
+            filled = 0;
+        }
+        st.push(col % 16, &obs50, 1, 0.0, false);
+        col += 1;
+        filled += 1;
+    });
+
+    // returns oracle
+    let rew = vec![0.1f32; 5 * 16];
+    let done = vec![0.0f32; 5 * 16];
+    let values = vec![0.2f32; 5 * 16];
+    let boot = vec![0.3f32; 16];
+    bench(&mut rec, "rust GAE (T=5, B=16)", "gae_t5_b16", sc(100_000),
+          || {
+        std::hint::black_box(gae(&rew, &done, &values, &boot, 5, 16, 0.99,
+                                 1.0));
+    });
+
+    rec.out
+}

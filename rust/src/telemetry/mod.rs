@@ -1,0 +1,484 @@
+//! Per-thread run telemetry: counters + duration histograms, merged at
+//! join (DESIGN.md §12).
+//!
+//! The engine's hot paths (pool scheduler, actor grab/forward, buffer
+//! free lists, campaign journal) are instrumented with a
+//! [`TelemetryScope`] — a plain struct of `u64` counters and
+//! fixed-bucket duration histograms. There is **no sharing and no
+//! atomics on the step path**: every thread owns its scope outright
+//! (exactly like the PR 2 thread-local episode logs) and the scopes are
+//! merged once, at thread join, into the run's [`TelemetryReport`].
+//!
+//! The whole layer is gated on `RunConfig::telemetry`:
+//!
+//! * **disabled** (the default) every `add`/`record_ns` is an inlined
+//!   early-return on a `bool` the branch predictor never misses, and no
+//!   `Instant::now()` is ever taken — the instrumented build does the
+//!   same work in the same order, so trajectory signatures and report
+//!   bytes are bit-identical with telemetry on or off (pinned in
+//!   `rust/tests/pool.rs` / `rust/tests/campaign.rs`);
+//! * **enabled** the costs are one branch + one array add per count and
+//!   two `Instant::now()` per timed section. Scopes are fixed-size
+//!   inline arrays — zero heap allocation per step either way, which
+//!   keeps the `bench_components` 0-allocs/step assertions true for
+//!   instrumented runs.
+//!
+//! Timing counters (park/barrier histograms, lockstep vs. degraded
+//! splits) observe the *schedule*, which is wall-clock dependent — they
+//! are diagnostics, not deterministic outputs. Only structural
+//! invariants (e.g. `solo + lockstep + degraded == steps_total`) and
+//! the determinism obligations above are test targets.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Everything the engine counts. The discriminant indexes the scope's
+/// counter array; `key()` is the stable wire name used in the JSONL
+/// telemetry record and the campaign telemetry CSV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Env steps taken, by any path (solo + lockstep + degraded).
+    StepsTotal,
+    /// Steps through the K = 1 blocking loop (`run_single`).
+    SoloSteps,
+    /// Batched `step_lanes` calls (whole pool ready together).
+    LockstepCalls,
+    /// Lane-steps taken inside those batched calls.
+    LockstepLaneSteps,
+    /// Scalar-degraded steps (deadlines split the group).
+    DegradedSteps,
+    /// Mailbox polls that found all of a replica's actions.
+    PollComplete,
+    /// Mailbox polls that found a replica still waiting (`try_take`
+    /// miss — the pool's wasted sweeps).
+    PollPending,
+    /// Times a pool thread parked on the action-buffer epoch.
+    Parks,
+    /// Arrivals at the two-phase swap barrier.
+    BarrierArrivals,
+    /// Actor batch grabs that returned at least one message.
+    GrabBatches,
+    /// Observation messages taken across those grabs.
+    GrabMessages,
+    /// Mailbox columns taken across those grabs (a group message
+    /// carries many columns; columns / batches is the real fan-in).
+    GrabColumns,
+    /// Forward calls issued by actors (chunks of a grabbed batch).
+    ForwardChunks,
+    /// Columns actually served across those forwards.
+    ForwardColumns,
+    /// Column capacity offered across those forwards
+    /// (`chunks × max_batch`) — columns / capacity is occupancy.
+    ForwardCapacity,
+    /// State-buffer free-list pops that reused a recycled buffer.
+    FreeListHits,
+    /// Free-list pops that had to allocate (warm-up, or churn).
+    FreeListMisses,
+    /// `push_batch` calls into the state buffer.
+    PushBatchCalls,
+    /// Messages moved by those calls.
+    PushBatchMessages,
+    /// Lines appended to the campaign journal.
+    JournalAppends,
+}
+
+impl Counter {
+    pub const COUNT: usize = 20;
+
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::StepsTotal,
+        Counter::SoloSteps,
+        Counter::LockstepCalls,
+        Counter::LockstepLaneSteps,
+        Counter::DegradedSteps,
+        Counter::PollComplete,
+        Counter::PollPending,
+        Counter::Parks,
+        Counter::BarrierArrivals,
+        Counter::GrabBatches,
+        Counter::GrabMessages,
+        Counter::GrabColumns,
+        Counter::ForwardChunks,
+        Counter::ForwardColumns,
+        Counter::ForwardCapacity,
+        Counter::FreeListHits,
+        Counter::FreeListMisses,
+        Counter::PushBatchCalls,
+        Counter::PushBatchMessages,
+        Counter::JournalAppends,
+    ];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Counter::StepsTotal => "steps_total",
+            Counter::SoloSteps => "solo_steps",
+            Counter::LockstepCalls => "lockstep_calls",
+            Counter::LockstepLaneSteps => "lockstep_lane_steps",
+            Counter::DegradedSteps => "degraded_steps",
+            Counter::PollComplete => "poll_complete",
+            Counter::PollPending => "poll_pending",
+            Counter::Parks => "parks",
+            Counter::BarrierArrivals => "barrier_arrivals",
+            Counter::GrabBatches => "grab_batches",
+            Counter::GrabMessages => "grab_messages",
+            Counter::GrabColumns => "grab_columns",
+            Counter::ForwardChunks => "forward_chunks",
+            Counter::ForwardColumns => "forward_columns",
+            Counter::ForwardCapacity => "forward_capacity",
+            Counter::FreeListHits => "freelist_hits",
+            Counter::FreeListMisses => "freelist_misses",
+            Counter::PushBatchCalls => "push_batch_calls",
+            Counter::PushBatchMessages => "push_batch_messages",
+            Counter::JournalAppends => "journal_appends",
+        }
+    }
+}
+
+/// Duration histograms. Buckets are powers of two in nanoseconds:
+/// bucket *i* holds durations in `[2^(i-1), 2^i)` ns (bucket 0 is
+/// exactly 0 ns; the last bucket absorbs everything ≥ 2^30 ns ≈ 1 s).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Hist {
+    /// Time a pool thread spends inside `executor_arrive` — waiting on
+    /// the learner and the other executors.
+    BarrierWaitNs,
+    /// Time parked on the action-buffer epoch (no replica runnable).
+    ParkNs,
+    /// Campaign journal write+flush latency per appended line.
+    JournalFlushNs,
+}
+
+impl Hist {
+    pub const COUNT: usize = 3;
+
+    pub const ALL: [Hist; Hist::COUNT] =
+        [Hist::BarrierWaitNs, Hist::ParkNs, Hist::JournalFlushNs];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Hist::BarrierWaitNs => "barrier_wait_ns",
+            Hist::ParkNs => "park_ns",
+            Hist::JournalFlushNs => "journal_flush_ns",
+        }
+    }
+}
+
+/// Histogram bucket count. 32 buckets of power-of-two nanoseconds cover
+/// 0 ns .. ≥ 1 s, which spans every duration the engine times.
+pub const N_BUCKETS: usize = 32;
+
+#[inline]
+fn bucket(ns: u64) -> usize {
+    (64 - ns.leading_zeros() as usize).min(N_BUCKETS - 1)
+}
+
+/// One thread's private counter/histogram store. Plain `u64`s in inline
+/// arrays: no locks, no atomics, no heap — built where the thread is
+/// built, merged where the thread is joined.
+#[derive(Debug, Clone)]
+pub struct TelemetryScope {
+    enabled: bool,
+    counters: [u64; Counter::COUNT],
+    hists: [[u64; N_BUCKETS]; Hist::COUNT],
+}
+
+impl Default for TelemetryScope {
+    fn default() -> TelemetryScope {
+        TelemetryScope::new(false)
+    }
+}
+
+impl TelemetryScope {
+    pub fn new(enabled: bool) -> TelemetryScope {
+        TelemetryScope {
+            enabled,
+            counters: [0; Counter::COUNT],
+            hists: [[0; N_BUCKETS]; Hist::COUNT],
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Counter, n: u64) {
+        if self.enabled {
+            self.counters[c as usize] += n;
+        }
+    }
+
+    #[inline]
+    pub fn incr(&mut self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn record_ns(&mut self, h: Hist, ns: u64) {
+        if self.enabled {
+            self.hists[h as usize][bucket(ns)] += 1;
+        }
+    }
+
+    /// Start a timed section: `None` (and no clock read) when telemetry
+    /// is off. Pair with [`TelemetryScope::stop`].
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a timed section opened by [`TelemetryScope::start`].
+    #[inline]
+    pub fn stop(&mut self, h: Hist, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            self.record_ns(h, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// Fold another scope in (thread join). Merging an enabled scope
+    /// into a disabled one enables it — the parent run aggregates
+    /// whatever its children measured.
+    pub fn merge(&mut self, other: &TelemetryScope) {
+        if !other.enabled {
+            return;
+        }
+        self.enabled = true;
+        for i in 0..Counter::COUNT {
+            self.counters[i] += other.counters[i];
+        }
+        for h in 0..Hist::COUNT {
+            for b in 0..N_BUCKETS {
+                self.hists[h][b] += other.hists[h][b];
+            }
+        }
+    }
+
+    /// Snapshot into the serializable per-run report. Zero counters and
+    /// empty histograms are dropped so the wire record stays small and
+    /// its key set is exactly "what happened".
+    pub fn report(&self) -> TelemetryReport {
+        let mut counters = BTreeMap::new();
+        for c in Counter::ALL {
+            let v = self.counters[c as usize];
+            if v != 0 {
+                counters.insert(c.key().to_string(), v);
+            }
+        }
+        let mut hists = BTreeMap::new();
+        for h in Hist::ALL {
+            let row = &self.hists[h as usize];
+            let last = row.iter().rposition(|&n| n != 0);
+            if let Some(last) = last {
+                hists.insert(h.key().to_string(), row[..=last].to_vec());
+            }
+        }
+        TelemetryReport { counters, hists }
+    }
+}
+
+/// A run's merged telemetry, in wire shape: counter values keyed by
+/// [`Counter::key`], histogram bucket counts keyed by [`Hist::key`]
+/// (trailing zero buckets trimmed). This is what joins the campaign
+/// journal as the per-job `telemetry` JSONL record and feeds the
+/// campaign telemetry CSV.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetryReport {
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, Vec<u64>>,
+}
+
+fn hex(v: u64) -> String {
+    format!("0x{v:016x}")
+}
+
+fn unhex(s: &str) -> Result<u64> {
+    let Some(d) = s.strip_prefix("0x") else {
+        bail!("expected 0x-prefixed hex u64, got {s:?}");
+    };
+    Ok(u64::from_str_radix(d, 16)?)
+}
+
+impl TelemetryReport {
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// `num / den` as a fraction, `NaN` when nothing was counted.
+    pub fn frac(&self, num: &str, den: &str) -> f64 {
+        self.counter(num) as f64 / self.counter(den) as f64
+    }
+
+    pub fn merge(&mut self, other: &TelemetryReport) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, row) in &other.hists {
+            let dst = self.hists.entry(k.clone()).or_default();
+            if dst.len() < row.len() {
+                dst.resize(row.len(), 0);
+            }
+            for (d, s) in dst.iter_mut().zip(row) {
+                *d += s;
+            }
+        }
+    }
+
+    /// Counter values are full-width u64s and ride as `"0x…"` strings
+    /// (the PR 5 journal convention); histogram buckets are event
+    /// counts bounded by the step count and ride as plain numbers.
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Str(hex(v))))
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, row)| {
+                let arr =
+                    row.iter().map(|&n| Json::Num(n as f64)).collect();
+                (k.clone(), Json::Arr(arr))
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("counters".to_string(), Json::Obj(counters));
+        m.insert("hists".to_string(), Json::Obj(hists));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TelemetryReport> {
+        let mut counters = BTreeMap::new();
+        for (k, v) in v.get("counters")?.as_obj()? {
+            counters.insert(k.clone(), unhex(v.as_str()?)?);
+        }
+        let mut hists = BTreeMap::new();
+        for (k, row) in v.get("hists")?.as_obj()? {
+            let buckets: Result<Vec<u64>> =
+                row.as_arr()?.iter().map(|n| n.as_u64()).collect();
+            hists.insert(k.clone(), buckets?);
+        }
+        Ok(TelemetryReport { counters, hists })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_scope_counts_nothing() {
+        let mut t = TelemetryScope::new(false);
+        t.incr(Counter::StepsTotal);
+        t.add(Counter::Parks, 7);
+        t.record_ns(Hist::ParkNs, 1_000);
+        assert!(t.start().is_none());
+        assert_eq!(t.get(Counter::StepsTotal), 0);
+        let rep = t.report();
+        assert!(rep.counters.is_empty());
+        assert!(rep.hists.is_empty());
+    }
+
+    #[test]
+    fn enabled_scope_counts_and_buckets() {
+        let mut t = TelemetryScope::new(true);
+        t.incr(Counter::StepsTotal);
+        t.add(Counter::StepsTotal, 2);
+        t.record_ns(Hist::ParkNs, 0); // bucket 0
+        t.record_ns(Hist::ParkNs, 1); // bucket 1
+        t.record_ns(Hist::ParkNs, 2); // bucket 2
+        t.record_ns(Hist::ParkNs, 3); // bucket 2
+        t.record_ns(Hist::ParkNs, u64::MAX); // clamped to last bucket
+        assert_eq!(t.get(Counter::StepsTotal), 3);
+        let rep = t.report();
+        assert_eq!(rep.counter("steps_total"), 3);
+        let park = &rep.hists["park_ns"];
+        assert_eq!(park[0], 1);
+        assert_eq!(park[1], 1);
+        assert_eq!(park[2], 2);
+        assert_eq!(park[N_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn merge_sums_and_enables() {
+        let mut a = TelemetryScope::new(false);
+        let mut b = TelemetryScope::new(true);
+        b.add(Counter::GrabBatches, 5);
+        b.record_ns(Hist::BarrierWaitNs, 100);
+        a.merge(&b);
+        a.merge(&b);
+        assert!(a.enabled());
+        assert_eq!(a.get(Counter::GrabBatches), 10);
+        assert_eq!(
+            a.report().hists["barrier_wait_ns"].iter().sum::<u64>(),
+            2
+        );
+        // merging a disabled scope is a no-op
+        let mut c = TelemetryScope::new(true);
+        c.merge(&TelemetryScope::new(false));
+        assert_eq!(c.report(), TelemetryReport::default());
+    }
+
+    #[test]
+    fn counter_enum_tables_are_consistent() {
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i, "{:?} out of order", c);
+        }
+        for (i, h) in Hist::ALL.iter().enumerate() {
+            assert_eq!(*h as usize, i, "{:?} out of order", h);
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let mut t = TelemetryScope::new(true);
+        t.add(Counter::StepsTotal, u64::MAX); // hex must be lossless
+        t.add(Counter::PollPending, 3);
+        t.record_ns(Hist::JournalFlushNs, 4_096);
+        let rep = t.report();
+        let back = TelemetryReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back, rep);
+        let text = rep.to_json().to_string();
+        assert!(text.contains("\"0xffffffffffffffff\""), "{text}");
+        let reparsed =
+            TelemetryReport::from_json(&Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(reparsed, rep);
+    }
+
+    #[test]
+    fn report_merge_sums() {
+        let mut a = TelemetryReport::default();
+        a.counters.insert("x".into(), 1);
+        a.hists.insert("h".into(), vec![1, 2]);
+        let mut b = TelemetryReport::default();
+        b.counters.insert("x".into(), 2);
+        b.counters.insert("y".into(), 5);
+        b.hists.insert("h".into(), vec![0, 0, 9]);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert_eq!(a.counter("y"), 5);
+        assert_eq!(a.hists["h"], vec![1, 2, 9]);
+    }
+
+    #[test]
+    fn frac_is_nan_safe() {
+        let rep = TelemetryReport::default();
+        assert!(rep.frac("a", "b").is_nan());
+    }
+}

@@ -90,7 +90,7 @@ fn campaign_jobs_invariance_pinned() {
     assert_eq!(seeds, PINNED_JOB_SEEDS, "seed derivation regressed");
 
     let out1 =
-        campaign::run_campaign(&cfg1, &plan1, &standin, None, &[], None)
+        campaign::run_campaign(&cfg1, &plan1, &standin, None, &[], &[], None)
             .unwrap();
     let sigs: Vec<u64> = out1
         .records
@@ -107,7 +107,7 @@ fn campaign_jobs_invariance_pinned() {
     cfg4.jobs = 4;
     let plan4 = campaign::expand(&cfg4).unwrap();
     let out4 =
-        campaign::run_campaign(&cfg4, &plan4, &standin, None, &[], None)
+        campaign::run_campaign(&cfg4, &plan4, &standin, None, &[], &[], None)
             .unwrap();
     assert_eq!(
         out1.records, out4.records,
@@ -130,7 +130,7 @@ fn campaign_jobs_invariance_pinned() {
         .unwrap();
     let hub_runner = campaign::standin_hub_runner(&hub);
     let out_hub = campaign::run_campaign(
-        &cfg_hub, &plan_hub, &hub_runner, None, &[], None,
+        &cfg_hub, &plan_hub, &hub_runner, None, &[], &[], None,
     )
     .unwrap();
     hub.finish();
@@ -175,10 +175,10 @@ fn campaign_seed_sensitivity() {
     let plan_a = campaign::expand(&cfg_a).unwrap();
     let plan_b = campaign::expand(&cfg_b).unwrap();
     let out_a =
-        campaign::run_campaign(&cfg_a, &plan_a, &standin, None, &[], None)
+        campaign::run_campaign(&cfg_a, &plan_a, &standin, None, &[], &[], None)
             .unwrap();
     let out_b =
-        campaign::run_campaign(&cfg_b, &plan_b, &standin, None, &[], None)
+        campaign::run_campaign(&cfg_b, &plan_b, &standin, None, &[], &[], None)
             .unwrap();
     for (a, b) in out_a.records.iter().zip(&out_b.records) {
         let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
@@ -204,7 +204,7 @@ fn campaign_resume_matches_uninterrupted_run() {
 
     // reference: one uninterrupted run
     let out_ref =
-        campaign::run_campaign(&cfg, &plan, &standin, None, &[], None)
+        campaign::run_campaign(&cfg, &plan, &standin, None, &[], &[], None)
             .unwrap();
     let rep_ref = campaign::render(&cfg, &plan, &out_ref);
 
@@ -224,6 +224,7 @@ fn campaign_resume_matches_uninterrupted_run() {
         &dying,
         Some(&journal),
         &[],
+        &[],
         None,
     );
     assert!(err.is_err(), "the injected crash must surface");
@@ -239,7 +240,7 @@ fn campaign_resume_matches_uninterrupted_run() {
     }
 
     // resume: replay the journal, run only what's missing
-    let (journal2, done) = Journal::resume(&jpath, &meta).unwrap();
+    let (journal2, done, done_tel) = Journal::resume(&jpath, &meta).unwrap();
     assert_eq!(done.len(), 2, "two clean records, torn line dropped");
     let ran = AtomicUsize::new(0);
     let counting = |_job: &Job, rc: &RunConfig| {
@@ -252,6 +253,7 @@ fn campaign_resume_matches_uninterrupted_run() {
         &counting,
         Some(&journal2),
         &done,
+        &done_tel,
         None,
     )
     .unwrap();
@@ -268,7 +270,7 @@ fn campaign_resume_matches_uninterrupted_run() {
     assert_eq!(rep_ref.markdown, rep2.markdown);
 
     // a second resume of the now-complete journal runs nothing at all
-    let (journal3, done3) = Journal::resume(&jpath, &meta).unwrap();
+    let (journal3, done3, done_tel3) = Journal::resume(&jpath, &meta).unwrap();
     assert_eq!(done3.len(), plan.jobs.len());
     let ran3 = AtomicUsize::new(0);
     let counting3 = |_job: &Job, rc: &RunConfig| {
@@ -281,6 +283,7 @@ fn campaign_resume_matches_uninterrupted_run() {
         &counting3,
         Some(&journal3),
         &done3,
+        &done_tel3,
         None,
     )
     .unwrap();
@@ -301,6 +304,149 @@ fn campaign_resume_matches_uninterrupted_run() {
     };
     assert!(Journal::resume(&jpath, &meta2).is_err());
 
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR 7 tentpole acceptance at the campaign layer: switching telemetry
+/// on changes none of the three core artifacts — jobs CSV, summary CSV,
+/// markdown are byte-identical with and without `--telemetry` — while
+/// the run gains a fourth, separate utilization artifact whose numbers
+/// come from real executor/actor/buffer counters.
+#[test]
+fn campaign_telemetry_is_invisible_to_core_artifacts() {
+    let cfg_off = team_cfg();
+    let plan_off = campaign::expand(&cfg_off).unwrap();
+    let out_off = campaign::run_campaign(
+        &cfg_off, &plan_off, &standin, None, &[], &[], None,
+    )
+    .unwrap();
+
+    let mut cfg_on = team_cfg();
+    cfg_on.telemetry = true;
+    let plan_on = campaign::expand(&cfg_on).unwrap();
+    let out_on = campaign::run_campaign(
+        &cfg_on, &plan_on, &standin, None, &[], &[], None,
+    )
+    .unwrap();
+
+    // telemetry is not part of the plan fingerprint: same jobs, seeds
+    assert_eq!(cfg_off.fingerprint(), cfg_on.fingerprint());
+    assert_eq!(
+        out_off.records, out_on.records,
+        "telemetry moved a job record"
+    );
+
+    let rep_off = campaign::render(&cfg_off, &plan_off, &out_off);
+    let rep_on = campaign::render(&cfg_on, &plan_on, &out_on);
+    assert_eq!(rep_off.jobs_csv, rep_on.jobs_csv);
+    assert_eq!(rep_off.summary_csv, rep_on.summary_csv);
+    assert_eq!(rep_off.markdown, rep_on.markdown);
+
+    assert!(rep_off.telemetry_csv.is_none(), "no telemetry, no artifact");
+    assert!(
+        out_on.telemetry.iter().all(Option::is_some),
+        "every instrumented job must attach a telemetry report"
+    );
+    let tel_csv = rep_on.telemetry_csv.expect("telemetry artifact");
+    assert!(tel_csv.starts_with("spec,method,jobs,steps_total,"));
+    // one merged row per (spec, method) group + header
+    assert_eq!(tel_csv.lines().count(), 1 + 2);
+    // real counters flowed through: each job stepped a positive number
+    // of envs
+    for t in out_on.telemetry.iter().flatten() {
+        assert!(t.report.counter("steps_total") > 0);
+    }
+}
+
+/// The counter *merge* is jobs-invariant and survives a kill/resume
+/// cycle: with a runner whose telemetry is a pure function of the job,
+/// the plan-indexed telemetry vector — and the rendered utilization
+/// artifact — are identical across `--jobs {1, 4}` and across a journal
+/// round-trip. (Real executor telemetry is timing-dependent by nature;
+/// the *plumbing* must still be deterministic.)
+#[test]
+fn campaign_telemetry_merge_jobs_invariant_and_resumes() {
+    use hts_rl::telemetry::{Counter, TelemetryScope};
+
+    let synthetic = |job: &Job, rc: &RunConfig| -> anyhow::Result<TrainReport> {
+        let mut scope = TelemetryScope::new(true);
+        scope.add(Counter::StepsTotal, (job.seed & 0xffff) + 1);
+        scope.add(Counter::SoloSteps, (job.seed & 0xffff) + 1);
+        scope.add(Counter::GrabBatches, 3);
+        scope.add(Counter::GrabColumns, 12);
+        Ok(TrainReport {
+            steps: rc.stop.max_updates.unwrap_or(1),
+            wall_s: 1.0,
+            signature: job.seed,
+            telemetry: Some(scope.report()),
+            ..TrainReport::default()
+        })
+    };
+
+    let cfg1 = team_cfg();
+    let plan = campaign::expand(&cfg1).unwrap();
+    let out1 = campaign::run_campaign(
+        &cfg1, &plan, &synthetic, None, &[], &[], None,
+    )
+    .unwrap();
+    let mut cfg4 = team_cfg();
+    cfg4.jobs = 4;
+    let out4 = campaign::run_campaign(
+        &cfg4, &plan, &synthetic, None, &[], &[], None,
+    )
+    .unwrap();
+    assert_eq!(
+        out1.telemetry, out4.telemetry,
+        "telemetry vector diverged across --jobs"
+    );
+    let rep1 = campaign::render(&cfg1, &plan, &out1);
+    let rep4 = campaign::render(&cfg4, &plan, &out4);
+    assert_eq!(rep1.telemetry_csv, rep4.telemetry_csv);
+
+    // journal round-trip: telemetry lines replay and re-pair by job id
+    let dir = tmp_dir("tel_resume");
+    let jpath = dir.join("campaign.jsonl");
+    let meta = CampaignMeta {
+        suite: cfg1.suite.clone(),
+        campaign_seed: cfg1.campaign_seed,
+        n_jobs: plan.jobs.len(),
+        config: cfg1.fingerprint(),
+    };
+    let journal = Journal::create(&jpath, &meta).unwrap();
+    journal.enable_telemetry();
+    let out_j = campaign::run_campaign(
+        &cfg1, &plan, &synthetic, Some(&journal), &[], &[], None,
+    )
+    .unwrap();
+    drop(journal);
+
+    let (journal2, done, done_tel) = Journal::resume(&jpath, &meta).unwrap();
+    assert_eq!(done.len(), plan.jobs.len());
+    assert_eq!(done_tel.len(), plan.jobs.len(), "telemetry lines replayed");
+    let ran = AtomicUsize::new(0);
+    let counting = |job: &Job, rc: &RunConfig| {
+        ran.fetch_add(1, Ordering::Relaxed);
+        synthetic(job, rc)
+    };
+    let out_r = campaign::run_campaign(
+        &cfg1,
+        &plan,
+        &counting,
+        Some(&journal2),
+        &done,
+        &done_tel,
+        None,
+    )
+    .unwrap();
+    assert_eq!(ran.load(Ordering::Relaxed), 0, "everything was journaled");
+    assert_eq!(
+        out_j.telemetry, out_r.telemetry,
+        "resumed telemetry diverged from the original run"
+    );
+    assert_eq!(
+        campaign::render(&cfg1, &plan, &out_j).telemetry_csv,
+        campaign::render(&cfg1, &plan, &out_r).telemetry_csv
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -329,6 +475,7 @@ fn campaign_writes_per_job_curves_via_shared_helper() {
         &plan,
         &standin,
         None,
+        &[],
         &[],
         Some(&dir),
     )

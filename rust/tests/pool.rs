@@ -22,6 +22,7 @@ use hts_rl::executor::harness::{
 use hts_rl::executor::{PoolShared, ReplicaPool};
 use hts_rl::metrics::report::{SpsMeter, Stopwatch};
 use hts_rl::rng::gumbel_argmax;
+use hts_rl::telemetry::{TelemetryReport, TelemetryScope};
 
 /// Deterministic stand-in policy: logits are a pure function of the
 /// observation, the sampled action a pure function of (logits, seed).
@@ -67,9 +68,10 @@ struct HarnessOut {
 
 /// Run `iters` full iterations of the executor/actor/swap machinery with
 /// `n_envs / k` pool threads of K replicas each, mirroring the HTS
-/// driver's protocol (including its shutdown sequence).
+/// driver's protocol (including its shutdown sequence). Also merges and
+/// returns the run's telemetry (empty unless `telemetry` is on).
 #[allow(clippy::too_many_arguments)]
-fn run_harness_with(
+fn run_harness_core(
     policy: StandInPolicy,
     env: &str,
     n_agents: usize,
@@ -80,7 +82,8 @@ fn run_harness_with(
     alpha: usize,
     iters: u64,
     seed: u64,
-) -> HarnessOut {
+    telemetry: bool,
+) -> (HarnessOut, TelemetryReport) {
     assert_eq!(n_envs % k, 0, "K must divide n_envs");
     let spec = EnvSpec::by_name(env)
         .unwrap()
@@ -93,13 +96,13 @@ fn run_harness_with(
     let swap = Arc::new(StripedSwap::with_parties(
         alpha, b_cols, obs_dim, n_envs, n_threads,
     ));
-    let state_buf = Arc::new(StateBuffer::new());
+    let state_buf = Arc::new(StateBuffer::with_telemetry(telemetry));
     let act_buf = Arc::new(ActionBuffer::new(b_cols));
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
 
     let actor_handles = spawn_standin_actors(
-        n_actors, &state_buf, &act_buf, b_cols, &policy,
+        n_actors, &state_buf, &act_buf, b_cols, &policy, telemetry,
     );
 
     let mut pool_handles = Vec::new();
@@ -112,6 +115,7 @@ fn run_harness_with(
             sps: sps.clone(),
             watch,
             col_offset: 0,
+            telemetry,
         };
         pool_handles.push(std::thread::spawn(move || {
             ReplicaPool::new(&spec, seed, alpha, t * k..(t + 1) * k, shared)
@@ -135,13 +139,38 @@ fn run_harness_with(
     );
 
     let mut signature = 0u64;
+    let mut tel = TelemetryScope::new(telemetry);
     for h in pool_handles {
-        signature ^= h.join().unwrap().signature;
+        let report = h.join().unwrap();
+        signature ^= report.signature;
+        tel.merge(&report.telemetry);
     }
     for h in actor_handles {
-        h.join().unwrap();
+        tel.merge(&h.join().unwrap());
     }
-    HarnessOut { signature, batch_hashes }
+    tel.merge(&state_buf.telemetry());
+    (HarnessOut { signature, batch_hashes }, tel.report())
+}
+
+/// Telemetry-free entry point used by the signature/invariance tests.
+#[allow(clippy::too_many_arguments)]
+fn run_harness_with(
+    policy: StandInPolicy,
+    env: &str,
+    n_agents: usize,
+    steptime: StepTimeModel,
+    n_envs: usize,
+    k: usize,
+    n_actors: usize,
+    alpha: usize,
+    iters: u64,
+    seed: u64,
+) -> HarnessOut {
+    run_harness_core(
+        policy, env, n_agents, steptime, n_envs, k, n_actors, alpha, iters,
+        seed, false,
+    )
+    .0
 }
 
 /// The historical harness entry point: deterministic gumbel stand-in
@@ -415,6 +444,74 @@ fn pool_seed_sensitivity() {
     assert_ne!(a.signature, b.signature);
 }
 
+/// PR 7 tentpole acceptance: turning telemetry on must not move a single
+/// bit of the run — same pinned signature, same gathered `[T, B]` bytes —
+/// across the solo (K = 1), multiplexed (K = 4), and lane-group (W = 8)
+/// executor paths. Counters are observation only: no extra RNG draws, no
+/// reordered steps, no changed message sizes.
+#[test]
+fn telemetry_does_not_move_signatures() {
+    for k in [1usize, 4, 8] {
+        let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
+        let (off, off_tel) = run_harness_core(
+            policy.clone(), "catch", 1, StepTimeModel::None, 8, k, 2, 5, 4,
+            42, false,
+        );
+        let (on, on_tel) = run_harness_core(
+            policy, "catch", 1, StepTimeModel::None, 8, k, 2, 5, 4, 42, true,
+        );
+        assert_eq!(
+            off.signature, on.signature,
+            "telemetry moved the signature at K={k}"
+        );
+        assert_eq!(
+            off.batch_hashes, on.batch_hashes,
+            "telemetry moved the gathered [T, B] bytes at K={k}"
+        );
+        // ... and against the absolute pin, not just each other.
+        assert_eq!(on.signature, 0xc9567d1a817f0564);
+        // A disabled run reports nothing at all.
+        assert_eq!(off_tel, TelemetryReport::default());
+        assert!(on_tel.counter("steps_total") > 0);
+    }
+}
+
+/// Structural sanity of the executor counters: every environment step is
+/// exactly one of solo / lockstep-lane / degraded; the actors' batched
+/// grabs carry at least one mailbox column each; and the state buffer's
+/// free-list accounting covers every rent.
+#[test]
+fn telemetry_counters_are_structurally_consistent() {
+    let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
+    let (_, tel) = run_harness_core(
+        policy, "catch", 1, StepTimeModel::None, 8, 4, 2, 5, 4, 42, true,
+    );
+    let steps = tel.counter("steps_total");
+    assert!(steps > 0, "no steps counted");
+    assert_eq!(
+        tel.counter("solo_steps")
+            + tel.counter("lockstep_lane_steps")
+            + tel.counter("degraded_steps"),
+        steps,
+        "step-mode counters must partition steps_total"
+    );
+    let grabs = tel.counter("grab_batches");
+    assert!(grabs > 0, "actors never grabbed a batch");
+    assert!(
+        tel.counter("grab_columns") >= grabs,
+        "every grab batch carries at least one column"
+    );
+    assert!(
+        tel.counter("grab_messages") <= tel.counter("grab_columns"),
+        "a message covers one or more columns"
+    );
+    // Free lists: every hit or miss corresponds to one rented buffer.
+    assert!(
+        tel.counter("freelist_hits") + tel.counter("freelist_misses") > 0,
+        "state buffer never rented"
+    );
+}
+
 /// ISSUE 2 satellite: a pool executor parked in `wait_any` (its replicas'
 /// actions will never arrive — there are no actors) must wake on close
 /// and unwind cleanly instead of hanging.
@@ -432,6 +529,7 @@ fn pool_parked_executor_wakes_on_close() {
         sps: Arc::new(SpsMeter::new()),
         watch: Stopwatch::new(),
         col_offset: 0,
+        telemetry: false,
     };
     let h = std::thread::spawn(move || {
         ReplicaPool::new(&spec, 3, 4, 0..2, shared).unwrap().run().unwrap()
