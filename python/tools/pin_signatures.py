@@ -286,24 +286,27 @@ def derive_seed(campaign_seed, job_id):
     return SplitMix64.stream(campaign_seed, fnv_str(job_id)).next_u64()
 
 
-def emit_campaign():
-    """Pins for tests/campaign.rs::campaign_jobs_invariance_pinned.
+# The quick ``gridworld_team`` campaign, campaign seed 42, plan order:
+# first two suite specs (gather, agents=2, slip 0 / 0.15) x method hts
+# x 2 seeds. Shared by the single-host and 2-worker-split pin blocks.
+CAMPAIGN_JOBS = [
+    ("gridworld_team/gather?slip=0,agents=2|hts|s0", 0.0),
+    ("gridworld_team/gather?slip=0,agents=2|hts|s1", 0.0),
+    ("gridworld_team/gather?slip=0.15,agents=2|hts|s0", 0.15),
+    ("gridworld_team/gather?slip=0.15,agents=2|hts|s1", 0.15),
+]
 
-    The quick ``gridworld_team`` campaign: first two suite specs
-    (gather, agents=2, slip 0 / 0.15) x method hts x 2 seeds, campaign
-    seed 42. Each job runs the stand-in fleet
+
+def campaign_job_pins():
+    """(seed, signature) per job of the quick gridworld_team campaign.
+
+    Each job runs the stand-in fleet
     (`executor::harness::run_standin_job`): n_envs=8, K-invariant,
     alpha=5, iters=4 (`--updates 4`), modulo policy — i.e. exactly
     ``simulate`` above with the job's derived seed.
     """
-    jobs = [
-        ("gridworld_team/gather?slip=0,agents=2|hts|s0", 0.0),
-        ("gridworld_team/gather?slip=0,agents=2|hts|s1", 0.0),
-        ("gridworld_team/gather?slip=0.15,agents=2|hts|s0", 0.15),
-        ("gridworld_team/gather?slip=0.15,agents=2|hts|s1", 0.15),
-    ]
-    seeds, sigs = [], []
-    for job_id, slip in jobs:
+    pins = []
+    for job_id, slip in CAMPAIGN_JOBS:
         seed = derive_seed(42, job_id)
         sig, _ = simulate(
             lambda: TeamGridWorld(2, slip),
@@ -312,20 +315,47 @@ def emit_campaign():
             iters=4,
             seed=seed,
         )
-        seeds.append(seed)
-        sigs.append(sig)
+        pins.append((seed, sig))
+    return pins
+
+
+def emit_u64_array(name, values):
+    print(f"const {name}: [u64; {len(values)}] = [")
+    for v in values:
+        print(f"    0x{v:016x},")
+    print("];")
+
+
+def emit_campaign():
+    """Pins for tests/campaign.rs::campaign_jobs_invariance_pinned."""
+    pins = campaign_job_pins()
     print(
         "// tests/campaign.rs::campaign_jobs_invariance_pinned — quick"
     )
     print("// gridworld_team campaign, campaign seed 42, jobs in plan order")
-    print(f"const PINNED_JOB_SEEDS: [u64; {len(seeds)}] = [")
-    for s in seeds:
-        print(f"    0x{s:016x},")
-    print("];")
-    print(f"const PINNED_JOB_SIGNATURES: [u64; {len(sigs)}] = [")
-    for s in sigs:
-        print(f"    0x{s:016x},")
-    print("];")
+    emit_u64_array("PINNED_JOB_SEEDS", [s for s, _ in pins])
+    emit_u64_array("PINNED_JOB_SIGNATURES", [g for _, g in pins])
+
+
+def emit_campaign_dist():
+    """Pins for tests/campaign.rs::dist_two_worker_split_pins.
+
+    The 2-worker split of the same quick gridworld_team campaign
+    (DESIGN.md §13): worker a claims plan indices 0 and 1
+    (``--max-jobs 2``, sequential), worker b claims 2 and 3. Because
+    every per-job seed is fixed at plan time, each worker's journal
+    must hold exactly its slice of the single-host pins — the split is
+    a *view* of PINNED_JOB_SEEDS/SIGNATURES, never a recomputation.
+    """
+    pins = campaign_job_pins()
+    a, b = pins[:2], pins[2:]
+    print("// tests/campaign.rs::dist_two_worker_split_pins — the same")
+    print("// campaign split across workers a (plan indices 0, 1) and")
+    print("// b (2, 3); per-worker journals must hold these slices")
+    emit_u64_array("DIST_WORKER_A_SEEDS", [s for s, _ in a])
+    emit_u64_array("DIST_WORKER_A_SIGNATURES", [g for _, g in a])
+    emit_u64_array("DIST_WORKER_B_SEEDS", [s for s, _ in b])
+    emit_u64_array("DIST_WORKER_B_SIGNATURES", [g for _, g in b])
 
 
 def emit(label, sig, hashes):
@@ -401,3 +431,4 @@ if __name__ == "__main__":
     )
     emit_lane_width()
     emit_campaign()
+    emit_campaign_dist()

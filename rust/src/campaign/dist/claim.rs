@@ -1,0 +1,725 @@
+//! The atomic claim protocol over a shared directory (DESIGN.md §13).
+//!
+//! Layout under the shared root (one campaign per directory):
+//!
+//! ```text
+//! campaign_meta.json   create-exclusive marker: the campaign identity
+//! steps_pool           fleet-wide step counter (first-exhausted only)
+//! journal_<w>.jsonl    per-worker journal (campaign/journal format)
+//! claims/000007.claim  create-exclusive: plan index 7 is owned
+//! leases/<w>.lease     heartbeat file per worker (dist::lease)
+//! skips/000007.skip    job 7 was budget-skipped (atomic rename)
+//! ```
+//!
+//! Claims use `O_CREAT|O_EXCL` (`create_new`) — the filesystem is the
+//! arbiter, so exactly one worker wins each index no matter how many
+//! race. Everything rewritten in place (leases, skips, the pool) goes
+//! through [`write_atomic`]; everything that must exist-at-most-once
+//! with content (the meta marker, the pool seed) is written to a tmp
+//! sibling and then `hard_link`ed into place, which fails with
+//! `AlreadyExists` just like `create_new` but can't leave a torn file.
+//!
+//! [`ClaimSource`] abstracts "give me the next plan index to run" so
+//! the in-process scheduler (atomic counter), this directory protocol,
+//! and a future TCP coordinator are interchangeable behind one trait.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::campaign::journal::CampaignMeta;
+use crate::util::json::{obj, Json};
+
+use super::lease::{
+    now_millis, read_lease, tmp_sibling, write_atomic, Lease,
+};
+
+/// Worker ids become file-name components; keep them boring.
+pub fn validate_worker_id(id: &str) -> Result<()> {
+    ensure!(!id.is_empty(), "worker id must be non-empty");
+    ensure!(
+        id.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+        "worker id '{id}' may only contain [A-Za-z0-9_-]"
+    );
+    Ok(())
+}
+
+/// The shared campaign directory: path arithmetic plus the atomic
+/// file-level operations of the claim protocol. All methods are `&self`
+/// and safe to call from any number of processes concurrently.
+pub struct SharedDir {
+    root: PathBuf,
+}
+
+impl SharedDir {
+    pub fn new(root: impl Into<PathBuf>) -> SharedDir {
+        SharedDir { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Create the directory skeleton. Idempotent and race-free:
+    /// `create_dir_all` tolerates concurrent creation.
+    pub fn ensure_layout(&self) -> Result<()> {
+        for sub in ["claims", "leases", "skips"] {
+            let d = self.root.join(sub);
+            std::fs::create_dir_all(&d)
+                .with_context(|| format!("creating {}", d.display()))?;
+        }
+        Ok(())
+    }
+
+    pub fn claim_path(&self, index: usize) -> PathBuf {
+        self.root.join(format!("claims/{index:06}.claim"))
+    }
+
+    pub fn lease_path(&self, worker: &str) -> PathBuf {
+        self.root.join(format!("leases/{worker}.lease"))
+    }
+
+    pub fn skip_path(&self, index: usize) -> PathBuf {
+        self.root.join(format!("skips/{index:06}.skip"))
+    }
+
+    pub fn journal_path(&self, worker: &str) -> PathBuf {
+        self.root.join(format!("journal_{worker}.jsonl"))
+    }
+
+    pub fn meta_path(&self) -> PathBuf {
+        self.root.join("campaign_meta.json")
+    }
+
+    pub fn pool_path(&self) -> PathBuf {
+        self.root.join("steps_pool")
+    }
+
+    /// Publish (or verify) the campaign identity marker. The first
+    /// participant to arrive creates it atomically; every later one —
+    /// worker or coordinator, resuming or fresh — must present an
+    /// *identical* meta (worker field normalized out) or hard-error.
+    /// This is the fleet-wide face of the `--resume` fingerprint check:
+    /// a worker started under a changed plan/budget dies here, before
+    /// it can claim anything.
+    pub fn init(&self, meta: &CampaignMeta, tag: &str) -> Result<()> {
+        self.ensure_layout()?;
+        let shared = CampaignMeta { worker: None, ..meta.clone() };
+        let marker = self.meta_path();
+        let tmp = tmp_sibling(&marker, tag);
+        let mut line = shared.to_json().to_string();
+        line.push('\n');
+        std::fs::write(&tmp, line)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        match std::fs::hard_link(&tmp, &marker) {
+            Ok(()) => {
+                let _ = std::fs::remove_file(&tmp);
+                Ok(())
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::AlreadyExists =>
+            {
+                let _ = std::fs::remove_file(&tmp);
+                let text = std::fs::read_to_string(&marker)
+                    .with_context(|| {
+                        format!("reading {}", marker.display())
+                    })?;
+                let got = Json::parse(text.trim())
+                    .and_then(|v| CampaignMeta::from_json(&v))
+                    .with_context(|| {
+                        format!(
+                            "corrupt campaign meta marker {}",
+                            marker.display()
+                        )
+                    })?;
+                ensure!(
+                    got == shared,
+                    "shared campaign directory {} belongs to a \
+                     different campaign\n  marker: suite {} seed {} \
+                     n_jobs {} config 0x{:016x}\n  ours:   suite {} \
+                     seed {} n_jobs {} config 0x{:016x}\n(use a fresh \
+                     --shared dir, or rerun with the original \
+                     configuration)",
+                    self.root.display(),
+                    got.suite,
+                    got.campaign_seed,
+                    got.n_jobs,
+                    got.config,
+                    shared.suite,
+                    shared.campaign_seed,
+                    shared.n_jobs,
+                    shared.config,
+                );
+                Ok(())
+            }
+            Err(e) => Err(e).with_context(|| {
+                format!("publishing {}", marker.display())
+            }),
+        }
+    }
+
+    /// Try to claim plan index `index` for `worker`. Returns `Ok(true)`
+    /// iff this call won the create-exclusive race. The claim body is
+    /// written *after* the open wins — a crash in between leaves a torn
+    /// claim, which [`ClaimState::Torn`] and the coordinator's
+    /// age-based expiry handle.
+    pub fn try_claim(&self, index: usize, worker: &str) -> Result<bool> {
+        use std::io::Write as _;
+        let path = self.claim_path(index);
+        let mut f = match std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+        {
+            Ok(f) => f,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::AlreadyExists =>
+            {
+                return Ok(false)
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("claiming {}", path.display())
+                })
+            }
+        };
+        let body = obj(vec![
+            ("v", Json::Num(1.0)),
+            ("index", Json::Num(index as f64)),
+            ("worker", Json::Str(worker.to_string())),
+            ("t", Json::Str(format!("0x{:016x}", now_millis()))),
+        ]);
+        let mut line = body.to_string();
+        line.push('\n');
+        f.write_all(line.as_bytes())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(true)
+    }
+
+    /// Remove a claim so the index can be re-won (dead-worker
+    /// re-issue, or a worker reclaiming its own orphans on resume).
+    /// Losing a remove race is fine — someone released it.
+    pub fn release_claim(&self, index: usize) -> Result<()> {
+        let path = self.claim_path(index);
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| {
+                format!("releasing claim {}", path.display())
+            }),
+        }
+    }
+
+    pub fn claim_state(&self, index: usize) -> Result<ClaimState> {
+        let path = self.claim_path(index);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(ClaimState::Unclaimed)
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("reading claim {}", path.display())
+                })
+            }
+        };
+        let worker = Json::parse(text.trim())
+            .ok()
+            .and_then(|v| Some(v.get("worker").ok()?.as_str().ok()?.to_string()));
+        Ok(match worker {
+            Some(w) => ClaimState::Owned(w),
+            // zero-length or half-written body: the claimer crashed
+            // between winning the open and writing who it was
+            None => ClaimState::Torn,
+        })
+    }
+
+    /// Age of a claim file in milliseconds (by mtime) — the expiry
+    /// clock for [`ClaimState::Torn`] claims, which name no worker and
+    /// so have no lease to consult.
+    pub fn claim_age_millis(&self, index: usize) -> Result<u64> {
+        let path = self.claim_path(index);
+        let meta = std::fs::metadata(&path).with_context(|| {
+            format!("statting claim {}", path.display())
+        })?;
+        let modified = meta.modified().with_context(|| {
+            format!("mtime of claim {}", path.display())
+        })?;
+        let then = modified
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        Ok(now_millis().saturating_sub(then))
+    }
+
+    /// Record that a job was budget-skipped. Skips are terminal (a
+    /// skipped job is never re-issued), so they get durable markers,
+    /// written atomically; last writer wins, but every writer records
+    /// the same deterministic reason.
+    pub fn write_skip(
+        &self,
+        index: usize,
+        reason: &str,
+        worker: &str,
+    ) -> Result<()> {
+        let body = obj(vec![
+            ("v", Json::Num(1.0)),
+            ("index", Json::Num(index as f64)),
+            ("reason", Json::Str(reason.to_string())),
+        ]);
+        let mut line = body.to_string();
+        line.push('\n');
+        write_atomic(&self.skip_path(index), worker, line.as_bytes())
+    }
+
+    /// All skip markers, sorted by plan index.
+    pub fn read_skips(&self) -> Result<Vec<(usize, String)>> {
+        let dir = self.root.join("skips");
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("listing {}", dir.display()))?
+        {
+            let path = entry
+                .with_context(|| format!("listing {}", dir.display()))?
+                .path();
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or_default();
+            if !name.ends_with(".skip") {
+                continue; // stranded *.tmp from a crashed write_atomic
+            }
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let v = Json::parse(text.trim()).with_context(|| {
+                format!("corrupt skip marker {}", path.display())
+            })?;
+            out.push((
+                v.get("index")?.as_u64()? as usize,
+                v.get("reason")?.as_str()?.to_string(),
+            ));
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Every per-worker journal in the shared root, sorted by worker id
+    /// so the coordinator's merge order is deterministic.
+    pub fn worker_journals(&self) -> Result<Vec<(String, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root).with_context(|| {
+            format!("listing {}", self.root.display())
+        })? {
+            let path = entry
+                .with_context(|| {
+                    format!("listing {}", self.root.display())
+                })?
+                .path();
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or_default();
+            if let Some(worker) = name
+                .strip_prefix("journal_")
+                .and_then(|r| r.strip_suffix(".jsonl"))
+            {
+                out.push((worker.to_string(), path.clone()));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Every lease in the shared root, sorted by worker id. Torn and
+    /// empty lease files surface as `None` (dead), per
+    /// [`read_lease`]'s contract.
+    pub fn leases_snapshot(&self) -> Result<Vec<(String, Option<Lease>)>> {
+        let dir = self.root.join("leases");
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("listing {}", dir.display()))?
+        {
+            let path = entry
+                .with_context(|| format!("listing {}", dir.display()))?
+                .path();
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or_default();
+            if let Some(worker) = name.strip_suffix(".lease") {
+                out.push((worker.to_string(), read_lease(&path)?));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+}
+
+/// What a claim file says about one plan index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClaimState {
+    /// No claim file: the index is up for grabs.
+    Unclaimed,
+    /// Claimed, and the body names its owner.
+    Owned(String),
+    /// The claim file exists but its body is empty or half-written:
+    /// the claimer died between `create_new` winning and the body
+    /// landing. Expired by file age (no worker name → no lease).
+    Torn,
+}
+
+/// "Give me the next plan index to run, or `None` when the plan is
+/// drained." Implementations only decide *when and by whom* a job
+/// runs; the job's seed and config were fixed at plan time, which is
+/// the whole worker-count-invariance argument.
+pub trait ClaimSource: Sync {
+    fn claim_next(&self) -> Result<Option<usize>>;
+}
+
+/// The in-process claim source: a shared atomic counter, exactly the
+/// PR 5 `--jobs N` scheduling.
+pub struct CounterClaims {
+    next: AtomicUsize,
+    n_jobs: usize,
+}
+
+impl CounterClaims {
+    pub fn new(n_jobs: usize) -> CounterClaims {
+        CounterClaims { next: AtomicUsize::new(0), n_jobs }
+    }
+}
+
+impl ClaimSource for CounterClaims {
+    fn claim_next(&self) -> Result<Option<usize>> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        Ok((i < self.n_jobs).then_some(i))
+    }
+}
+
+/// The cross-process claim source: scan plan indices in order and win
+/// them with create-exclusive claim files. O(n) per claim over tiny
+/// files — fine for campaign-sized plans (tens to hundreds of jobs,
+/// each running for seconds to hours).
+pub struct FileClaims<'a> {
+    dir: &'a SharedDir,
+    worker: String,
+    n_jobs: usize,
+}
+
+impl<'a> FileClaims<'a> {
+    pub fn new(
+        dir: &'a SharedDir,
+        worker: impl Into<String>,
+        n_jobs: usize,
+    ) -> FileClaims<'a> {
+        FileClaims { dir, worker: worker.into(), n_jobs }
+    }
+}
+
+impl ClaimSource for FileClaims<'_> {
+    fn claim_next(&self) -> Result<Option<usize>> {
+        for i in 0..self.n_jobs {
+            if self.dir.skip_path(i).exists() {
+                continue; // terminal: budget-skipped by some worker
+            }
+            if self.dir.try_claim(i, &self.worker)? {
+                return Ok(Some(i));
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// A shared step budget for the first-exhausted share policy: reserve
+/// up to `want` steps, refund what a job didn't use. Grants depend on
+/// arrival order, so any first-exhausted campaign — single-host or
+/// fleet — is a documented non-reproducible mode.
+pub trait StepPool: Sync {
+    /// Take up to `want` steps from the pool; returns the grant
+    /// (possibly 0 = pool dry).
+    fn reserve(&self, want: u64) -> u64;
+    /// Return unused steps.
+    fn refund(&self, unused: u64);
+}
+
+/// The in-process pool (PR 5 semantics): a shared atomic counter.
+impl StepPool for AtomicU64 {
+    fn reserve(&self, want: u64) -> u64 {
+        let mut cur = self.load(Ordering::Relaxed);
+        loop {
+            let grant = cur.min(want);
+            if grant == 0 {
+                return 0;
+            }
+            match self.compare_exchange_weak(
+                cur,
+                cur - grant,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return grant,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn refund(&self, unused: u64) {
+        if unused > 0 {
+            self.fetch_add(unused, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The fleet-wide pool: a decimal counter file guarded by a lock file
+/// (create-exclusive, broken by age when its holder dies). Pool errors
+/// are logged and swallowed — a reserve failure reads as "pool dry",
+/// which at worst skips a job, never corrupts one.
+pub struct FilePool {
+    path: PathBuf,
+    lock: PathBuf,
+    tag: String,
+    stale_lock_millis: u64,
+}
+
+impl FilePool {
+    /// Seed the pool with `total` if this is the first participant
+    /// (hard-link create-exclusive, like the meta marker); otherwise
+    /// adopt the existing counter — which is exactly what a resuming
+    /// fleet wants, since completed jobs already debited it.
+    pub fn init(
+        dir: &SharedDir,
+        tag: &str,
+        total: u64,
+        stale_lock_millis: u64,
+    ) -> Result<FilePool> {
+        let path = dir.pool_path();
+        let tmp = tmp_sibling(&path, tag);
+        std::fs::write(&tmp, format!("{total}\n"))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        match std::fs::hard_link(&tmp, &path) {
+            Ok(()) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::AlreadyExists => {}
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("seeding step pool {}", path.display())
+                })
+            }
+        }
+        let _ = std::fs::remove_file(&tmp);
+        let lock = path.with_extension("lock");
+        Ok(FilePool {
+            path,
+            lock,
+            tag: tag.to_string(),
+            stale_lock_millis: stale_lock_millis.max(1000),
+        })
+    }
+
+    fn with_lock<T>(
+        &self,
+        f: impl FnOnce(u64) -> (u64, T),
+    ) -> Result<T> {
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&self.lock)
+            {
+                Ok(_) => break,
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::AlreadyExists =>
+                {
+                    // break a lock whose holder died mid-update
+                    if let Ok(m) = std::fs::metadata(&self.lock) {
+                        let age = m
+                            .modified()
+                            .ok()
+                            .and_then(|t| {
+                                t.duration_since(
+                                    std::time::UNIX_EPOCH,
+                                )
+                                .ok()
+                            })
+                            .map(|d| {
+                                now_millis().saturating_sub(
+                                    d.as_millis() as u64,
+                                )
+                            })
+                            .unwrap_or(0);
+                        if age > self.stale_lock_millis {
+                            let _ =
+                                std::fs::remove_file(&self.lock);
+                            continue;
+                        }
+                    }
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(1),
+                    );
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "locking step pool {}",
+                            self.lock.display()
+                        )
+                    })
+                }
+            }
+        }
+        let res = (|| {
+            let text = std::fs::read_to_string(&self.path)
+                .with_context(|| {
+                    format!("reading step pool {}", self.path.display())
+                })?;
+            let cur: u64 =
+                text.trim().parse().with_context(|| {
+                    format!(
+                        "corrupt step pool {}",
+                        self.path.display()
+                    )
+                })?;
+            let (next, out) = f(cur);
+            write_atomic(
+                &self.path,
+                &self.tag,
+                format!("{next}\n").as_bytes(),
+            )?;
+            Ok(out)
+        })();
+        let _ = std::fs::remove_file(&self.lock);
+        res
+    }
+}
+
+impl StepPool for FilePool {
+    fn reserve(&self, want: u64) -> u64 {
+        match self.with_lock(|cur| {
+            let grant = cur.min(want);
+            (cur - grant, grant)
+        }) {
+            Ok(grant) => grant,
+            Err(e) => {
+                eprintln!("campaign: step pool reserve failed: {e:#}");
+                0
+            }
+        }
+    }
+
+    fn refund(&self, unused: u64) {
+        if unused == 0 {
+            return;
+        }
+        if let Err(e) =
+            self.with_lock(|cur| (cur.saturating_add(unused), ()))
+        {
+            eprintln!("campaign: step pool refund failed: {e:#}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> SharedDir {
+        let root = std::env::temp_dir().join(format!("htsrl_claim_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        let dir = SharedDir::new(&root);
+        dir.ensure_layout().unwrap();
+        dir
+    }
+
+    #[test]
+    fn try_claim_is_exclusive_and_releasable() {
+        let dir = scratch("excl");
+        assert!(dir.try_claim(3, "a").unwrap());
+        assert!(!dir.try_claim(3, "b").unwrap(), "second claim loses");
+        assert_eq!(
+            dir.claim_state(3).unwrap(),
+            ClaimState::Owned("a".into())
+        );
+        dir.release_claim(3).unwrap();
+        dir.release_claim(3).unwrap(); // idempotent
+        assert_eq!(dir.claim_state(3).unwrap(), ClaimState::Unclaimed);
+        assert!(dir.try_claim(3, "b").unwrap(), "released → rewinnable");
+        let _ = std::fs::remove_dir_all(dir.root());
+    }
+
+    #[test]
+    fn zero_length_claim_reads_as_torn() {
+        let dir = scratch("torn");
+        std::fs::write(dir.claim_path(0), "").unwrap();
+        assert_eq!(dir.claim_state(0).unwrap(), ClaimState::Torn);
+        std::fs::write(dir.claim_path(1), "{\"v\":1,\"ind").unwrap();
+        assert_eq!(dir.claim_state(1).unwrap(), ClaimState::Torn);
+        assert!(dir.claim_age_millis(0).unwrap() < 60_000);
+        let _ = std::fs::remove_dir_all(dir.root());
+    }
+
+    #[test]
+    fn skip_markers_roundtrip_sorted() {
+        let dir = scratch("skips");
+        dir.write_skip(7, "campaign step budget exhausted", "b")
+            .unwrap();
+        dir.write_skip(2, "campaign wall-clock budget exhausted", "a")
+            .unwrap();
+        assert_eq!(
+            dir.read_skips().unwrap(),
+            vec![
+                (2, "campaign wall-clock budget exhausted".to_string()),
+                (7, "campaign step budget exhausted".to_string()),
+            ]
+        );
+        let _ = std::fs::remove_dir_all(dir.root());
+    }
+
+    #[test]
+    fn file_claims_cover_plan_and_respect_skips() {
+        let dir = scratch("cover");
+        dir.write_skip(1, "campaign step budget exhausted", "x")
+            .unwrap();
+        let src = FileClaims::new(&dir, "w", 4);
+        let mut got = Vec::new();
+        while let Some(i) = src.claim_next().unwrap() {
+            got.push(i);
+        }
+        assert_eq!(got, vec![0, 2, 3], "skip marker is terminal");
+        let _ = std::fs::remove_dir_all(dir.root());
+    }
+
+    #[test]
+    fn atomic_pool_reserves_then_dries_then_refunds() {
+        let pool = AtomicU64::new(10);
+        assert_eq!(StepPool::reserve(&pool, 6), 6);
+        assert_eq!(StepPool::reserve(&pool, 6), 4, "partial grant");
+        assert_eq!(StepPool::reserve(&pool, 6), 0, "dry");
+        StepPool::refund(&pool, 3);
+        assert_eq!(StepPool::reserve(&pool, 6), 3);
+    }
+
+    #[test]
+    fn file_pool_concurrent_reserves_never_overgrant() {
+        let dir = scratch("pool");
+        let pool = FilePool::init(&dir, "t", 100, 60_000).unwrap();
+        let granted: u64 = std::thread::scope(|s| {
+            let pool = &pool;
+            let hs: Vec<_> = (0..8)
+                .map(|_| s.spawn(move || pool.reserve(9)))
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(granted, 72, "8×9 fits in 100");
+        assert_eq!(pool.reserve(1_000), 28, "remainder");
+        assert_eq!(pool.reserve(1), 0, "dry");
+        pool.refund(5);
+        assert_eq!(pool.reserve(1_000), 5, "refund restores");
+        // a second init adopts, never reseeds
+        let again = FilePool::init(&dir, "t2", 100, 60_000).unwrap();
+        assert_eq!(again.reserve(1), 0, "adopted counter stays dry");
+        let _ = std::fs::remove_dir_all(dir.root());
+    }
+}

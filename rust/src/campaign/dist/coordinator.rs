@@ -1,0 +1,269 @@
+//! The campaign coordinator: merge per-worker journals, expire dead
+//! workers' leases, re-issue their jobs, finish the stragglers
+//! (DESIGN.md §13).
+//!
+//! The coordinator is a *reader* of the shared directory plus one
+//! writer role: releasing claims whose owner is provably gone. It
+//! polls until every plan index is terminal — journaled by some worker
+//! or budget-skipped — then hands back a [`CampaignOutcome`]
+//! indistinguishable from `run_campaign`'s, so the entire report
+//! pipeline downstream is reused unchanged. That reuse is the
+//! worker-count-invariance argument's second half: jobs are
+//! byte-deterministic wherever they run (plan-time seeds), and the
+//! merge keys on *plan index*, so the assembled outcome — and every
+//! artifact rendered from it — is the single-host one by construction.
+//!
+//! Liveness calls are conservative: a claim is only re-issued when its
+//! owner's lease is missing or older than the TTL (or the claim itself
+//! is torn and old). Re-issue is dedup-safe regardless — if the
+//! "dead" worker was merely slow and its record lands anyway, the
+//! merge keeps the first of two *equal* records and hard-errors on
+//! unequal ones (which deterministic jobs cannot produce; the
+//! fleet-wide first-exhausted pool is the documented exception).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::campaign::journal::{
+    read_records, CampaignMeta, JobRecord, JobTelemetry,
+};
+use crate::campaign::plan::{CampaignConfig, CampaignPlan};
+use crate::campaign::scheduler::{CampaignOutcome, Runner};
+
+use super::claim::{ClaimState, SharedDir};
+use super::lease::now_millis;
+use super::worker::{run_worker, WorkerOpts};
+
+/// The coordinator's own worker id, used when it steps in to run
+/// stragglers itself. Excluded from the "any live worker?" check so
+/// the coordinator never waits on its own lease.
+pub const COORD_WORKER: &str = "coord";
+
+pub struct CoordinatorOpts {
+    /// A lease older than this is expired; must match the workers'
+    /// `--lease-ttl`.
+    pub lease_ttl_s: f64,
+    pub poll_s: f64,
+    /// When re-issued (or never-claimed) jobs are pending and *no*
+    /// worker is live, run them in-process under [`COORD_WORKER`]
+    /// rather than waiting for a worker that may never come. On by
+    /// default: it makes `--coordinate` alone equivalent to a
+    /// single-host run, and a fleet always terminates.
+    pub run_stragglers: bool,
+}
+
+impl CoordinatorOpts {
+    pub fn new() -> CoordinatorOpts {
+        CoordinatorOpts {
+            lease_ttl_s: 30.0,
+            poll_s: 0.5,
+            run_stragglers: true,
+        }
+    }
+}
+
+impl Default for CoordinatorOpts {
+    fn default() -> CoordinatorOpts {
+        CoordinatorOpts::new()
+    }
+}
+
+/// Merge every per-worker journal into plan-indexed record/telemetry
+/// tables. Journals are visited in sorted worker-id order, so the
+/// merge is deterministic; a journal still mid-create reads as "no
+/// records yet". Telemetry lines re-pair with their job by id across
+/// journals (first worker in sort order wins a duplicate — which
+/// deterministic telemetry makes moot).
+#[allow(clippy::type_complexity)]
+fn merge_journals(
+    plan: &CampaignPlan,
+    meta: &CampaignMeta,
+    shared: &SharedDir,
+) -> Result<(Vec<Option<JobRecord>>, Vec<Option<JobTelemetry>>)> {
+    let n = plan.jobs.len();
+    let mut records: Vec<Option<JobRecord>> = vec![None; n];
+    let mut owners: Vec<Option<String>> = vec![None; n];
+    let mut tels: Vec<Option<JobTelemetry>> = vec![None; n];
+    for (worker, path) in shared.worker_journals()? {
+        let Some((got, recs, wtels)) = read_records(&path)? else {
+            continue; // header not flushed yet: not ready, not corrupt
+        };
+        let want =
+            CampaignMeta { worker: Some(worker.clone()), ..meta.clone() };
+        ensure!(
+            got == want,
+            "worker journal {} does not belong to this campaign \
+             (journal: suite '{}' seed {} n_jobs {} config 0x{:016x} \
+             worker {:?}; campaign: suite '{}' seed {} n_jobs {} config \
+             0x{:016x} worker {:?})",
+            path.display(),
+            got.suite,
+            got.campaign_seed,
+            got.n_jobs,
+            got.config,
+            got.worker,
+            want.suite,
+            want.campaign_seed,
+            want.n_jobs,
+            want.config,
+            want.worker,
+        );
+        for rec in recs {
+            let Some(i) = plan.index_of(&rec.id) else {
+                bail!(
+                    "worker '{}' journal record '{}' matches no job of \
+                     this campaign plan",
+                    worker,
+                    rec.id
+                );
+            };
+            match &records[i] {
+                None => {
+                    records[i] = Some(rec);
+                    owners[i] = Some(worker.clone());
+                }
+                // A re-issued job that the "dead" worker finished
+                // anyway: deterministic jobs produce equal records, so
+                // keep the first. Unequal duplicates can only come
+                // from non-reproducible inputs — in this codebase,
+                // the fleet-wide first-exhausted step pool — and must
+                // not be silently picked between.
+                Some(prev) if *prev == rec => {}
+                Some(_) => bail!(
+                    "job '{}' has conflicting records from workers \
+                     '{}' and '{}' — the campaign ran under a \
+                     non-reproducible mode (fleet-wide first-exhausted \
+                     step budget? see DESIGN.md §13); re-run with the \
+                     fair share policy for a deterministic merge",
+                    rec.id,
+                    owners[i].as_deref().unwrap_or("?"),
+                    worker,
+                ),
+            }
+        }
+        for t in wtels {
+            // Satellite of the dist work: telemetry lines re-pair with
+            // job records by id *across* journals, not by position
+            // within one file.
+            let Some(i) = plan.index_of(&t.id) else {
+                bail!(
+                    "worker '{}' telemetry record '{}' matches no job \
+                     of this campaign plan",
+                    worker,
+                    t.id
+                );
+            };
+            if tels[i].is_none() {
+                tels[i] = Some(t);
+            }
+        }
+    }
+    Ok((records, tels))
+}
+
+/// Drive a distributed campaign to completion: poll the shared
+/// directory, expire dead workers' leases and re-issue their claims,
+/// optionally run stragglers in-process, and return the merged
+/// [`CampaignOutcome`] once every plan index is terminal.
+pub fn coordinate(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    runner: &Runner<'_>,
+    meta: &CampaignMeta,
+    shared: &SharedDir,
+    opts: &CoordinatorOpts,
+    curves_out: Option<&Path>,
+) -> Result<CampaignOutcome> {
+    shared.init(meta, COORD_WORKER)?;
+    let n = plan.jobs.len();
+    let ttl_ms = (opts.lease_ttl_s * 1000.0) as u64;
+    loop {
+        let (records, tels) = merge_journals(plan, meta, shared)?;
+        let skips = shared.read_skips()?;
+        for &(i, _) in &skips {
+            ensure!(
+                i < n,
+                "skip marker for index {i} is outside this campaign's \
+                 {n}-job plan"
+            );
+        }
+        let skip_idx: std::collections::BTreeSet<usize> =
+            skips.iter().map(|&(i, _)| i).collect();
+        if (0..n).all(|i| records[i].is_some() || skip_idx.contains(&i)) {
+            // every index terminal: assemble the single-host-shaped
+            // outcome (a record beats a skip if a re-issued job ran
+            // after a racing budget skip — belt and braces; the claim
+            // protocol shouldn't produce both)
+            let skipped: Vec<(usize, String)> = skips
+                .into_iter()
+                .filter(|&(i, _)| records[i].is_none())
+                .collect();
+            return Ok(CampaignOutcome {
+                records,
+                telemetry: tels,
+                skipped,
+                resumed: 0,
+            });
+        }
+        // Lease-expiry pass over the non-terminal indices.
+        let now = now_millis();
+        let leases = shared.leases_snapshot()?;
+        let any_live = leases.iter().any(|(w, l)| {
+            w != COORD_WORKER
+                && l.as_ref().is_some_and(|l| l.live(now, ttl_ms))
+        });
+        let mut unclaimed_pending = false;
+        for (i, _job) in plan.jobs.iter().enumerate() {
+            if records[i].is_some() || skip_idx.contains(&i) {
+                continue;
+            }
+            match shared.claim_state(i)? {
+                ClaimState::Unclaimed => unclaimed_pending = true,
+                ClaimState::Owned(w) => {
+                    let lease = leases
+                        .iter()
+                        .find(|(lw, _)| *lw == w)
+                        .and_then(|(_, l)| l.as_ref());
+                    let live =
+                        lease.is_some_and(|l| l.live(now, ttl_ms));
+                    if !live {
+                        eprintln!(
+                            "campaign: worker '{}' lease expired — \
+                             re-issuing job {} ('{}')",
+                            w, i, plan.jobs[i].id
+                        );
+                        shared.release_claim(i)?;
+                        unclaimed_pending = true;
+                    }
+                }
+                ClaimState::Torn => {
+                    // no worker name to consult a lease for — expire
+                    // by the claim file's own age
+                    if shared.claim_age_millis(i)? > ttl_ms {
+                        eprintln!(
+                            "campaign: torn claim for job {} expired — \
+                             re-issuing",
+                            i
+                        );
+                        shared.release_claim(i)?;
+                        unclaimed_pending = true;
+                    }
+                }
+            }
+        }
+        if unclaimed_pending && !any_live && opts.run_stragglers {
+            // nobody alive to pick these up: run them here, through
+            // the exact same worker path (own journal, own lease)
+            let wopts = WorkerOpts {
+                lease_ttl_s: opts.lease_ttl_s,
+                ..WorkerOpts::new(COORD_WORKER)
+            };
+            run_worker(cfg, plan, runner, meta, shared, &wopts, curves_out)?;
+            continue; // re-merge immediately, no sleep
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            opts.poll_s.max(0.01),
+        ));
+    }
+}

@@ -1,0 +1,260 @@
+//! Worker liveness: lease files and the heartbeat thread
+//! (DESIGN.md §13).
+//!
+//! A worker's lease is a tiny JSON file under `leases/<worker>.lease`
+//! holding its latest heartbeat timestamp. Heartbeats are rewritten
+//! atomically (write a `.tmp` sibling, rename over the target), so a
+//! reader sees the previous beat or the new one — never a torn mix. A
+//! lease whose beat is older than the configurable TTL is *expired*:
+//! the coordinator treats the worker as dead and re-issues its
+//! unfinished claims. Expiry — not deletion — is the death signal; a
+//! cleanly exiting worker removes its lease so the fleet doesn't wait
+//! out its TTL for nothing.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::campaign::journal::hex_u64;
+use crate::util::json::{obj, Json};
+
+/// Milliseconds since the Unix epoch — the lease clock. Wall time, not
+/// a monotonic clock: leases are compared across *processes* (and, once
+/// a TCP coordinator slots in behind [`super::claim::ClaimSource`],
+/// across hosts), where no shared monotonic clock exists. A worker with
+/// a badly skewed clock merely looks dead and gets re-issued — safe,
+/// because the journal merge dedups re-issued work by job id.
+pub fn now_millis() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Write `bytes` to `path` atomically: write a `.tmp` sibling, then
+/// rename it over the target. The scratch name carries the writer's
+/// `tag` so two writers never collide on it either. Scanners must
+/// ignore `*.tmp` files — a crash can strand one.
+pub fn write_atomic(path: &Path, tag: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_sibling(path, tag);
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} over {}", tmp.display(), path.display())
+    })?;
+    Ok(())
+}
+
+pub(crate) fn tmp_sibling(path: &Path, tag: &str) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".{tag}.tmp"));
+    path.with_file_name(name)
+}
+
+/// One worker's proof of life: who, and when they last beat.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lease {
+    pub worker: String,
+    /// Latest heartbeat, [`now_millis`] units.
+    pub beat_millis: u64,
+}
+
+impl Lease {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("v", Json::Num(1.0)),
+            ("worker", Json::Str(self.worker.clone())),
+            // u64 as 0x-hex, like every journal u64 (the JSON substrate
+            // carries numbers as f64)
+            ("beat", Json::Str(format!("0x{:016x}", self.beat_millis))),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Lease> {
+        anyhow::ensure!(v.get("v")?.as_u64()? == 1, "unknown lease version");
+        Ok(Lease {
+            worker: v.get("worker")?.as_str()?.to_string(),
+            beat_millis: hex_u64(v.get("beat")?.as_str()?)?,
+        })
+    }
+
+    /// Is this lease still within its TTL at `now`?
+    pub fn live(&self, now_ms: u64, ttl_millis: u64) -> bool {
+        now_ms.saturating_sub(self.beat_millis) <= ttl_millis
+    }
+}
+
+/// Read a lease file. Missing, empty, and unparseable files all come
+/// back `None` — "no proof of life". A torn lease can never belong to a
+/// *live* worker: heartbeats go through [`write_atomic`], so tearing
+/// means the writer died mid-direct-write (or the file was zeroed by a
+/// crash below the filesystem), and treating it as dead only re-issues
+/// work the merge would dedup anyway — the PR 5 torn-journal-line
+/// posture applied to liveness.
+pub fn read_lease(path: &Path) -> Result<Option<Lease>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(None)
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading lease {}", path.display()))
+        }
+    };
+    Ok(Json::parse(text.trim())
+        .ok()
+        .and_then(|v| Lease::from_json(&v).ok()))
+}
+
+/// The heartbeat thread: rewrites the worker's lease every `interval`
+/// until told to stop. The **first beat is written synchronously in the
+/// caller's thread** before any claim can exist, so a worker's claims
+/// are never older than its proof of life — without this, a coordinator
+/// could expire a claim made in the gap before the first beat landed.
+pub struct Heartbeat {
+    path: PathBuf,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    pub fn start(
+        path: PathBuf,
+        worker: String,
+        interval: Duration,
+    ) -> Heartbeat {
+        // first beat, synchronous: lands before the caller can claim.
+        // A failed beat is never fatal — the worker merely looks dead,
+        // and re-issue is dedup-safe.
+        beat_once(&path, &worker);
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let lease_path = path.clone();
+        let handle = std::thread::spawn(move || loop {
+            // sleep in slices so stop() returns promptly even under
+            // multi-second heartbeat intervals
+            let mut left = interval;
+            while !flag.load(Ordering::Relaxed) && !left.is_zero() {
+                let nap = left.min(Duration::from_millis(25));
+                std::thread::sleep(nap);
+                left = left.saturating_sub(nap);
+            }
+            if flag.load(Ordering::Relaxed) {
+                return;
+            }
+            beat_once(&lease_path, &worker);
+        });
+        Heartbeat { path, stop, handle: Some(handle) }
+    }
+
+    /// Clean shutdown: stop beating, join, and **remove** the lease —
+    /// "gone on purpose", so the coordinator need not wait out the TTL
+    /// before concluding no live worker will pick up re-issued jobs.
+    pub fn stop(mut self) {
+        self.halt();
+        let _ = std::fs::remove_file(&self.path);
+    }
+
+    /// Death simulation (fault injection): stop the beat thread but
+    /// leave the lease behind to go stale, exactly as a killed process
+    /// would.
+    pub fn abandon(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Heartbeat {
+    /// An error-path exit halts the beat but leaves the lease to
+    /// expire: an erroring worker may hold an inconsistent claim, and
+    /// making the coordinator wait out the TTL is the conservative
+    /// teardown.
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn beat_once(path: &Path, worker: &str) {
+    let lease = Lease {
+        worker: worker.to_string(),
+        beat_millis: now_millis(),
+    };
+    let mut line = lease.to_json().to_string();
+    line.push('\n');
+    let _ = write_atomic(path, worker, line.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_roundtrips_and_expires() {
+        let l = Lease { worker: "w0".into(), beat_millis: 1_000 };
+        let line = l.to_json().to_string();
+        let back = Lease::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(l, back);
+        assert!(l.live(1_500, 600));
+        assert!(l.live(1_600, 600), "boundary is inclusive");
+        assert!(!l.live(1_601, 600));
+        assert!(l.live(500, 600), "clock skew never underflows");
+    }
+
+    #[test]
+    fn torn_and_missing_leases_read_as_dead() {
+        let dir = std::env::temp_dir().join("htsrl_lease_torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.lease");
+        assert!(read_lease(&path).unwrap().is_none(), "missing");
+        std::fs::write(&path, "").unwrap();
+        assert!(read_lease(&path).unwrap().is_none(), "zero-length");
+        std::fs::write(&path, "{\"v\":1,\"work").unwrap();
+        assert!(read_lease(&path).unwrap().is_none(), "torn");
+        let l = Lease { worker: "w".into(), beat_millis: now_millis() };
+        write_atomic(&path, "w", l.to_json().to_string().as_bytes())
+            .unwrap();
+        assert_eq!(read_lease(&path).unwrap(), Some(l));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn heartbeat_beats_then_stop_removes_abandon_keeps() {
+        let dir = std::env::temp_dir().join("htsrl_lease_beat");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.lease");
+        let hb = Heartbeat::start(
+            path.clone(),
+            "w".into(),
+            Duration::from_millis(5),
+        );
+        // the first beat is synchronous — visible before any wait
+        let first = read_lease(&path).unwrap().expect("first beat");
+        assert_eq!(first.worker, "w");
+        hb.stop();
+        assert!(!path.exists(), "clean stop removes the lease");
+
+        let hb = Heartbeat::start(
+            path.clone(),
+            "w".into(),
+            Duration::from_millis(5),
+        );
+        hb.abandon();
+        assert!(
+            read_lease(&path).unwrap().is_some(),
+            "abandon leaves the lease to go stale"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

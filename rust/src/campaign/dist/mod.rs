@@ -1,0 +1,36 @@
+//! Distributed campaigns: a coordinator/worker fleet over a shared
+//! directory (DESIGN.md §13).
+//!
+//! One campaign, N hosts, deterministic output. Every worker process
+//! expands the same plan (seeds fixed at plan time), claims indices
+//! through an atomic claim protocol on a shared directory, and appends
+//! finished jobs to its own journal; a coordinator merges the journals
+//! by plan index, expires dead workers' leases, re-issues their jobs,
+//! and hands the merged outcome to the unchanged report pipeline — so
+//! all four report artifacts are byte-identical to a single-host
+//! `--jobs N` run by construction.
+//!
+//! * [`lease`] — heartbeat files, TTL liveness, atomic rewrites.
+//! * [`claim`] — the shared-directory layout, create-exclusive claims,
+//!   skip markers, the [`ClaimSource`]/[`StepPool`] traits (a tiny TCP
+//!   coordinator can slot in behind the same traits later), and the
+//!   fleet-wide first-exhausted pool (documented non-reproducible).
+//! * [`worker`] — one fleet worker: init/verify, resume own journal,
+//!   reclaim own orphans, heartbeat, claim → run → journal.
+//! * [`coordinator`] — merge, expire, re-issue, run stragglers,
+//!   assemble the single-host-shaped [`CampaignOutcome`].
+//!
+//! [`CampaignOutcome`]: crate::campaign::scheduler::CampaignOutcome
+
+pub mod claim;
+pub mod coordinator;
+pub mod lease;
+pub mod worker;
+
+pub use claim::{
+    validate_worker_id, ClaimSource, ClaimState, CounterClaims, FileClaims,
+    FilePool, SharedDir, StepPool,
+};
+pub use coordinator::{coordinate, CoordinatorOpts, COORD_WORKER};
+pub use lease::{now_millis, read_lease, write_atomic, Heartbeat, Lease};
+pub use worker::{run_worker, WorkerOpts, WorkerSummary};

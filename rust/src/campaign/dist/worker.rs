@@ -1,0 +1,211 @@
+//! One fleet worker: claim plan indices from the shared directory, run
+//! them, journal them (DESIGN.md §13).
+//!
+//! A worker is the distributed twin of one `--jobs N` thread: same
+//! [`execute_job`] core, different claim source and journal. Its whole
+//! lifecycle:
+//!
+//! 1. publish/verify the campaign meta marker ([`SharedDir::init`]) —
+//!    a worker started under a changed plan or budget dies *here*,
+//!    before it can claim anything;
+//! 2. resume its own journal (`journal_<id>.jsonl`) under the same
+//!    fingerprint rules as `--resume`;
+//! 3. release any claims it still holds from a previous life whose
+//!    records never made the journal (crash between claim and append);
+//! 4. start the heartbeat, then loop: claim → run → journal, writing
+//!    skip markers for budget-skipped jobs;
+//! 5. on a clean exit, remove its lease so the coordinator doesn't
+//!    wait out the TTL.
+//!
+//! Determinism: a worker only ever decides *when* a job runs. The
+//! job's seed and config were fixed at plan time, every worker process
+//! expands the same plan, and the stand-in hub is built from the
+//! *full* plan in each process — so which worker runs a job cannot
+//! change its bytes (worker-count-invariance, pinned in
+//! `rust/tests/campaign.rs`).
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::campaign::journal::{CampaignMeta, Journal};
+use crate::campaign::plan::{CampaignConfig, CampaignPlan, SharePolicy};
+use crate::campaign::scheduler::{execute_job, JobCtx, JobOutcome, Runner};
+use crate::metrics::report::Stopwatch;
+
+use super::claim::{
+    validate_worker_id, ClaimSource, ClaimState, FileClaims, FilePool,
+    SharedDir, StepPool,
+};
+use super::lease::Heartbeat;
+
+/// Worker knobs. `lease_ttl_s` must match the coordinator's
+/// `--lease-ttl` (both default to 30 s); the heartbeat interval
+/// defaults to a third of the TTL so a worker survives two dropped
+/// beats before it reads as dead.
+pub struct WorkerOpts {
+    pub worker: String,
+    pub lease_ttl_s: f64,
+    /// 0.0 ⇒ `lease_ttl_s / 3`.
+    pub heartbeat_s: f64,
+    /// Stop claiming after running this many jobs (load shaping, and
+    /// the deterministic-split pin test).
+    pub max_jobs: Option<usize>,
+    /// Fault injection: after claiming this many jobs, "die" — abandon
+    /// the lease mid-claim so the coordinator's expiry + re-issue path
+    /// runs. The claimed job is left unjournaled, exactly like a
+    /// `kill -9` between claim and append.
+    pub die_after_jobs: Option<usize>,
+}
+
+impl WorkerOpts {
+    pub fn new(worker: impl Into<String>) -> WorkerOpts {
+        WorkerOpts {
+            worker: worker.into(),
+            lease_ttl_s: 30.0,
+            heartbeat_s: 0.0,
+            max_jobs: None,
+            die_after_jobs: None,
+        }
+    }
+
+    pub fn heartbeat_interval(&self) -> Duration {
+        let s = if self.heartbeat_s > 0.0 {
+            self.heartbeat_s
+        } else {
+            self.lease_ttl_s / 3.0
+        };
+        Duration::from_secs_f64(s.max(0.005))
+    }
+}
+
+/// What one worker did with its life.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Jobs freshly run and journaled by this worker.
+    pub ran: usize,
+    /// Jobs this worker's own journal already held (worker resume).
+    pub replayed: usize,
+    /// Jobs this worker budget-skipped (skip markers written).
+    pub skipped: usize,
+    /// True iff the `die_after_jobs` fault hook fired.
+    pub died: bool,
+}
+
+/// Run one worker against a shared campaign directory until the plan
+/// is drained (or `max_jobs`/`die_after_jobs` says stop). `meta` is
+/// the campaign identity with `worker: None` — the per-worker journal
+/// gets it stamped with this worker's id.
+pub fn run_worker(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    runner: &Runner<'_>,
+    meta: &CampaignMeta,
+    shared: &SharedDir,
+    opts: &WorkerOpts,
+    curves_out: Option<&Path>,
+) -> Result<WorkerSummary> {
+    validate_worker_id(&opts.worker)?;
+    shared.init(meta, &opts.worker)?;
+    let my_meta =
+        CampaignMeta { worker: Some(opts.worker.clone()), ..meta.clone() };
+    // Always resume-or-create: the fingerprint inside the journal
+    // header is checked against `my_meta`, so a worker restarted under
+    // a changed configuration hard-errors instead of mixing records.
+    let (journal, done, done_tel) =
+        Journal::resume(&shared.journal_path(&opts.worker), &my_meta)
+            .with_context(|| {
+                format!("resuming worker '{}' journal", opts.worker)
+            })?;
+    if cfg.telemetry {
+        journal.enable_telemetry();
+    }
+    let mut sum = WorkerSummary {
+        replayed: done.len(),
+        ..WorkerSummary::default()
+    };
+    let mut done_idx = std::collections::BTreeSet::new();
+    for rec in &done {
+        let Some(i) = plan.index_of(&rec.id) else {
+            bail!(
+                "journal record '{}' matches no job of this campaign plan",
+                rec.id
+            );
+        };
+        done_idx.insert(i);
+    }
+    let _ = done_tel; // telemetry replays merge at the coordinator
+    // Reclaim our own orphans: a claim we hold with no journaled
+    // record and no skip marker is a job our previous life claimed and
+    // never finished — release it so this life (or anyone) can re-win
+    // it. Never touch other workers' claims; that's the coordinator's
+    // lease-expiry call.
+    for i in 0..plan.jobs.len() {
+        if done_idx.contains(&i) || shared.skip_path(i).exists() {
+            continue;
+        }
+        if shared.claim_state(i)? == ClaimState::Owned(opts.worker.clone()) {
+            shared.release_claim(i)?;
+        }
+    }
+    let beat = Heartbeat::start(
+        shared.lease_path(&opts.worker),
+        opts.worker.clone(),
+        opts.heartbeat_interval(),
+    );
+    // Fleet-wide first-exhausted pool: grants depend on cross-process
+    // arrival order — the documented non-reproducible mode (DESIGN.md
+    // §13). The pool file is persistent, so a worker resume must NOT
+    // re-debit its replayed records: their grants are already gone
+    // from the counter.
+    let file_pool: Option<FilePool> =
+        match (cfg.budget.total_steps, cfg.budget.share) {
+            (Some(total), SharePolicy::FirstExhausted) => {
+                let ttl_ms = (opts.lease_ttl_s * 1000.0) as u64;
+                Some(FilePool::init(shared, &opts.worker, total, ttl_ms)?)
+            }
+            _ => None,
+        };
+    let watch = Stopwatch::new();
+    let ctx = JobCtx {
+        cfg,
+        runner,
+        journal: Some(&journal),
+        pool: file_pool.as_ref().map(|p| p as &dyn StepPool),
+        watch: &watch,
+        curves_out,
+    };
+    let claims = FileClaims::new(shared, opts.worker.clone(), plan.jobs.len());
+    loop {
+        if opts.max_jobs.is_some_and(|m| sum.ran >= m) {
+            break;
+        }
+        let Some(i) = claims.claim_next()? else { break };
+        if done_idx.contains(&i) {
+            // our own journal already has this job (we re-won a claim
+            // we released above); the claim now marks it terminal
+            continue;
+        }
+        if opts.die_after_jobs.is_some_and(|d| sum.ran >= d) {
+            // fault injection: die holding the claim, lease left to
+            // go stale — the coordinator must expire + re-issue
+            sum.died = true;
+            beat.abandon();
+            return Ok(sum);
+        }
+        match execute_job(&ctx, &plan.jobs[i])? {
+            JobOutcome::Ran(_, _) => sum.ran += 1,
+            JobOutcome::Skipped(reason) => {
+                shared.write_skip(i, &reason, &opts.worker)?;
+                sum.skipped += 1;
+            }
+        }
+    }
+    // clean exit: remove the lease so the coordinator doesn't wait a
+    // full TTL to learn we're gone (an error path skips this — Drop
+    // only halts the thread — leaving the lease to expire, which is
+    // the conservative teardown for a worker in an unknown state)
+    beat.stop();
+    Ok(sum)
+}

@@ -52,29 +52,42 @@ pub struct CampaignMeta {
     pub n_jobs: usize,
     /// Config fingerprint (plus the CLI's stand-in marker).
     pub config: u64,
+    /// Distributed campaigns (DESIGN.md §13): the worker id owning this
+    /// per-worker journal. `None` for single-host journals — and the
+    /// key is then *omitted* from the header line, so every journal
+    /// written before workers existed still parses and resumes
+    /// byte-identically.
+    pub worker: Option<String>,
 }
 
 impl CampaignMeta {
-    fn to_json(&self) -> Json {
-        obj(vec![(
-            "campaign",
-            obj(vec![
-                ("suite", Json::Str(self.suite.clone())),
-                ("seed", Json::Num(self.campaign_seed as f64)),
-                ("n_jobs", Json::Num(self.n_jobs as f64)),
-                ("config", Json::Str(format!("0x{:016x}", self.config))),
-                ("v", Json::Num(1.0)),
-            ]),
-        )])
+    /// Header-line JSON (public: the shared-dir campaign marker reuses
+    /// the exact same encoding, `campaign::dist::claim`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("seed", Json::Num(self.campaign_seed as f64)),
+            ("n_jobs", Json::Num(self.n_jobs as f64)),
+            ("config", Json::Str(format!("0x{:016x}", self.config))),
+        ];
+        if let Some(w) = &self.worker {
+            fields.push(("worker", Json::Str(w.clone())));
+        }
+        fields.push(("v", Json::Num(1.0)));
+        obj(vec![("campaign", obj(fields))])
     }
 
-    fn from_json(v: &Json) -> Result<CampaignMeta> {
+    pub fn from_json(v: &Json) -> Result<CampaignMeta> {
         let c = v.get("campaign")?;
         Ok(CampaignMeta {
             suite: c.get("suite")?.as_str()?.to_string(),
             campaign_seed: c.get("seed")?.as_u64()?,
             n_jobs: c.get("n_jobs")?.as_u64()? as usize,
             config: hex_u64(c.get("config")?.as_str()?)?,
+            worker: match c.get("worker") {
+                Ok(w) => Some(w.as_str()?.to_string()),
+                Err(_) => None,
+            },
         })
     }
 }
@@ -212,11 +225,17 @@ impl JobRecord {
     }
 }
 
-fn hex_u64(s: &str) -> Result<u64> {
+pub(crate) fn hex_u64(s: &str) -> Result<u64> {
     let digits = s
         .strip_prefix("0x")
         .ok_or_else(|| anyhow!("u64 field wants 0x-hex, got '{s}'"))?;
     Ok(u64::from_str_radix(digits, 16)?)
+}
+
+/// A parsed non-header journal line — job record or telemetry.
+enum Parsed {
+    Rec(JobRecord),
+    Tel(JobTelemetry),
 }
 
 /// `null` ↔ NaN (the JSON writer emits NaN as null).
@@ -318,10 +337,6 @@ impl Journal {
         // Records and telemetry lines parse independently: a telemetry
         // line whose job record got lost can't exist (the record is
         // flushed first), and the scheduler re-pairs them by id.
-        enum Parsed {
-            Rec(JobRecord),
-            Tel(JobTelemetry),
-        }
         let mut records = Vec::new();
         let mut tels = Vec::new();
         let mut keep = 0usize; // byte length of the valid prefix
@@ -348,17 +363,19 @@ impl Journal {
                         got == *meta,
                         "journal {} belongs to a different campaign \
                          (journal: suite '{}' seed {} n_jobs {} config \
-                         0x{:016x}; this run: suite '{}' seed {} \
-                         n_jobs {} config 0x{:016x})",
+                         0x{:016x} worker {:?}; this run: suite '{}' \
+                         seed {} n_jobs {} config 0x{:016x} worker {:?})",
                         path.display(),
                         got.suite,
                         got.campaign_seed,
                         got.n_jobs,
                         got.config,
+                        got.worker,
                         meta.suite,
                         meta.campaign_seed,
                         meta.n_jobs,
                         meta.config,
+                        meta.worker,
                     ),
                     Err(e) if is_last => {
                         eprintln!(
@@ -487,6 +504,66 @@ impl Journal {
     }
 }
 
+/// Read a journal **without** opening it for append — the coordinator's
+/// merge path over per-worker journals (DESIGN.md §13). The owning
+/// worker may still be writing, so this never truncates or repairs the
+/// file: a torn *final* line is simply ignored (the worker truncates it
+/// away on its own next [`Journal::resume`]), while a malformed line
+/// anywhere else is corruption and errors out, mirroring the resume
+/// semantics. Returns `Ok(None)` while the file is empty or holds only
+/// a torn header — the owner created it but the header flush hasn't
+/// landed yet, i.e. "not ready", not "corrupt".
+pub fn read_records(
+    path: &Path,
+) -> Result<Option<(CampaignMeta, Vec<JobRecord>, Vec<JobTelemetry>)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    let lines: Vec<&str> = text.split_inclusive('\n').collect();
+    let mut meta: Option<CampaignMeta> = None;
+    let mut records = Vec::new();
+    let mut tels = Vec::new();
+    for (i, line) in lines.iter().copied().enumerate() {
+        let is_last = i + 1 == lines.len();
+        let trimmed = line.trim_end_matches('\n');
+        if trimmed.is_empty() {
+            continue;
+        }
+        if meta.is_none() {
+            match Json::parse(trimmed).and_then(|v| CampaignMeta::from_json(&v))
+            {
+                Ok(m) => meta = Some(m),
+                // lone torn header: the in-flight create — not ready yet
+                Err(_) if is_last => return Ok(None),
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("corrupt journal header in {}", path.display())
+                    })
+                }
+            }
+        } else {
+            match Json::parse(trimmed).and_then(|v| {
+                if v.get("telemetry").is_ok() {
+                    JobTelemetry::from_json(&v).map(Parsed::Tel)
+                } else {
+                    JobRecord::from_json(&v).map(Parsed::Rec)
+                }
+            }) {
+                Ok(Parsed::Rec(r)) => records.push(r),
+                Ok(Parsed::Tel(t)) => tels.push(t),
+                // torn in-flight append: ignore, never repair — the
+                // file belongs to a live writer
+                Err(_) if is_last => break,
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("corrupt journal line in {}", path.display())
+                    })
+                }
+            }
+        }
+    }
+    Ok(meta.map(|m| (m, records, tels)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -536,6 +613,7 @@ mod tests {
             campaign_seed: 42,
             n_jobs: 2,
             config: 0,
+            worker: None,
         };
         let j = Journal::create(&path, &meta).unwrap();
         j.append(&rec("a|hts|s0")).unwrap();
@@ -559,6 +637,7 @@ mod tests {
             campaign_seed: 1,
             n_jobs: 3,
             config: 0,
+            worker: None,
         };
         let j = Journal::create(&path, &meta).unwrap();
         j.append(&rec("a|hts|s0")).unwrap();
@@ -592,6 +671,7 @@ mod tests {
             campaign_seed: 1,
             n_jobs: 3,
             config: 0,
+            worker: None,
         };
         let j = Journal::create(&path, &meta).unwrap();
         drop(j);
@@ -625,6 +705,7 @@ mod tests {
             campaign_seed: 1,
             n_jobs: 3,
             config: 0,
+            worker: None,
         };
         let (j, records, _) = Journal::resume(&path, &meta).unwrap();
         assert!(records.is_empty());
@@ -653,6 +734,7 @@ mod tests {
             campaign_seed: 7,
             n_jobs: 2,
             config: 0,
+            worker: None,
         };
         let mut rep = TelemetryReport::default();
         rep.counters.insert("steps_total".into(), u64::MAX);
@@ -690,6 +772,7 @@ mod tests {
             campaign_seed: 1,
             n_jobs: 3,
             config: 0,
+            worker: None,
         };
         let j = Journal::create(&path, &meta).unwrap();
         drop(j);
@@ -699,6 +782,82 @@ mod tests {
         writeln!(f, "{}", rec("a|hts|s0").to_json().to_string()).unwrap();
         drop(f);
         assert!(Journal::resume(&path, &meta).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_meta_roundtrips_and_separates_journals() {
+        // worker None omits the key — single-host headers are
+        // byte-identical to every pre-dist journal
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 1,
+            n_jobs: 2,
+            config: 7,
+            worker: None,
+        };
+        let line = meta.to_json().to_string();
+        assert!(!line.contains("worker"), "{line}");
+        assert_eq!(CampaignMeta::from_json(&Json::parse(&line).unwrap())
+            .unwrap(), meta);
+
+        let with = CampaignMeta { worker: Some("w3".into()), ..meta.clone() };
+        let line = with.to_json().to_string();
+        assert!(line.contains("\"worker\":\"w3\""), "{line}");
+        assert_eq!(CampaignMeta::from_json(&Json::parse(&line).unwrap())
+            .unwrap(), with);
+
+        // a worker journal never resumes as another worker's (or as the
+        // single-host journal): the meta equality covers the worker id
+        let dir = std::env::temp_dir().join("htsrl_journal_worker");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("j.jsonl");
+        let j = Journal::create(&path, &with).unwrap();
+        drop(j);
+        assert!(Journal::resume(&path, &meta).is_err());
+        let other = CampaignMeta { worker: Some("w4".into()), ..meta.clone() };
+        assert!(Journal::resume(&path, &other).is_err());
+        assert!(Journal::resume(&path, &with).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_records_never_repairs_a_live_journal() {
+        let dir = std::env::temp_dir().join("htsrl_journal_read");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("j.jsonl");
+        let meta = CampaignMeta {
+            suite: "catch_wind".into(),
+            campaign_seed: 5,
+            n_jobs: 3,
+            config: 0,
+            worker: Some("a".into()),
+        };
+        let j = Journal::create(&path, &meta).unwrap();
+        j.append(&rec("a|hts|s0")).unwrap();
+        drop(j);
+        // a torn in-flight append is ignored AND left in place — the
+        // owning worker repairs its own file
+        use std::io::Write;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"v\":1,\"id\":\"torn").unwrap();
+        drop(f);
+        let before = std::fs::read_to_string(&path).unwrap();
+        let (got, records, tels) =
+            read_records(&path).unwrap().expect("header is whole");
+        assert_eq!(got, meta);
+        assert_eq!(records.len(), 1);
+        assert!(tels.is_empty());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
+
+        // empty file / lone torn header: "not ready", not corrupt
+        std::fs::write(&path, "").unwrap();
+        assert!(read_records(&path).unwrap().is_none());
+        std::fs::write(&path, "{\"campaign\":{\"su").unwrap();
+        assert!(read_records(&path).unwrap().is_none());
+        // ... but a bad line in the middle is still corruption
+        std::fs::write(&path, "{\"campaign\":{\"su\nmore\n").unwrap();
+        assert!(read_records(&path).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

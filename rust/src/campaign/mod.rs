@@ -19,13 +19,20 @@
 //! * [`report`] — aggregate per-job records into one cross-spec
 //!   report: jobs CSV, per-(spec, method) summary CSV with
 //!   mean ± bootstrap-CI over seeds, and a markdown table.
+//! * [`dist`] — the same campaign across a worker fleet: atomic claims
+//!   over a shared directory, per-worker journals and heartbeat
+//!   leases, a coordinator that merges/re-issues and renders the same
+//!   report (DESIGN.md §13).
 //!
 //! **Jobs-invariance** (the subsystem's acceptance obligation): per-job
 //! trajectory signatures and the rendered report are byte-identical
 //! for every `--jobs` value, every scheduling order, and across a
 //! kill/`--resume` cycle — pinned in `rust/tests/campaign.rs` and
-//! argued in DESIGN.md §10.
+//! argued in DESIGN.md §10. The dist layer extends it to
+//! worker-count-invariance: the same bytes for any fleet size,
+//! including fleets with killed-and-re-issued workers.
 
+pub mod dist;
 pub mod journal;
 pub mod plan;
 pub mod report;
@@ -38,6 +45,6 @@ pub use plan::{
 };
 pub use report::{render, write_files, CampaignReport};
 pub use scheduler::{
-    coordinator_runner, run_campaign, standin_hub_runner, CampaignOutcome,
-    Runner,
+    coordinator_runner, execute_job, run_campaign, standin_hub_runner,
+    CampaignOutcome, JobCtx, JobOutcome, Runner,
 };

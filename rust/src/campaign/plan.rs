@@ -211,6 +211,16 @@ pub struct CampaignPlan {
     pub jobs: Vec<Job>,
 }
 
+impl CampaignPlan {
+    /// Plan index of a job id — the merge key distributed workers and
+    /// the coordinator agree on (`campaign::dist`). `None` for ids this
+    /// plan never produced, which is how a foreign journal record is
+    /// detected before it can be misattributed.
+    pub fn index_of(&self, id: &str) -> Option<usize> {
+        self.jobs.iter().position(|j| j.id == id)
+    }
+}
+
 /// Canonical job id: `spec_str|method|s<seed_index>`. Spec strings
 /// cannot contain `|` (the registry grammar is
 /// `family[/scenario][?key=val,...]`), so the id is unambiguous.

@@ -5,8 +5,14 @@
 //! pure function of the plan — the half of the jobs-invariance
 //! obligation the report layer owns (the scheduler owns the other
 //! half: records land at their plan index regardless of worker count
-//! or completion order). `rust/tests/campaign.rs` compares these
-//! strings byte-for-byte across `--jobs` values and across a resume.
+//! or completion order). The distributed layer (`campaign::dist`)
+//! leans on the same purity: its coordinator merges per-worker
+//! journals into an ordinary [`CampaignOutcome`] and calls this
+//! renderer unchanged, which is the whole argument for the fleet's
+//! byte-identical artifacts — there is no "distributed report" code
+//! to diverge. `rust/tests/campaign.rs` compares these strings
+//! byte-for-byte across `--jobs` values, across a resume, and across
+//! worker fleets (including one with a killed-and-re-issued worker).
 //!
 //! Three artifacts per campaign:
 //! * `campaign_<suite>_jobs.csv` — one row per planned job

@@ -1,18 +1,27 @@
 //! The campaign worker pool (DESIGN.md §10).
 //!
 //! Runs a [`CampaignPlan`]'s jobs across `--jobs N` worker threads.
-//! Each worker claims the next un-run plan index from an atomic
-//! counter, builds the job's `RunConfig` (a pure function of the plan),
-//! invokes the *runner*, journals the finished record, and stores it at
-//! the job's plan index. Because every input a job sees was fixed at
-//! plan time, the worker count and the claim order can only change
-//! *when* a job runs, never *what* it computes — the jobs-invariance
-//! property pinned in `rust/tests/campaign.rs`.
+//! Each worker claims the next un-run plan index from a
+//! [`ClaimSource`] (here an atomic counter; the distributed path in
+//! `campaign::dist` plugs a shared-directory claim protocol behind the
+//! same trait), builds the job's `RunConfig` (a pure function of the
+//! plan), invokes the *runner*, journals the finished record, and
+//! stores it at the job's plan index. Because every input a job sees
+//! was fixed at plan time, the worker count and the claim order can
+//! only change *when* a job runs, never *what* it computes — the
+//! jobs-invariance property pinned in `rust/tests/campaign.rs`, and
+//! the base of the dist layer's worker-count-invariance (DESIGN.md
+//! §13).
 //!
 //! The runner is pluggable: the CLI passes `coordinator::run`
 //! ([`coordinator_runner`]); tests, benches, and artifact-less CI pass
 //! the deterministic stand-in fleet
 //! (`executor::harness::run_standin_job` — doc-hidden test plumbing).
+//!
+//! [`execute_job`] is the single-job core shared with the distributed
+//! worker: budget checks, pool reservation, run, journal, curve CSV.
+//! Keeping one implementation is what makes "same job, any host" more
+//! than a slogan — there is no second code path to drift.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -20,6 +29,7 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
+use crate::campaign::dist::{ClaimSource, CounterClaims, StepPool};
 use crate::campaign::journal::{JobRecord, JobTelemetry, Journal};
 use crate::campaign::plan::{self, CampaignConfig, CampaignPlan, Job, SharePolicy};
 use crate::coordinator::RunConfig;
@@ -75,6 +85,103 @@ impl CampaignOutcome {
     }
 }
 
+/// Everything a single job execution needs, shared by the in-process
+/// pool below and the distributed worker (`campaign::dist::worker`).
+pub struct JobCtx<'a> {
+    pub cfg: &'a CampaignConfig,
+    pub runner: &'a Runner<'a>,
+    pub journal: Option<&'a Journal>,
+    /// The shared step pool (first-exhausted only) — in-process atomic
+    /// or fleet-wide counter file, behind the same trait.
+    pub pool: Option<&'a dyn StepPool>,
+    pub watch: &'a Stopwatch,
+    pub curves_out: Option<&'a Path>,
+}
+
+/// The terminal fate of one executed job.
+#[derive(Debug)]
+pub enum JobOutcome {
+    Ran(JobRecord, Option<JobTelemetry>),
+    /// Budget-skipped, with the deterministic reason string.
+    Skipped(String),
+}
+
+/// Run one claimed job end to end: budget checks, pool reservation,
+/// the runner itself, refund/overshoot accounting, journal append(s),
+/// and the optional curve CSV. Errors abort the campaign (the caller
+/// decides how); skips are terminal and deterministic in their reason.
+pub fn execute_job(ctx: &JobCtx<'_>, job: &Job) -> Result<JobOutcome> {
+    if let Some(limit) = ctx.cfg.budget.total_wall_s {
+        if ctx.watch.elapsed_s() >= limit {
+            return Ok(JobOutcome::Skipped(
+                "campaign wall-clock budget exhausted".to_string(),
+            ));
+        }
+    }
+    let mut rc = plan::job_run_config(ctx.cfg, job);
+    let mut granted = None;
+    if let Some(pool) = ctx.pool {
+        // per-job ask is validated at plan time
+        let want = rc.stop.max_steps.expect("plan::expand checked");
+        let take = pool.reserve(want);
+        if take == 0 {
+            return Ok(JobOutcome::Skipped(
+                "campaign step budget exhausted".to_string(),
+            ));
+        }
+        rc.stop.max_steps = Some(take);
+        granted = Some(take);
+    }
+    let report = (ctx.runner)(job, &rc)
+        .with_context(|| format!("campaign job '{}' failed", job.id))?;
+    if let (Some(pool), Some(take)) = (ctx.pool, granted) {
+        // drivers stop at batch granularity: return unused grant to
+        // the pool, and charge any overshoot so later jobs shrink
+        // instead of the cap silently inflating
+        if report.steps < take {
+            pool.refund(take - report.steps);
+        } else {
+            pool.reserve(report.steps - take);
+        }
+    }
+    let rec = JobRecord::from_report(job, &report, &ctx.cfg.rt_targets);
+    if let Some(j) = ctx.journal {
+        j.append(&rec).with_context(|| {
+            format!("journaling campaign job '{}'", job.id)
+        })?;
+    }
+    // Telemetry rides as its own journal line, *after* the job record
+    // — resume re-pairs the two by id, and a crash between the lines
+    // loses only diagnostics.
+    let mut tel = None;
+    if let Some(rep) = &report.telemetry {
+        let t = JobTelemetry { id: job.id.clone(), report: rep.clone() };
+        if let Some(j) = ctx.journal {
+            j.append_telemetry(&t).with_context(|| {
+                format!("journaling telemetry for job '{}'", job.id)
+            })?;
+        }
+        tel = Some(t);
+    }
+    if let Some(dir) = ctx.curves_out {
+        if !report.episodes.is_empty() {
+            let stem = format!(
+                "curve_{}_{}_s{}",
+                job.method.name(),
+                crate::metrics::report::sanitize_spec_name(
+                    &job.spec.spec_str(),
+                ),
+                job.seed_index,
+            );
+            crate::metrics::report::write_curve_csv(dir, &stem, &report, 200)
+                .with_context(|| {
+                    format!("writing curve for job '{}'", job.id)
+                })?;
+        }
+    }
+    Ok(JobOutcome::Ran(rec, tel))
+}
+
 /// Run a campaign. `done` holds journal-replayed records from
 /// [`Journal::resume`]; their jobs are skipped and the records reused
 /// verbatim, which is what makes a resumed report byte-identical to an
@@ -117,7 +224,7 @@ pub fn run_campaign(
     if n_workers == 0 {
         n_workers = 1;
     }
-    let next = AtomicUsize::new(0);
+    let claims = CounterClaims::new(plan.jobs.len());
     let abort = AtomicBool::new(false);
     let resumed = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<JobRecord>>> =
@@ -134,20 +241,28 @@ pub fn run_campaign(
             _ => None,
         };
     let watch = Stopwatch::new();
+    let ctx = JobCtx {
+        cfg,
+        runner,
+        journal,
+        pool: steps_pool.as_ref().map(|p| p as &dyn StepPool),
+        watch: &watch,
+        curves_out,
+    };
 
     let worker = |_w: usize| -> Result<()> {
         loop {
             if abort.load(Ordering::Relaxed) {
                 return Ok(());
             }
-            let i = next.fetch_add(1, Ordering::Relaxed);
-            let Some(job) = plan.jobs.get(i) else { return Ok(()) };
+            let Some(i) = claims.claim_next()? else { return Ok(()) };
+            let job = &plan.jobs[i];
             if let Some(rec) = by_id.get(job.id.as_str()) {
                 if let Some(pool) = &steps_pool {
                     // a journaled job's consumption still debits the
                     // shared pool — otherwise --resume would refill the
                     // --total-steps budget and overspend it
-                    reserve_steps(pool, rec.steps);
+                    pool.reserve(rec.steps);
                 }
                 results.lock().unwrap()[i] = Some((*rec).clone());
                 tel_results.lock().unwrap()[i] =
@@ -155,103 +270,23 @@ pub fn run_campaign(
                 resumed.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
-            if let Some(limit) = cfg.budget.total_wall_s {
-                if watch.elapsed_s() >= limit {
-                    skipped.lock().unwrap().push((
-                        i,
-                        "campaign wall-clock budget exhausted".to_string(),
-                    ));
-                    continue;
+            match execute_job(&ctx, job) {
+                Ok(JobOutcome::Ran(rec, tel)) => {
+                    if let Some(t) = tel {
+                        tel_results.lock().unwrap()[i] = Some(t);
+                    }
+                    results.lock().unwrap()[i] = Some(rec);
                 }
-            }
-            let mut rc = plan::job_run_config(cfg, job);
-            let mut granted = None;
-            if let Some(pool) = &steps_pool {
-                // per-job ask is validated at plan time
-                let want = rc.stop.max_steps.expect("plan::expand checked");
-                let take = reserve_steps(pool, want);
-                if take == 0 {
-                    skipped.lock().unwrap().push((
-                        i,
-                        "campaign step budget exhausted".to_string(),
-                    ));
-                    continue;
+                Ok(JobOutcome::Skipped(reason)) => {
+                    skipped.lock().unwrap().push((i, reason));
                 }
-                rc.stop.max_steps = Some(take);
-                granted = Some(take);
-            }
-            let report = match runner(job, &rc) {
-                Ok(r) => r,
                 Err(e) => {
                     // Stop claiming new jobs; journaled work survives
                     // for --resume.
                     abort.store(true, Ordering::Relaxed);
-                    return Err(e).with_context(|| {
-                        format!("campaign job '{}' failed", job.id)
-                    });
-                }
-            };
-            if let (Some(pool), Some(take)) = (&steps_pool, granted) {
-                // drivers stop at batch granularity: return unused
-                // grant to the pool, and charge any overshoot so later
-                // jobs shrink instead of the cap silently inflating
-                if report.steps < take {
-                    pool.fetch_add(take - report.steps, Ordering::Relaxed);
-                } else {
-                    reserve_steps(pool, report.steps - take);
+                    return Err(e);
                 }
             }
-            let rec = JobRecord::from_report(job, &report, &cfg.rt_targets);
-            if let Some(j) = journal {
-                if let Err(e) = j.append(&rec) {
-                    abort.store(true, Ordering::Relaxed);
-                    return Err(e).with_context(|| {
-                        format!("journaling campaign job '{}'", job.id)
-                    });
-                }
-            }
-            // Telemetry rides as its own journal line, *after* the job
-            // record — resume re-pairs the two by id, and a crash
-            // between the lines loses only diagnostics.
-            if let Some(rep) = &report.telemetry {
-                let t = JobTelemetry {
-                    id: job.id.clone(),
-                    report: rep.clone(),
-                };
-                if let Some(j) = journal {
-                    if let Err(e) = j.append_telemetry(&t) {
-                        abort.store(true, Ordering::Relaxed);
-                        return Err(e).with_context(|| {
-                            format!(
-                                "journaling telemetry for job '{}'",
-                                job.id
-                            )
-                        });
-                    }
-                }
-                tel_results.lock().unwrap()[i] = Some(t);
-            }
-            if let Some(dir) = curves_out {
-                if !report.episodes.is_empty() {
-                    let stem = format!(
-                        "curve_{}_{}_s{}",
-                        job.method.name(),
-                        crate::metrics::report::sanitize_spec_name(
-                            &job.spec.spec_str(),
-                        ),
-                        job.seed_index,
-                    );
-                    if let Err(e) = crate::metrics::report::write_curve_csv(
-                        dir, &stem, &report, 200,
-                    ) {
-                        abort.store(true, Ordering::Relaxed);
-                        return Err(e).with_context(|| {
-                            format!("writing curve for job '{}'", job.id)
-                        });
-                    }
-                }
-            }
-            results.lock().unwrap()[i] = Some(rec);
         }
     };
 
@@ -279,29 +314,6 @@ pub fn run_campaign(
         skipped,
         resumed: resumed.into_inner(),
     })
-}
-
-/// Atomically reserve up to `want` steps from the shared pool; returns
-/// the granted amount (0 = pool dry).
-fn reserve_steps(pool: &AtomicU64, want: u64) -> u64 {
-    loop {
-        let cur = pool.load(Ordering::Relaxed);
-        let take = want.min(cur);
-        if take == 0 {
-            return 0;
-        }
-        if pool
-            .compare_exchange(
-                cur,
-                cur - take,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            )
-            .is_ok()
-        {
-            return take;
-        }
-    }
 }
 
 #[cfg(test)]

@@ -292,7 +292,10 @@ pub struct HubGroup {
 /// actor fleet batching across whatever mix of jobs is in flight.
 /// Column assignment depends only on the plan, so per-job results are
 /// byte-identical across `--jobs` values and resumes (a resume-skipped
-/// job simply leaves its window silent).
+/// job simply leaves its window silent). Distributed workers
+/// (`campaign::dist`) build their hub from the *full* plan too — each
+/// worker process hosts a whole-plan hub and simply never drives the
+/// windows of jobs other workers claimed, so claiming shifts nothing.
 pub struct StandInHub {
     groups: Vec<HubGroup>,
     /// job id → (group index, first mailbox column)

@@ -43,6 +43,11 @@ fn usage() -> &'static str {
        --campaign-wall-s S   --algo a2c --async-algo vtrace --seed 1\n\
        --standin (force the artifact-free stand-in fleet; auto when\n\
        artifacts are absent)\n\
+       fleet: --worker <id> --shared <dir> [--lease-ttl S]\n\
+       [--heartbeat-s S] [--max-jobs N] [--die-after N (fault hook)]\n\
+       | --coordinate --shared <dir> [--lease-ttl S] [--poll-s S]\n\
+       (merge worker journals, re-issue expired leases, write the\n\
+       same report a single-host run would)\n\
      bench flags: --check (gate vs committed baseline; nonzero exit on\n\
        significant regression) --update-baseline --quick\n\
        --baseline BENCH_baseline.json --tolerance 0.2\n\
@@ -229,20 +234,26 @@ fn cmd_campaign(a: &Args) -> Result<()> {
         // records from ever mixing in one journal
         config: cfg.fingerprint()
             ^ if standin { 0x7374_616e_6469_6e21 } else { 0 },
+        worker: None,
     };
-    let journal_path = out.join(format!("campaign_{}.jsonl", cfg.suite));
-    let (journal, done, done_tel) = if a.bool("resume") {
-        campaign::Journal::resume(&journal_path, &meta)?
-    } else {
-        (
-            campaign::Journal::create(&journal_path, &meta)?,
-            Vec::new(),
-            Vec::new(),
-        )
-    };
-    if cfg.telemetry {
-        journal.enable_telemetry();
+    // Distributed modes (DESIGN.md §13): `--worker <id> --shared <dir>`
+    // claims jobs from a shared campaign directory; `--coordinate
+    // --shared <dir>` merges the fleet's journals, re-issues dead
+    // workers' jobs, and renders the same report a single-host run
+    // would.
+    let worker_id = a.str_opt("worker").map(|s| s.to_string());
+    let do_coordinate = a.bool("coordinate");
+    if worker_id.is_some() && do_coordinate {
+        bail!("--worker and --coordinate are mutually exclusive");
     }
+    let shared = if worker_id.is_some() || do_coordinate {
+        let dir = a.str_opt("shared").ok_or_else(|| {
+            anyhow!("--worker/--coordinate need --shared <dir>")
+        })?;
+        Some(campaign::dist::SharedDir::new(PathBuf::from(dir)))
+    } else {
+        None
+    };
     let real = campaign::coordinator_runner();
     // Stand-in campaigns share one actor fleet per model config across
     // concurrent jobs (ISSUE 6): every job gets a static mailbox-column
@@ -267,6 +278,99 @@ fn cmd_campaign(a: &Args) -> Result<()> {
         Some(f) => f,
         None => &real,
     };
+    let curves = out.join("curves");
+
+    if let Some(id) = worker_id {
+        let shared = shared.expect("checked above");
+        let mut wopts = campaign::dist::WorkerOpts::new(id);
+        wopts.lease_ttl_s = a.f64_or("lease-ttl", 30.0)?;
+        wopts.heartbeat_s = a.f64_or("heartbeat-s", 0.0)?;
+        wopts.max_jobs =
+            a.str_opt("max-jobs").map(|s| s.parse()).transpose()?;
+        // fault-injection hook: abandon the lease after N jobs, as a
+        // kill -9 mid-claim would
+        wopts.die_after_jobs =
+            a.str_opt("die-after").map(|s| s.parse()).transpose()?;
+        eprintln!(
+            "campaign '{}': worker '{}' joining fleet at {} ({} jobs, \
+             lease TTL {:.1}s)",
+            cfg.suite,
+            wopts.worker,
+            shared.root().display(),
+            plan.jobs.len(),
+            wopts.lease_ttl_s,
+        );
+        let sum = campaign::dist::run_worker(
+            &cfg,
+            &plan,
+            runner,
+            &meta,
+            &shared,
+            &wopts,
+            Some(&curves),
+        )?;
+        drop(fake);
+        if let Some(h) = hub {
+            h.finish();
+        }
+        println!(
+            "worker '{}': {} ran, {} replayed, {} skipped{}",
+            wopts.worker,
+            sum.ran,
+            sum.replayed,
+            sum.skipped,
+            if sum.died { " (died: fault injection)" } else { "" },
+        );
+        return Ok(());
+    }
+    if do_coordinate {
+        let shared = shared.expect("checked above");
+        let mut copts = campaign::dist::CoordinatorOpts::new();
+        copts.lease_ttl_s = a.f64_or("lease-ttl", 30.0)?;
+        copts.poll_s = a.f64_or("poll-s", 0.5)?;
+        eprintln!(
+            "campaign '{}': coordinating fleet at {} ({} jobs, lease \
+             TTL {:.1}s)",
+            cfg.suite,
+            shared.root().display(),
+            plan.jobs.len(),
+            copts.lease_ttl_s,
+        );
+        let outcome = campaign::dist::coordinate(
+            &cfg,
+            &plan,
+            runner,
+            &meta,
+            &shared,
+            &copts,
+            Some(&curves),
+        )?;
+        drop(fake);
+        if let Some(h) = hub {
+            h.finish();
+        }
+        let report = campaign::render(&cfg, &plan, &outcome);
+        let files = campaign::write_files(&out, &cfg.suite, &report)?;
+        println!("{}", report.markdown);
+        for f in files {
+            println!("wrote {}", f.display());
+        }
+        return Ok(());
+    }
+
+    let journal_path = out.join(format!("campaign_{}.jsonl", cfg.suite));
+    let (journal, done, done_tel) = if a.bool("resume") {
+        campaign::Journal::resume(&journal_path, &meta)?
+    } else {
+        (
+            campaign::Journal::create(&journal_path, &meta)?,
+            Vec::new(),
+            Vec::new(),
+        )
+    };
+    if cfg.telemetry {
+        journal.enable_telemetry();
+    }
 
     eprintln!(
         "campaign '{}': {} jobs ({} specs x {} methods x {} seeds) on {} \
@@ -283,7 +387,6 @@ fn cmd_campaign(a: &Args) -> Result<()> {
             format!(", {} already journaled", done.len())
         }
     );
-    let curves = out.join("curves");
     let outcome = campaign::run_campaign(
         &cfg,
         &plan,

@@ -28,6 +28,12 @@
 //! are diagnostics, not deterministic outputs. Only structural
 //! invariants (e.g. `solo + lockstep + degraded == steps_total`) and
 //! the determinism obligations above are test targets.
+//!
+//! In a distributed campaign each worker journals its jobs' telemetry
+//! lines into its own journal; re-pairing them with their jobs across
+//! the merged journals (by job id, plan-indexed) happens in
+//! `campaign::dist::coordinator` — this layer never knows the fleet
+//! exists.
 
 use std::collections::BTreeMap;
 use std::time::Instant;

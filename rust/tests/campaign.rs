@@ -14,12 +14,24 @@
 //! * **resume** — a campaign killed mid-way (including a torn final
 //!   journal line) resumes, skips completed jobs, and produces a
 //!   byte-identical report.
+//! * **worker-count-invariance** (PR 8, DESIGN.md §13) — the same
+//!   campaign across a distributed worker fleet (shared-directory
+//!   claims, per-worker journals, coordinator merge), including a
+//!   fleet with an injected worker death and re-issue, renders all
+//!   four report artifacts byte-identical to the single-host run,
+//!   pinned to the same Python constants plus the 2-worker split
+//!   block.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
 
+use hts_rl::campaign::dist::{
+    coordinate, run_worker, ClaimSource, CoordinatorOpts, FileClaims,
+    SharedDir, WorkerOpts,
+};
 use hts_rl::campaign::{
-    self, CampaignConfig, CampaignMeta, Job, Journal,
+    self, CampaignConfig, CampaignMeta, CampaignPlan, Job, Journal,
 };
 use hts_rl::coordinator::{Method, RunConfig, StopCond};
 use hts_rl::executor::harness::run_standin_job;
@@ -200,6 +212,7 @@ fn campaign_resume_matches_uninterrupted_run() {
         campaign_seed: cfg.campaign_seed,
         n_jobs: plan.jobs.len(),
         config: cfg.fingerprint(),
+        worker: None,
     };
 
     // reference: one uninterrupted run
@@ -301,6 +314,7 @@ fn campaign_resume_matches_uninterrupted_run() {
         campaign_seed: cfg2.campaign_seed,
         n_jobs: plan.jobs.len(),
         config: cfg2.fingerprint(),
+        worker: None,
     };
     assert!(Journal::resume(&jpath, &meta2).is_err());
 
@@ -411,6 +425,7 @@ fn campaign_telemetry_merge_jobs_invariant_and_resumes() {
         campaign_seed: cfg1.campaign_seed,
         n_jobs: plan.jobs.len(),
         config: cfg1.fingerprint(),
+        worker: None,
     };
     let journal = Journal::create(&jpath, &meta).unwrap();
     journal.enable_telemetry();
@@ -493,4 +508,443 @@ fn campaign_writes_per_job_curves_via_shared_helper() {
         assert!(text.lines().count() >= 2, "curve has data rows");
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- distributed campaigns (PR 8, DESIGN.md §13) ------------------------
+
+/// The campaign identity every fleet participant presents: `worker:
+/// None` — workers stamp their own id into their journal copy.
+fn shared_meta(cfg: &CampaignConfig, plan: &CampaignPlan) -> CampaignMeta {
+    CampaignMeta {
+        suite: cfg.suite.clone(),
+        campaign_seed: cfg.campaign_seed,
+        n_jobs: plan.jobs.len(),
+        config: cfg.fingerprint(),
+        worker: None,
+    }
+}
+
+/// Stand-in runner with *deterministic* telemetry: the real stand-in
+/// fleet's counters are timing-dependent (parks, poll misses), so the
+/// byte-identity tests attach a synthetic report that is a pure
+/// function of the job — the merge/render plumbing under test cannot
+/// tell the difference.
+fn standin_tel(job: &Job, rc: &RunConfig) -> anyhow::Result<TrainReport> {
+    use hts_rl::telemetry::{Counter, TelemetryScope};
+    let mut quiet = rc.clone();
+    quiet.telemetry = false;
+    let mut r = run_standin_job(&quiet)?;
+    let mut scope = TelemetryScope::new(true);
+    scope.add(Counter::StepsTotal, (job.seed & 0xffff) + 1);
+    scope.add(Counter::SoloSteps, (job.seed & 0xffff) + 1);
+    scope.add(Counter::GrabBatches, 3);
+    scope.add(Counter::GrabColumns, 12);
+    r.telemetry = Some(scope.report());
+    Ok(r)
+}
+
+fn assert_same_artifacts(
+    a: &campaign::CampaignReport,
+    b: &campaign::CampaignReport,
+    what: &str,
+) {
+    assert_eq!(a.jobs_csv, b.jobs_csv, "{what}: jobs CSV diverged");
+    assert_eq!(a.summary_csv, b.summary_csv, "{what}: summary CSV diverged");
+    assert_eq!(a.markdown, b.markdown, "{what}: markdown diverged");
+    assert_eq!(
+        a.telemetry_csv, b.telemetry_csv,
+        "{what}: telemetry CSV diverged"
+    );
+}
+
+/// PR 8 acceptance: all four report artifacts are byte-identical
+/// across single-host `--jobs {1, 4}` and a concurrent 2-worker
+/// distributed run merged by the coordinator.
+#[test]
+fn dist_worker_count_invariance_all_artifacts() {
+    let mut cfg = team_cfg();
+    cfg.telemetry = true;
+    let plan = campaign::expand(&cfg).unwrap();
+    let out1 = campaign::run_campaign(
+        &cfg, &plan, &standin_tel, None, &[], &[], None,
+    )
+    .unwrap();
+    let rep1 = campaign::render(&cfg, &plan, &out1);
+    assert!(rep1.telemetry_csv.is_some(), "the fourth artifact exists");
+
+    let mut cfg4 = team_cfg();
+    cfg4.telemetry = true;
+    cfg4.jobs = 4;
+    let out4 = campaign::run_campaign(
+        &cfg4, &plan, &standin_tel, None, &[], &[], None,
+    )
+    .unwrap();
+    assert_same_artifacts(
+        &rep1,
+        &campaign::render(&cfg4, &plan, &out4),
+        "--jobs 4",
+    );
+
+    // the same campaign as a 2-worker fleet racing over one shared dir
+    let dir = tmp_dir("dist_wc");
+    let shared = SharedDir::new(&dir);
+    let meta = shared_meta(&cfg, &plan);
+    std::thread::scope(|s| {
+        for id in ["a", "b"] {
+            let (shared, meta, cfg, plan) = (&shared, &meta, &cfg, &plan);
+            s.spawn(move || {
+                let mut o = WorkerOpts::new(id);
+                o.lease_ttl_s = 10.0;
+                run_worker(cfg, plan, &standin_tel, meta, shared, &o, None)
+                    .unwrap();
+            });
+        }
+    });
+    let copts = CoordinatorOpts {
+        lease_ttl_s: 10.0,
+        poll_s: 0.02,
+        run_stragglers: true,
+    };
+    let outd =
+        coordinate(&cfg, &plan, &standin_tel, &meta, &shared, &copts, None)
+            .unwrap();
+    assert_eq!(
+        out1.records, outd.records,
+        "merged records diverged from single-host"
+    );
+    assert_same_artifacts(
+        &rep1,
+        &campaign::render(&cfg, &plan, &outd),
+        "2-worker fleet",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR 8 acceptance, fault half: a worker killed mid-claim (lease
+/// abandoned, claim held, record never journaled) is detected by TTL
+/// expiry; its job is re-issued and the final artifacts are
+/// byte-identical to the uninterrupted run.
+#[test]
+fn dist_dead_worker_reissue_matches_uninterrupted() {
+    let mut cfg = team_cfg();
+    cfg.telemetry = true;
+    let plan = campaign::expand(&cfg).unwrap();
+    let out_ref = campaign::run_campaign(
+        &cfg, &plan, &standin_tel, None, &[], &[], None,
+    )
+    .unwrap();
+    let rep_ref = campaign::render(&cfg, &plan, &out_ref);
+
+    let dir = tmp_dir("dist_dead");
+    let shared = SharedDir::new(&dir);
+    let meta = shared_meta(&cfg, &plan);
+    // worker a runs one job, then dies holding its second claim
+    let mut oa = WorkerOpts::new("a");
+    oa.lease_ttl_s = 0.2;
+    oa.heartbeat_s = 0.05;
+    oa.die_after_jobs = Some(1);
+    let sa =
+        run_worker(&cfg, &plan, &standin_tel, &meta, &shared, &oa, None)
+            .unwrap();
+    assert!(sa.died, "the fault hook must fire");
+    assert_eq!(sa.ran, 1);
+    // worker b drains what it can — the dead worker's claim is not its
+    // to touch, so exactly two jobs remain for it
+    let mut ob = WorkerOpts::new("b");
+    ob.lease_ttl_s = 0.2;
+    ob.heartbeat_s = 0.05;
+    let sb =
+        run_worker(&cfg, &plan, &standin_tel, &meta, &shared, &ob, None)
+            .unwrap();
+    assert_eq!(sb.ran, 2, "peers never steal a held claim");
+    // the coordinator waits out the TTL, expires a's lease, re-issues
+    // the orphaned job, and (nobody else alive) runs it itself
+    let copts = CoordinatorOpts {
+        lease_ttl_s: 0.2,
+        poll_s: 0.02,
+        run_stragglers: true,
+    };
+    let outd =
+        coordinate(&cfg, &plan, &standin_tel, &meta, &shared, &copts, None)
+            .unwrap();
+    assert_eq!(
+        out_ref.records, outd.records,
+        "re-issued job produced different bytes"
+    );
+    assert_same_artifacts(
+        &rep_ref,
+        &campaign::render(&cfg, &plan, &outd),
+        "dead-worker re-issue",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the claim protocol under contention — N in-process
+/// claimer threads over one shared directory; every plan index is
+/// claimed by exactly one claimer, none twice, none dropped.
+#[test]
+fn dist_concurrent_claims_each_index_exactly_once() {
+    const N: usize = 120;
+    let dir = tmp_dir("dist_claims");
+    let shared = SharedDir::new(&dir);
+    shared.ensure_layout().unwrap();
+    let per: Vec<Vec<usize>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let shared = &shared;
+                s.spawn(move || {
+                    let src = FileClaims::new(shared, format!("w{t}"), N);
+                    let mut got = Vec::new();
+                    while let Some(i) = src.claim_next().unwrap() {
+                        got.push(i);
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut all: Vec<usize> = per.concat();
+    all.sort_unstable();
+    assert_eq!(
+        all,
+        (0..N).collect::<Vec<_>>(),
+        "every index claimed exactly once across 8 racing claimers"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: crash debris — zero-length and half-written claim files,
+/// a claim whose owner has only a zero-length (torn) lease, a stranded
+/// `.tmp` from an interrupted atomic rename — recovers cleanly, and
+/// the recovered campaign's artifacts match the uninterrupted run
+/// (the PR 5 torn-journal posture applied to the claim protocol).
+#[test]
+fn dist_torn_claim_and_lease_artifacts_recover() {
+    let cfg = team_cfg();
+    let plan = campaign::expand(&cfg).unwrap();
+    let out_ref =
+        campaign::run_campaign(&cfg, &plan, &standin, None, &[], &[], None)
+            .unwrap();
+    let rep_ref = campaign::render(&cfg, &plan, &out_ref);
+
+    let dir = tmp_dir("dist_torn");
+    let shared = SharedDir::new(&dir);
+    shared.ensure_layout().unwrap();
+    std::fs::write(shared.claim_path(0), "").unwrap();
+    std::fs::write(shared.claim_path(1), "{\"v\":1,\"ind").unwrap();
+    assert!(shared.try_claim(2, "ghost").unwrap());
+    std::fs::write(shared.lease_path("ghost"), "").unwrap();
+    std::fs::write(dir.join("leases").join("ghost.lease.x.tmp"), "junk")
+        .unwrap();
+    // age the debris past the TTL so expiry can fire
+    std::thread::sleep(Duration::from_millis(120));
+    let meta = shared_meta(&cfg, &plan);
+    let copts = CoordinatorOpts {
+        lease_ttl_s: 0.05,
+        poll_s: 0.01,
+        run_stragglers: true,
+    };
+    let outd = coordinate(&cfg, &plan, &standin, &meta, &shared, &copts, None)
+        .unwrap();
+    assert_eq!(out_ref.records, outd.records);
+    assert_same_artifacts(
+        &rep_ref,
+        &campaign::render(&cfg, &plan, &outd),
+        "torn-artifact recovery",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the `--resume` fingerprint check covers the fleet — a
+/// worker (old id or new) arriving under a changed plan/budget dies at
+/// the campaign marker; its own journal header rejects the changed
+/// meta; and the coordinator refuses a journal filed under the wrong
+/// worker name.
+#[test]
+fn dist_worker_rejects_changed_campaign_config() {
+    let cfg = team_cfg();
+    let plan = campaign::expand(&cfg).unwrap();
+    let dir = tmp_dir("dist_fpr");
+    let shared = SharedDir::new(&dir);
+    let meta = shared_meta(&cfg, &plan);
+    let mut oa = WorkerOpts::new("a");
+    oa.max_jobs = Some(1);
+    run_worker(&cfg, &plan, &standin, &meta, &shared, &oa, None).unwrap();
+
+    // same suite/seed/grid, different per-job budget: new fingerprint
+    let mut cfg2 = team_cfg();
+    cfg2.stop = StopCond::updates(8);
+    let plan2 = campaign::expand(&cfg2).unwrap();
+    let meta2 = shared_meta(&cfg2, &plan2);
+    assert_ne!(meta.config, meta2.config);
+    for id in ["a", "c"] {
+        let err = run_worker(
+            &cfg2,
+            &plan2,
+            &standin,
+            &meta2,
+            &shared,
+            &WorkerOpts::new(id),
+            None,
+        );
+        assert!(
+            err.is_err(),
+            "worker '{id}' must not join a changed campaign"
+        );
+    }
+    // the per-worker journal header enforces the same fingerprint
+    let my_meta2 =
+        CampaignMeta { worker: Some("a".into()), ..meta2.clone() };
+    assert!(Journal::resume(&shared.journal_path("a"), &my_meta2).is_err());
+    // a journal copied under another worker's name fails the merge
+    std::fs::copy(shared.journal_path("a"), shared.journal_path("b"))
+        .unwrap();
+    let copts = CoordinatorOpts {
+        lease_ttl_s: 1.0,
+        poll_s: 0.01,
+        run_stragglers: true,
+    };
+    assert!(
+        coordinate(&cfg, &plan, &standin, &meta, &shared, &copts, None)
+            .is_err(),
+        "a journal whose header names a different worker must not merge"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the 2-worker split of the quick `gridworld_team`
+/// campaign, pinned against the independent Python transliteration
+/// (`pin_signatures.py::emit_campaign_dist`): worker a's journal holds
+/// plan indices 0–1, worker b's 2–3, and the merged outcome reproduces
+/// the full single-host pin block.
+#[test]
+fn dist_two_worker_split_pins() {
+    // python/tools/pin_signatures.py (dist campaign block)
+    const DIST_WORKER_A_SEEDS: [u64; 2] =
+        [0x997a8d5250c1bbcb, 0xbb8643a14f3974c8];
+    const DIST_WORKER_A_SIGNATURES: [u64; 2] =
+        [0x535763c191a25960, 0x94e5566e3f245123];
+    const DIST_WORKER_B_SEEDS: [u64; 2] =
+        [0xde82f220da554965, 0x02b4fcc483598ecf];
+    const DIST_WORKER_B_SIGNATURES: [u64; 2] =
+        [0xcef405bf29c4d4ab, 0x4760bb44b684645a];
+
+    let cfg = team_cfg();
+    let plan = campaign::expand(&cfg).unwrap();
+    let dir = tmp_dir("dist_pins");
+    let shared = SharedDir::new(&dir);
+    let meta = shared_meta(&cfg, &plan);
+    // worker a claims indices 0 and 1 (sequential scan + --max-jobs 2),
+    // worker b the rest
+    let mut oa = WorkerOpts::new("a");
+    oa.max_jobs = Some(2);
+    let sa =
+        run_worker(&cfg, &plan, &standin, &meta, &shared, &oa, None).unwrap();
+    assert_eq!(sa.ran, 2);
+    let sb = run_worker(
+        &cfg,
+        &plan,
+        &standin,
+        &meta,
+        &shared,
+        &WorkerOpts::new("b"),
+        None,
+    )
+    .unwrap();
+    assert_eq!(sb.ran, 2);
+    for (worker, seeds, sigs) in [
+        ("a", DIST_WORKER_A_SEEDS, DIST_WORKER_A_SIGNATURES),
+        ("b", DIST_WORKER_B_SEEDS, DIST_WORKER_B_SIGNATURES),
+    ] {
+        let (m, recs, _tels) = hts_rl::campaign::journal::read_records(
+            &shared.journal_path(worker),
+        )
+        .unwrap()
+        .expect("journal is complete");
+        assert_eq!(m.worker.as_deref(), Some(worker));
+        let got_seeds: Vec<u64> = recs.iter().map(|r| r.seed).collect();
+        let got_sigs: Vec<u64> = recs.iter().map(|r| r.signature).collect();
+        assert_eq!(got_seeds, seeds, "worker '{worker}' seed split");
+        assert_eq!(
+            got_sigs, sigs,
+            "worker '{worker}' signature split regressed"
+        );
+    }
+    let copts = CoordinatorOpts {
+        lease_ttl_s: 1.0,
+        poll_s: 0.01,
+        run_stragglers: true,
+    };
+    let outd = coordinate(&cfg, &plan, &standin, &meta, &shared, &copts, None)
+        .unwrap();
+    let merged_sigs: Vec<u64> = outd
+        .records
+        .iter()
+        .map(|r| r.as_ref().unwrap().signature)
+        .collect();
+    let full: Vec<u64> = DIST_WORKER_A_SIGNATURES
+        .iter()
+        .chain(&DIST_WORKER_B_SIGNATURES)
+        .copied()
+        .collect();
+    assert_eq!(merged_sigs, full, "merge must reassemble the plan order");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: telemetry stays byte-invisible to the core artifacts in
+/// the multi-worker path too — a distributed telemetry campaign and a
+/// distributed plain campaign render identical jobs/summary/markdown,
+/// and only the former gains the utilization CSV (telemetry lines
+/// re-paired with their jobs by id across the merged journals).
+#[test]
+fn dist_telemetry_invisible_to_core_artifacts() {
+    let cfg_off = team_cfg();
+    let plan = campaign::expand(&cfg_off).unwrap();
+    let mut cfg_on = team_cfg();
+    cfg_on.telemetry = true;
+    // telemetry is display-only: same fingerprint, same campaign
+    assert_eq!(cfg_off.fingerprint(), cfg_on.fingerprint());
+
+    let copts = CoordinatorOpts {
+        lease_ttl_s: 1.0,
+        poll_s: 0.01,
+        run_stragglers: true,
+    };
+    let mut reports = Vec::new();
+    let mut outs = Vec::new();
+    for (tag, cfg) in [("off", &cfg_off), ("on", &cfg_on)] {
+        let dir = tmp_dir(&format!("dist_tel_{tag}"));
+        let shared = SharedDir::new(&dir);
+        let meta = shared_meta(cfg, &plan);
+        run_worker(
+            cfg,
+            &plan,
+            &standin,
+            &meta,
+            &shared,
+            &WorkerOpts::new("a"),
+            None,
+        )
+        .unwrap();
+        let out =
+            coordinate(cfg, &plan, &standin, &meta, &shared, &copts, None)
+                .unwrap();
+        reports.push(campaign::render(cfg, &plan, &out));
+        outs.push(out);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let (rep_off, rep_on) = (&reports[0], &reports[1]);
+    assert_eq!(rep_off.jobs_csv, rep_on.jobs_csv);
+    assert_eq!(rep_off.summary_csv, rep_on.summary_csv);
+    assert_eq!(rep_off.markdown, rep_on.markdown);
+    assert!(rep_off.telemetry_csv.is_none(), "no telemetry, no artifact");
+    assert!(
+        rep_on.telemetry_csv.is_some(),
+        "the telemetry fleet gains the fourth artifact"
+    );
+    assert!(
+        outs[1].telemetry.iter().all(Option::is_some),
+        "every journaled telemetry line re-paired with its job"
+    );
 }
