@@ -1,0 +1,764 @@
+#!/usr/bin/env python3
+"""Python transliteration of `hts-lint` (rust/src/lint/ — DESIGN.md §14).
+
+The Rust implementation is authoritative; this transliteration exists so
+the lint semantics can be executed in environments without a Rust
+toolchain (the same role `pin_signatures.py` plays for trajectory pins).
+The two implementations must agree finding-for-finding: the fixture
+corpus under `rust/tests/lint_fixtures/` is asserted against *both* (the
+Rust side in `rust/tests/lint.rs`, this side by running
+`python3 python/tools/hts_lint.py --fixtures`).
+
+Usage (from the repo root):
+
+    python3 python/tools/hts_lint.py [--root rust/src]
+        [--manifest rust/lint.rules] [--baseline rust/lint_baseline.json]
+        [--cargo rust/Cargo.toml] [--json OUT.json] [--ci]
+        [--update-baseline] [--fixtures]
+
+Exit status: nonzero under --ci when any unbaselined finding exists.
+"""
+
+import json
+import os
+import sys
+
+# --------------------------------------------------------------------------
+# Lexer: comment/string/raw-string/char-literal/lifetime-aware tokenizer.
+# Mirrors rust/src/lint/lexer.rs exactly.
+# --------------------------------------------------------------------------
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+STRING_PREFIXES = {"b", "c"}        # escaped strings with a prefix
+RAW_PREFIXES = {"r", "br", "cr"}    # raw strings (no escapes)
+
+
+class Tok:
+    __slots__ = ("line", "kind", "text")
+
+    def __init__(self, line, kind, text):
+        self.line = line
+        self.kind = kind  # ident | punct | str | char | num | lifetime
+        self.text = text
+
+    def __repr__(self):
+        return f"{self.kind}:{self.text!r}@{self.line}"
+
+
+class Comment:
+    __slots__ = ("line", "end_line", "text")
+
+    def __init__(self, line, end_line, text):
+        self.line = line
+        self.end_line = end_line
+        self.text = text
+
+
+def lex(src):
+    """Return (tokens, comments). Never raises on malformed input: an
+    unterminated string/comment consumes to EOF (the delimiter rule then
+    reports the imbalance)."""
+    toks, comments = [], []
+    i, line, n = 0, 1, len(src)
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+        elif c in " \t\r":
+            i += 1
+        elif c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            comments.append(Comment(line, line, src[i:j]))
+            i = j
+        elif c == "/" and i + 1 < n and src[i + 1] == "*":
+            start_line, depth, j = line, 1, i + 2
+            while j < n and depth > 0:
+                if src[j] == "\n":
+                    line += 1
+                    j += 1
+                elif src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            comments.append(Comment(start_line, line, src[i:j]))
+            i = j
+        elif c == '"':
+            i, line = _string(src, i, line, toks, raw=False)
+        elif c == "'":
+            i, line = _quote(src, i, line, toks)
+        elif c in IDENT_START:
+            j = i + 1
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            name = src[i:j]
+            if j < n and src[j] == '"' and name in STRING_PREFIXES:
+                i, line = _string(src, j, line, toks, raw=False)
+            elif j < n and src[j] == '"' and name in RAW_PREFIXES:
+                i, line = _string(src, j, line, toks, raw=True)
+            elif j < n and src[j] == "#" and name in RAW_PREFIXES:
+                i, line = _string(src, j, line, toks, raw=True)
+            elif j < n and src[j] == "'" and name == "b":
+                i, line = _quote(src, j, line, toks)
+            else:
+                toks.append(Tok(line, "ident", name))
+                i = j
+        elif c.isdigit():
+            j = i + 1
+            while j < n and (src[j] in IDENT_CONT or
+                             (src[j] == "." and j + 1 < n
+                              and src[j + 1].isdigit())):
+                j += 1
+            # exponent sign: 1.5e-3 / 2E+8
+            while (j < n and src[j] in "+-"
+                   and src[j - 1] in "eE" and src[j - 2].isdigit()):
+                j += 1
+                while j < n and src[j] in IDENT_CONT:
+                    j += 1
+            toks.append(Tok(line, "num", src[i:j]))
+            i = j
+        else:
+            toks.append(Tok(line, "punct", c))
+            i += 1
+    return toks, comments
+
+
+def _string(src, i, line, toks, raw):
+    """Lex a string starting at src[i] ('"' or the '#' run of a raw
+    string). Returns (next_index, line). Content excludes the quotes."""
+    n = len(src)
+    start_line = line
+    hashes = 0
+    while i < n and src[i] == "#":
+        hashes += 1
+        i += 1
+    i += 1  # opening quote
+    content_start = i
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+        elif not raw and c == "\\":
+            i += 2
+        elif c == '"':
+            if raw and hashes:
+                if src.startswith("#" * hashes, i + 1):
+                    toks.append(Tok(start_line, "str", src[content_start:i]))
+                    return i + 1 + hashes, line
+                i += 1
+            else:
+                toks.append(Tok(start_line, "str", src[content_start:i]))
+                return i + 1, line
+        else:
+            i += 1
+    toks.append(Tok(start_line, "str", src[content_start:]))
+    return n, line
+
+
+def _quote(src, i, line, toks):
+    """Disambiguate char literal vs lifetime at src[i] == "'"."""
+    n = len(src)
+    j = i + 1
+    if j < n and src[j] == "\\":
+        # escaped char literal: consume to the closing quote
+        j += 2  # the backslash + escaped char (covers \' and \\)
+        while j < n and src[j] != "'":
+            j += 1
+        toks.append(Tok(line, "char", src[i:j + 1]))
+        return min(j + 1, n), line
+    if j < n and src[j] in IDENT_CONT and not (j + 1 < n
+                                               and src[j + 1] == "'"):
+        # lifetime: 'a, 'static, '_
+        k = j
+        while k < n and src[k] in IDENT_CONT:
+            k += 1
+        toks.append(Tok(line, "lifetime", src[i:k]))
+        return k, line
+    # plain char literal 'x' (including quotes/newlines as chars)
+    k = src.find("'", j)
+    k = n - 1 if k < 0 else k
+    nl = src.count("\n", i, k + 1)
+    toks.append(Tok(line, "char", src[i:k + 1]))
+    return k + 1, line + nl
+
+
+# --------------------------------------------------------------------------
+# Rule manifest (rust/lint.rules) — zones + rule bindings.
+# --------------------------------------------------------------------------
+
+KNOWN_RULES = [
+    "wall-clock", "thread-rng", "nan-cmp", "map-iteration", "hex-u64",
+    "hotpath-lock", "hotpath-alloc", "unsafe-safety", "delimiters",
+    "cargo-offline",
+]
+MODES = {"forbid-in", "forbid-outside", "forbid-everywhere", "hotpath",
+         "cargo"}
+
+
+class Manifest:
+    def __init__(self):
+        self.zones = {}     # name -> [path prefixes]
+        self.bindings = {}  # rule -> (mode, zone or None)
+
+    @staticmethod
+    def parse(text, path="lint.rules"):
+        m = Manifest()
+        for ln, raw in enumerate(text.splitlines(), 1):
+            s = raw.strip()
+            if not s or s.startswith("#"):
+                continue
+            parts = s.split()
+            if parts[0] == "zone" and len(parts) >= 3:
+                m.zones[parts[1]] = parts[2:]
+            elif parts[0] == "rule" and len(parts) >= 3:
+                rule, mode = parts[1], parts[2]
+                if rule not in KNOWN_RULES:
+                    raise ValueError(
+                        f"{path}:{ln}: unknown rule '{rule}'")
+                if mode not in MODES:
+                    raise ValueError(
+                        f"{path}:{ln}: unknown mode '{mode}'")
+                zone = None
+                if mode in ("forbid-in", "forbid-outside"):
+                    if len(parts) != 4:
+                        raise ValueError(
+                            f"{path}:{ln}: mode '{mode}' needs a zone")
+                    zone = parts[3]
+                m.bindings[rule] = (mode, zone)
+            else:
+                raise ValueError(f"{path}:{ln}: unparseable line: {s}")
+        missing = [r for r in KNOWN_RULES if r not in m.bindings]
+        if missing:
+            raise ValueError(
+                f"{path}: unbound rules (fail-closed): {missing}")
+        for rule, (mode, zone) in m.bindings.items():
+            if zone is not None and zone not in m.zones:
+                raise ValueError(
+                    f"{path}: rule '{rule}' binds undeclared zone "
+                    f"'{zone}'")
+        return m
+
+    def in_zone(self, zone, rel):
+        return any(rel.startswith(p) for p in self.zones[zone])
+
+    def active(self, rule, rel):
+        mode, zone = self.bindings[rule]
+        if mode == "forbid-everywhere":
+            return True
+        if mode == "forbid-in":
+            return self.in_zone(zone, rel)
+        if mode == "forbid-outside":
+            return not self.in_zone(zone, rel)
+        return False  # hotpath / cargo handled specially
+
+
+# --------------------------------------------------------------------------
+# Token patterns per rule (must mirror rust/src/lint/rules.rs).
+# --------------------------------------------------------------------------
+
+PATTERNS = {
+    "wall-clock": [["Instant", ":", ":", "now"], ["SystemTime"]],
+    "thread-rng": [["thread_rng"], ["from_entropy"]],
+    "map-iteration": [["HashMap"], ["HashSet"]],
+    "hotpath-lock": [["Mutex"], ["RwLock"], [".", "lock", "("]],
+    "hotpath-alloc": [
+        ["format", "!"], ["vec", "!"],
+        ["Vec", ":", ":", "new"], ["String", ":", ":", "new"],
+        ["String", ":", ":", "from"], ["Box", ":", ":", "new"],
+        [".", "to_string", "("], [".", "to_vec", "("],
+    ],
+}
+
+MESSAGES = {
+    "wall-clock": "wall-clock read in a deterministic zone (telemetry/"
+                  "perf/deadline code is zone-exempt; else justify with "
+                  "`// lint: allow(wall-clock, <why>)`)",
+    "thread-rng": "non-deterministic RNG source (use seeded SplitMix64 "
+                  "streams)",
+    "nan-cmp": "partial_cmp().unwrap() is NaN-unsafe (use total_cmp)",
+    "map-iteration": "hash-ordered container in artifact-producing code "
+                     "(use BTreeMap/BTreeSet, or prove order-independence "
+                     "with `// lint: allow(map-iteration, <proof>)`)",
+    "hex-u64": "raw u64 (de)serialization outside util::json (use "
+               "hex_u64/parse_hex_u64)",
+    "hotpath-lock": "lock primitive in a hot-path region (justify with "
+                    "`// lint: allow(hotpath-lock, <why>)`)",
+    "hotpath-alloc": "allocation in a hot-path region (justify with "
+                     "`// lint: allow(hotpath-alloc, <why>)`)",
+    "unsafe-safety": "`unsafe` without a covering `// SAFETY:` comment",
+    "delimiters": "unbalanced delimiters",
+    "cargo-offline": "non-path dependency breaks the offline-build "
+                     "guarantee (vendor it under rust/vendor/)",
+}
+
+
+def tok_match(tok, el):
+    if tok.kind == "ident" and tok.text == el:
+        return True
+    return tok.kind == "punct" and tok.text == el
+
+
+# --------------------------------------------------------------------------
+# Directives: `// lint: allow(rule, reason)` and hotpath region markers.
+# --------------------------------------------------------------------------
+
+class Allow:
+    __slots__ = ("line", "rule", "reason", "scope", "used")
+
+    def __init__(self, line, rule, reason, scope):
+        self.line = line
+        self.rule = rule
+        self.reason = reason
+        self.scope = scope  # set of lines this allow suppresses on
+        self.used = False
+
+
+def parse_directives(comments, token_lines, findings, rel):
+    """Extract allows + hotpath regions; malformed directives and marker
+    mismatches are findings themselves (rule `delimiters` for region
+    nesting would be misleading — they ride under `unsafe-safety`? no:
+    they get their own pseudo-rule id `lint-directive`, always active)."""
+    allows, regions = [], []
+    open_begin = None  # (line, name)
+    for c in comments:
+        body = c.text.lstrip("/").lstrip("!").lstrip("*").strip()
+        if not body.startswith("lint:"):
+            continue
+        d = body[len("lint:"):].strip()
+        if d.startswith("allow(") and d.endswith(")"):
+            inner = d[len("allow("):-1]
+            rule, _, reason = inner.partition(",")
+            rule, reason = rule.strip(), reason.strip()
+            if rule not in KNOWN_RULES:
+                findings.append(
+                    (rel, c.line, "lint-directive",
+                     f"allow names unknown rule '{rule}'"))
+                continue
+            if not reason:
+                findings.append(
+                    (rel, c.line, "lint-directive",
+                     "allow needs a reason: lint: allow(rule, why)"))
+                continue
+            scope = {c.line}
+            if c.line not in token_lines:
+                nxt = [l for l in token_lines if l > c.end_line]
+                if nxt:
+                    scope.add(min(nxt))
+            allows.append(Allow(c.line, rule, reason, scope))
+        elif d.startswith("hotpath(begin") and d.endswith(")"):
+            if open_begin is not None:
+                findings.append(
+                    (rel, c.line, "lint-directive",
+                     "nested hotpath(begin) — close the previous region "
+                     f"opened at line {open_begin[0]}"))
+                continue
+            name = d[len("hotpath(begin"):-1].lstrip(",").strip()
+            open_begin = (c.line, name or "unnamed")
+        elif d == "hotpath(end)":
+            if open_begin is None:
+                findings.append(
+                    (rel, c.line, "lint-directive",
+                     "hotpath(end) without a matching begin"))
+                continue
+            regions.append((open_begin[0], c.line, open_begin[1]))
+            open_begin = None
+        else:
+            findings.append(
+                (rel, c.line, "lint-directive",
+                 f"unparseable lint directive: {d!r}"))
+    if open_begin is not None:
+        findings.append(
+            (rel, open_begin[0], "lint-directive",
+             "hotpath(begin) never closed"))
+    return allows, regions
+
+
+# --------------------------------------------------------------------------
+# Per-file analysis.
+# --------------------------------------------------------------------------
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {v: k for k, v in OPEN.items()}
+
+
+def check_file(rel, src, manifest):
+    """Return (findings, unsafe_inventory, allows). A finding is
+    (file, line, rule, message); inventory entries are
+    (file, line, safety_excerpt or None)."""
+    toks, comments = lex(src)
+    token_lines = sorted({t.line for t in toks})
+    findings = []
+    allows, regions = parse_directives(
+        comments, set(token_lines), findings, rel)
+
+    def in_region(line):
+        return any(b <= line <= e for b, e, _ in regions)
+
+    # -- simple token-pattern rules ------------------------------------
+    seen = set()  # (rule, line) dedup
+
+    def emit(rule, line, msg=None):
+        if (rule, line) not in seen:
+            seen.add((rule, line))
+            findings.append((rel, line, rule, msg or MESSAGES[rule]))
+
+    for rule, pats in PATTERNS.items():
+        mode, _zone = manifest.bindings[rule]
+        if mode == "hotpath":
+            active = None  # per-token region check
+        elif not manifest.active(rule, rel):
+            continue
+        else:
+            active = True
+        for pat in pats:
+            for i in range(len(toks) - len(pat) + 1):
+                if all(tok_match(toks[i + j], pat[j])
+                       for j in range(len(pat))):
+                    line = toks[i].line
+                    if active is None and not in_region(line):
+                        continue
+                    emit(rule, line)
+
+    # -- nan-cmp: partial_cmp followed by unwrap within 8 tokens --------
+    if manifest.active("nan-cmp", rel):
+        for i, t in enumerate(toks):
+            if t.kind == "ident" and t.text == "partial_cmp":
+                tail = toks[i + 1:i + 9]
+                if any(u.kind == "ident" and u.text == "unwrap"
+                       for u in tail):
+                    emit("nan-cmp", t.line)
+
+    # -- hex-u64: hex format specs / radix parsing in the zone ----------
+    if manifest.active("hex-u64", rel):
+        for t in toks:
+            if t.kind == "str" and "016x" in t.text:
+                emit("hex-u64", t.line)
+            if t.kind == "ident" and t.text == "from_str_radix":
+                emit("hex-u64", t.line)
+
+    # -- unsafe-safety + inventory --------------------------------------
+    inventory = []
+    if manifest.active("unsafe-safety", rel):
+        comment_only = {}
+        for c in comments:
+            for l in range(c.line, c.end_line + 1):
+                comment_only.setdefault(l, []).append(c.text)
+        for l in token_lines:
+            comment_only.pop(l, None)
+
+        def covering_comment(line):
+            # trailing comment on the same line
+            for c in comments:
+                if c.line <= line <= c.end_line and "SAFETY:" in c.text:
+                    return c.text
+            # contiguous comment-only block immediately above
+            l = line - 1
+            block = []
+            while l in comment_only:
+                block.extend(comment_only[l])
+                l -= 1
+            for text in block:
+                if "SAFETY:" in text:
+                    return text
+            return None
+
+        depth = 0
+        covered_stack = []  # depths whose enclosing unsafe item is covered
+        pending_cover = None  # covered unsafe awaiting its opening brace
+        for t in toks:
+            if t.kind == "punct" and t.text in "([{":
+                depth += 1
+                if t.text == "{" and pending_cover is not None:
+                    covered_stack.append(depth)
+                    pending_cover = None
+            elif t.kind == "punct" and t.text in ")]}":
+                if t.text == "}" and covered_stack \
+                        and covered_stack[-1] == depth:
+                    covered_stack.pop()
+                depth -= 1
+            elif t.kind == "punct" and t.text == ";":
+                pending_cover = None
+            elif t.kind == "ident" and t.text == "unsafe":
+                if covered_stack:
+                    inventory.append((rel, t.line, "(covered by enclosing "
+                                      "unsafe item's SAFETY comment)"))
+                    pending_cover = True
+                    continue
+                safety = covering_comment(t.line)
+                if safety is None:
+                    emit("unsafe-safety", t.line)
+                    inventory.append((rel, t.line, None))
+                else:
+                    excerpt = " ".join(safety.split())
+                    idx = excerpt.find("SAFETY:")
+                    inventory.append((rel, t.line, excerpt[idx:idx + 120]))
+                    pending_cover = True
+
+    # -- delimiters ------------------------------------------------------
+    if manifest.active("delimiters", rel):
+        stack = []
+        bad = None
+        for t in toks:
+            if t.kind != "punct":
+                continue
+            if t.text in OPEN:
+                stack.append((t.text, t.line))
+            elif t.text in CLOSE:
+                if not stack or stack[-1][0] != CLOSE[t.text]:
+                    bad = (t.line, f"unmatched '{t.text}'")
+                    break
+                stack.pop()
+        if bad:
+            emit("delimiters", bad[0],
+                 MESSAGES["delimiters"] + f": {bad[1]}")
+        elif stack:
+            emit("delimiters", stack[-1][1],
+                 MESSAGES["delimiters"]
+                 + f": '{stack[-1][0]}' never closed")
+
+    # -- apply allows ----------------------------------------------------
+    kept = []
+    for f in findings:
+        _, line, rule, _ = f
+        suppressed = False
+        for a in allows:
+            if a.rule == rule and line in a.scope:
+                a.used = True
+                suppressed = True
+                break
+        if not suppressed:
+            kept.append(f)
+    for a in allows:
+        if not a.used:
+            kept.append((rel, a.line, "lint-directive",
+                         f"unused lint: allow({a.rule}, ...) — the rule "
+                         "no longer fires here; drop the annotation"))
+    return kept, inventory, allows
+
+
+# --------------------------------------------------------------------------
+# Cargo.toml offline check.
+# --------------------------------------------------------------------------
+
+def check_cargo(path, text):
+    findings = []
+    section = ""
+    for ln, raw in enumerate(text.splitlines(), 1):
+        s = raw.strip()
+        if s.startswith("["):
+            section = s.strip("[]")
+            continue
+        if not section.endswith("dependencies") or not s or \
+                s.startswith("#"):
+            continue
+        name, eq, val = s.partition("=")
+        if not eq:
+            continue
+        val = val.strip()
+        if val.startswith("{"):
+            ok = "path" in [k.split("=")[0].strip()
+                            for k in val.strip("{}").split(",")]
+            hazard = any(w in val for w in ("git =", "git=", "version =",
+                                            "version=", "registry"))
+            if not ok or hazard:
+                findings.append(
+                    (path, ln, "cargo-offline",
+                     MESSAGES["cargo-offline"]
+                     + f" (dep '{name.strip()}')"))
+        else:
+            # bare `name = "1.0"` — a crates.io version requirement
+            findings.append(
+                (path, ln, "cargo-offline",
+                 MESSAGES["cargo-offline"] + f" (dep '{name.strip()}')"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Baseline.
+# --------------------------------------------------------------------------
+
+def finding_key(f, lines_by_file):
+    rel, line, rule, _ = f
+    lines = lines_by_file.get(rel, [])
+    excerpt = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+    return (rule, rel, excerpt)
+
+
+def load_baseline(path):
+    if not os.path.exists(path):
+        return {}
+    data = json.load(open(path))
+    out = {}
+    for e in data.get("entries", []):
+        k = (e["rule"], e["file"], e["excerpt"])
+        out[k] = out.get(k, 0) + int(e.get("count", 1))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Driver.
+# --------------------------------------------------------------------------
+
+def run(root, manifest_path, baseline_path, cargo_path):
+    manifest = Manifest.parse(open(manifest_path).read(), manifest_path)
+    findings, inventory = [], []
+    lines_by_file = {}
+    rs_files = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if fn.endswith(".rs"):
+                rs_files.append(os.path.join(dirpath, fn))
+    for path in rs_files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        src = open(path, encoding="utf-8").read()
+        lines_by_file[rel] = src.splitlines()
+        f, inv, _ = check_file(rel, src, manifest)
+        findings.extend(f)
+        inventory.extend(inv)
+    if cargo_path and os.path.exists(cargo_path):
+        ctext = open(cargo_path).read()
+        lines_by_file[cargo_path] = ctext.splitlines()
+        findings.extend(check_cargo(cargo_path, ctext))
+    findings.sort(key=lambda f: (f[0], f[1], f[2]))
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+    remaining = dict(baseline)
+    fresh, baselined = [], []
+    for f in findings:
+        k = finding_key(f, lines_by_file)
+        if remaining.get(k, 0) > 0:
+            remaining[k] -= 1
+            baselined.append(f)
+        else:
+            fresh.append(f)
+    stale = {k: v for k, v in remaining.items() if v > 0}
+    return {
+        "files": len(rs_files),
+        "findings": fresh,
+        "baselined": baselined,
+        "stale_baseline": stale,
+        "unsafe_inventory": inventory,
+        "lines_by_file": lines_by_file,
+    }
+
+
+def main(argv):
+    args = {"--root": "rust/src", "--manifest": "rust/lint.rules",
+            "--baseline": "rust/lint_baseline.json",
+            "--cargo": "rust/Cargo.toml", "--json": None}
+    flags = set()
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a in args and i + 1 < len(argv):
+            args[a] = argv[i + 1]
+            i += 2
+        elif a in ("--ci", "--update-baseline", "--fixtures"):
+            flags.add(a)
+            i += 1
+        else:
+            print(f"unknown arg {a}", file=sys.stderr)
+            return 2
+    if "--fixtures" in flags:
+        return run_fixtures()
+    res = run(args["--root"], args["--manifest"], args["--baseline"],
+              args["--cargo"])
+    for rel, line, rule, msg in res["findings"]:
+        print(f"{rel}:{line}: [{rule}] {msg}")
+    for k, v in sorted(res["stale_baseline"].items()):
+        print(f"note: stale baseline entry {k} x{v}")
+    print(f"hts-lint (py): {res['files']} files, "
+          f"{len(res['findings'])} finding(s), "
+          f"{len(res['baselined'])} baselined, "
+          f"{len(res['unsafe_inventory'])} unsafe site(s)")
+    if "--update-baseline" in flags:
+        entries = {}
+        for f in res["findings"] + res["baselined"]:
+            k = finding_key(f, res["lines_by_file"])
+            entries[k] = entries.get(k, 0) + 1
+        data = {"v": 1, "entries": [
+            {"rule": r, "file": f, "excerpt": e, "count": c}
+            for (r, f, e), c in sorted(entries.items())]}
+        json.dump(data, open(args["--baseline"], "w"), indent=1)
+        print(f"baseline updated: {args['--baseline']}")
+        return 0
+    if args["--json"]:
+        data = {
+            "v": 1,
+            "files": res["files"],
+            "findings": [
+                {"file": f, "line": l, "rule": r, "message": m}
+                for f, l, r, m in res["findings"]],
+            "unsafe_inventory": [
+                {"file": f, "line": l,
+                 "safety": s if s else "UNCOVERED"}
+                for f, l, s in res["unsafe_inventory"]],
+        }
+        json.dump(data, open(args["--json"], "w"), indent=1)
+    if "--ci" in flags and (res["findings"] or res["stale_baseline"]):
+        print("hts-lint (py): FAIL (unbaselined findings or stale "
+              "baseline entries)", file=sys.stderr)
+        return 1
+    return 0
+
+
+def run_fixtures():
+    """Assert the seeded-violation fixtures fire exactly as pinned in
+    rust/tests/lint.rs (EXPECTED below mirrors that test)."""
+    fixdir = "rust/tests/lint_fixtures"
+    manifest = Manifest.parse(open(os.path.join(fixdir,
+                                                "fixture.rules")).read())
+    got = []
+    for fn in sorted(os.listdir(fixdir)):
+        if not fn.endswith(".rs"):
+            continue
+        src = open(os.path.join(fixdir, fn), encoding="utf-8").read()
+        f, _, _ = check_file(fn, src, manifest)
+        got.extend((x[0], x[1], x[2]) for x in f)
+    got.sort()
+    expected = sorted(EXPECTED_FIXTURE_FINDINGS)
+    if got != expected:
+        print("fixture mismatch:", file=sys.stderr)
+        for g in got:
+            mark = " " if g in expected else "+"
+            print(f"  {mark} {g}", file=sys.stderr)
+        for e in expected:
+            if e not in got:
+                print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"fixtures: {len(got)} expected finding(s), all pinned ✓")
+    return 0
+
+
+# Pinned (file, line, rule) triples — MUST match rust/tests/lint.rs.
+EXPECTED_FIXTURE_FINDINGS = [
+    ("artifact_maps.rs", 4, "map-iteration"),
+    ("artifact_maps.rs", 5, "map-iteration"),
+    ("clock_violation.rs", 4, "wall-clock"),
+    ("clock_violation.rs", 7, "wall-clock"),
+    ("delim_torn.rs", 9, "delimiters"),
+    ("directive_errors.rs", 5, "lint-directive"),
+    ("directive_errors.rs", 9, "lint-directive"),
+    ("directive_errors.rs", 13, "lint-directive"),
+    ("directive_errors.rs", 17, "lint-directive"),
+    ("hotpath_discipline.rs", 11, "hotpath-lock"),
+    ("hotpath_discipline.rs", 12, "hotpath-lock"),
+    ("hotpath_discipline.rs", 13, "hotpath-alloc"),
+    ("hotpath_discipline.rs", 14, "hotpath-alloc"),
+    ("torture_lexer.rs", 27, "thread-rng"),
+    ("torture_lexer.rs", 31, "nan-cmp"),
+    ("torture_lexer.rs", 45, "unsafe-safety"),
+    ("wire_hex.rs", 6, "hex-u64"),
+    ("wire_hex.rs", 10, "hex-u64"),
+]
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

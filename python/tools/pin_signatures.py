@@ -22,6 +22,7 @@ Run: python3 python/tools/pin_signatures.py
 """
 
 import struct
+import sys
 
 MASK = (1 << 64) - 1
 
@@ -420,6 +421,12 @@ def self_check():
 
 if __name__ == "__main__":
     self_check()
+    if "--self-check" in sys.argv[1:]:
+        # CI mode: regenerate the legacy pins and stop. A pass proves the
+        # transliteration still reproduces every committed signature
+        # byte-for-byte; emission is only for pasting new pins.
+        print("pin_signatures: self-check passed (legacy pins regenerate)")
+        sys.exit(0)
     emit(
         "tests/pool.rs::pool_signatures_pinned — catch, 1 agent",
         *simulate(Catch),

@@ -1,0 +1,121 @@
+//! `hts-lint` — offline static analysis for the repo's determinism and
+//! concurrency invariants (DESIGN.md §14).
+//!
+//! ```text
+//! hts-lint [--root DIR] [--manifest FILE] [--baseline FILE]
+//!          [--cargo FILE] [--json OUT.json] [--ci] [--update-baseline]
+//! ```
+//!
+//! Exit status: 0 clean, 1 on unbaselined findings (plus, under `--ci`,
+//! on stale baseline entries — the fail-closed CI gate), 2 on usage or
+//! I/O errors. Paths default to `rust/src` / `rust/lint.rules` /
+//! `rust/lint_baseline.json` / `rust/Cargo.toml`, falling back to the
+//! same names without the `rust/` prefix so the tool works from either
+//! the repo root or `rust/`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, ensure, Result};
+
+use hts_rl::lint::{self, report, LintConfig};
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("hts-lint: error: {e:?}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+const USAGE: &str = "usage: hts-lint [--root DIR] [--manifest FILE] [--baseline FILE]
+                [--cargo FILE] [--json OUT.json] [--ci] [--update-baseline]";
+
+/// First existing candidate, else the last one (so the error message
+/// names the expected location).
+fn default_path(cands: &[&str]) -> PathBuf {
+    for c in cands {
+        if Path::new(c).exists() {
+            return PathBuf::from(c);
+        }
+    }
+    PathBuf::from(cands[cands.len() - 1])
+}
+
+fn next(args: &[String], i: &mut usize) -> Result<PathBuf> {
+    ensure!(*i + 1 < args.len(), "flag {} needs a value", args[*i]);
+    let v = PathBuf::from(&args[*i + 1]);
+    *i += 2;
+    Ok(v)
+}
+
+fn real_main() -> Result<ExitCode> {
+    let mut cfg = LintConfig {
+        root: default_path(&["rust/src", "src"]),
+        manifest: default_path(&["rust/lint.rules", "lint.rules"]),
+        baseline: Some(default_path(&["rust/lint_baseline.json", "lint_baseline.json"])),
+        cargo: Some(default_path(&["rust/Cargo.toml", "Cargo.toml"])),
+    };
+    let mut json_out: Option<PathBuf> = None;
+    let mut ci = false;
+    let mut update_baseline = false;
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => cfg.root = next(&args, &mut i)?,
+            "--manifest" => cfg.manifest = next(&args, &mut i)?,
+            "--baseline" => cfg.baseline = Some(next(&args, &mut i)?),
+            "--cargo" => cfg.cargo = Some(next(&args, &mut i)?),
+            "--json" => json_out = Some(next(&args, &mut i)?),
+            "--ci" => {
+                ci = true;
+                i += 1;
+            }
+            "--update-baseline" => {
+                update_baseline = true;
+                i += 1;
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return Ok(ExitCode::SUCCESS);
+            }
+            other => bail!("unknown argument '{other}'\n{USAGE}"),
+        }
+    }
+
+    if update_baseline {
+        // Capture *all* current findings (ignore the existing baseline).
+        let full = lint::run(&LintConfig {
+            baseline: None,
+            ..cfg.clone()
+        })?;
+        let path = cfg
+            .baseline
+            .unwrap_or_else(|| PathBuf::from("lint_baseline.json"));
+        std::fs::write(&path, lint::baseline::render(&full.findings))?;
+        println!(
+            "hts-lint: baseline updated ({} finding(s) -> {})",
+            full.findings.len(),
+            path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let out = lint::run(&cfg)?;
+    print!("{}", report::text(&out));
+    if let Some(p) = json_out {
+        let mut doc = report::json(&out).to_string();
+        doc.push('\n');
+        std::fs::write(&p, doc)?;
+    }
+    let fail = !out.findings.is_empty() || (ci && !out.stale.is_empty());
+    if fail {
+        eprintln!("hts-lint: FAIL (unbaselined findings or stale baseline entries)");
+        return Ok(ExitCode::FAILURE);
+    }
+    Ok(ExitCode::SUCCESS)
+}

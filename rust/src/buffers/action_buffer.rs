@@ -77,8 +77,10 @@ impl ActionBuffer {
     }
 
     /// Actor-side: deliver the action for `slot`.
+    // lint: hotpath(begin, action mailbox post/take/park)
     pub fn post(&self, slot: usize, action: usize) {
         let mb = &self.boxes[slot];
+        // lint: allow(hotpath-lock, per-slot mailbox Mutex: exactly one poster and one taker per slot, never contended across slots)
         let mut g = mb.m.lock().unwrap();
         debug_assert!(g.is_none(), "double post to slot {slot}");
         *g = Some(action);
@@ -92,6 +94,7 @@ impl ActionBuffer {
             // its epoch check and holds `park` until it is inside the
             // condvar — locking (and releasing) `park` here serializes
             // with that window, so the notify cannot be lost.
+            // lint: allow(hotpath-lock, empty critical section taken only when a waiter is registered - the pool is parked, not stepping)
             drop(self.park.lock().unwrap());
             self.any_cv.notify_all();
         }
@@ -101,6 +104,7 @@ impl ActionBuffer {
     /// arrives. Returns None on shutdown.
     pub fn take(&self, slot: usize) -> Option<usize> {
         let mb = &self.boxes[slot];
+        // lint: allow(hotpath-lock, per-slot mailbox Mutex (see post); blocking mode parks here by design)
         let mut g = mb.m.lock().unwrap();
         loop {
             if let Some(a) = g.take() {
@@ -123,6 +127,7 @@ impl ActionBuffer {
     /// drained after close (matching `take`); `Closed` is returned only
     /// once the slot is empty *and* the buffer is closed.
     pub fn try_take(&self, slot: usize) -> TryTake {
+        // lint: allow(hotpath-lock, per-slot mailbox Mutex (see post): uncontended fast path, one atomic CAS when the slot is quiet)
         let mut g = self.boxes[slot].m.lock().unwrap();
         if let Some(a) = g.take() {
             return TryTake::Ready(a);
@@ -151,6 +156,7 @@ impl ActionBuffer {
         // check misses is then guaranteed to observe the registration
         // and take the park lock (see `post`).
         self.waiters.fetch_add(1, Ordering::SeqCst);
+        // lint: allow(hotpath-lock, park lock: taken only when nothing is runnable - the slow path is the point)
         let mut g = self.park.lock().unwrap();
         while self.epoch.load(Ordering::SeqCst) == seen
             && !self.closed.load(Ordering::SeqCst)
@@ -172,6 +178,7 @@ impl ActionBuffer {
         self.waiters.fetch_sub(1, Ordering::SeqCst);
         self.epoch.load(Ordering::SeqCst)
     }
+    // lint: hotpath(end)
 
     pub fn close(&self) {
         self.closed.store(true, Ordering::SeqCst);

@@ -84,6 +84,7 @@ struct FreeLists {
 impl FreeLists {
     /// Pop one recycled buffer off the obs free list — or allocate
     /// during warm-up — cleared, with capacity for `dim` floats.
+    // lint: hotpath(begin, obs free-list pop)
     fn pop_cleared(&mut self, dim: usize, tel: bool) -> Vec<f32> {
         let mut buf = match self.obs.pop() {
             Some(b) => {
@@ -96,6 +97,7 @@ impl FreeLists {
                 if tel {
                     self.misses += 1;
                 }
+                // lint: allow(hotpath-alloc, warm-up miss path: zero-capacity Vec::new defers the real allocation to reserve below, counted by FreeListMisses)
                 Vec::new()
             }
         };
@@ -103,6 +105,7 @@ impl FreeLists {
         buf.reserve(dim);
         buf
     }
+    // lint: hotpath(end)
 }
 
 pub struct StateBuffer {
@@ -162,7 +165,9 @@ impl StateBuffer {
 
     /// Take an empty observation buffer off the free list (or allocate
     /// one during warm-up), with capacity for at least `dim` floats.
+    // lint: hotpath(begin, state-buffer rent/recycle/push/grab)
     pub fn rent(&self, dim: usize) -> Vec<f32> {
+        // lint: allow(hotpath-lock, free-list Mutex: one acquisition per published step, bounded critical section (a Vec pop))
         self.free.lock().unwrap().pop_cleared(dim, self.tel)
     }
 
@@ -170,6 +175,7 @@ impl StateBuffer {
     /// (appended to `out`) — a multi-agent publisher takes all of a
     /// step's buffers without hammering the free-list lock per agent.
     pub fn rent_into(&self, out: &mut Vec<Vec<f32>>, n: usize, dim: usize) {
+        // lint: allow(hotpath-lock, free-list Mutex: n buffers under ONE acquisition is this method's reason to exist)
         let mut g = self.free.lock().unwrap();
         out.extend((0..n).map(|_| g.pop_cleared(dim, self.tel)));
     }
@@ -184,6 +190,7 @@ impl StateBuffer {
         dim: usize,
         n_seeds: usize,
     ) -> (Vec<f32>, Vec<u64>) {
+        // lint: allow(hotpath-lock, free-list Mutex: one acquisition per group publish covers obs + seed rings)
         let mut g = self.free.lock().unwrap();
         let obs = g.pop_cleared(dim, self.tel);
         let mut seeds = match g.seeds.pop() {
@@ -197,6 +204,7 @@ impl StateBuffer {
                 if self.tel {
                     g.misses += 1;
                 }
+                // lint: allow(hotpath-alloc, seed-ring warm-up miss: zero-capacity Vec::new, real allocation deferred to reserve below)
                 Vec::new()
             }
         };
@@ -210,6 +218,7 @@ impl StateBuffer {
     /// Group messages' seed buffers rejoin their own free ring. Leaves
     /// `batch` empty and reusable.
     pub fn recycle_batch(&self, batch: &mut Vec<ObsMsg>) {
+        // lint: allow(hotpath-lock, free-list Mutex: whole served batch returned under one acquisition (actor-side counterpart of push_batch))
         let mut g = self.free.lock().unwrap();
         for m in batch.drain(..) {
             g.obs.push(m.obs);
@@ -264,6 +273,7 @@ impl StateBuffer {
             }
         }
     }
+    // lint: hotpath(end)
 
     pub fn len(&self) -> usize {
         self.q.len()

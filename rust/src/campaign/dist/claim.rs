@@ -29,7 +29,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use anyhow::{ensure, Context, Result};
 
 use crate::campaign::journal::CampaignMeta;
-use crate::util::json::{obj, Json};
+use crate::util::json::{hex_u64, obj, Json};
 
 use super::lease::{
     now_millis, read_lease, tmp_sibling, write_atomic, Lease,
@@ -138,19 +138,19 @@ impl SharedDir {
                     got == shared,
                     "shared campaign directory {} belongs to a \
                      different campaign\n  marker: suite {} seed {} \
-                     n_jobs {} config 0x{:016x}\n  ours:   suite {} \
-                     seed {} n_jobs {} config 0x{:016x}\n(use a fresh \
+                     n_jobs {} config {}\n  ours:   suite {} \
+                     seed {} n_jobs {} config {}\n(use a fresh \
                      --shared dir, or rerun with the original \
                      configuration)",
                     self.root.display(),
                     got.suite,
                     got.campaign_seed,
                     got.n_jobs,
-                    got.config,
+                    hex_u64(got.config),
                     shared.suite,
                     shared.campaign_seed,
                     shared.n_jobs,
-                    shared.config,
+                    hex_u64(shared.config),
                 );
                 Ok(())
             }
@@ -189,7 +189,7 @@ impl SharedDir {
             ("v", Json::Num(1.0)),
             ("index", Json::Num(index as f64)),
             ("worker", Json::Str(worker.to_string())),
-            ("t", Json::Str(format!("0x{:016x}", now_millis()))),
+            ("t", Json::Str(hex_u64(now_millis()))),
         ]);
         let mut line = body.to_string();
         line.push('\n');

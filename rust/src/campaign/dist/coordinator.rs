@@ -30,6 +30,7 @@ use crate::campaign::journal::{
 };
 use crate::campaign::plan::{CampaignConfig, CampaignPlan};
 use crate::campaign::scheduler::{CampaignOutcome, Runner};
+use crate::util::json::hex_u64;
 
 use super::claim::{ClaimState, SharedDir};
 use super::lease::now_millis;
@@ -94,19 +95,19 @@ fn merge_journals(
         ensure!(
             got == want,
             "worker journal {} does not belong to this campaign \
-             (journal: suite '{}' seed {} n_jobs {} config 0x{:016x} \
+             (journal: suite '{}' seed {} n_jobs {} config {} \
              worker {:?}; campaign: suite '{}' seed {} n_jobs {} config \
-             0x{:016x} worker {:?})",
+             {} worker {:?})",
             path.display(),
             got.suite,
             got.campaign_seed,
             got.n_jobs,
-            got.config,
+            hex_u64(got.config),
             got.worker,
             want.suite,
             want.campaign_seed,
             want.n_jobs,
-            want.config,
+            hex_u64(want.config),
             want.worker,
         );
         for rec in recs {

@@ -18,8 +18,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::campaign::journal::hex_u64;
-use crate::util::json::{obj, Json};
+use crate::util::json::{hex_u64, obj, parse_hex_u64, Json};
 
 /// Milliseconds since the Unix epoch — the lease clock. Wall time, not
 /// a monotonic clock: leases are compared across *processes* (and, once
@@ -69,7 +68,7 @@ impl Lease {
             ("worker", Json::Str(self.worker.clone())),
             // u64 as 0x-hex, like every journal u64 (the JSON substrate
             // carries numbers as f64)
-            ("beat", Json::Str(format!("0x{:016x}", self.beat_millis))),
+            ("beat", Json::Str(hex_u64(self.beat_millis))),
         ])
     }
 
@@ -77,7 +76,7 @@ impl Lease {
         anyhow::ensure!(v.get("v")?.as_u64()? == 1, "unknown lease version");
         Ok(Lease {
             worker: v.get("worker")?.as_str()?.to_string(),
-            beat_millis: hex_u64(v.get("beat")?.as_str()?)?,
+            beat_millis: parse_hex_u64(v.get("beat")?.as_str()?)?,
         })
     }
 

@@ -33,12 +33,12 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::campaign::plan::Job;
 use crate::metrics::TrainReport;
 use crate::telemetry::{Counter, Hist, TelemetryReport, TelemetryScope};
-use crate::util::json::{obj, Json};
+use crate::util::json::{hex_u64, obj, parse_hex_u64, Json};
 
 /// Campaign identity, checked on resume so a journal can never be
 /// replayed into a *different* campaign: suite, seed, grid size, and a
@@ -68,7 +68,7 @@ impl CampaignMeta {
             ("suite", Json::Str(self.suite.clone())),
             ("seed", Json::Num(self.campaign_seed as f64)),
             ("n_jobs", Json::Num(self.n_jobs as f64)),
-            ("config", Json::Str(format!("0x{:016x}", self.config))),
+            ("config", Json::Str(hex_u64(self.config))),
         ];
         if let Some(w) = &self.worker {
             fields.push(("worker", Json::Str(w.clone())));
@@ -83,7 +83,7 @@ impl CampaignMeta {
             suite: c.get("suite")?.as_str()?.to_string(),
             campaign_seed: c.get("seed")?.as_u64()?,
             n_jobs: c.get("n_jobs")?.as_u64()? as usize,
-            config: hex_u64(c.get("config")?.as_str()?)?,
+            config: parse_hex_u64(c.get("config")?.as_str()?)?,
             worker: match c.get("worker") {
                 Ok(w) => Some(w.as_str()?.to_string()),
                 Err(_) => None,
@@ -161,11 +161,11 @@ impl JobRecord {
             ("spec", Json::Str(self.spec.clone())),
             ("method", Json::Str(self.method.clone())),
             ("seed_index", Json::Num(self.seed_index as f64)),
-            ("seed", Json::Str(format!("0x{:016x}", self.seed))),
+            ("seed", Json::Str(hex_u64(self.seed))),
             ("steps", Json::Num(self.steps as f64)),
             ("updates", Json::Num(self.updates as f64)),
             ("wall_s", Json::Num(self.wall_s)),
-            ("signature", Json::Str(format!("0x{:016x}", self.signature))),
+            ("signature", Json::Str(hex_u64(self.signature))),
             // NaN serializes as null (JSON has no NaN) — from_json maps
             // it back, keeping the roundtrip exact
             ("final_metric", Json::Num(self.final_metric)),
@@ -200,11 +200,11 @@ impl JobRecord {
             spec: v.get("spec")?.as_str()?.to_string(),
             method: v.get("method")?.as_str()?.to_string(),
             seed_index: v.get("seed_index")?.as_u64()? as usize,
-            seed: hex_u64(v.get("seed")?.as_str()?)?,
+            seed: parse_hex_u64(v.get("seed")?.as_str()?)?,
             steps: v.get("steps")?.as_u64()?,
             updates: v.get("updates")?.as_u64()?,
             wall_s: num_or_nan(v.get("wall_s")?)?,
-            signature: hex_u64(v.get("signature")?.as_str()?)?,
+            signature: parse_hex_u64(v.get("signature")?.as_str()?)?,
             final_metric: num_or_nan(v.get("final_metric")?)?,
             final_scores: v
                 .get("final_scores")?
@@ -223,13 +223,6 @@ impl JobRecord {
                 .collect::<Result<_>>()?,
         })
     }
-}
-
-pub(crate) fn hex_u64(s: &str) -> Result<u64> {
-    let digits = s
-        .strip_prefix("0x")
-        .ok_or_else(|| anyhow!("u64 field wants 0x-hex, got '{s}'"))?;
-    Ok(u64::from_str_radix(digits, 16)?)
 }
 
 /// A parsed non-header journal line — job record or telemetry.
@@ -363,18 +356,18 @@ impl Journal {
                         got == *meta,
                         "journal {} belongs to a different campaign \
                          (journal: suite '{}' seed {} n_jobs {} config \
-                         0x{:016x} worker {:?}; this run: suite '{}' \
-                         seed {} n_jobs {} config 0x{:016x} worker {:?})",
+                         {} worker {:?}; this run: suite '{}' \
+                         seed {} n_jobs {} config {} worker {:?})",
                         path.display(),
                         got.suite,
                         got.campaign_seed,
                         got.n_jobs,
-                        got.config,
+                        hex_u64(got.config),
                         got.worker,
                         meta.suite,
                         meta.campaign_seed,
                         meta.n_jobs,
-                        meta.config,
+                        hex_u64(meta.config),
                         meta.worker,
                     ),
                     Err(e) if is_last => {
@@ -483,6 +476,7 @@ impl Journal {
 
     fn line(&self, v: &Json) -> Result<()> {
         let t0 = if self.tel_on.load(Ordering::Relaxed) {
+            // lint: allow(wall-clock, journal self-telemetry: timing feeds the JournalAppendNanos histogram only, never the bytes being written)
             Some(std::time::Instant::now())
         } else {
             None

@@ -41,6 +41,7 @@ use crate::campaign::scheduler::CampaignOutcome;
 use crate::stats::bootstrap_ci;
 use crate::telemetry::TelemetryReport;
 use crate::util::csv::{csv_cell, markdown_table};
+use crate::util::json::hex_u64;
 
 /// The rendered artifacts. `telemetry_csv` is `Some` only when the
 /// outcome carries telemetry — the three core artifacts never change
@@ -135,7 +136,7 @@ fn render_jobs_csv(
             csv_cell(&job.spec.spec_str()),
             job.method.name().to_string(),
             job.seed_index.to_string(),
-            format!("0x{:016x}", job.seed),
+            hex_u64(job.seed),
         ];
         match rec {
             Some(r) => {
@@ -154,7 +155,7 @@ fn render_jobs_csv(
                     row.push(String::new());
                 }
                 row.push(cell(r.final_metric));
-                row.push(format!("0x{:016x}", r.signature));
+                row.push(hex_u64(r.signature));
                 row.extend(r.required.iter().map(|t| opt_cell(*t)));
             }
             None => {

@@ -13,7 +13,7 @@
 //!
 //! Hidden from docs: this is test/bench support, not runtime API.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -298,8 +298,11 @@ pub struct HubGroup {
 /// windows of jobs other workers claimed, so claiming shifts nothing.
 pub struct StandInHub {
     groups: Vec<HubGroup>,
-    /// job id → (group index, first mailbox column)
-    jobs: HashMap<String, (usize, usize)>,
+    /// job id → (group index, first mailbox column). BTreeMap, not
+    /// HashMap: nothing iterates it today, but group/column layout
+    /// feeds campaign artifact bytes and must never be able to pick up
+    /// a hasher-seed dependence (`map-iteration` lint zone).
+    jobs: BTreeMap<String, (usize, usize)>,
 }
 
 impl StandInHub {
@@ -311,10 +314,10 @@ impl StandInHub {
     ) -> Result<StandInHub> {
         // (model, act_dim) → index into groups; columns accrue in plan
         // order within each group.
-        let mut keys: HashMap<(String, usize), usize> = HashMap::new();
+        let mut keys: BTreeMap<(String, usize), usize> = BTreeMap::new();
         let mut cols: Vec<usize> = Vec::new();
         let mut dims: Vec<usize> = Vec::new();
-        let mut map = HashMap::new();
+        let mut map = BTreeMap::new();
         for (id, cfg) in jobs {
             let probe = cfg.spec.build()?;
             let act_dim = probe.act_dim();

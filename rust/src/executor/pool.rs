@@ -155,6 +155,7 @@ impl ReplicaPool {
     fn run_single(mut self) -> Result<PoolReport> {
         let swap = self.shared.swap.clone();
         let mut it = 0u64;
+        // lint: hotpath(begin, executor K=1 step loop)
         'outer: loop {
             let mut writer = swap.writer(self.slots[0].replica);
             self.slots[0]
@@ -191,6 +192,7 @@ impl ReplicaPool {
                 None => break,
             }
         }
+        // lint: hotpath(end)
         Ok(self.into_report())
     }
 
@@ -199,6 +201,7 @@ impl ReplicaPool {
         let swap = self.shared.swap.clone();
         let n_slots = self.slots.len();
         let mut it = 0u64;
+        // lint: hotpath(begin, executor K>1 scheduler loop)
         'outer: loop {
             // Claim every owned stripe for the iteration (one CAS per
             // replica per iteration — never on the step path).
@@ -322,6 +325,7 @@ impl ReplicaPool {
                 None => break,
             }
         }
+        // lint: hotpath(end)
         Ok(self.into_report())
     }
 
@@ -330,6 +334,7 @@ impl ReplicaPool {
     /// splits), so finishing/republishing is still decided per lane —
     /// but when all republish (the common case) they ship one group
     /// message.
+    // lint: hotpath(begin, lockstep group step + group publish)
     fn step_group(
         &mut self,
         writers: &mut [ShardWriter<'_>],
@@ -417,6 +422,7 @@ impl ReplicaPool {
             slot.mark_awaiting();
         }
     }
+    // lint: hotpath(end)
 
     fn into_report(self) -> PoolReport {
         let signature = self

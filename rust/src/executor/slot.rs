@@ -321,6 +321,7 @@ impl ReplicaSlot {
 
     /// Start a fresh iteration: reset the step counter and publish the
     /// first observations.
+    // lint: hotpath(begin, per-slot step path: publish/poll/cook/step)
     pub fn begin_iteration(
         &mut self,
         group: &LaneGroup,
@@ -557,4 +558,5 @@ impl ReplicaSlot {
         }
         self.state = SlotState::AtBarrier;
     }
+    // lint: hotpath(end)
 }

@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod envs;
 pub mod executor;
 pub mod experiments;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod perf;

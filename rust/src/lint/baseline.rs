@@ -1,0 +1,96 @@
+//! Baseline bookkeeping: known findings, keyed location-independently.
+//!
+//! A baseline entry is `(rule, file, excerpt)` — the trimmed source line,
+//! not the line number, so unrelated edits above a baselined site don't
+//! invalidate it. Checking consumes entries count-wise: findings beyond
+//! an entry's count are fresh (fail), and entries no finding consumed are
+//! stale (also fail under `--ci`, so the baseline can only shrink —
+//! the same ratchet discipline as `BENCH_baseline.json`, DESIGN.md §12).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::rules::Finding;
+use crate::util::json::{obj, Json};
+
+/// Baseline key: (rule, file, trimmed source line).
+pub type Key = (String, String, String);
+
+fn key_of(f: &Finding) -> Key {
+    (f.rule.clone(), f.file.clone(), f.excerpt.clone())
+}
+
+/// Parse `lint_baseline.json` (`{"v":1,"entries":[{rule,file,excerpt,count}]}`).
+pub fn parse(text: &str) -> Result<BTreeMap<Key, u64>> {
+    let v = Json::parse(text).context("parsing lint baseline JSON")?;
+    let mut out: BTreeMap<Key, u64> = BTreeMap::new();
+    for e in v.get("entries")?.as_arr()? {
+        let k = (
+            e.get("rule")?.as_str()?.to_string(),
+            e.get("file")?.as_str()?.to_string(),
+            e.get("excerpt")?.as_str()?.to_string(),
+        );
+        let n = match e.opt("count") {
+            Some(c) => c.as_u64()?,
+            None => 1,
+        };
+        *out.entry(k).or_insert(0) += n;
+    }
+    Ok(out)
+}
+
+/// Serialize findings as a baseline document (used by `--update-baseline`).
+pub fn render(findings: &[Finding]) -> String {
+    let mut counts: BTreeMap<Key, u64> = BTreeMap::new();
+    for f in findings {
+        *counts.entry(key_of(f)).or_insert(0) += 1;
+    }
+    let entries: Vec<Json> = counts
+        .into_iter()
+        .map(|((rule, file, excerpt), count)| {
+            obj(vec![
+                ("rule", Json::Str(rule)),
+                ("file", Json::Str(file)),
+                ("excerpt", Json::Str(excerpt)),
+                ("count", Json::Num(count as f64)),
+            ])
+        })
+        .collect();
+    let top = obj(vec![("v", Json::Num(1.0)), ("entries", Json::Arr(entries))]);
+    let mut s = top.to_string();
+    s.push('\n');
+    s
+}
+
+/// The result of subtracting a baseline from a finding list.
+#[derive(Debug)]
+pub struct Diff {
+    /// Findings not covered by the baseline (these fail the run).
+    pub fresh: Vec<Finding>,
+    /// How many findings the baseline absorbed.
+    pub baselined: usize,
+    /// Baseline entries (with residual counts) nothing consumed.
+    pub stale: Vec<(Key, u64)>,
+}
+
+pub fn apply(findings: Vec<Finding>, baseline: &BTreeMap<Key, u64>) -> Diff {
+    let mut remaining = baseline.clone();
+    let mut fresh = Vec::new();
+    let mut baselined = 0usize;
+    for f in findings {
+        match remaining.get_mut(&key_of(&f)) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                baselined += 1;
+            }
+            _ => fresh.push(f),
+        }
+    }
+    let stale = remaining.into_iter().filter(|(_, n)| *n > 0).collect();
+    Diff {
+        fresh,
+        baselined,
+        stale,
+    }
+}

@@ -1,0 +1,427 @@
+//! Comment/string/raw-string/char-literal/lifetime-aware tokenizer.
+//!
+//! Promoted from the PR 6 delimiter scanner: instead of merely skipping
+//! quoted regions, this lexer produces a token stream (identifiers,
+//! punctuation, string contents, char literals, numbers, lifetimes) plus
+//! the comment list, so rules can match API usage without firing on
+//! prose, string literals, or commented-out code.
+//!
+//! Mirrored line-for-line by the Python transliteration in
+//! `python/tools/hts_lint.py` (`lex` / `_string` / `_quote`); the two
+//! must stay branch-identical so both sides agree finding-for-finding.
+//!
+//! Deliberate limits (shared with the transliteration): the lexer never
+//! fails — unterminated strings/comments consume to EOF and the
+//! `delimiters` rule reports the imbalance; raw *identifiers* (`r#type`)
+//! are not recognized (none exist in this tree; introducing one would
+//! surface as a delimiter imbalance, not silence).
+
+/// Token classification. `Str` carries the literal's *content* (quotes
+/// excluded) so content rules (e.g. the `016x` probe) can search it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Num,
+    Lifetime,
+}
+
+/// One token, tagged with the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub line: usize,
+    pub kind: Kind,
+    pub text: String,
+}
+
+/// One comment (line `//…` or block `/*…*/`, nesting included), spanning
+/// `line..=end_line`, raw text preserved (directive parsing strips the
+/// leading punctuation itself).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub end_line: usize,
+    pub text: String,
+}
+
+/// Lexer output: the token stream and the comment list.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Escaped-string prefixes (`b"…"`, `c"…"`).
+fn is_string_prefix(name: &str) -> bool {
+    name == "b" || name == "c"
+}
+
+/// Raw-string prefixes (`r"…"`, `br#"…"#`, `cr"…"`).
+fn is_raw_prefix(name: &str) -> bool {
+    name == "r" || name == "br" || name == "cr"
+}
+
+struct Lexer {
+    c: Vec<char>,
+    i: usize,
+    line: usize,
+    out: Lexed,
+}
+
+/// Tokenize `src`. Never fails on malformed input.
+pub fn lex(src: &str) -> Lexed {
+    let mut lx = Lexer {
+        c: src.chars().collect(),
+        i: 0,
+        line: 1,
+        out: Lexed::default(),
+    };
+    lx.run();
+    lx.out
+}
+
+impl Lexer {
+    /// Char at `i`, or NUL past the end (never a token char).
+    fn at(&self, i: usize) -> char {
+        self.c.get(i).copied().unwrap_or('\0')
+    }
+
+    fn slice(&self, a: usize, b: usize) -> String {
+        self.c[a..b.min(self.c.len())].iter().collect()
+    }
+
+    fn push(&mut self, line: usize, kind: Kind, text: String) {
+        self.out.toks.push(Tok { line, kind, text });
+    }
+
+    fn run(&mut self) {
+        while self.i < self.c.len() {
+            let ch = self.c[self.i];
+            if ch == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if ch == ' ' || ch == '\t' || ch == '\r' {
+                self.i += 1;
+            } else if ch == '/' && self.at(self.i + 1) == '/' {
+                self.line_comment();
+            } else if ch == '/' && self.at(self.i + 1) == '*' {
+                self.block_comment();
+            } else if ch == '"' {
+                self.string(false);
+            } else if ch == '\'' {
+                self.quote();
+            } else if is_ident_start(ch) {
+                self.ident();
+            } else if ch.is_ascii_digit() {
+                self.number();
+            } else {
+                let line = self.line;
+                self.push(line, Kind::Punct, ch.to_string());
+                self.i += 1;
+            }
+        }
+    }
+
+    fn line_comment(&mut self) {
+        let mut j = self.i;
+        while j < self.c.len() && self.c[j] != '\n' {
+            j += 1;
+        }
+        let text = self.slice(self.i, j);
+        self.out.comments.push(Comment {
+            line: self.line,
+            end_line: self.line,
+            text,
+        });
+        self.i = j;
+    }
+
+    fn block_comment(&mut self) {
+        let start_line = self.line;
+        let mut depth = 1usize;
+        let mut j = self.i + 2;
+        while j < self.c.len() && depth > 0 {
+            if self.c[j] == '\n' {
+                self.line += 1;
+                j += 1;
+            } else if self.c[j] == '/' && self.at(j + 1) == '*' {
+                depth += 1;
+                j += 2;
+            } else if self.c[j] == '*' && self.at(j + 1) == '/' {
+                depth -= 1;
+                j += 2;
+            } else {
+                j += 1;
+            }
+        }
+        let text = self.slice(self.i, j);
+        self.out.comments.push(Comment {
+            line: start_line,
+            end_line: self.line,
+            text,
+        });
+        self.i = j;
+    }
+
+    /// Lex a string with `self.i` at the opening `"` (or at the `#` run
+    /// of a raw string). Content excludes the quotes.
+    fn string(&mut self, raw: bool) {
+        let start_line = self.line;
+        let mut hashes = 0usize;
+        while self.at(self.i) == '#' {
+            hashes += 1;
+            self.i += 1;
+        }
+        self.i += 1; // opening quote
+        let content_start = self.i;
+        while self.i < self.c.len() {
+            let ch = self.c[self.i];
+            if ch == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if !raw && ch == '\\' {
+                self.i += 2;
+            } else if ch == '"' {
+                if raw && hashes > 0 {
+                    if (1..=hashes).all(|k| self.at(self.i + k) == '#') {
+                        let text = self.slice(content_start, self.i);
+                        self.push(start_line, Kind::Str, text);
+                        self.i += 1 + hashes;
+                        return;
+                    }
+                    self.i += 1;
+                } else {
+                    let text = self.slice(content_start, self.i);
+                    self.push(start_line, Kind::Str, text);
+                    self.i += 1;
+                    return;
+                }
+            } else {
+                self.i += 1;
+            }
+        }
+        // Unterminated: consume to EOF (the delimiters rule reports).
+        let text = self.slice(content_start, self.c.len());
+        self.push(start_line, Kind::Str, text);
+    }
+
+    /// Disambiguate char literal vs lifetime with `self.i` at `'`.
+    fn quote(&mut self) {
+        let n = self.c.len();
+        let i = self.i;
+        let j = i + 1;
+        if self.at(j) == '\\' {
+            // Escaped char literal: the backslash + escaped char are
+            // consumed blindly (covers `'\''` and `'\\'`), then scan to
+            // the closing quote.
+            let mut k = j + 2;
+            while k < n && self.c[k] != '\'' {
+                k += 1;
+            }
+            let text = self.slice(i, k + 1);
+            let line = self.line;
+            self.push(line, Kind::Char, text);
+            self.i = (k + 1).min(n);
+        } else if j < n && is_ident_cont(self.c[j]) && self.at(j + 1) != '\'' {
+            // Lifetime: 'a, 'static, '_ — an ident char NOT followed by
+            // a closing quote.
+            let mut k = j;
+            while k < n && is_ident_cont(self.c[k]) {
+                k += 1;
+            }
+            let text = self.slice(i, k);
+            let line = self.line;
+            self.push(line, Kind::Lifetime, text);
+            self.i = k;
+        } else {
+            // Plain char literal 'x' (including '"' and '\n').
+            let mut k = j;
+            while k < n && self.c[k] != '\'' {
+                k += 1;
+            }
+            if k >= n {
+                k = n.saturating_sub(1);
+            }
+            let text = self.slice(i, k + 1);
+            let nl = text.chars().filter(|&c| c == '\n').count();
+            let line = self.line;
+            self.push(line, Kind::Char, text);
+            self.line += nl;
+            self.i = k + 1;
+        }
+    }
+
+    fn ident(&mut self) {
+        let n = self.c.len();
+        let mut j = self.i + 1;
+        while j < n && is_ident_cont(self.c[j]) {
+            j += 1;
+        }
+        let name = self.slice(self.i, j);
+        let nj = self.at(j);
+        if nj == '"' && is_string_prefix(&name) {
+            self.i = j;
+            self.string(false);
+        } else if nj == '"' && is_raw_prefix(&name) {
+            self.i = j;
+            self.string(true);
+        } else if nj == '#' && is_raw_prefix(&name) {
+            self.i = j;
+            self.string(true);
+        } else if nj == '\'' && name == "b" {
+            self.i = j;
+            self.quote();
+        } else {
+            let line = self.line;
+            self.push(line, Kind::Ident, name);
+            self.i = j;
+        }
+    }
+
+    fn number(&mut self) {
+        let n = self.c.len();
+        let start = self.i;
+        let mut j = self.i + 1;
+        while j < n
+            && (is_ident_cont(self.c[j])
+                || (self.c[j] == '.' && j + 1 < n && self.c[j + 1].is_ascii_digit()))
+        {
+            j += 1;
+        }
+        // Exponent sign: 1.5e-3 / 2E+8. When the sign test is reached,
+        // `j - 1 > start` holds (the `e` was consumed above), so `j >= 2`
+        // and the `j - 2` lookback cannot underflow.
+        while j < n
+            && (self.c[j] == '+' || self.c[j] == '-')
+            && (self.c[j - 1] == 'e' || self.c[j - 1] == 'E')
+            && self.c[j - 2].is_ascii_digit()
+        {
+            j += 1;
+            while j < n && is_ident_cont(self.c[j]) {
+                j += 1;
+            }
+        }
+        let text = self.slice(start, j);
+        let line = self.line;
+        self.push(line, Kind::Num, text);
+        self.i = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<(usize, String)> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| (t.line, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn nested_block_comments_swallow_everything() {
+        let src = "/* a /* thread_rng */ still comment */ real";
+        let out = lex(src);
+        assert_eq!(idents(src), vec![(1, "real".to_string())]);
+        assert_eq!(out.comments.len(), 1);
+        assert!(out.comments[0].text.contains("thread_rng"));
+    }
+
+    #[test]
+    fn raw_strings_respect_hash_depth() {
+        let src = r###"let a = r#"quote " inside"#; let b = r##"deep "# still"##;"###;
+        let strs: Vec<String> = lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(strs, vec!["quote \" inside", "deep \"# still"]);
+    }
+
+    #[test]
+    fn escaped_strings_do_not_leak_tokens() {
+        let src = "let s = \"esc \\\" quote thread_rng\"; done";
+        let names: Vec<String> = idents(src).into_iter().map(|(_, t)| t).collect();
+        assert_eq!(names, vec!["let", "s", "done"]);
+    }
+
+    #[test]
+    fn chars_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let q = '\\''; let d = '\"'; let s: &'static str = x; }";
+        let out = lex(src);
+        let lifetimes: Vec<String> = out
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a", "'static"]);
+        let chars: Vec<String> = out
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Char)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(chars, vec!["'\\''", "'\"'"]);
+    }
+
+    #[test]
+    fn byte_and_c_strings_take_the_string_path() {
+        let src = "let a = b\"bytes \\\" x\"; let b = c\"cstr\"; let c = br#\"raw\"#; tail";
+        let names: Vec<String> = idents(src).into_iter().map(|(_, t)| t).collect();
+        assert_eq!(names, vec!["let", "a", "let", "b", "let", "c", "tail"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "/* one\ntwo */\nlet x = \"a\nb\";\nfinal";
+        let got = idents(src);
+        assert_eq!(
+            got,
+            vec![
+                (3, "let".to_string()),
+                (3, "x".to_string()),
+                (5, "final".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers_consume_exponents_and_suffixes() {
+        let src = "let a = 1.5e-3; let b = 0x1f_u64; let c = 2E+8;";
+        let nums: Vec<String> = lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == Kind::Num)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(nums, vec!["1.5e-3", "0x1f_u64", "2E+8"]);
+    }
+
+    #[test]
+    fn unterminated_string_consumes_to_eof() {
+        let src = "let s = \"never closed\nmore";
+        let out = lex(src);
+        let strs: Vec<String> = out
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(strs, vec!["never closed\nmore"]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Rule manifest (`rust/lint.rules`): named path zones + one binding per
+//! rule. Parsing is fail-closed — an unknown rule id, an unknown mode, a
+//! binding that references an undeclared zone, or a known rule left
+//! unbound all reject the manifest, so a typo can never silently disable
+//! a check. Grammar (line-based, whitespace-split, `#` comments):
+//!
+//! ```text
+//! zone <name> <path-prefix> [<path-prefix>...]
+//! rule <id> forbid-in <zone> | forbid-outside <zone>
+//!          | forbid-everywhere | hotpath | cargo
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Every rule id the engine implements. A manifest must bind all of them.
+pub const KNOWN_RULES: &[&str] = &[
+    "wall-clock",
+    "thread-rng",
+    "nan-cmp",
+    "map-iteration",
+    "hex-u64",
+    "hotpath-lock",
+    "hotpath-alloc",
+    "unsafe-safety",
+    "delimiters",
+    "cargo-offline",
+];
+
+/// Where a rule applies. `Hotpath` rules fire only inside
+/// `// lint: hotpath(begin, …)` regions; `Cargo` rules run over
+/// `Cargo.toml` instead of the source tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Mode {
+    ForbidIn(String),
+    ForbidOutside(String),
+    ForbidEverywhere,
+    Hotpath,
+    Cargo,
+}
+
+/// Parsed manifest: zone name → path prefixes, rule id → binding.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub zones: BTreeMap<String, Vec<String>>,
+    pub bindings: BTreeMap<String, Mode>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, origin: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (ln0, raw) in text.lines().enumerate() {
+            let ln = ln0 + 1;
+            let s = raw.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = s.split_whitespace().collect();
+            match parts[0] {
+                "zone" if parts.len() >= 3 => {
+                    let prefixes = parts[2..].iter().map(|p| p.to_string()).collect();
+                    m.zones.insert(parts[1].to_string(), prefixes);
+                }
+                "rule" if parts.len() >= 3 => {
+                    let (rule, mode) = (parts[1], parts[2]);
+                    if !KNOWN_RULES.contains(&rule) {
+                        bail!("{origin}:{ln}: unknown rule '{rule}'");
+                    }
+                    let parsed = match mode {
+                        "forbid-everywhere" => Mode::ForbidEverywhere,
+                        "hotpath" => Mode::Hotpath,
+                        "cargo" => Mode::Cargo,
+                        "forbid-in" | "forbid-outside" => {
+                            if parts.len() != 4 {
+                                bail!("{origin}:{ln}: mode '{mode}' needs a zone");
+                            }
+                            if mode == "forbid-in" {
+                                Mode::ForbidIn(parts[3].to_string())
+                            } else {
+                                Mode::ForbidOutside(parts[3].to_string())
+                            }
+                        }
+                        other => bail!("{origin}:{ln}: unknown mode '{other}'"),
+                    };
+                    m.bindings.insert(rule.to_string(), parsed);
+                }
+                _ => bail!("{origin}:{ln}: unparseable line: {s}"),
+            }
+        }
+        let missing: Vec<&str> = KNOWN_RULES
+            .iter()
+            .copied()
+            .filter(|r| !m.bindings.contains_key(*r))
+            .collect();
+        if !missing.is_empty() {
+            bail!("{origin}: unbound rules (fail-closed): {missing:?}");
+        }
+        for (rule, mode) in &m.bindings {
+            let zone = match mode {
+                Mode::ForbidIn(z) | Mode::ForbidOutside(z) => Some(z),
+                _ => None,
+            };
+            if let Some(z) = zone {
+                if !m.zones.contains_key(z) {
+                    bail!("{origin}: rule '{rule}' binds undeclared zone '{z}'");
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Does repo-relative path `rel` fall under any prefix of `zone`?
+    pub fn in_zone(&self, zone: &str, rel: &str) -> bool {
+        match self.zones.get(zone) {
+            Some(prefixes) => prefixes.iter().any(|p| rel.starts_with(p.as_str())),
+            None => false,
+        }
+    }
+
+    /// Is `rule` active for `rel`? `Hotpath`/`Cargo` bindings return
+    /// false — they are dispatched specially, not per-file.
+    pub fn active(&self, rule: &str, rel: &str) -> bool {
+        match self.bindings.get(rule) {
+            Some(Mode::ForbidEverywhere) => true,
+            Some(Mode::ForbidIn(z)) => self.in_zone(z, rel),
+            Some(Mode::ForbidOutside(z)) => !self.in_zone(z, rel),
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full(extra: &str) -> String {
+        format!(
+            "zone hot a/ b/\n\
+             rule wall-clock forbid-outside hot\n\
+             rule thread-rng forbid-everywhere\n\
+             rule nan-cmp forbid-everywhere\n\
+             rule map-iteration forbid-in hot\n\
+             rule hex-u64 forbid-in hot\n\
+             rule hotpath-lock hotpath\n\
+             rule hotpath-alloc hotpath\n\
+             rule unsafe-safety forbid-everywhere\n\
+             rule delimiters forbid-everywhere\n\
+             {extra}"
+        )
+    }
+
+    #[test]
+    fn parses_and_routes_zones() {
+        let m = Manifest::parse(&full("rule cargo-offline cargo\n"), "t").unwrap();
+        assert!(m.active("wall-clock", "c/x.rs"));
+        assert!(!m.active("wall-clock", "a/x.rs"));
+        assert!(m.active("map-iteration", "b/y.rs"));
+        assert!(!m.active("map-iteration", "c/y.rs"));
+        assert!(m.active("thread-rng", "anything.rs"));
+        assert!(!m.active("hotpath-lock", "a/x.rs"));
+    }
+
+    #[test]
+    fn unbound_rule_is_rejected_fail_closed() {
+        let err = Manifest::parse(&full(""), "t").unwrap_err().to_string();
+        assert!(err.contains("unbound rules"), "{err}");
+        assert!(err.contains("cargo-offline"), "{err}");
+    }
+
+    #[test]
+    fn unknown_rule_mode_and_zone_are_rejected() {
+        let text = full("rule cargo-offline cargo\nrule no-such forbid-everywhere\n");
+        assert!(Manifest::parse(&text, "t").is_err());
+        let text = full("rule cargo-offline frobnicate\n");
+        assert!(Manifest::parse(&text, "t").is_err());
+        let text = full("rule cargo-offline forbid-in nowhere\n");
+        assert!(Manifest::parse(&text, "t").is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! `hts-lint`: a determinism & concurrency static-analysis pass that
+//! machine-checks this repo's bit-exactness invariants (DESIGN.md §14).
+//!
+//! The codebase promises byte-identical artifacts for a fixed seed
+//! across thread counts, lane widths, and host fleets. Most of the ways
+//! to silently break that promise are *textual*: an `Instant::now()`
+//! that leaks into control flow, a `HashMap` iterated while writing a
+//! report, a `partial_cmp().unwrap()` that panics on the first NaN, a
+//! `format!("{:x}")` that bypasses the canonical hex-u64 wire helpers.
+//! This module lexes the whole source tree with a comment/string-aware
+//! tokenizer ([`lexer`]) and enforces zoned rules from a committed
+//! manifest (`rust/lint.rules`, parsed fail-closed by [`manifest`]):
+//!
+//! * `wall-clock` — real-time reads outside the timekeeping zone
+//! * `thread-rng` — OS-entropy RNG anywhere
+//! * `nan-cmp` — `partial_cmp().unwrap()` anywhere
+//! * `map-iteration` — hash-ordered containers in artifact-producing code
+//! * `hex-u64` — raw u64 wire formatting outside `util::json`
+//! * `hotpath-lock` / `hotpath-alloc` — lock/alloc discipline inside
+//!   `// lint: hotpath(begin, …)` marker regions
+//! * `unsafe-safety` — every `unsafe` needs a covering `SAFETY:` comment
+//!   (all sites are exported as an inventory either way)
+//! * `delimiters` — the promoted PR 6 balance scanner
+//! * `cargo-offline` — `Cargo.toml` deps must be vendored path crates
+//!
+//! Violations a human has justified carry
+//! `// lint: allow(<rule>, <reason>)`; an allow that stops suppressing
+//! anything becomes a finding itself. Legacy findings live in a counted
+//! baseline (`rust/lint_baseline.json`, empty today) that can only
+//! shrink. The `hts-lint` binary (`src/bin/hts_lint.rs`) drives this
+//! from CI, fail-closed; `python/tools/hts_lint.py` is a transliteration
+//! for toolchain-free environments and must agree finding-for-finding
+//! (asserted over the fixture corpus by `rust/tests/lint.rs`).
+
+pub mod baseline;
+pub mod lexer;
+pub mod manifest;
+pub mod report;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use manifest::Manifest;
+use rules::{Finding, UnsafeSite};
+
+/// Inputs for one lint run.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Source tree root (usually `rust/src`).
+    pub root: PathBuf,
+    /// Rule manifest path (usually `rust/lint.rules`).
+    pub manifest: PathBuf,
+    /// Baseline path; `None` (or a missing file) means empty baseline.
+    pub baseline: Option<PathBuf>,
+    /// `Cargo.toml` for the cargo-offline rule; `None` skips it.
+    pub cargo: Option<PathBuf>,
+}
+
+/// One full run over the tree.
+#[derive(Debug)]
+pub struct LintOutcome {
+    /// How many `.rs` files were scanned.
+    pub files: usize,
+    /// Fresh (unbaselined) findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// How many findings the baseline absorbed.
+    pub baselined: usize,
+    /// Stale baseline entries with residual counts.
+    pub stale: Vec<(baseline::Key, u64)>,
+    /// Every `unsafe` site, covered or not, in scan order.
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+/// All `.rs` files under `root`, in sorted-walk order (deterministic
+/// across hosts; the final finding order is a sort anyway).
+pub fn rs_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    walk(root, &mut out)?;
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension() == Some(std::ffi::OsStr::new("rs")) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the tree: lex + check every file, run the cargo rule, subtract
+/// the baseline. Fails only on I/O or an invalid manifest/baseline —
+/// findings are data, the caller decides the exit code.
+pub fn run(cfg: &LintConfig) -> Result<LintOutcome> {
+    let mtext = fs::read_to_string(&cfg.manifest)
+        .with_context(|| format!("reading manifest {}", cfg.manifest.display()))?;
+    let manifest = Manifest::parse(&mtext, &cfg.manifest.display().to_string())?;
+    let files = rs_files(&cfg.root)?;
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut unsafe_sites: Vec<UnsafeSite> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&cfg.root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let rep = rules::check_file(&rel, &src, &manifest);
+        findings.extend(rep.findings);
+        unsafe_sites.extend(rep.unsafe_sites);
+    }
+    if let Some(cp) = &cfg.cargo {
+        if cp.exists() {
+            let text =
+                fs::read_to_string(cp).with_context(|| format!("reading {}", cp.display()))?;
+            findings.extend(rules::check_cargo(&cp.display().to_string(), &text));
+        }
+    }
+    findings.sort();
+    let base: BTreeMap<baseline::Key, u64> = match &cfg.baseline {
+        Some(bp) if bp.exists() => {
+            let text = fs::read_to_string(bp)
+                .with_context(|| format!("reading baseline {}", bp.display()))?;
+            baseline::parse(&text).with_context(|| format!("in {}", bp.display()))?
+        }
+        _ => BTreeMap::new(),
+    };
+    let diff = baseline::apply(findings, &base);
+    Ok(LintOutcome {
+        files: files.len(),
+        findings: diff.fresh,
+        baselined: diff.baselined,
+        stale: diff.stale,
+        unsafe_sites,
+    })
+}

@@ -1,0 +1,65 @@
+//! Rendering: `file:line: [rule] message` diagnostics for humans, plus a
+//! machine-readable JSON document (findings + the unsafe inventory) for
+//! CI artifact upload and downstream tooling.
+
+use crate::util::json::{obj, Json};
+
+use super::LintOutcome;
+
+/// Human-readable diagnostics + one summary line.
+pub fn text(out: &LintOutcome) -> String {
+    let mut s = String::new();
+    for f in &out.findings {
+        s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    for ((rule, file, excerpt), n) in &out.stale {
+        s.push_str(&format!(
+            "note: stale baseline entry [{rule}] {file} '{excerpt}' x{n}\n"
+        ));
+    }
+    s.push_str(&format!(
+        "hts-lint: {} files, {} finding(s), {} baselined, {} unsafe site(s)\n",
+        out.files,
+        out.findings.len(),
+        out.baselined,
+        out.unsafe_sites.len()
+    ));
+    s
+}
+
+/// Machine-readable document: `{v, files, findings[], baselined,
+/// unsafe_inventory[]}` (uncovered sites carry `"safety": "UNCOVERED"`).
+pub fn json(out: &LintOutcome) -> Json {
+    let findings: Vec<Json> = out
+        .findings
+        .iter()
+        .map(|f| {
+            obj(vec![
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("rule", Json::Str(f.rule.clone())),
+                ("message", Json::Str(f.message.clone())),
+                ("excerpt", Json::Str(f.excerpt.clone())),
+            ])
+        })
+        .collect();
+    let inventory: Vec<Json> = out
+        .unsafe_sites
+        .iter()
+        .map(|u| {
+            let safety = u.safety.clone().unwrap_or_else(|| "UNCOVERED".to_string());
+            obj(vec![
+                ("file", Json::Str(u.file.clone())),
+                ("line", Json::Num(u.line as f64)),
+                ("safety", Json::Str(safety)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("v", Json::Num(1.0)),
+        ("files", Json::Num(out.files as f64)),
+        ("findings", Json::Arr(findings)),
+        ("baselined", Json::Num(out.baselined as f64)),
+        ("unsafe_inventory", Json::Arr(inventory)),
+    ])
+}

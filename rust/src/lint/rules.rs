@@ -1,0 +1,472 @@
+//! Per-file analysis: token-pattern rules, the nan-cmp window, hex-u64
+//! wire discipline, unsafe/SAFETY coverage, delimiter balance, and the
+//! `// lint:` directive grammar (allows + hotpath region markers).
+//!
+//! Execution order matters and is shared with the Python transliteration:
+//! directives parse first (their errors are findings under the always-on
+//! pseudo-rule `lint-directive`), then the token rules run, then allows
+//! are applied — and any allow that suppressed nothing becomes a finding
+//! itself, so annotations cannot rot silently.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Comment, Kind, Tok};
+use super::manifest::{Manifest, Mode, KNOWN_RULES};
+
+/// One diagnostic. `excerpt` is the trimmed source line, used both for
+/// display and as the location-independent baseline key (line numbers
+/// shift too easily to key on).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+    pub excerpt: String,
+}
+
+/// One `unsafe` occurrence for the inventory. `safety` is the covering
+/// `SAFETY:` excerpt; `None` means uncovered (also a finding).
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    pub safety: Option<String>,
+}
+
+/// `check_file` output for one source file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+/// Token patterns per rule (each element matches one ident/punct token).
+const PATTERNS: &[(&str, &[&[&str]])] = &[
+    ("wall-clock", &[&["Instant", ":", ":", "now"], &["SystemTime"]]),
+    ("thread-rng", &[&["thread_rng"], &["from_entropy"]]),
+    ("map-iteration", &[&["HashMap"], &["HashSet"]]),
+    ("hotpath-lock", &[&["Mutex"], &["RwLock"], &[".", "lock", "("]]),
+    (
+        "hotpath-alloc",
+        &[
+            &["format", "!"],
+            &["vec", "!"],
+            &["Vec", ":", ":", "new"],
+            &["String", ":", ":", "new"],
+            &["String", ":", ":", "from"],
+            &["Box", ":", ":", "new"],
+            &[".", "to_string", "("],
+            &[".", "to_vec", "("],
+        ],
+    ),
+];
+
+/// Canonical one-line message per rule id.
+pub fn message(rule: &str) -> &'static str {
+    match rule {
+        "wall-clock" => {
+            "wall-clock read in a deterministic zone (telemetry/perf/deadline code is \
+             zone-exempt; else justify with `// lint: allow(wall-clock, <why>)`)"
+        }
+        "thread-rng" => "non-deterministic RNG source (use seeded SplitMix64 streams)",
+        "nan-cmp" => "partial_cmp().unwrap() is NaN-unsafe (use total_cmp)",
+        "map-iteration" => {
+            "hash-ordered container in artifact-producing code (use BTreeMap/BTreeSet, or \
+             prove order-independence with `// lint: allow(map-iteration, <proof>)`)"
+        }
+        "hex-u64" => "raw u64 (de)serialization outside util::json (use hex_u64/parse_hex_u64)",
+        "hotpath-lock" => {
+            "lock primitive in a hot-path region (justify with \
+             `// lint: allow(hotpath-lock, <why>)`)"
+        }
+        "hotpath-alloc" => {
+            "allocation in a hot-path region (justify with \
+             `// lint: allow(hotpath-alloc, <why>)`)"
+        }
+        "unsafe-safety" => "`unsafe` without a covering `// SAFETY:` comment",
+        "delimiters" => "unbalanced delimiters",
+        "cargo-offline" => {
+            "non-path dependency breaks the offline-build guarantee (vendor it under \
+             rust/vendor/)"
+        }
+        _ => "lint directive error",
+    }
+}
+
+fn tok_match(t: &Tok, el: &str) -> bool {
+    (t.kind == Kind::Ident || t.kind == Kind::Punct) && t.text == el
+}
+
+/// A parsed `// lint: allow(rule, reason)` annotation. `scope` holds the
+/// line(s) it suppresses on: its own line plus, when the comment stands
+/// alone, the next token-bearing line below it.
+struct Allow {
+    line: usize,
+    rule: String,
+    scope: Vec<usize>,
+    used: bool,
+}
+
+/// Extract allows + hotpath regions from the comment stream; malformed
+/// directives and marker mismatches are returned as (line, message)
+/// errors that the caller files under `lint-directive`.
+#[allow(clippy::type_complexity)]
+fn parse_directives(
+    comments: &[Comment],
+    token_lines: &BTreeSet<usize>,
+) -> (Vec<Allow>, Vec<(usize, usize)>, Vec<(usize, String)>) {
+    let mut allows = Vec::new();
+    let mut regions = Vec::new();
+    let mut errors = Vec::new();
+    let mut open_begin: Option<usize> = None;
+    for c in comments {
+        let body = c
+            .text
+            .trim_start_matches('/')
+            .trim_start_matches('!')
+            .trim_start_matches('*')
+            .trim();
+        let Some(d) = body.strip_prefix("lint:") else {
+            continue;
+        };
+        let d = d.trim();
+        if let Some(inner) = d.strip_prefix("allow(").and_then(|x| x.strip_suffix(')')) {
+            let (rule, reason) = match inner.find(',') {
+                Some(p) => (inner[..p].trim(), inner[p + 1..].trim()),
+                None => (inner.trim(), ""),
+            };
+            if !KNOWN_RULES.contains(&rule) {
+                errors.push((c.line, format!("allow names unknown rule '{rule}'")));
+                continue;
+            }
+            if reason.is_empty() {
+                errors.push((c.line, "allow needs a reason: lint: allow(rule, why)".into()));
+                continue;
+            }
+            let mut scope = vec![c.line];
+            if !token_lines.contains(&c.line) {
+                if let Some(&nxt) = token_lines.range(c.end_line + 1..).next() {
+                    scope.push(nxt);
+                }
+            }
+            allows.push(Allow {
+                line: c.line,
+                rule: rule.to_string(),
+                scope,
+                used: false,
+            });
+        } else if d.starts_with("hotpath(begin") && d.ends_with(')') {
+            if let Some(prev) = open_begin {
+                errors.push((
+                    c.line,
+                    format!("nested hotpath(begin) — close the previous region opened at line {prev}"),
+                ));
+                continue;
+            }
+            open_begin = Some(c.line);
+        } else if d == "hotpath(end)" {
+            match open_begin.take() {
+                Some(b) => regions.push((b, c.line)),
+                None => errors.push((c.line, "hotpath(end) without a matching begin".into())),
+            }
+        } else {
+            errors.push((c.line, format!("unparseable lint directive: '{d}'")));
+        }
+    }
+    if let Some(b) = open_begin {
+        errors.push((b, "hotpath(begin) never closed".into()));
+    }
+    (allows, regions, errors)
+}
+
+fn push_finding(
+    findings: &mut Vec<Finding>,
+    rel: &str,
+    lines: &[&str],
+    line: usize,
+    rule: &str,
+    msg: String,
+) {
+    let excerpt = lines.get(line - 1).map(|s| s.trim().to_string()).unwrap_or_default();
+    findings.push(Finding {
+        file: rel.to_string(),
+        line,
+        rule: rule.to_string(),
+        message: msg,
+        excerpt,
+    });
+}
+
+/// Run every source-file rule over one file.
+pub fn check_file(rel: &str, src: &str, manifest: &Manifest) -> FileReport {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let lines: Vec<&str> = src.lines().collect();
+    let token_lines: BTreeSet<usize> = toks.iter().map(|t| t.line).collect();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let (mut allows, regions, errors) = parse_directives(&lexed.comments, &token_lines);
+    for (line, msg) in errors {
+        push_finding(&mut findings, rel, &lines, line, "lint-directive", msg);
+    }
+    let in_region = |line: usize| regions.iter().any(|&(b, e)| (b..=e).contains(&line));
+
+    // -- simple token-pattern rules (dedup by rule + line) ---------------
+    let mut seen: BTreeSet<(String, usize)> = BTreeSet::new();
+    let mut emit = |findings: &mut Vec<Finding>, line: usize, rule: &str, msg: String| {
+        if seen.insert((rule.to_string(), line)) {
+            push_finding(findings, rel, &lines, line, rule, msg);
+        }
+    };
+
+    for (rule, pats) in PATTERNS {
+        let hot = matches!(manifest.bindings.get(*rule), Some(Mode::Hotpath));
+        if !hot && !manifest.active(rule, rel) {
+            continue;
+        }
+        for pat in *pats {
+            for w in toks.windows(pat.len()) {
+                if w.iter().zip(pat.iter()).all(|(t, el)| tok_match(t, el)) {
+                    let line = w[0].line;
+                    if hot && !in_region(line) {
+                        continue;
+                    }
+                    emit(&mut findings, line, rule, message(rule).to_string());
+                }
+            }
+        }
+    }
+
+    // -- nan-cmp: partial_cmp followed by unwrap within 8 tokens ---------
+    if manifest.active("nan-cmp", rel) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind == Kind::Ident && t.text == "partial_cmp" {
+                let tail = &toks[i + 1..(i + 9).min(toks.len())];
+                if tail.iter().any(|u| u.kind == Kind::Ident && u.text == "unwrap") {
+                    emit(&mut findings, t.line, "nan-cmp", message("nan-cmp").to_string());
+                }
+            }
+        }
+    }
+
+    // -- hex-u64: hex format specs / radix parsing in the zone -----------
+    if manifest.active("hex-u64", rel) {
+        for t in toks {
+            let hit = (t.kind == Kind::Str && t.text.contains("016x"))
+                || (t.kind == Kind::Ident && t.text == "from_str_radix");
+            if hit {
+                emit(&mut findings, t.line, "hex-u64", message("hex-u64").to_string());
+            }
+        }
+    }
+
+    // -- unsafe-safety + inventory ---------------------------------------
+    let mut unsafe_sites = Vec::new();
+    if manifest.active("unsafe-safety", rel) {
+        // Lines covered only by comments (no tokens): the lookup table
+        // for "contiguous comment block immediately above".
+        let mut comment_only: BTreeMap<usize, Vec<&str>> = BTreeMap::new();
+        for c in &lexed.comments {
+            for l in c.line..=c.end_line {
+                comment_only.entry(l).or_default().push(c.text.as_str());
+            }
+        }
+        for l in &token_lines {
+            comment_only.remove(l);
+        }
+
+        let covering_comment = |line: usize| -> Option<String> {
+            // Trailing comment on the same line.
+            for c in &lexed.comments {
+                if (c.line..=c.end_line).contains(&line) && c.text.contains("SAFETY:") {
+                    return Some(c.text.clone());
+                }
+            }
+            // Contiguous comment-only block immediately above.
+            let mut l = line - 1;
+            let mut block: Vec<&str> = Vec::new();
+            while let Some(texts) = comment_only.get(&l) {
+                block.extend(texts.iter().copied());
+                if l == 0 {
+                    break;
+                }
+                l -= 1;
+            }
+            block
+                .iter()
+                .find(|t| t.contains("SAFETY:"))
+                .map(|t| (*t).to_string())
+        };
+
+        let mut depth = 0usize;
+        // Brace depths whose enclosing `unsafe` item carried a SAFETY
+        // comment: nested `unsafe` inside (e.g. calls in an `unsafe impl`
+        // method) inherit that coverage.
+        let mut covered_stack: Vec<usize> = Vec::new();
+        let mut pending_cover = false;
+        for t in toks {
+            if t.kind == Kind::Punct && matches!(t.text.as_str(), "(" | "[" | "{") {
+                depth += 1;
+                if t.text == "{" && pending_cover {
+                    covered_stack.push(depth);
+                    pending_cover = false;
+                }
+            } else if t.kind == Kind::Punct && matches!(t.text.as_str(), ")" | "]" | "}") {
+                if t.text == "}" && covered_stack.last() == Some(&depth) {
+                    covered_stack.pop();
+                }
+                depth = depth.saturating_sub(1);
+            } else if t.kind == Kind::Punct && t.text == ";" {
+                pending_cover = false;
+            } else if t.kind == Kind::Ident && t.text == "unsafe" {
+                if !covered_stack.is_empty() {
+                    unsafe_sites.push(UnsafeSite {
+                        file: rel.to_string(),
+                        line: t.line,
+                        safety: Some(
+                            "(covered by enclosing unsafe item's SAFETY comment)".to_string(),
+                        ),
+                    });
+                    pending_cover = true;
+                    continue;
+                }
+                match covering_comment(t.line) {
+                    None => {
+                        emit(
+                            &mut findings,
+                            t.line,
+                            "unsafe-safety",
+                            message("unsafe-safety").to_string(),
+                        );
+                        unsafe_sites.push(UnsafeSite {
+                            file: rel.to_string(),
+                            line: t.line,
+                            safety: None,
+                        });
+                    }
+                    Some(text) => {
+                        let flat = text.split_whitespace().collect::<Vec<_>>().join(" ");
+                        let idx = flat.find("SAFETY:").unwrap_or(0);
+                        let excerpt: String = flat[idx..].chars().take(120).collect();
+                        unsafe_sites.push(UnsafeSite {
+                            file: rel.to_string(),
+                            line: t.line,
+                            safety: Some(excerpt),
+                        });
+                        pending_cover = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // -- delimiters ------------------------------------------------------
+    if manifest.active("delimiters", rel) {
+        let mut stack: Vec<(char, usize)> = Vec::new();
+        let mut bad: Option<(usize, String)> = None;
+        for t in toks {
+            if t.kind != Kind::Punct {
+                continue;
+            }
+            let ch = t.text.chars().next().unwrap_or(' ');
+            match ch {
+                '(' | '[' | '{' => stack.push((ch, t.line)),
+                ')' | ']' | '}' => {
+                    let want = match ch {
+                        ')' => '(',
+                        ']' => '[',
+                        _ => '{',
+                    };
+                    if stack.last().map(|&(c, _)| c) != Some(want) {
+                        bad = Some((t.line, format!("unmatched '{ch}'")));
+                        break;
+                    }
+                    stack.pop();
+                }
+                _ => {}
+            }
+        }
+        if let Some((line, why)) = bad {
+            let msg = format!("{}: {}", message("delimiters"), why);
+            emit(&mut findings, line, "delimiters", msg);
+        } else if let Some(&(ch, line)) = stack.last() {
+            let msg = format!("{}: '{}' never closed", message("delimiters"), ch);
+            emit(&mut findings, line, "delimiters", msg);
+        }
+    }
+
+    // -- apply allows; unused allows are findings themselves -------------
+    let mut kept = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        for a in allows.iter_mut() {
+            if a.rule == f.rule && a.scope.contains(&f.line) {
+                a.used = true;
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            let msg = format!(
+                "unused lint: allow({}, ...) — the rule no longer fires here; drop the annotation",
+                a.rule
+            );
+            push_finding(&mut kept, rel, &lines, a.line, "lint-directive", msg);
+        }
+    }
+    FileReport {
+        findings: kept,
+        unsafe_sites,
+    }
+}
+
+/// The cargo-offline rule: every `[dependencies]`-section entry must be
+/// an inline table with a `path` key and no `git`/`version`/`registry`
+/// escape hatches (the container build has no network; DESIGN.md §3).
+pub fn check_cargo(origin: &str, text: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut section = String::new();
+    for (ln0, raw) in text.lines().enumerate() {
+        let ln = ln0 + 1;
+        let s = raw.trim();
+        if s.starts_with('[') {
+            section = s.trim_matches(|c| c == '[' || c == ']').to_string();
+            continue;
+        }
+        if !section.ends_with("dependencies") || s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let Some((name, val)) = s.split_once('=') else {
+            continue;
+        };
+        let val = val.trim();
+        let bad = if val.starts_with('{') {
+            let has_path = val
+                .trim_matches(|c| c == '{' || c == '}')
+                .split(',')
+                .any(|kv| kv.split('=').next().map(str::trim) == Some("path"));
+            let hazard = ["git =", "git=", "version =", "version=", "registry"]
+                .iter()
+                .any(|w| val.contains(w));
+            !has_path || hazard
+        } else {
+            true // bare `name = "1.0"` — a crates.io version requirement
+        };
+        if bad {
+            findings.push(Finding {
+                file: origin.to_string(),
+                line: ln,
+                rule: "cargo-offline".to_string(),
+                message: format!("{} (dep '{}')", message("cargo-offline"), name.trim()),
+                excerpt: s.to_string(),
+            });
+        }
+    }
+    findings
+}

@@ -38,9 +38,9 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::util::json::Json;
+use crate::util::json::{hex_u64, parse_hex_u64, Json};
 
 /// Everything the engine counts. The discriminant indexes the scope's
 /// counter array; `key()` is the stable wire name used in the JSONL
@@ -308,17 +308,6 @@ pub struct TelemetryReport {
     pub hists: BTreeMap<String, Vec<u64>>,
 }
 
-fn hex(v: u64) -> String {
-    format!("0x{v:016x}")
-}
-
-fn unhex(s: &str) -> Result<u64> {
-    let Some(d) = s.strip_prefix("0x") else {
-        bail!("expected 0x-prefixed hex u64, got {s:?}");
-    };
-    Ok(u64::from_str_radix(d, 16)?)
-}
-
 impl TelemetryReport {
     pub fn counter(&self, key: &str) -> u64 {
         self.counters.get(key).copied().unwrap_or(0)
@@ -351,7 +340,7 @@ impl TelemetryReport {
         let counters = self
             .counters
             .iter()
-            .map(|(k, &v)| (k.clone(), Json::Str(hex(v))))
+            .map(|(k, &v)| (k.clone(), Json::Str(hex_u64(v))))
             .collect();
         let hists = self
             .hists
@@ -371,7 +360,7 @@ impl TelemetryReport {
     pub fn from_json(v: &Json) -> Result<TelemetryReport> {
         let mut counters = BTreeMap::new();
         for (k, v) in v.get("counters")?.as_obj()? {
-            counters.insert(k.clone(), unhex(v.as_str()?)?);
+            counters.insert(k.clone(), parse_hex_u64(v.as_str()?)?);
         }
         let mut hists = BTreeMap::new();
         for (k, row) in v.get("hists")?.as_obj()? {

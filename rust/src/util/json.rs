@@ -362,6 +362,30 @@ fn utf8_width(first: u8) -> usize {
     }
 }
 
+// -- hex-u64 transport -------------------------------------------------------
+//
+// The JSON substrate carries numbers as f64, which is exact only below
+// 2^53 — full-width u64s (seeds, signatures, config hashes, lease
+// timestamps) must ride as strings. These two helpers are the only
+// sanctioned encoding; hand-rolled `{:016x}` / `from_str_radix` in the
+// campaign/telemetry serialization zone is a `hex-u64` lint finding
+// (DESIGN.md §14).
+
+/// Canonical wire form of a u64: `0x`-prefixed, zero-padded hex.
+pub fn hex_u64(v: u64) -> String {
+    format!("0x{v:016x}")
+}
+
+/// Parse the canonical wire form back. Rejects anything without the
+/// `0x` prefix so silently-truncating f64 round trips can't sneak in.
+pub fn parse_hex_u64(s: &str) -> Result<u64> {
+    let digits = s
+        .strip_prefix("0x")
+        .ok_or_else(|| anyhow!("u64 field wants 0x-hex, got '{s}'"))?;
+    u64::from_str_radix(digits, 16)
+        .map_err(|e| anyhow!("bad hex u64 '{s}': {e}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -445,5 +469,20 @@ mod tests {
         let out = v.to_string();
         let v2 = Json::parse(&out).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn hex_u64_roundtrip() {
+        for v in [0u64, 1, 0x9A12_3A8E_466B_A605, u64::MAX] {
+            let s = hex_u64(v);
+            assert_eq!(s.len(), 18);
+            assert!(s.starts_with("0x"));
+            assert_eq!(parse_hex_u64(&s).unwrap(), v);
+        }
+        // exact byte format is pinned by journal/report artifacts
+        assert_eq!(hex_u64(0xC9), "0x00000000000000c9");
+        assert!(parse_hex_u64("c9").is_err()); // prefix required
+        assert!(parse_hex_u64("0xzz").is_err());
+        assert!(parse_hex_u64("0x10000000000000000").is_err());
     }
 }

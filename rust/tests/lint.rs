@@ -1,0 +1,160 @@
+//! hts-lint acceptance (DESIGN.md §14): the tool self-hosts clean over
+//! this very source tree, and every seeded violation in the fixture
+//! corpus fires with the right rule id at the exact pinned line.
+//!
+//! `EXPECTED` below must stay identical to
+//! `EXPECTED_FIXTURE_FINDINGS` in `python/tools/hts_lint.py` — the two
+//! implementations are asserted against the same corpus so they cannot
+//! drift apart silently.
+
+use std::collections::BTreeSet;
+use std::ffi::OsStr;
+use std::path::{Path, PathBuf};
+
+use hts_rl::lint::{self, baseline, manifest::Manifest, rules, LintConfig};
+
+fn repo(p: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(p)
+}
+
+/// Pinned (file, line, rule) triples for the seeded-violation corpus.
+const EXPECTED: &[(&str, usize, &str)] = &[
+    ("artifact_maps.rs", 4, "map-iteration"),
+    ("artifact_maps.rs", 5, "map-iteration"),
+    ("clock_violation.rs", 4, "wall-clock"),
+    ("clock_violation.rs", 7, "wall-clock"),
+    ("delim_torn.rs", 9, "delimiters"),
+    ("directive_errors.rs", 5, "lint-directive"),
+    ("directive_errors.rs", 9, "lint-directive"),
+    ("directive_errors.rs", 13, "lint-directive"),
+    ("directive_errors.rs", 17, "lint-directive"),
+    ("hotpath_discipline.rs", 11, "hotpath-lock"),
+    ("hotpath_discipline.rs", 12, "hotpath-lock"),
+    ("hotpath_discipline.rs", 13, "hotpath-alloc"),
+    ("hotpath_discipline.rs", 14, "hotpath-alloc"),
+    ("torture_lexer.rs", 27, "thread-rng"),
+    ("torture_lexer.rs", 31, "nan-cmp"),
+    ("torture_lexer.rs", 45, "unsafe-safety"),
+    ("wire_hex.rs", 6, "hex-u64"),
+    ("wire_hex.rs", 10, "hex-u64"),
+];
+
+#[test]
+fn fixtures_fire_exactly_where_pinned() {
+    let dir = repo("tests/lint_fixtures");
+    let mtext = std::fs::read_to_string(dir.join("fixture.rules")).unwrap();
+    let man = Manifest::parse(&mtext, "fixture.rules").unwrap();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension() == Some(OsStr::new("rs")))
+        .collect();
+    paths.sort();
+    let mut got: Vec<(String, usize, String)> = Vec::new();
+    for p in &paths {
+        let rel = p.file_name().unwrap().to_string_lossy().to_string();
+        let src = std::fs::read_to_string(p).unwrap();
+        let rep = rules::check_file(&rel, &src, &man);
+        got.extend(rep.findings.into_iter().map(|f| (f.file, f.line, f.rule)));
+    }
+    got.sort();
+    let expected: Vec<(String, usize, String)> = EXPECTED
+        .iter()
+        .map(|&(f, l, r)| (f.to_string(), l, r.to_string()))
+        .collect();
+    assert_eq!(got, expected);
+}
+
+/// The fail-closed acceptance gate: zero unbaselined findings over the
+/// real tree with the committed manifest + baseline, no stale entries,
+/// and an unsafe inventory confined to the two audited modules with
+/// every site covered by a SAFETY comment.
+#[test]
+fn self_hosts_clean_over_the_real_tree() {
+    let out = lint::run(&LintConfig {
+        root: repo("src"),
+        manifest: repo("lint.rules"),
+        baseline: Some(repo("lint_baseline.json")),
+        cargo: Some(repo("Cargo.toml")),
+    })
+    .expect("lint run over rust/src");
+    assert!(out.files >= 70, "walk found too few files: {}", out.files);
+    let rendered: Vec<String> = out
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        out.findings.is_empty(),
+        "unbaselined findings:\n{}",
+        rendered.join("\n")
+    );
+    assert!(out.stale.is_empty(), "stale baseline entries: {:?}", out.stale);
+    let files: BTreeSet<&str> = out.unsafe_sites.iter().map(|u| u.file.as_str()).collect();
+    assert_eq!(
+        files.into_iter().collect::<Vec<_>>(),
+        ["buffers/double.rs", "perf/mod.rs"],
+        "unsafe spread beyond the audited modules"
+    );
+    for u in &out.unsafe_sites {
+        assert!(u.safety.is_some(), "uncovered unsafe at {}:{}", u.file, u.line);
+    }
+}
+
+#[test]
+fn cargo_offline_rule_flags_non_path_deps() {
+    let toml = "[package]\nname = \"x\"\n[dependencies]\nserde = \"1.0\"\n\
+                anyhow = { path = \"vendor/anyhow\" }\n\
+                reqwest = { version = \"0.11\" }\n\
+                mixed = { path = \"v/x\", git = \"https://example.com/x\" }\n";
+    let findings = rules::check_cargo("Cargo.toml", toml);
+    let lines: Vec<usize> = findings.iter().map(|f| f.line).collect();
+    assert_eq!(lines, [4, 6, 7]);
+    assert!(findings.iter().all(|f| f.rule == "cargo-offline"));
+}
+
+#[test]
+fn baseline_absorbs_counts_and_reports_stale_entries() {
+    let f = |file: &str, line: usize, excerpt: &str| rules::Finding {
+        file: file.to_string(),
+        line,
+        rule: "map-iteration".to_string(),
+        message: "m".to_string(),
+        excerpt: excerpt.to_string(),
+    };
+    let findings = vec![f("a.rs", 3, "use HashMap;"), f("a.rs", 9, "use HashMap;")];
+    let doc = baseline::render(&findings);
+    let base = baseline::parse(&doc).unwrap();
+    // Same excerpt twice -> one entry with count 2; both findings absorb.
+    let diff = baseline::apply(findings.clone(), &base);
+    assert!(diff.fresh.is_empty());
+    assert_eq!(diff.baselined, 2);
+    assert!(diff.stale.is_empty());
+    // A third identical finding exceeds the count: fresh.
+    let mut three = findings.clone();
+    three.push(f("a.rs", 20, "use HashMap;"));
+    let diff = baseline::apply(three, &base);
+    assert_eq!(diff.fresh.len(), 1);
+    // Line numbers are NOT part of the key: shifted findings still absorb.
+    let shifted = vec![f("a.rs", 103, "use HashMap;"), f("a.rs", 109, "use HashMap;")];
+    assert!(baseline::apply(shifted, &base).fresh.is_empty());
+    // Nothing consumed -> the entry is stale with its full count.
+    let diff = baseline::apply(Vec::new(), &base);
+    assert_eq!(diff.baselined, 0);
+    assert_eq!(diff.stale.len(), 1);
+    assert_eq!(diff.stale[0].1, 2);
+}
+
+/// The committed manifest itself must parse (fail-closed: a typo in
+/// `lint.rules` breaks this test, not just the CI step).
+#[test]
+fn committed_manifest_parses_and_zones_resolve() {
+    let mtext = std::fs::read_to_string(repo("lint.rules")).unwrap();
+    let man = Manifest::parse(&mtext, "lint.rules").unwrap();
+    assert!(man.active("wall-clock", "coordinator/common.rs"));
+    assert!(!man.active("wall-clock", "telemetry/mod.rs"));
+    assert!(man.active("map-iteration", "executor/harness.rs"));
+    assert!(!man.active("map-iteration", "buffers/double.rs"));
+    assert!(man.active("hex-u64", "campaign/journal.rs"));
+    assert!(!man.active("hex-u64", "util/json.rs"));
+}

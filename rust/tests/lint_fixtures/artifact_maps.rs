@@ -1,0 +1,12 @@
+//! Map-iteration hazards: this file's `artifact_` prefix puts it in the
+//! artifact zone, so hash-ordered containers fire; ordered ones don't.
+
+use std::collections::HashMap; // <- fires map-iteration (line 4)
+use std::collections::HashSet; // <- fires map-iteration (line 5)
+use std::collections::BTreeMap;
+
+fn ordered_is_fine() -> BTreeMap<u32, u32> {
+    let _quoted = "HashMap in a string never fires";
+    // HashMap in a comment never fires
+    BTreeMap::new()
+}

@@ -1,0 +1,9 @@
+//! Wall-clock reads OUTSIDE the timekeeping zone: both real-time
+//! sources fire.
+
+use std::time::SystemTime; // <- fires wall-clock (line 4): SystemTime
+
+fn stamp() -> u64 {
+    let _t = std::time::Instant::now(); // <- fires wall-clock (line 7)
+    0
+}

@@ -1,0 +1,9 @@
+//! Unbalanced on purpose: the promoted PR 6 delimiter scanner reports
+//! the stray closing brace (and quoted/commented braces don't count).
+
+fn balanced() {
+    let _ok = [1, (2), { 3 }];
+    let _quoted = "} } } none of these count {";
+    // neither do these: } ] )
+}
+} // <- fires delimiters (line 9)

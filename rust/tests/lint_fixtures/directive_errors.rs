@@ -1,0 +1,18 @@
+//! Directive misuse: each bad directive is itself a finding (rule id
+//! `lint-directive`), so annotations can't rot silently.
+
+// next line fires lint-directive: unknown rule id
+// lint: allow(no-such-rule, bogus rule id)
+fn noop() {}
+
+// next line fires lint-directive: the allow never suppresses anything
+// lint: allow(wall-clock, nothing below ever fires)
+fn quiet() {}
+
+// next line fires lint-directive: unparseable hotpath form
+// lint: hotpath(middle)
+fn still_quiet() {}
+
+// next line fires lint-directive: begin without end
+// lint: hotpath(begin, never closed)
+fn tail() {}

@@ -1,0 +1,8 @@
+//! Wall-clock reads inside the timekeeping zone (`exempt_` prefix):
+//! zero findings — the zone is the sanctioned home of real time.
+
+use std::time::{Instant, SystemTime};
+
+fn now_pair() -> (Instant, SystemTime) {
+    (Instant::now(), SystemTime::now())
+}

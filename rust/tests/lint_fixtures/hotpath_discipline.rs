@@ -1,0 +1,19 @@
+//! Lock/alloc discipline: the hotpath rules fire only between markers,
+//! and `lint: allow` suppresses exactly one annotated site.
+
+use std::sync::Mutex; // outside the region: no finding
+
+fn cold() -> Vec<u32> {
+    Vec::new() // outside the region: no finding
+}
+
+// lint: hotpath(begin, fixture hot loop)
+fn hot(m: &Mutex<u64>) -> String { // <- fires hotpath-lock (line 11): Mutex
+    let g = m.lock().unwrap(); // <- fires hotpath-lock (line 12): .lock(
+    let s = format!("{}", *g); // <- fires hotpath-alloc (line 13): format!
+    let _v: Vec<u64> = Vec::new(); // <- fires hotpath-alloc (line 14)
+    // lint: allow(hotpath-alloc, fixture: growth justified for the test)
+    let _w = vec![1u8, 2, 3]; // suppressed by the allow above
+    s
+}
+// lint: hotpath(end)

@@ -1,0 +1,46 @@
+//! Lexer gauntlet. Every violation-shaped token below is quoted,
+//! commented, or char-escaped and must NOT fire; the real violations
+//! are marked with `<- fires` and pinned by line in tests/lint.rs.
+
+/* thread_rng() in a block comment
+   /* nested block comment: Instant::now() SystemTime HashMap */
+   still inside the outer comment: partial_cmp().unwrap() unsafe
+*/
+
+const RAW: &str = r#"thread_rng "quoted" Mutex unsafe {v:016x}"#;
+const RAW2: &str = r##"hash-quote "# does not terminate: thread_rng"##;
+const PLAIN: &str = "escaped \" quote then thread_rng()";
+const BYTES: &[u8] = b"thread_rng bytes \" here";
+const RAWB: &[u8] = br#"more thread_rng"#;
+const CSTR: &core::ffi::CStr = c"thread_rng as c string";
+
+fn chars_vs_lifetimes<'a>(x: &'a str) -> (char, char, char, u8) {
+    let quote = '\'';
+    let dquote = '"';
+    let newline = '\n';
+    let byte = b'"';
+    let _lifetime: &'static str = x;
+    (quote, dquote, newline, byte)
+}
+
+fn real_rng() -> u64 {
+    thread_rng().next_u64() // <- fires thread-rng (line 27)
+}
+
+fn real_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap() // <- fires nan-cmp (line 31)
+}
+
+fn allowed_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    // lint: allow(nan-cmp, fixture: inputs proven NaN-free one line up)
+    a.partial_cmp(&b).unwrap() // suppressed by the allow above
+}
+
+fn covered() -> u64 {
+    // SAFETY: fixture — transmuting between same-width ints is defined.
+    unsafe { std::mem::transmute::<i64, u64>(-1) }
+}
+
+fn uncovered() -> u64 {
+    unsafe { std::mem::transmute::<i64, u64>(-2) } // <- fires unsafe-safety (line 45)
+}

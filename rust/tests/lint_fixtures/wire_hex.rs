@@ -1,0 +1,11 @@
+//! Hand-rolled u64 hex: the `wire_` prefix puts this file in the
+//! serialization zone, where only util::json::{hex_u64, parse_hex_u64}
+//! may touch the wire format.
+
+fn encode(v: u64) -> String {
+    format!("0x{:016x}", v) // <- fires hex-u64 (line 6): "016x" literal
+}
+
+fn decode(s: &str) -> u64 {
+    u64::from_str_radix(s, 16).unwrap() // <- fires hex-u64 (line 10)
+}
