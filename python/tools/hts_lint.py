@@ -755,6 +755,8 @@ EXPECTED_FIXTURE_FINDINGS = [
     ("torture_lexer.rs", 27, "thread-rng"),
     ("torture_lexer.rs", 31, "nan-cmp"),
     ("torture_lexer.rs", 45, "unsafe-safety"),
+    ("trace_ring.rs", 10, "wall-clock"),
+    ("trace_ring.rs", 16, "hotpath-alloc"),
     ("wire_hex.rs", 6, "hex-u64"),
     ("wire_hex.rs", 10, "hex-u64"),
 ]

@@ -1,0 +1,240 @@
+#!/usr/bin/env python3
+"""Offline validator for hts-rl Chrome-trace exports (DESIGN.md §15).
+
+`trace::export` serializes a merged [`TraceReport`] to the Chrome
+trace-event JSON flavor that Perfetto / `chrome://tracing` load. This
+checker re-validates the invariants the exporter promises, from the
+outside and without a Rust toolchain — the same role `hts_lint.py` and
+`pin_signatures.py` play for the lint and trajectory pins:
+
+  * top level is exactly ``{"displayTimeUnit": "ms", "traceEvents": [...]}``;
+  * every event has ``ph`` in {B, E, i, M}, ``pid`` 1, an integer
+    ``tid`` >= 1, and a non-empty ``name``;
+  * metadata (M) events are ``thread_name`` / ``thread_sort_index``
+    pairs, one of each per populated track, carry no timestamp, and
+    thread names are unique (stable track naming);
+  * timed events carry a numeric ``ts`` that is non-decreasing within
+    each ``(pid, tid)`` — per-thread rings record monotonically;
+  * B/E span events balance as a per-thread stack with matching names
+    (an ``i`` instant carries ``s: "t"``);
+  * B and i events carry their ``args.v`` payload, E events carry none.
+
+Usage (from the repo root):
+
+    python3 python/tools/trace_check.py [--flight] [TRACE.json ...]
+
+With no paths it validates the committed fixture
+``rust/tests/trace_fixtures/fixture_trace.json`` — the byte-pinned
+output of `trace::export::tests` — and additionally pins its shape
+(3 tracks, 19 events), so a drift in either the exporter or this
+checker fails CI closed.
+
+``--flight`` relaxes the balance rule for flight-recorder post-mortems
+(`postmortem_<worker>.json`): a ring that wrapped, or a dump taken
+mid-span at panic time, may open with an orphan E or end inside an
+unclosed B — those become notes, not errors.
+
+Exit status: nonzero when any file fails validation.
+"""
+
+import json
+import os
+import sys
+
+PHASES = {"B", "E", "i", "M"}
+META_NAMES = {"thread_name", "thread_sort_index"}
+
+
+def check_trace(doc, flight=False):
+    """Validate one parsed trace document.
+
+    Returns (errors, stats) where stats is a dict with ``events`` and
+    ``tracks`` counts; errors is a list of strings (empty == valid).
+    """
+    errs = []
+
+    def err(msg):
+        errs.append(msg)
+
+    if not isinstance(doc, dict):
+        return (["top level is not a JSON object"], {})
+    if sorted(doc.keys()) != ["displayTimeUnit", "traceEvents"]:
+        err(f"top-level keys {sorted(doc.keys())} != "
+            "['displayTimeUnit', 'traceEvents']")
+    if doc.get("displayTimeUnit") != "ms":
+        err(f"displayTimeUnit {doc.get('displayTimeUnit')!r} != 'ms'")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return (errs + ["traceEvents is not an array"], {})
+
+    last_ts = {}      # tid -> last seen ts
+    stacks = {}       # tid -> open span name stack
+    names = {}        # tid -> thread_name
+    sort_idx = {}     # tid -> thread_sort_index
+    timed_tids = set()
+
+    for i, ev in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            err(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        name = ev.get("name")
+        pid = ev.get("pid")
+        tid = ev.get("tid")
+        if ph not in PHASES:
+            err(f"{where}: ph {ph!r} not in {sorted(PHASES)}")
+            continue
+        if not isinstance(name, str) or not name:
+            err(f"{where}: missing or empty name")
+            continue
+        if pid != 1:
+            err(f"{where} ({name}): pid {pid!r} != 1")
+        if not isinstance(tid, int) or isinstance(tid, bool) or tid < 1:
+            err(f"{where} ({name}): bad tid {tid!r}")
+            continue
+
+        if ph == "M":
+            if name not in META_NAMES:
+                err(f"{where}: unknown metadata record {name!r}")
+                continue
+            if "ts" in ev:
+                err(f"{where} ({name}): metadata must not carry ts")
+            args = ev.get("args")
+            if not isinstance(args, dict):
+                err(f"{where} ({name}): metadata without args")
+                continue
+            if name == "thread_name":
+                tname = args.get("name")
+                if not isinstance(tname, str) or not tname:
+                    err(f"{where}: thread_name args.name missing")
+                elif tid in names:
+                    err(f"tid {tid}: duplicate thread_name")
+                else:
+                    names[tid] = tname
+            else:
+                if tid in sort_idx:
+                    err(f"tid {tid}: duplicate thread_sort_index")
+                elif args.get("sort_index") != tid:
+                    err(f"tid {tid}: sort_index "
+                        f"{args.get('sort_index')!r} != tid")
+                else:
+                    sort_idx[tid] = args.get("sort_index")
+            continue
+
+        # timed events: B / E / i
+        timed_tids.add(tid)
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or isinstance(ts, bool):
+            err(f"{where} ({name}): missing numeric ts")
+            continue
+        if ts < 0:
+            err(f"{where} ({name}): negative ts {ts}")
+        if tid in last_ts and ts < last_ts[tid]:
+            err(f"{where} ({name}): ts {ts} < {last_ts[tid]} — "
+                f"tid {tid} is not monotonic")
+        last_ts[tid] = ts
+
+        if ph == "B":
+            if not isinstance(ev.get("args"), dict) or "v" not in ev["args"]:
+                err(f"{where} ({name}): B without args.v payload")
+            stacks.setdefault(tid, []).append(name)
+        elif ph == "E":
+            if "args" in ev:
+                err(f"{where} ({name}): E must not carry args")
+            stack = stacks.setdefault(tid, [])
+            if not stack:
+                if not flight:
+                    err(f"{where} ({name}): E with no open span on "
+                        f"tid {tid} (wrapped flight tail? try --flight)")
+            elif stack[-1] != name:
+                err(f"{where}: E '{name}' closes open span "
+                    f"'{stack[-1]}' on tid {tid}")
+                stack.pop()
+            else:
+                stack.pop()
+        else:  # "i"
+            if ev.get("s") != "t":
+                err(f"{where} ({name}): instant without s='t'")
+            if not isinstance(ev.get("args"), dict) or "v" not in ev["args"]:
+                err(f"{where} ({name}): instant without args.v payload")
+
+    for tid, stack in sorted(stacks.items()):
+        if stack and not flight:
+            err(f"tid {tid}: unclosed span(s) at end of trace: {stack} "
+                "(panic mid-span? try --flight)")
+    for tid in sorted(timed_tids):
+        if tid not in names:
+            err(f"tid {tid}: events but no thread_name metadata")
+        if tid not in sort_idx:
+            err(f"tid {tid}: events but no thread_sort_index metadata")
+    by_name = {}
+    for tid, tname in names.items():
+        if tname in by_name:
+            err(f"thread name {tname!r} on both tid {by_name[tname]} "
+                f"and tid {tid}")
+        by_name[tname] = tid
+
+    timed = sum(1 for e in events
+                if isinstance(e, dict) and e.get("ph") != "M")
+    return (errs, {"events": timed, "tracks": len(names)})
+
+
+def check_file(path, flight=False):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return ([f"unreadable trace: {e}"], {})
+    return check_trace(doc, flight=flight)
+
+
+def repo_root():
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(here))
+
+
+FIXTURE = os.path.join("rust", "tests", "trace_fixtures",
+                       "fixture_trace.json")
+
+
+def main(argv):
+    flight = False
+    paths = []
+    for a in argv:
+        if a == "--flight":
+            flight = True
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        elif a.startswith("-"):
+            print(f"trace_check: unknown flag {a}", file=sys.stderr)
+            return 2
+        else:
+            paths.append(a)
+
+    pin_fixture = not paths
+    if pin_fixture:
+        paths = [os.path.join(repo_root(), FIXTURE)]
+
+    status = 0
+    for path in paths:
+        errs, stats = check_file(path, flight=flight)
+        if pin_fixture and not errs:
+            # the committed fixture's shape is pinned alongside its
+            # bytes (rust/src/trace/export.rs tests)
+            if stats != {"events": 13, "tracks": 3}:
+                errs.append(f"fixture shape drifted: {stats} != "
+                            "{'events': 13, 'tracks': 3}")
+        if errs:
+            status = 1
+            for e in errs:
+                print(f"trace_check: {path}: {e}", file=sys.stderr)
+        else:
+            print(f"trace_check: {path}: {stats['events']} timed "
+                  f"event(s) over {stats['tracks']} track(s) ✓")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

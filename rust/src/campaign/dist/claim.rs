@@ -97,6 +97,14 @@ impl SharedDir {
         self.root.join("steps_pool")
     }
 
+    /// Flight-recorder dump a worker leaves behind on a panic or an
+    /// injected fault (DESIGN.md §15). The coordinator scans for these
+    /// at assembly and reports them — diagnostics only, never merged
+    /// into the campaign artifacts.
+    pub fn postmortem_path(&self, worker: &str) -> PathBuf {
+        self.root.join(format!("postmortem_{worker}.json"))
+    }
+
     /// Publish (or verify) the campaign identity marker. The first
     /// participant to arrive creates it atomically; every later one —
     /// worker or coordinator, resuming or fresh — must present an

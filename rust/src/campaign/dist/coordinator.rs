@@ -163,6 +163,24 @@ fn merge_journals(
     Ok((records, tels))
 }
 
+/// Flight-recorder dumps left in the shared root by dead or
+/// fault-injected workers (`postmortem_<worker>.json`), in sorted
+/// order for deterministic reporting.
+fn postmortem_dumps(shared: &SharedDir) -> Result<Vec<std::path::PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(shared.root())? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if name.starts_with("postmortem_") && name.ends_with(".json") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
 /// Drive a distributed campaign to completion: poll the shared
 /// directory, expire dead workers' leases and re-issue their claims,
 /// optionally run stragglers in-process, and return the merged
@@ -200,6 +218,15 @@ pub fn coordinate(
                 .into_iter()
                 .filter(|&(i, _)| records[i].is_none())
                 .collect();
+            // Surface any flight-recorder dumps dead workers left
+            // behind (DESIGN.md §15). Diagnostics only: the files are
+            // pointed at, never merged, and never removed.
+            for path in postmortem_dumps(shared)? {
+                eprintln!(
+                    "campaign: worker left a flight-recorder dump at {}",
+                    path.display()
+                );
+            }
             return Ok(CampaignOutcome {
                 records,
                 telemetry: tels,

@@ -149,6 +149,24 @@ pub fn run_worker(
             shared.release_claim(i)?;
         }
     }
+    // Trace campaigns arm a worker-level flight recorder: a small ring
+    // on the worker's claim loop whose tail is dumped to
+    // `postmortem_<worker>.json` when this worker panics (process hook
+    // + scope `Drop`) or trips the `die_after_jobs` fault below. The
+    // per-job traces inside `execute_job` are separate and unaffected.
+    let flight = cfg.trace.then(|| {
+        let sink = crate::trace::TraceSink::with_dump(
+            crate::trace::Mode::Flight { cap: 256 },
+            shared.postmortem_path(&opts.worker),
+        );
+        crate::trace::flight::install_panic_hook(&sink);
+        sink
+    });
+    let mut flight_tr = crate::trace::TraceScope::from_sink(
+        flight.as_ref(),
+        crate::trace::Role::Worker,
+        0,
+    );
     let beat = Heartbeat::start(
         shared.lease_path(&opts.worker),
         opts.worker.clone(),
@@ -189,12 +207,22 @@ pub fn run_worker(
         }
         if opts.die_after_jobs.is_some_and(|d| sum.ran >= d) {
             // fault injection: die holding the claim, lease left to
-            // go stale — the coordinator must expire + re-issue
+            // go stale — the coordinator must expire + re-issue. A
+            // trace worker leaves its flight tail behind first, same
+            // as the panic path would.
             sum.died = true;
+            if let Some(sink) = &flight {
+                flight_tr.mark(crate::trace::Kind::Panic, i as u32);
+                flight_tr.deposit();
+                sink.dump_postmortem();
+            }
             beat.abandon();
             return Ok(sum);
         }
-        match execute_job(&ctx, &plan.jobs[i])? {
+        flight_tr.begin(crate::trace::Kind::JobRun, i as u32);
+        let outcome = execute_job(&ctx, &plan.jobs[i]);
+        flight_tr.end(crate::trace::Kind::JobRun, 0);
+        match outcome? {
             JobOutcome::Ran(_, _) => sum.ran += 1,
             JobOutcome::Skipped(reason) => {
                 shared.write_skip(i, &reason, &opts.worker)?;

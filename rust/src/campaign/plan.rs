@@ -117,6 +117,12 @@ pub struct CampaignConfig {
     /// a telemetry re-run may resume a non-telemetry journal and vice
     /// versa.
     pub telemetry: bool,
+    /// Collect per-job event traces (DESIGN.md §15) and write one
+    /// Chrome-trace JSON per job next to its curve CSV. Like
+    /// `telemetry`, tracing never shapes results (byte-identity pinned
+    /// in `rust/tests/campaign.rs`), so it is excluded from
+    /// [`CampaignConfig::fingerprint`] and traces are never journaled.
+    pub trace: bool,
     /// The jobs ran on the stand-in fleet, whose `wall_s` is a virtual
     /// clock (steps / 1e5), not wall time. Report rendering shows those
     /// rates in the `sps_virtual` column instead of `sps`. Display-only
@@ -180,6 +186,7 @@ impl CampaignConfig {
             rt_targets: Vec::new(),
             artifacts: default_artifacts_dir(),
             telemetry: false,
+            trace: false,
             standin: false,
         }
     }
@@ -349,6 +356,7 @@ pub fn job_run_config(cfg: &CampaignConfig, job: &Job) -> RunConfig {
     rc.eval_episodes = cfg.eval_episodes;
     rc.artifacts = cfg.artifacts.clone();
     rc.telemetry = cfg.telemetry;
+    rc.trace = cfg.trace;
     rc
 }
 
@@ -456,14 +464,18 @@ mod tests {
 
     #[test]
     fn fingerprint_ignores_telemetry_and_standin() {
-        // telemetry/standin are display/diagnostic toggles: a telemetry
-        // re-run must be able to --resume a non-telemetry journal
+        // telemetry/trace/standin are display/diagnostic toggles: a
+        // telemetry or trace re-run must be able to --resume a journal
+        // recorded without them
         let base = cfg().fingerprint();
         let mut c = cfg();
         c.telemetry = true;
+        c.trace = true;
         c.standin = true;
         assert_eq!(c.fingerprint(), base);
-        assert!(job_run_config(&c, &expand(&c).unwrap().jobs[0]).telemetry);
+        let rc = job_run_config(&c, &expand(&c).unwrap().jobs[0]);
+        assert!(rc.telemetry);
+        assert!(rc.trace);
         let mut c = cfg();
         c.seeds = 3;
         assert_ne!(c.fingerprint(), base, "result-shaping knob must move it");

@@ -43,15 +43,21 @@ use crate::telemetry::TelemetryReport;
 use crate::util::csv::{csv_cell, markdown_table};
 use crate::util::json::hex_u64;
 
-/// The rendered artifacts. `telemetry_csv` is `Some` only when the
-/// outcome carries telemetry — the three core artifacts never change
-/// shape with it (byte-identity, see module doc).
+/// The rendered artifacts. `telemetry_csv` and `telemetry_md` are
+/// `Some` only when the outcome carries telemetry — the three core
+/// artifacts never change shape with it (byte-identity, see module
+/// doc).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CampaignReport {
     pub jobs_csv: String,
     pub summary_csv: String,
     pub markdown: String,
     pub telemetry_csv: Option<String>,
+    /// ISSUE 10: the telemetry summary as its own markdown artifact
+    /// (`campaign_<suite>_telemetry.md`) — the core `markdown` is
+    /// pinned byte-identical with telemetry on/off, so telemetry prose
+    /// must live in a separate file.
+    pub telemetry_md: Option<String>,
 }
 
 /// Render all artifacts from a finished (or resumed) campaign.
@@ -65,6 +71,7 @@ pub fn render(
         summary_csv: render_summary_csv(cfg, plan, outcome),
         markdown: render_markdown(cfg, plan, outcome),
         telemetry_csv: render_telemetry_csv(plan, outcome),
+        telemetry_md: render_telemetry_md(cfg, plan, outcome),
     }
 }
 
@@ -82,6 +89,9 @@ pub fn write_files(
     ];
     if let Some(tel) = &rep.telemetry_csv {
         files.push((format!("campaign_{suite}_telemetry.csv"), tel));
+    }
+    if let Some(md) = &rep.telemetry_md {
+        files.push((format!("campaign_{suite}_telemetry.md"), md));
     }
     let mut out = Vec::new();
     for (name, text) in files {
@@ -409,24 +419,50 @@ fn ratio(num: u64, den: u64) -> String {
     }
 }
 
-/// Per-(spec, method) utilization columns from the merged run counters
-/// (DESIGN.md §12). `None` when the outcome carries no telemetry — the
-/// artifact only exists for telemetry campaigns.
-fn render_telemetry_csv(
+/// One (spec, method) telemetry aggregate: merged counters plus the
+/// group's summed record wall time (the denominator of the park time
+/// share — counters alone carry no clock).
+struct TGroup {
+    spec: String,
+    method: &'static str,
+    jobs: usize,
+    rep: TelemetryReport,
+    wall_s: f64,
+}
+
+impl TGroup {
+    /// Wasted-sweep ratio: the fraction of mailbox polls that found
+    /// nothing (`PollPending / (PollPending + PollComplete)`) — the
+    /// direct counter form of "sweeps the K > 1 scheduler burned
+    /// finding no ready lane". Pinned in the tests below.
+    fn wasted_sweep_ratio(&self) -> String {
+        let c = |k: &str| self.rep.counter(k);
+        ratio(c("poll_pending"), c("poll_pending") + c("poll_complete"))
+    }
+
+    /// Share of the group's summed wall time its executors spent
+    /// parked (`park_ns_total / (wall_s · 1e9)`). Empty when no
+    /// record reported wall time — derived cells never fabricate.
+    fn park_time_share(&self) -> String {
+        let den = self.wall_s * 1e9;
+        if den > 0.0 {
+            format!("{:.4}", self.rep.counter("park_ns_total") as f64 / den)
+        } else {
+            String::new()
+        }
+    }
+}
+
+/// Group the outcome's telemetry per (spec, method), in plan order.
+/// Empty when the outcome carries no telemetry at all.
+fn telemetry_groups(
     plan: &CampaignPlan,
     outcome: &CampaignOutcome,
-) -> Option<String> {
-    if outcome.telemetry.iter().all(Option::is_none) {
-        return None;
-    }
-    struct TGroup {
-        spec: String,
-        method: &'static str,
-        jobs: usize,
-        rep: TelemetryReport,
-    }
+) -> Vec<TGroup> {
     let mut gs: Vec<TGroup> = Vec::new();
-    for (job, tel) in plan.jobs.iter().zip(&outcome.telemetry) {
+    for (i, (job, tel)) in
+        plan.jobs.iter().zip(&outcome.telemetry).enumerate()
+    {
         let Some(t) = tel else { continue };
         let spec = job.spec.spec_str();
         let method = job.method.name();
@@ -441,20 +477,38 @@ fn render_telemetry_csv(
                     method,
                     jobs: 0,
                     rep: TelemetryReport::default(),
+                    wall_s: 0.0,
                 });
                 gs.last_mut().unwrap()
             }
         };
         g.jobs += 1;
         g.rep.merge(&t.report);
+        if let Some(rec) = outcome.records.get(i).and_then(Option::as_ref) {
+            g.wall_s += rec.wall_s;
+        }
+    }
+    gs
+}
+
+/// Per-(spec, method) utilization columns from the merged run counters
+/// (DESIGN.md §12). `None` when the outcome carries no telemetry — the
+/// artifact only exists for telemetry campaigns.
+fn render_telemetry_csv(
+    plan: &CampaignPlan,
+    outcome: &CampaignOutcome,
+) -> Option<String> {
+    if outcome.telemetry.iter().all(Option::is_none) {
+        return None;
     }
     let mut out = String::from(
         "spec,method,jobs,steps_total,solo_frac,lockstep_frac,\
          degraded_frac,lockstep_batch_cols,poll_miss_rate,\
          parks_per_kstep,grab_batch_cols,forward_occupancy,\
-         freelist_hit_rate,push_batch_msgs\n",
+         freelist_hit_rate,push_batch_msgs,wasted_sweep_ratio,\
+         park_time_share\n",
     );
-    for g in gs {
+    for g in telemetry_groups(plan, outcome) {
         let r = &g.rep;
         let c = |k: &str| r.counter(k);
         let steps = c("steps_total");
@@ -481,10 +535,50 @@ fn render_telemetry_csv(
                 c("freelist_hits") + c("freelist_misses"),
             ),
             ratio(c("push_batch_messages"), c("push_batch_calls")),
+            // ISSUE 10 derived columns (also in the telemetry markdown)
+            g.wasted_sweep_ratio(),
+            g.park_time_share(),
         ];
         out.push_str(&row.join(","));
         out.push('\n');
     }
+    Some(out)
+}
+
+/// The telemetry story as a human-readable markdown table — a *fifth*
+/// artifact, separate from the core report markdown, whose bytes are
+/// pinned identical with telemetry on or off (`rust/tests/campaign.rs`).
+fn render_telemetry_md(
+    cfg: &CampaignConfig,
+    plan: &CampaignPlan,
+    outcome: &CampaignOutcome,
+) -> Option<String> {
+    if outcome.telemetry.iter().all(Option::is_none) {
+        return None;
+    }
+    let mut out = format!(
+        "# Campaign '{}' telemetry\n\nDerived utilization per \
+         (spec, method) from the merged run counters (DESIGN.md §12). \
+         `wasted sweeps` is the fraction of mailbox polls that found no \
+         ready lane; `park share` is the fraction of summed job wall \
+         time the executors spent parked.\n\n",
+        cfg.suite,
+    );
+    let header =
+        ["spec", "method", "jobs", "steps", "wasted sweeps", "park share"];
+    let mut rows = Vec::new();
+    for g in telemetry_groups(plan, outcome) {
+        let dash = |s: String| if s.is_empty() { "-".to_string() } else { s };
+        rows.push(vec![
+            g.spec.clone(),
+            g.method.to_string(),
+            g.jobs.to_string(),
+            g.rep.counter("steps_total").to_string(),
+            dash(g.wasted_sweep_ratio()),
+            dash(g.park_time_share()),
+        ]);
+    }
+    out.push_str(&markdown_table(&header, &rows));
     Some(out)
 }
 
@@ -634,5 +728,54 @@ mod tests {
         assert_eq!(plain.jobs_csv, tel.jobs_csv);
         assert_eq!(plain.summary_csv, tel.summary_csv);
         assert_eq!(plain.markdown, tel.markdown);
+    }
+
+    #[test]
+    fn derived_telemetry_columns_pin_their_formulas() {
+        use crate::campaign::journal::JobTelemetry;
+        let c = cfg();
+        let (plan, mut out) = outcome(&c);
+        assert!(render(&c, &plan, &out).telemetry_md.is_none());
+        for (job, slot) in plan.jobs.iter().zip(&mut out.telemetry) {
+            let mut rep = crate::telemetry::TelemetryReport::default();
+            rep.counters.insert("steps_total".into(), 100);
+            rep.counters.insert("poll_complete".into(), 60);
+            rep.counters.insert("poll_pending".into(), 40);
+            // 0.5 s parked per job; each record reports wall_s = 2.0
+            rep.counters.insert("park_ns_total".into(), 500_000_000);
+            *slot = Some(JobTelemetry { id: job.id.clone(), report: rep });
+        }
+        let rep = render(&c, &plan, &out);
+        let csv = rep.telemetry_csv.as_ref().unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(
+            lines[0].ends_with(",wasted_sweep_ratio,park_time_share"),
+            "{}",
+            lines[0]
+        );
+        // wasted sweeps: 40 pending / (40 + 60) polls = 0.4000;
+        // park share: 2 jobs x 0.5 s parked / 2 jobs x 2.0 s wall = 0.2500
+        for row in &lines[1..] {
+            assert!(row.ends_with(",0.4000,0.2500"), "{row}");
+        }
+        // the markdown twin carries the same derived cells
+        let md = rep.telemetry_md.as_ref().unwrap();
+        assert!(md.starts_with("# Campaign 'catch_wind' telemetry"));
+        assert!(md.contains("| 0.4000 | 0.2500 |"), "{md}");
+        // no record wall time -> the share cell is empty, not invented
+        let mut dry = crate::telemetry::TelemetryReport::default();
+        dry.counters.insert("park_ns_total".into(), 500_000_000);
+        out.records.iter_mut().for_each(|r| *r = None);
+        for slot in &mut out.telemetry {
+            *slot = Some(JobTelemetry {
+                id: "x".into(),
+                report: dry.clone(),
+            });
+        }
+        let rep = render(&c, &plan, &out);
+        let csv = rep.telemetry_csv.as_ref().unwrap();
+        for row in csv.lines().skip(1) {
+            assert!(row.ends_with(",,"), "{row}");
+        }
     }
 }

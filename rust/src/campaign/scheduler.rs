@@ -119,6 +119,21 @@ pub fn execute_job(ctx: &JobCtx<'_>, job: &Job) -> Result<JobOutcome> {
         }
     }
     let mut rc = plan::job_run_config(ctx.cfg, job);
+    // Scheduler-side track for trace campaigns. Standalone (sink-less):
+    // the job's own sink lives inside the runner. Its clock origin is
+    // this scope's construction, independent of the job-internal
+    // origin — per-track timestamp monotonicity (all `trace_check.py`
+    // asserts) holds regardless.
+    let mut sched_tr = if rc.trace {
+        crate::trace::TraceScope::standalone(
+            crate::trace::TraceClock::start(),
+            crate::trace::Mode::Full { cap: crate::trace::DEFAULT_CAP },
+            crate::trace::Role::Scheduler,
+            job.index as u32,
+        )
+    } else {
+        crate::trace::TraceScope::disabled()
+    };
     let mut granted = None;
     if let Some(pool) = ctx.pool {
         // per-job ask is validated at plan time
@@ -132,8 +147,10 @@ pub fn execute_job(ctx: &JobCtx<'_>, job: &Job) -> Result<JobOutcome> {
         rc.stop.max_steps = Some(take);
         granted = Some(take);
     }
+    sched_tr.begin(crate::trace::Kind::JobRun, job.index as u32);
     let report = (ctx.runner)(job, &rc)
         .with_context(|| format!("campaign job '{}' failed", job.id))?;
+    sched_tr.end(crate::trace::Kind::JobRun, 0);
     if let (Some(pool), Some(take)) = (ctx.pool, granted) {
         // drivers stop at batch granularity: return unused grant to
         // the pool, and charge any overshoot so later jobs shrink
@@ -146,7 +163,10 @@ pub fn execute_job(ctx: &JobCtx<'_>, job: &Job) -> Result<JobOutcome> {
     }
     let rec = JobRecord::from_report(job, &report, &ctx.cfg.rt_targets);
     if let Some(j) = ctx.journal {
-        j.append(&rec).with_context(|| {
+        sched_tr.begin(crate::trace::Kind::JournalAppend, 0);
+        let appended = j.append(&rec);
+        sched_tr.end(crate::trace::Kind::JournalAppend, 0);
+        appended.with_context(|| {
             format!("journaling campaign job '{}'", job.id)
         })?;
     }
@@ -176,6 +196,25 @@ pub fn execute_job(ctx: &JobCtx<'_>, job: &Job) -> Result<JobOutcome> {
             crate::metrics::report::write_curve_csv(dir, &stem, &report, 200)
                 .with_context(|| {
                     format!("writing curve for job '{}'", job.id)
+                })?;
+        }
+        // Per-job Chrome trace (DESIGN.md §15): the run's own threads
+        // plus the scheduler track above. Diagnostics only — never
+        // journaled, never part of the pinned campaign artifacts.
+        if let Some(run_trace) = &report.trace {
+            let mut rep = run_trace.clone();
+            rep.push(sched_tr.take_trace());
+            let path = dir.join(format!(
+                "trace_{}_{}_s{}.json",
+                job.method.name(),
+                crate::metrics::report::sanitize_spec_name(
+                    &job.spec.spec_str(),
+                ),
+                job.seed_index,
+            ));
+            crate::trace::export::write_chrome_trace(&path, &rep)
+                .with_context(|| {
+                    format!("writing trace for job '{}'", job.id)
                 })?;
         }
     }

@@ -173,6 +173,9 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         params.clone(),
         b_cols,
         cfg.telemetry,
+        // Async baseline is untraced: its executors are classic blocking
+        // threads, and tracing exists to attribute *synchronous* stalls.
+        None,
     );
 
     let eval = if cfg.eval_every > 0 {
@@ -308,5 +311,6 @@ pub fn run_async(cfg: &RunConfig) -> Result<TrainReport> {
         // Actor/buffer counters only: the async executors are classic
         // blocking threads, not instrumented pools.
         telemetry: cfg.telemetry.then(|| tel.report()),
+        trace: None,
     })
 }

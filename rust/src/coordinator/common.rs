@@ -107,6 +107,15 @@ pub struct RunConfig {
     /// branch-on-a-bool no-ops, and the run's outputs are byte-identical
     /// either way (pinned in `tests/pool.rs` / `tests/campaign.rs`).
     pub telemetry: bool,
+    /// Record per-thread span/instant event traces (DESIGN.md §15).
+    /// Same gate discipline as `telemetry`: off, the instrumented
+    /// paths are branch-on-a-bool no-ops and every pinned signature
+    /// and campaign artifact is byte-identical either way.
+    pub trace: bool,
+    /// Flight-recorder ring capacity: `Some(n)` keeps only the last
+    /// `n` events per thread instead of the first `DEFAULT_CAP`
+    /// (meaningful only with `trace`; never part of any fingerprint).
+    pub trace_flight: Option<usize>,
 }
 
 impl RunConfig {
@@ -124,7 +133,21 @@ impl RunConfig {
             eval_episodes: 10,
             artifacts: default_artifacts_dir(),
             telemetry: false,
+            trace: false,
+            trace_flight: None,
         }
+    }
+
+    /// The trace ring policy this config asks for ([`None`] when
+    /// tracing is off).
+    pub fn trace_mode(&self) -> Option<crate::trace::Mode> {
+        if !self.trace {
+            return None;
+        }
+        Some(match self.trace_flight {
+            Some(cap) => crate::trace::Mode::Flight { cap },
+            None => crate::trace::Mode::Full { cap: crate::trace::DEFAULT_CAP },
+        })
     }
 
     /// Total batch columns = env replicas × controlled agents.
@@ -179,7 +202,9 @@ impl Fnv {
 /// batch-grabs observations, forwards once per batch, and posts actions
 /// sampled with the executor-provided seeds. Each actor thread returns
 /// its private [`TelemetryScope`] (grab batch sizes, forward chunk
-/// occupancy) — empty unless `telemetry` is set.
+/// occupancy) — empty unless `telemetry` is set — and deposits its
+/// grab/forward event trace into `trace` when one is passed
+/// (DESIGN.md §15).
 #[allow(clippy::too_many_arguments)]
 pub fn spawn_actors(
     n_actors: usize,
@@ -190,16 +215,24 @@ pub fn spawn_actors(
     params: Arc<ParamStore>,
     max_grab: usize,
     telemetry: bool,
+    trace: Option<&Arc<crate::trace::TraceSink>>,
 ) -> Vec<JoinHandle<Result<TelemetryScope>>> {
+    let trace = trace.cloned();
     (0..n_actors)
-        .map(|_| {
+        .map(|i| {
             let model = model.clone();
             let artifacts = artifacts.clone();
             let state_buf = state_buf.clone();
             let act_buf = act_buf.clone();
             let params = params.clone();
+            let trace = trace.clone();
             std::thread::spawn(move || -> Result<TelemetryScope> {
                 let mut tel = TelemetryScope::new(telemetry);
+                let mut tr = crate::trace::TraceScope::from_sink(
+                    trace.as_ref(),
+                    crate::trace::Role::Actor,
+                    i as u32,
+                );
                 let manifest = Manifest::load(&artifacts)?;
                 let rt = ModelRuntime::new(manifest)?;
                 let pool = ForwardPool::new(&rt, &model)?;
@@ -219,8 +252,11 @@ pub fn spawn_actors(
                 let mut batch: Vec<crate::buffers::ObsMsg> = Vec::new();
                 let mut flat: Vec<f32> = Vec::with_capacity(grab * d);
                 loop {
+                    tr.begin(crate::trace::Kind::Grab, 0);
                     state_buf.grab_into(&mut batch, grab);
                     if batch.is_empty() {
+                        tr.end(crate::trace::Kind::Grab, 0);
+                        tr.deposit();
                         if stats && n_calls > 0 {
                             eprintln!(
                                 "[actor] {n_obs} obs / {n_calls} calls \
@@ -239,6 +275,7 @@ pub fn spawn_actors(
                     // naturally larger (measured in EXPERIMENTS.md §Perf:
                     // a 1.2 ms window cost 29% SPS).
                     state_buf.grab_more(&mut batch, grab);
+                    tr.end(crate::trace::Kind::Grab, batch.len() as u32);
                     let pv = params.latest();
                     let lit = match &cached {
                         Some((v, l)) if *v == pv.version => l,
@@ -276,6 +313,7 @@ pub fn spawn_actors(
                         })
                     });
                     let mut served = 0usize;
+                    tr.begin(crate::trace::Kind::Forward, total_cols as u32);
                     while served < total_cols {
                         let n = cap.min(total_cols - served);
                         // lint: allow(wall-clock, actor-side forward timing: feeds fwd_s diagnostics and ForwardChunks telemetry, never gates control flow or artifact bytes)
@@ -302,6 +340,7 @@ pub fn spawn_actors(
                         }
                         served += n;
                     }
+                    tr.end(crate::trace::Kind::Forward, 0);
                     // Hand the served buffers back to the executors.
                     state_buf.recycle_batch(&mut batch);
                 }

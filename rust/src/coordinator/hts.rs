@@ -76,6 +76,9 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
     let params = Arc::new(ParamStore::new(init.clone()));
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
+    // Optional event tracing (DESIGN.md §15): one sink shared by every
+    // thread; per-thread rings are owned outright, deposited at exit.
+    let trace_sink = cfg.trace_mode().map(crate::trace::TraceSink::new);
 
     // ---- executors (replica pools) ---------------------------------------
     // Episode logs and trajectory signatures are thread-local and merged
@@ -91,6 +94,7 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
             watch,
             col_offset: 0,
             telemetry: cfg.telemetry,
+            trace: trace_sink.clone(),
         };
         let seed = cfg.seed;
         exec_handles.push(std::thread::spawn(move || -> Result<PoolReport> {
@@ -109,6 +113,7 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         params.clone(),
         b_cols,
         cfg.telemetry,
+        trace_sink.as_ref(),
     );
 
     // ---- evaluation worker -------------------------------------------------
@@ -129,6 +134,11 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
     // concurrently with the executors filling the next iteration.
     let mut gathered = RolloutStorage::new(alpha, b_cols, info.obs_dim);
     let mut behavior: Arc<Vec<f32>> = Arc::new(init);
+    let mut learner_tr = crate::trace::TraceScope::from_sink(
+        trace_sink.as_ref(),
+        crate::trace::Role::Learner,
+        0,
+    );
     let mut it = 0u64;
     let mut last_out = Default::default();
     loop {
@@ -148,14 +158,19 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         }
         // Phase 1: wait for all pool threads to park (all obs answered,
         // no in-flight inference).
-        if !dp.learner_arrive(it) {
+        learner_tr.begin(crate::trace::Kind::LearnerWait, 0);
+        let up = dp.learner_arrive(it);
+        learner_tr.end(crate::trace::Kind::LearnerWait, 0);
+        if !up {
             break;
         }
         // Exclusive publication window: gather the stripes into the
         // [T, B] train view (fixed column order — deterministic),
         // remember the parameters that collected it (θ_{j-1}), then
         // publish θ_j for the executors' next iteration.
+        learner_tr.begin(crate::trace::Kind::Gather, 0);
         dp.gather_and_reset(&mut gathered);
+        learner_tr.end(crate::trace::Kind::Gather, 0);
         behavior = params.latest().data.clone();
         params.publish(trainer.params.clone());
         if cfg.stop.done(sps.steps(), watch.elapsed_s(), trainer.updates) {
@@ -183,6 +198,7 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         tel.merge(&scope);
     }
     tel.merge(&state_buf.telemetry());
+    learner_tr.deposit();
 
     let evals = match eval {
         Some(ev) => {
@@ -214,5 +230,6 @@ pub fn run_hts(cfg: &RunConfig) -> Result<TrainReport> {
         final_loss: last_out.total_loss,
         final_entropy: last_out.entropy,
         telemetry: cfg.telemetry.then(|| tel.report()),
+        trace: trace_sink.as_ref().map(|s| s.report()),
     })
 }

@@ -290,5 +290,6 @@ pub fn run_sync(cfg: &RunConfig) -> Result<TrainReport> {
         // The sync baseline steps envs on the learner thread with no
         // actor fleet or pools — nothing instrumented to report.
         telemetry: None,
+        trace: None,
     })
 }

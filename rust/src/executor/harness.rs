@@ -23,6 +23,7 @@ use crate::metrics::report::{EvalPoint, SpsMeter, Stopwatch};
 use crate::metrics::TrainReport;
 use crate::rng::SplitMix64;
 use crate::telemetry::{Counter, TelemetryScope};
+use crate::trace::{Kind, Role, TraceScope, TraceSink};
 use crate::Result;
 
 /// Deterministic stand-in policy: sampled action from the observation
@@ -35,7 +36,9 @@ pub type StandInPolicy = Arc<dyn Fn(&[f32], u64) -> usize + Send + Sync>;
 /// message (lane-group publish, `msg.cols() > 1`) is served column by
 /// column from its contiguous plane — same actions as per-replica
 /// messages by the deferred-randomness contract. Each thread hands back
-/// its grab-size telemetry at join (empty unless `telemetry` is set).
+/// its grab-size telemetry at join (empty unless `telemetry` is set)
+/// and deposits its grab/forward event trace into `trace` when one is
+/// passed (DESIGN.md §15).
 pub fn spawn_standin_actors(
     n_actors: usize,
     state_buf: &Arc<StateBuffer>,
@@ -43,22 +46,36 @@ pub fn spawn_standin_actors(
     grab: usize,
     policy: &StandInPolicy,
     telemetry: bool,
+    trace: Option<&Arc<TraceSink>>,
 ) -> Vec<JoinHandle<TelemetryScope>> {
+    let trace = trace.cloned();
     (0..n_actors)
-        .map(|_| {
+        .map(|i| {
             let sb = state_buf.clone();
             let ab = act_buf.clone();
             let policy = policy.clone();
+            let trace = trace.clone();
             std::thread::spawn(move || {
                 let mut tel = TelemetryScope::new(telemetry);
+                let mut tr = TraceScope::from_sink(
+                    trace.as_ref(),
+                    Role::Actor,
+                    i as u32,
+                );
                 let mut batch = Vec::new();
                 loop {
+                    tr.begin(Kind::Grab, 0);
                     sb.grab_into(&mut batch, grab);
+                    tr.end(Kind::Grab, batch.len() as u32);
                     if batch.is_empty() {
+                        tr.deposit();
                         return tel; // shutdown
                     }
                     tel.incr(Counter::GrabBatches);
                     tel.add(Counter::GrabMessages, batch.len() as u64);
+                    let cols: usize =
+                        batch.iter().map(|m| m.cols()).sum();
+                    tr.begin(Kind::Forward, cols as u32);
                     for m in &batch {
                         tel.add(Counter::GrabColumns, m.cols() as u64);
                         let d = m.col_dim();
@@ -72,6 +89,7 @@ pub fn spawn_standin_actors(
                             );
                         }
                     }
+                    tr.end(Kind::Forward, 0);
                     // close the allocation ring, like the PJRT actors
                     sb.recycle_batch(&mut batch);
                 }
@@ -161,6 +179,7 @@ fn run_standin_job_inner(
     ));
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
+    let trace_sink = cfg.trace_mode().map(TraceSink::new);
 
     // Private fleet unless the hub provides one. A hub fleet serves
     // many jobs at once, so its actor/buffer counters are not
@@ -180,6 +199,7 @@ fn run_standin_job_inner(
                 b_cols,
                 &policy,
                 cfg.telemetry,
+                trace_sink.as_ref(),
             );
             (sb, ab, 0, handles)
         }
@@ -197,6 +217,7 @@ fn run_standin_job_inner(
             watch,
             col_offset,
             telemetry: cfg.telemetry,
+            trace: trace_sink.clone(),
         };
         let seed = cfg.seed;
         pool_handles.push(std::thread::spawn(move || {
@@ -212,13 +233,23 @@ fn run_standin_job_inner(
     }
 
     let mut gathered = RolloutStorage::new(alpha, b_cols, obs_dim);
+    let mut learner_tr =
+        TraceScope::from_sink(trace_sink.as_ref(), Role::Learner, 0);
     // A shared fleet must survive this job: the swap shutdown alone
     // unwinds the pools (they're parked at the barrier when the final
     // window closes), so buffer closes are only needed to stop a
     // private fleet's actors.
     drive_barrier_inner(
-        &swap, &state_buf, &act_buf, &mut gathered, iters, own_fleet, |_| {},
+        &swap,
+        &state_buf,
+        &act_buf,
+        &mut gathered,
+        iters,
+        own_fleet,
+        &mut learner_tr,
+        |_| {},
     );
+    learner_tr.deposit();
 
     let mut signature = 0u64;
     let mut episodes = Vec::new();
@@ -274,6 +305,7 @@ fn run_standin_job_inner(
         final_loss: 0.0,
         final_entropy: 0.0,
         telemetry: cfg.telemetry.then(|| tel.report()),
+        trace: trace_sink.as_ref().map(|s| s.report()),
     })
 }
 
@@ -345,6 +377,7 @@ impl StandInHub {
                 });
                 // Fleet-level telemetry is off: a shared fleet serves
                 // many jobs, so its counters are not job-attributable.
+                // (and untraced, for the same reason)
                 let actors = spawn_standin_actors(
                     n_actors.max(1),
                     &state_buf,
@@ -352,6 +385,7 @@ impl StandInHub {
                     total_cols,
                     &policy,
                     false,
+                    None,
                 );
                 HubGroup { state_buf, act_buf, actors }
             })
@@ -393,14 +427,17 @@ pub fn drive_learner_barrier(
     iters: u64,
     on_gather: impl FnMut(&RolloutStorage),
 ) {
+    let mut tr = TraceScope::disabled();
     drive_barrier_inner(
-        swap, state_buf, act_buf, gathered, iters, true, on_gather,
+        swap, state_buf, act_buf, gathered, iters, true, &mut tr, on_gather,
     );
 }
 
 /// `close_buffers = false` leaves the state/action buffers open for a
 /// fleet that outlives this run (shared-hub mode); the swap shutdown
-/// still unwinds the executors.
+/// still unwinds the executors. `tr` records the learner-side
+/// wait/gather spans (pass a disabled scope when tracing is off).
+#[allow(clippy::too_many_arguments)]
 fn drive_barrier_inner(
     swap: &StripedSwap,
     state_buf: &StateBuffer,
@@ -408,12 +445,18 @@ fn drive_barrier_inner(
     gathered: &mut RolloutStorage,
     iters: u64,
     close_buffers: bool,
+    tr: &mut TraceScope,
     mut on_gather: impl FnMut(&RolloutStorage),
 ) {
     let mut it = 0u64;
     for i in 0..iters {
-        assert!(swap.learner_arrive(it), "premature shutdown");
+        tr.begin(Kind::LearnerWait, 0);
+        let up = swap.learner_arrive(it);
+        tr.end(Kind::LearnerWait, 0);
+        assert!(up, "premature shutdown");
+        tr.begin(Kind::Gather, 0);
         swap.gather_and_reset(gathered);
+        tr.end(Kind::Gather, 0);
         on_gather(gathered);
         if i + 1 == iters {
             swap.shutdown();

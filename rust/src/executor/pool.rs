@@ -47,6 +47,7 @@ use crate::buffers::{
 use crate::envs::{EnvSpec, StepTimeModel};
 use crate::metrics::report::{EpisodePoint, SpsMeter, Stopwatch};
 use crate::telemetry::{Counter, Hist, TelemetryScope};
+use crate::trace::{Kind, Role, TraceScope, TraceSink};
 
 /// Handles a pool thread shares with the rest of the run.
 #[derive(Clone)]
@@ -68,6 +69,10 @@ pub struct PoolShared {
     /// inlined branch-and-return, no clock is read, and the trajectory
     /// is byte-identical to an instrumented run.
     pub telemetry: bool,
+    /// Event-trace sink (DESIGN.md §15): `Some` hands each pool thread
+    /// a private ring-buffer [`TraceScope`] deposited back at join.
+    /// Same byte-identity contract as `telemetry`.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 /// What a pool thread hands back at join: its replicas' episode log and
@@ -92,6 +97,7 @@ pub struct ReplicaPool {
     slots: Vec<ReplicaSlot>,
     episodes: Vec<EpisodePoint>,
     tel: TelemetryScope,
+    tr: TraceScope,
 }
 
 impl ReplicaPool {
@@ -107,6 +113,13 @@ impl ReplicaPool {
     ) -> Result<ReplicaPool> {
         anyhow::ensure!(alpha > 0, "alpha must be positive");
         anyhow::ensure!(!replicas.is_empty(), "pool needs >= 1 replica");
+        // Executor tracks are named by their first global replica —
+        // a function of the run shape, never of thread spawn order.
+        let tr = TraceScope::from_sink(
+            shared.trace.as_ref(),
+            Role::Executor,
+            replicas.start as u32,
+        );
         let group = LaneGroup::new(spec, seed, replicas.clone())?;
         let slots = replicas
             .enumerate()
@@ -130,6 +143,7 @@ impl ReplicaPool {
             slots,
             episodes: Vec::new(),
             tel,
+            tr,
         })
     }
 
@@ -154,6 +168,7 @@ impl ReplicaPool {
     /// the K > 1 scheduler).
     fn run_single(mut self) -> Result<PoolReport> {
         let swap = self.shared.swap.clone();
+        let replica = self.slots[0].replica as u32;
         let mut it = 0u64;
         // lint: hotpath(begin, executor K=1 step loop)
         'outer: loop {
@@ -161,12 +176,17 @@ impl ReplicaPool {
             self.slots[0]
                 .begin_iteration(&self.group, &self.shared.state_buf);
             for _t in 0..self.alpha {
-                if !self.slots[0]
-                    .take_actions_blocking(&self.shared.act_buf)
-                {
+                self.tr.begin(Kind::ActionWait, replica);
+                let got = self.slots[0]
+                    .take_actions_blocking(&self.shared.act_buf);
+                self.tr.end(Kind::ActionWait, 0);
+                if !got {
                     break 'outer; // shutdown
                 }
+                self.tr.begin(Kind::Cook, replica);
                 self.slots[0].cook_blocking(&self.steptime);
+                self.tr.end(Kind::Cook, 0);
+                self.tr.begin(Kind::StepSolo, replica);
                 self.slots[0].step(
                     &mut self.group,
                     &mut writer,
@@ -174,6 +194,7 @@ impl ReplicaPool {
                     &self.shared.watch,
                     &mut self.episodes,
                 );
+                self.tr.end(Kind::StepSolo, 0);
                 self.tel.incr(Counter::SoloSteps);
                 self.tel.incr(Counter::StepsTotal);
                 if self.slots[0].steps_done() < self.alpha {
@@ -183,9 +204,12 @@ impl ReplicaPool {
             }
             self.slots[0].finish_iteration(&self.group, &mut writer);
             drop(writer);
+            self.tr.mark(Kind::SlotDone, replica);
             self.tel.incr(Counter::BarrierArrivals);
             let t0 = self.tel.start();
+            self.tr.begin(Kind::BarrierWait, replica);
             let arrived = swap.executor_arrive(it);
+            self.tr.end(Kind::BarrierWait, 0);
             self.tel.stop(Hist::BarrierWaitNs, t0);
             match arrived {
                 Some(next) => it = next,
@@ -201,6 +225,10 @@ impl ReplicaPool {
         let swap = self.shared.swap.clone();
         let n_slots = self.slots.len();
         let mut it = 0u64;
+        // The pool thread's last-finishing replica, carried on the
+        // barrier-wait begin event: the attribution pass charges the
+        // induced wait of other threads to this lane (DESIGN.md §15).
+        let mut last_done = self.slots[0].replica as u32;
         // lint: hotpath(begin, executor K>1 scheduler loop)
         'outer: loop {
             // Claim every owned stripe for the iteration (one CAS per
@@ -272,11 +300,14 @@ impl ReplicaPool {
                         &mut writers,
                         &mut waiting,
                         &mut at_barrier,
+                        &mut last_done,
                     );
                 } else {
                     // Deadlines split the group: scalar-degrade, each
                     // ready replica steps its own lane.
                     while let Some(i) = ready.pop_front() {
+                        let replica = self.slots[i].replica as u32;
+                        self.tr.begin(Kind::StepDegraded, replica);
                         self.slots[i].step(
                             &mut self.group,
                             &mut writers[i],
@@ -284,6 +315,7 @@ impl ReplicaPool {
                             &self.shared.watch,
                             &mut self.episodes,
                         );
+                        self.tr.end(Kind::StepDegraded, 0);
                         self.tel.incr(Counter::DegradedSteps);
                         self.tel.incr(Counter::StepsTotal);
                         if self.slots[i].steps_done() == self.alpha {
@@ -291,6 +323,8 @@ impl ReplicaPool {
                                 &self.group,
                                 &mut writers[i],
                             );
+                            self.tr.mark(Kind::SlotDone, replica);
+                            last_done = replica;
                             at_barrier += 1;
                         } else {
                             self.slots[i].publish_obs(
@@ -309,8 +343,14 @@ impl ReplicaPool {
                     });
                     self.tel.incr(Counter::Parks);
                     let t0 = self.tel.start();
+                    self.tr.begin(Kind::Park, 0);
                     self.shared.act_buf.wait_any(seen, timeout);
-                    self.tel.stop(Hist::ParkNs, t0);
+                    self.tr.end(Kind::Park, 0);
+                    self.tel.stop_total(
+                        Hist::ParkNs,
+                        Counter::ParkNsTotal,
+                        t0,
+                    );
                 }
             }
             // Release the stripes before parking — the learner gathers
@@ -318,7 +358,9 @@ impl ReplicaPool {
             drop(writers);
             self.tel.incr(Counter::BarrierArrivals);
             let t0 = self.tel.start();
+            self.tr.begin(Kind::BarrierWait, last_done);
             let arrived = swap.executor_arrive(it);
+            self.tr.end(Kind::BarrierWait, 0);
             self.tel.stop(Hist::BarrierWaitNs, t0);
             match arrived {
                 Some(next) => it = next,
@@ -340,9 +382,11 @@ impl ReplicaPool {
         writers: &mut [ShardWriter<'_>],
         waiting: &mut Vec<usize>,
         at_barrier: &mut usize,
+        last_done: &mut u32,
     ) {
         let n = self.slots.len();
         let alpha = self.alpha;
+        self.tr.begin(Kind::StepLockstep, n as u32);
         // Stage every lane's pre-step obs before the env advances.
         for slot in self.slots.iter_mut() {
             slot.stage_pre_obs(&self.group);
@@ -364,6 +408,7 @@ impl ReplicaPool {
                 &mut self.episodes,
             );
         }
+        self.tr.end(Kind::StepLockstep, 0);
         if self.slots.iter().all(|s| s.steps_done() < alpha) {
             self.publish_group();
             waiting.extend(0..n);
@@ -372,6 +417,9 @@ impl ReplicaPool {
                 if self.slots[i].steps_done() == alpha {
                     self.slots[i]
                         .finish_iteration(&self.group, &mut writers[i]);
+                    let replica = self.slots[i].replica as u32;
+                    self.tr.mark(Kind::SlotDone, replica);
+                    *last_done = replica;
                     *at_barrier += 1;
                 } else {
                     self.slots[i].publish_obs(
@@ -394,6 +442,7 @@ impl ReplicaPool {
         let w = self.group.width();
         let na = self.group.n_agents();
         let n_cols = w * na;
+        self.tr.begin(Kind::Publish, n_cols as u32);
         let (mut obs, mut seeds) = self
             .shared
             .state_buf
@@ -421,10 +470,14 @@ impl ReplicaPool {
         for slot in self.slots.iter_mut() {
             slot.mark_awaiting();
         }
+        self.tr.end(Kind::Publish, 0);
     }
     // lint: hotpath(end)
 
-    fn into_report(self) -> PoolReport {
+    fn into_report(mut self) -> PoolReport {
+        // Hand the thread's event trace back through the sink (the
+        // scope ignores this when tracing is off).
+        self.tr.deposit();
         let signature = self
             .slots
             .iter()

@@ -35,6 +35,7 @@ pub mod runtime;
 pub mod simulator;
 pub mod stats;
 pub mod telemetry;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result alias (anyhow is the only error substrate available

@@ -5,6 +5,8 @@
 //!   compare      HTS vs sync vs async on one env, same budget
 //!   campaign     run a whole suite: specs x methods x seeds, concurrent
 //!                jobs, shared budgets, resume, cross-spec report
+//!   trace        record one stand-in run's event trace (DESIGN.md §15),
+//!                export Chrome-trace JSON, attribute barrier stalls
 //!   exp          regenerate a paper table/figure (`--id tab1`, `--id all`)
 //!   sim          Claim-1/Claim-2 analytic + simulated numbers
 //!   determinism  run the Tab. 4 determinism check
@@ -29,15 +31,21 @@ use hts_rl::util::cli::Args;
 static ALLOCATOR: hts_rl::perf::CountingAlloc = hts_rl::perf::CountingAlloc;
 
 fn usage() -> &'static str {
-    "usage: hts-rl <train|compare|campaign|exp|sim|determinism|bench|list> \
-     [flags]\n\
+    "usage: hts-rl <train|compare|campaign|trace|exp|sim|determinism|\
+     bench|list> [flags]\n\
      train flags: --env catch --method hts|sync|async --algo a2c|ppo|...\n\
        --steps N | --wall-s S | --updates N   --n-envs 16 --n-actors 4\n\
        --replicas-per-exec K (hts only: pool K replicas per exec thread)\n\
        --alpha K --seed 1 --eval-every U --out results/\n\
        --telemetry (per-run counters/histograms; never changes results)\n\
+     trace flags: --env catch --steps N | --updates N --out trace.json\n\
+       --attribute (barrier-stall + actor-idle attribution on stdout)\n\
+       --attribute-csv FILE --flight N (keep only the last N events per\n\
+       thread) — runs the deterministic stand-in fleet; no artifacts\n\
+       needed; view the JSON in ui.perfetto.dev or chrome://tracing\n\
      campaign flags: --suite <name> [--methods hts,sync,async] [--seeds K]\n\
-       [--jobs N] [--resume] [--quick] [--telemetry] --out results/\n\
+       [--jobs N] [--resume] [--quick] [--telemetry] [--trace]\n\
+       --out results/\n\
        per-job budget: --steps N | --wall-s S | --updates N\n\
        shared budget: --total-steps N [--share fair|first-exhausted]\n\
        --campaign-wall-s S   --algo a2c --async-algo vtrace --seed 1\n\
@@ -77,6 +85,7 @@ fn build_run_config(a: &Args) -> Result<RunConfig> {
     cfg.eval_every = a.u64_or("eval-every", 0)?;
     cfg.eval_episodes = a.usize_or("eval-episodes", 10)?;
     cfg.telemetry = a.bool("telemetry");
+    cfg.trace = a.bool("trace");
     if let Some(dir) = a.str_opt("artifacts") {
         cfg.artifacts = PathBuf::from(dir);
     }
@@ -208,6 +217,7 @@ fn cmd_campaign(a: &Args) -> Result<()> {
         campaign::SharePolicy::parse(&a.str_or("share", "fair"))?;
     cfg.rt_targets = vec![0.4, 0.8];
     cfg.telemetry = a.bool("telemetry");
+    cfg.trace = a.bool("trace");
 
     let plan = campaign::expand(&cfg)?;
     let out = PathBuf::from(a.str_or("out", "results"));
@@ -416,6 +426,40 @@ fn cmd_campaign(a: &Args) -> Result<()> {
             own.counter("journal_appends")
         );
     }
+    Ok(())
+}
+
+/// `hts-rl trace`: one traced run on the deterministic stand-in fleet
+/// (DESIGN.md §15) — exports Chrome-trace/Perfetto JSON and, with
+/// `--attribute`, charges every barrier wait to its straggling replica
+/// and splits actor time into grab-wait vs forward. Tracing never
+/// changes results: the printed signature matches the same run
+/// untraced (pinned in `rust/tests/pool.rs`).
+fn cmd_trace(a: &Args) -> Result<()> {
+    let mut cfg = build_run_config(a)?;
+    cfg.trace = true;
+    if let Some(n) = a.str_opt("flight") {
+        cfg.trace_flight = Some(n.parse()?);
+    }
+    let r = hts_rl::executor::harness::run_standin_job(&cfg)?;
+    let rep = r.trace.as_ref().expect("trace-enabled run carries a trace");
+    let out = PathBuf::from(a.str_or("out", "trace.json"));
+    hts_rl::trace::export::write_chrome_trace(&out, rep)?;
+    println!(
+        "wrote {} ({} threads, {} events)",
+        out.display(),
+        rep.threads.len(),
+        rep.total_events()
+    );
+    if a.bool("attribute") {
+        let att = hts_rl::trace::attribute::attribute(rep);
+        print!("{}", hts_rl::trace::attribute::render_text(&att));
+        if let Some(csv) = a.str_opt("attribute-csv") {
+            std::fs::write(&csv, hts_rl::trace::attribute::render_csv(&att))?;
+            println!("wrote {csv}");
+        }
+    }
+    println!("trajectory signature: {:016x}", r.signature);
     Ok(())
 }
 
@@ -653,6 +697,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&a),
         Some("compare") => cmd_compare(&a),
         Some("campaign") => cmd_campaign(&a),
+        Some("trace") => cmd_trace(&a),
         Some("exp") => {
             let id = a.str_or("id", "all");
             let out = PathBuf::from(a.str_or("out", "results"));

@@ -74,6 +74,10 @@ pub struct TrainReport {
     /// Merged run telemetry (DESIGN.md §12); `Some` only when
     /// `RunConfig::telemetry` was set and the driver is instrumented.
     pub telemetry: Option<crate::telemetry::TelemetryReport>,
+    /// Merged per-thread event trace (DESIGN.md §15); `Some` only when
+    /// `RunConfig::trace` was set. Never journaled and never part of
+    /// the pinned campaign artifacts — exported to its own JSON file.
+    pub trace: Option<crate::trace::TraceReport>,
 }
 
 impl TrainReport {

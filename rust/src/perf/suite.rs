@@ -224,6 +224,7 @@ fn blocking_executors(
         n_replicas,
         &modulo_policy(act_dim),
         false,
+        None,
     );
     let t0 = Instant::now();
     let allocs0 = allocations();
@@ -309,6 +310,7 @@ fn pooled_executors(
         n_replicas,
         &modulo_policy(act_dim),
         false,
+        None,
     );
     let sps = Arc::new(SpsMeter::new());
     let watch = Stopwatch::new();
@@ -325,6 +327,7 @@ fn pooled_executors(
             watch,
             col_offset: 0,
             telemetry: false,
+            trace: None,
         };
         handles.push(std::thread::spawn(move || {
             ReplicaPool::new(&spec, seed, alpha, t * k..(t + 1) * k, shared)
@@ -653,6 +656,48 @@ fn bench_state_buffer_grab(rec: &mut Rec, quick: bool) {
     );
 }
 
+/// ISSUE 10 acceptance: the trace record path — one branch, one clock
+/// read, one ring-slot write — must stay allocation-free at steady
+/// state with tracing *enabled*. The ring is preallocated at scope
+/// construction and a wrapped flight ring only overwrites slots, so
+/// instrumentation never perturbs the 0-allocs/step contracts above.
+fn bench_trace_record(rec: &mut Rec, quick: bool) {
+    use crate::trace::{Kind, Mode, Role, TraceClock, TraceScope};
+    println!("== trace ring record path (flight mode, enabled) ==");
+    let cap: usize = 1 << 10;
+    let mut tr = TraceScope::standalone(
+        TraceClock::start(),
+        Mode::Flight { cap },
+        Role::Executor,
+        0,
+    );
+    // fill past capacity so the measured loop runs in the wrapped
+    // steady state (overwrite, never grow)
+    for i in 0..(2 * cap) as u32 {
+        tr.mark(Kind::SlotDone, i);
+    }
+    let n: u64 = if quick { 100_000 } else { 1_000_000 };
+    let allocs0 = allocations();
+    let t0 = Instant::now();
+    for i in 0..n {
+        tr.begin(Kind::StepLockstep, i as u32);
+        tr.end(Kind::StepLockstep, 0);
+    }
+    let per_ns = t0.elapsed().as_secs_f64() / (2 * n) as f64 * 1e9;
+    let allocs = allocations() - allocs0;
+    println!(
+        "{:<44} {per_ns:>12.1} ns/event  {allocs} allocs",
+        format!("record into wrapped {cap}-slot flight ring"),
+    );
+    rec.record("trace_record_ns_per_event", per_ns);
+    rec.record("trace_record_allocs", allocs as f64);
+    assert_eq!(
+        allocs, 0,
+        "trace record path must be allocation-free with tracing enabled"
+    );
+    std::hint::black_box(tr.take_trace());
+}
+
 /// Run the artifact-free suite; returns every metric keyed as in
 /// `BENCH_components.json`. PJRT and manifest benches stay in the
 /// bench binary (they need artifacts on disk).
@@ -666,6 +711,7 @@ pub fn run_suite(opts: &SuiteOpts) -> BTreeMap<String, f64> {
     bench_pool_vs_blocking(&mut rec, quick);
     bench_vec_lanes(&mut rec, quick);
     bench_state_buffer_grab(&mut rec, quick);
+    bench_trace_record(&mut rec, quick);
     bench_spec_resolution(&mut rec, quick);
     bench_campaign_scheduler(&mut rec, quick);
 

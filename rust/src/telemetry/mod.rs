@@ -91,10 +91,14 @@ pub enum Counter {
     PushBatchMessages,
     /// Lines appended to the campaign journal.
     JournalAppends,
+    /// Exact total nanoseconds spent parked (the `park_ns` histogram
+    /// keeps the shape; this keeps the sum so the campaign report can
+    /// derive a park *time share* without de-bucketing — ISSUE 10).
+    ParkNsTotal,
 }
 
 impl Counter {
-    pub const COUNT: usize = 20;
+    pub const COUNT: usize = 21;
 
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::StepsTotal,
@@ -117,6 +121,7 @@ impl Counter {
         Counter::PushBatchCalls,
         Counter::PushBatchMessages,
         Counter::JournalAppends,
+        Counter::ParkNsTotal,
     ];
 
     pub fn key(self) -> &'static str {
@@ -141,6 +146,7 @@ impl Counter {
             Counter::PushBatchCalls => "push_batch_calls",
             Counter::PushBatchMessages => "push_batch_messages",
             Counter::JournalAppends => "journal_appends",
+            Counter::ParkNsTotal => "park_ns_total",
         }
     }
 }
@@ -249,6 +255,18 @@ impl TelemetryScope {
     pub fn stop(&mut self, h: Hist, t0: Option<Instant>) {
         if let Some(t0) = t0 {
             self.record_ns(h, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Close a timed section, recording the elapsed time once into the
+    /// histogram *and* as an exact-nanosecond running total in `c`
+    /// (one clock read for both).
+    #[inline]
+    pub fn stop_total(&mut self, h: Hist, c: Counter, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.record_ns(h, ns);
+            self.add(c, ns);
         }
     }
 

@@ -1,0 +1,308 @@
+//! Stall attribution (DESIGN.md §15): replay the merged event stream
+//! and charge synchronization cost to its cause — the empirical
+//! counterpart of the Claim 1 straggler simulator.
+//!
+//! **Barrier stalls.** The i-th `barrier_wait` span on each executor
+//! track is that thread's arrival at swap iteration i. Per iteration,
+//! the *straggler* is the last-arriving thread (max begin timestamp),
+//! identified by the replica its begin event carries (the thread's own
+//! last-finishing replica/lane); every other thread is charged
+//! `straggler_arrival − own_arrival` nanoseconds of induced wait
+//! against that replica. Learner service time after the last arrival
+//! is deliberately *not* charged — it is paid regardless of stragglers.
+//!
+//! **Actor idle.** Per actor track, `grab` spans are time blocked on an
+//! empty state buffer (idle: no work queued) and `forward` spans are
+//! inference latency (busy). Their ratio says whether an idle executor
+//! fleet starves on actor *throughput* (forward-bound) or on *arrival
+//! gaps* (grab-bound, i.e. the executors are the bottleneck).
+
+use std::collections::BTreeMap;
+
+use super::{Kind, Ph, Role, ThreadTrace, TraceReport};
+
+/// Induced barrier wait charged to one replica/lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaStall {
+    pub replica: u32,
+    /// Total nanoseconds of other-thread waiting this replica caused.
+    pub charged_ns: u64,
+    /// Iterations in which this replica's thread arrived last.
+    pub straggles: u64,
+}
+
+/// One actor thread's grab-wait vs. forward split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActorSplit {
+    pub actor: u32,
+    /// Nanoseconds blocked waiting for observations (idle).
+    pub grab_ns: u64,
+    /// Nanoseconds spent in forward chunks (busy).
+    pub forward_ns: u64,
+}
+
+/// The full attribution: ranked replica stalls + per-actor splits.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attribution {
+    /// Barrier iterations replayed (min across executor tracks).
+    pub iterations: u64,
+    /// Ranked worst-first (charged ns desc, then replica asc).
+    pub stalls: Vec<ReplicaStall>,
+    pub actors: Vec<ActorSplit>,
+}
+
+/// Sum of `kind` span durations over one track (depth-1 begin/end).
+fn span_total_ns(t: &ThreadTrace, kind: Kind) -> u64 {
+    let mut total = 0u64;
+    let mut open: Option<u64> = None;
+    for ev in &t.events {
+        if ev.kind != kind {
+            continue;
+        }
+        match ev.ph {
+            Ph::Begin => open = Some(ev.t_ns),
+            Ph::End => {
+                if let Some(b) = open.take() {
+                    total += ev.t_ns.saturating_sub(b);
+                }
+            }
+            Ph::Instant => {}
+        }
+    }
+    total
+}
+
+/// Replay a merged report into an [`Attribution`].
+pub fn attribute(rep: &TraceReport) -> Attribution {
+    // (begin_ts, last-finishing replica) per executor track, in order.
+    let mut arrivals: Vec<Vec<(u64, u32)>> = Vec::new();
+    for t in &rep.threads {
+        if t.track.role != Role::Executor {
+            continue;
+        }
+        let mut this: Vec<(u64, u32)> = Vec::new();
+        for ev in &t.events {
+            if ev.kind == Kind::BarrierWait && ev.ph == Ph::Begin {
+                this.push((ev.t_ns, ev.arg));
+            }
+        }
+        arrivals.push(this);
+    }
+    let iterations = arrivals
+        .iter()
+        .map(|a| a.len() as u64)
+        .min()
+        .unwrap_or(0);
+
+    let mut charged: BTreeMap<u32, (u64, u64)> = BTreeMap::new();
+    for i in 0..iterations as usize {
+        // Last arrival wins; ties break toward the smaller replica so
+        // the ranking is deterministic.
+        let mut straggler = arrivals[0][i];
+        for a in &arrivals[1..] {
+            let cand = a[i];
+            if cand.0 > straggler.0
+                || (cand.0 == straggler.0 && cand.1 < straggler.1)
+            {
+                straggler = cand;
+            }
+        }
+        let mut induced = 0u64;
+        for a in &arrivals {
+            induced += straggler.0.saturating_sub(a[i].0);
+        }
+        let e = charged.entry(straggler.1).or_insert((0, 0));
+        e.0 += induced;
+        e.1 += 1;
+    }
+    let mut stalls: Vec<ReplicaStall> = charged
+        .into_iter()
+        .map(|(replica, (charged_ns, straggles))| ReplicaStall {
+            replica,
+            charged_ns,
+            straggles,
+        })
+        .collect();
+    stalls.sort_by(|a, b| {
+        b.charged_ns
+            .cmp(&a.charged_ns)
+            .then(a.replica.cmp(&b.replica))
+    });
+
+    let mut actors: Vec<ActorSplit> = rep
+        .threads
+        .iter()
+        .filter(|t| t.track.role == Role::Actor)
+        .map(|t| ActorSplit {
+            actor: t.track.index,
+            grab_ns: span_total_ns(t, Kind::Grab),
+            forward_ns: span_total_ns(t, Kind::Forward),
+        })
+        .collect();
+    actors.sort_by_key(|a| a.actor);
+
+    Attribution { iterations, stalls, actors }
+}
+
+fn pct(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        100.0 * num as f64 / den as f64
+    }
+}
+
+/// Ranked human-readable report (`hts-rl trace --attribute`).
+pub fn render_text(a: &Attribution) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "barrier stall attribution ({} iterations)\n",
+        a.iterations
+    ));
+    if a.stalls.is_empty() {
+        out.push_str("  no executor barrier spans recorded\n");
+    } else {
+        let total: u64 = a.stalls.iter().map(|s| s.charged_ns).sum();
+        out.push_str("  rank  replica  charged_ms   share  straggles\n");
+        for (rank, s) in a.stalls.iter().enumerate() {
+            out.push_str(&format!(
+                "  {:>4}  {:>7}  {:>10.3}  {:>5.1}%  {:>9}\n",
+                rank + 1,
+                s.replica,
+                s.charged_ns as f64 / 1e6,
+                pct(s.charged_ns, total),
+                s.straggles,
+            ));
+        }
+    }
+    out.push_str("actor idle attribution (grab-wait vs forward)\n");
+    if a.actors.is_empty() {
+        out.push_str("  no actor spans recorded\n");
+    } else {
+        out.push_str("  actor  grab_ms  forward_ms  forward_share\n");
+        for s in &a.actors {
+            out.push_str(&format!(
+                "  {:>5}  {:>7.3}  {:>10.3}  {:>12.1}%\n",
+                s.actor,
+                s.grab_ns as f64 / 1e6,
+                s.forward_ns as f64 / 1e6,
+                pct(s.forward_ns, s.grab_ns + s.forward_ns),
+            ));
+        }
+    }
+    out
+}
+
+/// Machine-readable form: one section column tags the row type.
+pub fn render_csv(a: &Attribution) -> String {
+    let mut out = String::from("row,index,ns_a,ns_b\n");
+    for s in &a.stalls {
+        out.push_str(&format!(
+            "stall,{},{},{}\n",
+            s.replica, s.charged_ns, s.straggles
+        ));
+    }
+    for s in &a.actors {
+        out.push_str(&format!(
+            "actor,{},{},{}\n",
+            s.actor, s.grab_ns, s.forward_ns
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Event, Track};
+    use super::*;
+
+    fn exec_track(
+        index: u32,
+        arrivals: &[(u64, u32, u64)], // (begin, replica, end)
+    ) -> ThreadTrace {
+        let mut events = Vec::new();
+        for &(b, r, e) in arrivals {
+            events.push(Event {
+                t_ns: b,
+                kind: Kind::BarrierWait,
+                ph: Ph::Begin,
+                arg: r,
+            });
+            events.push(Event {
+                t_ns: e,
+                kind: Kind::BarrierWait,
+                ph: Ph::End,
+                arg: 0,
+            });
+        }
+        ThreadTrace {
+            track: Track { role: Role::Executor, index },
+            events,
+            dropped: 0,
+            wrapped: false,
+        }
+    }
+
+    #[test]
+    fn charges_the_late_thread_not_learner_time() {
+        let mut rep = TraceReport::default();
+        // replica 0's thread arrives at 100, replica 1's at 40; both
+        // released at 200 — learner time past 100 must not be charged.
+        rep.push(exec_track(0, &[(100, 0, 200)]));
+        rep.push(exec_track(1, &[(40, 1, 200)]));
+        let a = attribute(&rep);
+        assert_eq!(a.iterations, 1);
+        assert_eq!(
+            a.stalls,
+            vec![ReplicaStall { replica: 0, charged_ns: 60, straggles: 1 }]
+        );
+    }
+
+    #[test]
+    fn ranks_by_charge_across_iterations() {
+        let mut rep = TraceReport::default();
+        rep.push(exec_track(0, &[(10, 0, 30), (100, 0, 130), (210, 0, 230)]));
+        rep.push(exec_track(2, &[(25, 2, 30), (120, 3, 130), (205, 2, 230)]));
+        let a = attribute(&rep);
+        assert_eq!(a.iterations, 3);
+        // iter 0: replica 2 late by 15; iter 1: replica 3 late by 20;
+        // iter 2: replica 0 late by 5.
+        assert_eq!(
+            a.stalls,
+            vec![
+                ReplicaStall { replica: 3, charged_ns: 20, straggles: 1 },
+                ReplicaStall { replica: 2, charged_ns: 15, straggles: 1 },
+                ReplicaStall { replica: 0, charged_ns: 5, straggles: 1 },
+            ]
+        );
+        let text = render_text(&a);
+        assert!(text.contains("barrier stall attribution (3 iterations)"));
+        let csv = render_csv(&a);
+        assert!(csv.starts_with("row,index,ns_a,ns_b\n"));
+        assert!(csv.contains("stall,3,20,1\n"));
+    }
+
+    #[test]
+    fn actor_split_sums_spans() {
+        let mut rep = TraceReport::default();
+        let ev = |t_ns, kind, ph| Event { t_ns, kind, ph, arg: 0 };
+        rep.push(ThreadTrace {
+            track: Track { role: Role::Actor, index: 0 },
+            events: vec![
+                ev(0, Kind::Grab, Ph::Begin),
+                ev(30, Kind::Grab, Ph::End),
+                ev(30, Kind::Forward, Ph::Begin),
+                ev(40, Kind::Forward, Ph::End),
+                ev(40, Kind::Grab, Ph::Begin),
+                ev(45, Kind::Grab, Ph::End),
+            ],
+            dropped: 0,
+            wrapped: false,
+        });
+        let a = attribute(&rep);
+        assert_eq!(
+            a.actors,
+            vec![ActorSplit { actor: 0, grab_ns: 35, forward_ns: 10 }]
+        );
+    }
+}

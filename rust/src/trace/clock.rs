@@ -1,0 +1,46 @@
+//! The trace clock shim — the only file in `trace/` sanctioned to read
+//! a wall clock (it is the one `trace/` entry in the `timekeeping` lint
+//! zone, DESIGN.md §14). Every recorded timestamp is nanoseconds on the
+//! process-monotonic clock since one shared per-run origin, so all of a
+//! run's tracks line up on one Perfetto timeline and per-thread
+//! timestamp sequences are non-decreasing (`trace_check.py` asserts
+//! this offline).
+
+use std::time::Instant;
+
+/// A copyable clock origin. Scopes copy the run's clock at
+/// construction; reading it is one monotonic-clock read and a subtract.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceClock {
+    origin: Instant,
+}
+
+impl TraceClock {
+    /// Start a new origin (one per [`TraceSink`](super::TraceSink)).
+    pub fn start() -> TraceClock {
+        TraceClock { origin: Instant::now() }
+    }
+
+    /// Nanoseconds since the origin. Saturates at `u64::MAX` after
+    /// ~584 years, which is somebody else's outage.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        let d = Instant::now().duration_since(self.origin);
+        u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_shared_origin() {
+        let clock = TraceClock::start();
+        let copy = clock;
+        let a = clock.now_ns();
+        let b = copy.now_ns();
+        let c = clock.now_ns();
+        assert!(a <= b && b <= c);
+    }
+}

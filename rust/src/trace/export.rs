@@ -1,0 +1,209 @@
+//! Chrome-trace / Perfetto JSON export (DESIGN.md §15).
+//!
+//! Schema: the JSON Object Format — `{"traceEvents": [...]}` — with
+//! `ph ∈ {"B","E","i","M"}`, microsecond `ts`, and one `pid`/`tid`
+//! pair per track. Track ids are **stable**: tracks sort by
+//! `(role, index)` and are numbered 1.. in that order, with
+//! `thread_name` / `thread_sort_index` metadata events naming them —
+//! so two traces of the same run shape land on identically-labeled
+//! timelines regardless of thread spawn or join order. Validated
+//! offline by `python/tools/trace_check.py`; the exact bytes of a
+//! synthetic report are pinned against the committed fixture
+//! `rust/tests/trace_fixtures/fixture_trace.json`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Ph, TraceReport, Track};
+use crate::util::json::{obj, Json};
+
+/// Build the Chrome-trace JSON value for a merged report.
+pub fn chrome_trace(rep: &TraceReport) -> Json {
+    let mut tracks: Vec<Track> =
+        rep.threads.iter().map(|t| t.track).collect();
+    tracks.sort();
+    tracks.dedup();
+    let tid = |track: Track| -> f64 {
+        (tracks.iter().position(|&t| t == track).unwrap_or(0) + 1) as f64
+    };
+
+    let mut events: Vec<Json> = Vec::new();
+    for &track in &tracks {
+        let t = tid(track);
+        events.push(obj(vec![
+            ("args", obj(vec![("name", Json::Str(track.label()))])),
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(t)),
+        ]));
+        events.push(obj(vec![
+            ("args", obj(vec![("sort_index", Json::Num(t))])),
+            ("name", Json::Str("thread_sort_index".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(t)),
+        ]));
+    }
+    for thread in &rep.threads {
+        let t = tid(thread.track);
+        for ev in &thread.events {
+            let ts = Json::Num(ev.t_ns as f64 / 1000.0);
+            let name = Json::Str(ev.kind.name().to_string());
+            events.push(match ev.ph {
+                Ph::Begin => obj(vec![
+                    ("args", obj(vec![("v", Json::Num(ev.arg as f64))])),
+                    ("name", name),
+                    ("ph", Json::Str("B".to_string())),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(t)),
+                    ("ts", ts),
+                ]),
+                Ph::End => obj(vec![
+                    ("name", name),
+                    ("ph", Json::Str("E".to_string())),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(t)),
+                    ("ts", ts),
+                ]),
+                Ph::Instant => obj(vec![
+                    ("args", obj(vec![("v", Json::Num(ev.arg as f64))])),
+                    ("name", name),
+                    ("ph", Json::Str("i".to_string())),
+                    ("pid", Json::Num(1.0)),
+                    ("s", Json::Str("t".to_string())),
+                    ("tid", Json::Num(t)),
+                    ("ts", ts),
+                ]),
+            });
+        }
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Render to the exact byte string the fixture pins.
+pub fn render(rep: &TraceReport) -> String {
+    chrome_trace(rep).to_string()
+}
+
+/// Write atomically (tmp + rename): post-mortem dumps run on fault
+/// paths and a torn half-written JSON would defeat their purpose.
+pub fn write_chrome_trace(path: &Path, rep: &TraceReport) -> Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, render(rep))
+        .with_context(|| format!("writing trace {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming trace into {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Event, Kind, Role, ThreadTrace, TraceReport};
+    use super::*;
+
+    /// The synthetic report behind the committed fixture trace. Kept
+    /// here so the Rust exporter test, the committed JSON, and the
+    /// Python validator's CI run all describe the same bytes.
+    pub(crate) fn fixture_report() -> TraceReport {
+        let ev = |t_ns, kind, ph, arg| Event { t_ns, kind, ph, arg };
+        let mut rep = TraceReport::default();
+        rep.push(ThreadTrace {
+            track: Track { role: Role::Executor, index: 0 },
+            events: vec![
+                ev(1000, Kind::StepLockstep, Ph::Begin, 4),
+                ev(3500, Kind::StepLockstep, Ph::End, 0),
+                ev(3500, Kind::SlotDone, Ph::Instant, 3),
+                ev(4000, Kind::BarrierWait, Ph::Begin, 3),
+                ev(9000, Kind::BarrierWait, Ph::End, 0),
+            ],
+            dropped: 0,
+            wrapped: false,
+        });
+        rep.push(ThreadTrace {
+            track: Track { role: Role::Learner, index: 0 },
+            events: vec![
+                ev(500, Kind::LearnerWait, Ph::Begin, 0),
+                ev(8000, Kind::LearnerWait, Ph::End, 0),
+                ev(8000, Kind::Gather, Ph::Begin, 0),
+                ev(8750, Kind::Gather, Ph::End, 0),
+            ],
+            dropped: 0,
+            wrapped: false,
+        });
+        rep.push(ThreadTrace {
+            track: Track { role: Role::Actor, index: 1 },
+            events: vec![
+                ev(1200, Kind::Grab, Ph::Begin, 0),
+                ev(2200, Kind::Grab, Ph::End, 2),
+                ev(2200, Kind::Forward, Ph::Begin, 8),
+                ev(3100, Kind::Forward, Ph::End, 0),
+            ],
+            dropped: 0,
+            wrapped: true,
+        });
+        rep
+    }
+
+    #[test]
+    fn export_matches_committed_fixture() {
+        let want = include_str!("../../tests/trace_fixtures/fixture_trace.json");
+        assert_eq!(render(&fixture_report()), want.trim_end());
+    }
+
+    #[test]
+    fn tids_are_stable_under_thread_order() {
+        let mut rep = fixture_report();
+        rep.threads.reverse();
+        let a = render(&fixture_report());
+        // tid assignment sorts tracks, so reversing deposit order only
+        // reorders events between tracks, never renumbers them
+        let b = render(&rep);
+        let tid_meta = |s: &str| {
+            let v = Json::parse(s).unwrap();
+            let mut names = Vec::new();
+            for e in v.get("traceEvents").unwrap().as_arr().unwrap() {
+                if e.get("name").unwrap().as_str().unwrap() == "thread_name" {
+                    names.push((
+                        e.get("tid").unwrap().as_u64().unwrap(),
+                        e.get("args")
+                            .unwrap()
+                            .get("name")
+                            .unwrap()
+                            .as_str()
+                            .unwrap()
+                            .to_string(),
+                    ));
+                }
+            }
+            names
+        };
+        assert_eq!(tid_meta(&a), tid_meta(&b));
+        assert_eq!(
+            tid_meta(&a),
+            vec![
+                (1, "learner-0".to_string()),
+                (2, "executor-0".to_string()),
+                (3, "actor-1".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn exported_json_parses_back() {
+        let s = render(&fixture_report());
+        let v = Json::parse(&s).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 tracks × 2 metadata + 13 events
+        assert_eq!(evs.len(), 19);
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(matches!(ph, "B" | "E" | "i" | "M"));
+        }
+    }
+}

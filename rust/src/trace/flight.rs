@@ -1,0 +1,162 @@
+//! Flight-recorder plumbing (DESIGN.md §15): a process-wide registry
+//! of dump-capable [`TraceSink`]s and a chained panic hook that writes
+//! their merged tails to post-mortem files, so a wedged or killed
+//! worker leaves a readable timeline instead of nothing.
+//!
+//! Two dump triggers compose:
+//!
+//! 1. the **panic hook** (installed once, chains the previous hook)
+//!    runs at `panic!` time — *before* unwind — and dumps everything
+//!    already deposited into each registered sink;
+//! 2. the panicking thread's own [`TraceScope`](super::TraceScope)
+//!    drop runs *during* unwind and re-dumps with that thread's tail
+//!    included — the file on disk after a panic always contains the
+//!    dying thread's last events.
+//!
+//! The campaign dist worker's fault path calls
+//! [`TraceSink::dump_postmortem`] directly (no panic involved) so a
+//! `--die-after-jobs` worker leaves the same artifact.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use super::TraceSink;
+
+static REGISTRY: Mutex<Vec<Weak<TraceSink>>> = Mutex::new(Vec::new());
+static HOOK_INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Register a sink for panic-time dumping and install the chained
+/// panic hook on first use. Holding only a `Weak` keeps finished runs
+/// collectable; dead entries are pruned on every dump pass.
+pub fn install_panic_hook(sink: &Arc<TraceSink>) {
+    REGISTRY
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .push(Arc::downgrade(sink));
+    if !HOOK_INSTALLED.swap(true, Ordering::SeqCst) {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            dump_registered();
+            prev(info);
+        }));
+    }
+}
+
+/// Dump every live registered sink (the panic-hook body; callable
+/// directly from fault paths that want all recorders flushed).
+pub fn dump_registered() {
+    let mut reg = REGISTRY
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    reg.retain(|w| w.strong_count() > 0);
+    for w in reg.iter() {
+        if let Some(sink) = w.upgrade() {
+            sink.dump_postmortem();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Kind, Mode, Role, TraceSink};
+    use crate::util::json::Json;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hts_trace_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn panicking_thread_dumps_its_tail() {
+        let dump = tmp_path("panic_tail.json");
+        let _ = std::fs::remove_file(&dump);
+        let sink =
+            TraceSink::with_dump(Mode::Flight { cap: 4 }, dump.clone());
+        let worker = {
+            let sink = sink.clone();
+            std::thread::spawn(move || {
+                let mut tr = sink.scope(Role::Executor, 7);
+                for i in 0..10u32 {
+                    tr.mark(Kind::SlotDone, i);
+                }
+                panic!("injected fault");
+            })
+        };
+        assert!(worker.join().is_err());
+
+        let text = std::fs::read_to_string(&dump).expect("dump written");
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // ring cap 4 ⇒ tail = slot_done 7,8,9 displaced by the panic
+        // instant the unwinding drop records (cap stays 4), all on the
+        // executor-7 track.
+        let marks: Vec<(String, u64)> = evs
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str().unwrap() == "i"
+            })
+            .map(|e| {
+                (
+                    e.get("name").unwrap().as_str().unwrap().to_string(),
+                    e.get("args")
+                        .unwrap()
+                        .get("v")
+                        .unwrap()
+                        .as_u64()
+                        .unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(
+            marks,
+            vec![
+                ("slot_done".to_string(), 7),
+                ("slot_done".to_string(), 8),
+                ("slot_done".to_string(), 9),
+                ("panic".to_string(), 0),
+            ]
+        );
+        let named: Vec<&Json> = evs
+            .iter()
+            .filter(|e| {
+                e.get("name").unwrap().as_str().unwrap() == "thread_name"
+            })
+            .collect();
+        assert_eq!(named.len(), 1);
+        assert_eq!(
+            named[0]
+                .get("args")
+                .unwrap()
+                .get("name")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "executor-7"
+        );
+        let _ = std::fs::remove_file(&dump);
+    }
+
+    #[test]
+    fn explicit_dump_needs_no_panic() {
+        let dump = tmp_path("explicit.json");
+        let _ = std::fs::remove_file(&dump);
+        let sink =
+            TraceSink::with_dump(Mode::Flight { cap: 8 }, dump.clone());
+        let mut tr = sink.scope(Role::Worker, 0);
+        tr.begin(Kind::JobRun, 3);
+        tr.end(Kind::JobRun, 0);
+        tr.deposit();
+        assert_eq!(sink.dump_postmortem(), Some(dump.clone()));
+        let v =
+            Json::parse(&std::fs::read_to_string(&dump).unwrap()).unwrap();
+        assert!(!v.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_file(&dump);
+    }
+
+    #[test]
+    fn dump_without_path_is_none() {
+        let sink = TraceSink::new(Mode::Flight { cap: 8 });
+        assert_eq!(sink.dump_postmortem(), None);
+    }
+}

@@ -1,0 +1,579 @@
+//! Deterministic event tracing (DESIGN.md §15): per-thread span/instant
+//! recorders over fixed-capacity ring buffers, merged at join into a
+//! [`TraceReport`] and exported as Chrome-trace/Perfetto JSON.
+//!
+//! The discipline mirrors `telemetry/` (DESIGN.md §12) exactly:
+//!
+//! * every thread owns its [`TraceScope`] outright — recording an event
+//!   is a branch on a bool plus one write into a preallocated ring, no
+//!   shared state, no lock, and no allocation on the step path
+//!   (`bench_trace_record` asserts 0 allocs/event);
+//! * the whole subsystem is gated on `RunConfig::trace`. Off, every
+//!   record call is an inlined branch-and-return, no trace clock is
+//!   read on the record path, no RNG stream is touched, and no message
+//!   changes size — so trajectory signatures and all campaign artifacts
+//!   are byte-identical with tracing on or off (pinned in
+//!   `tests/pool.rs` / `tests/campaign.rs`);
+//! * timestamps come only from the [`TraceClock`] shim
+//!   (`trace/clock.rs`, the sole `timekeeping`-zone file in this
+//!   subtree), so `hts-lint` proves the rest of the recorder never
+//!   reads a wall clock.
+//!
+//! Two recording modes: [`Mode::Full`] keeps the first `cap` events and
+//! counts the overflow, [`Mode::Flight`] is the flight recorder — the
+//! ring keeps only the *last* `cap` events per thread, and a panic (or
+//! a dist-worker fault injection) dumps the merged tail to a
+//! post-mortem file (`trace/flight.rs`).
+
+pub mod attribute;
+pub mod clock;
+pub mod export;
+pub mod flight;
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+pub use clock::TraceClock;
+
+/// Default per-thread ring capacity (events). At 24 bytes per event a
+/// full ring is ~1.5 MB per thread — plenty for the pinned runs and the
+/// CI smoke, bounded for long ones (overflow is counted, not recorded).
+pub const DEFAULT_CAP: usize = 1 << 16;
+
+/// What a thread does between two timestamps (span kinds) or at one
+/// (instant kinds). Names are the Perfetto slice names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Kind {
+    /// Executor blocked on its replica's action mailbox (K = 1 path).
+    ActionWait,
+    /// Executor sleeping a replica's engine delay (K = 1 path).
+    Cook,
+    /// K = 1 env step (arg = replica).
+    StepSolo,
+    /// Lockstep batched group step (arg = lanes stepped).
+    StepLockstep,
+    /// Scalar-degraded lane step (arg = replica).
+    StepDegraded,
+    /// Executor parked on the action-buffer epoch (K > 1 scheduler).
+    Park,
+    /// Executor at the swap barrier: begin = arrival, end = release
+    /// (arg on begin = the thread's last-finishing replica — the
+    /// thread-local straggler the attribution pass charges).
+    BarrierWait,
+    /// Group observation publish (arg = mailbox columns shipped).
+    Publish,
+    /// Actor blocked grabbing observations (arg on end = messages).
+    Grab,
+    /// Actor forwarding a grabbed batch (arg = columns served).
+    Forward,
+    /// Learner waiting for executors at the barrier.
+    LearnerWait,
+    /// Learner gathering the striped rollout inside the window.
+    Gather,
+    /// Campaign scheduler running one job (arg = plan index).
+    JobRun,
+    /// Campaign scheduler appending the job's journal record.
+    JournalAppend,
+    /// Instant: one replica finished its α steps (arg = replica).
+    SlotDone,
+    /// Instant: the thread observed a panic unwind.
+    Panic,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::ActionWait => "action_wait",
+            Kind::Cook => "cook",
+            Kind::StepSolo => "step_solo",
+            Kind::StepLockstep => "step_lockstep",
+            Kind::StepDegraded => "step_degraded",
+            Kind::Park => "park",
+            Kind::BarrierWait => "barrier_wait",
+            Kind::Publish => "publish",
+            Kind::Grab => "grab",
+            Kind::Forward => "forward",
+            Kind::LearnerWait => "learner_wait",
+            Kind::Gather => "gather",
+            Kind::JobRun => "job_run",
+            Kind::JournalAppend => "journal_append",
+            Kind::SlotDone => "slot_done",
+            Kind::Panic => "panic",
+        }
+    }
+}
+
+/// Event phase, matching the Chrome-trace `ph` field it exports to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Ph {
+    /// Span open (`"B"`).
+    Begin,
+    /// Span close (`"E"`).
+    End,
+    /// Thread-scoped instant (`"i"`).
+    Instant,
+}
+
+/// One recorded event: ring slots are plain `Copy` data so the record
+/// path is a branch, a clock read, and one slot write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Nanoseconds since the run's [`TraceClock`] origin.
+    pub t_ns: u64,
+    pub kind: Kind,
+    pub ph: Ph,
+    /// Kind-specific payload (replica, lane count, columns, …).
+    pub arg: u32,
+}
+
+/// Which subsystem a track belongs to. The variant order is the
+/// Perfetto track order (and the stable `tid` assignment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Role {
+    Learner,
+    Executor,
+    Actor,
+    Scheduler,
+    Worker,
+}
+
+impl Role {
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Learner => "learner",
+            Role::Executor => "executor",
+            Role::Actor => "actor",
+            Role::Scheduler => "scheduler",
+            Role::Worker => "worker",
+        }
+    }
+}
+
+/// Stable identity of one recording thread: `(role, index)`. Executor
+/// tracks index by their first global replica, actors by actor index —
+/// naming is a function of the run shape, never of spawn order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Track {
+    pub role: Role,
+    pub index: u32,
+}
+
+impl Track {
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.role.name(), self.index)
+    }
+}
+
+/// One thread's finished recording, deposited into the sink at join
+/// (or at panic unwind — see [`TraceScope`]'s `Drop`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThreadTrace {
+    pub track: Track,
+    /// Chronological events (a wrapped flight ring is un-rotated).
+    pub events: Vec<Event>,
+    /// Events discarded past capacity ([`Mode::Full`] only).
+    pub dropped: u64,
+    /// The flight ring wrapped: `events` is only the tail.
+    pub wrapped: bool,
+}
+
+/// All deposited thread traces of one run, sorted by track.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceReport {
+    pub threads: Vec<ThreadTrace>,
+}
+
+impl TraceReport {
+    pub fn total_events(&self) -> usize {
+        self.threads.iter().map(|t| t.events.len()).sum()
+    }
+
+    /// Insert a thread trace keeping the track order sorted.
+    pub fn push(&mut self, t: ThreadTrace) {
+        let at = self
+            .threads
+            .partition_point(|have| have.track <= t.track);
+        self.threads.insert(at, t);
+    }
+}
+
+/// Ring-buffer policy for every scope of one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Keep the first `cap` events, count the rest as `dropped`.
+    Full { cap: usize },
+    /// Flight recorder: keep only the *last* `cap` events.
+    Flight { cap: usize },
+}
+
+impl Mode {
+    pub fn cap(self) -> usize {
+        match self {
+            Mode::Full { cap } | Mode::Flight { cap } => cap,
+        }
+    }
+
+    fn is_flight(self) -> bool {
+        matches!(self, Mode::Flight { .. })
+    }
+}
+
+/// Per-run collector: hands out thread-owned scopes sharing one clock
+/// origin and gathers their traces back at join. The mutex guards only
+/// deposit/report — construction and join-time paths, never the step
+/// path.
+pub struct TraceSink {
+    mode: Mode,
+    clock: TraceClock,
+    dump_path: Option<PathBuf>,
+    deposits: Mutex<Vec<ThreadTrace>>,
+}
+
+impl TraceSink {
+    pub fn new(mode: Mode) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            mode,
+            clock: TraceClock::start(),
+            dump_path: None,
+            deposits: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// A sink whose merged tail is written to `dump` on panic or on an
+    /// explicit [`TraceSink::dump_postmortem`] (flight-recorder use).
+    pub fn with_dump(mode: Mode, dump: PathBuf) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            mode,
+            clock: TraceClock::start(),
+            dump_path: Some(dump),
+            deposits: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn clock(&self) -> TraceClock {
+        self.clock
+    }
+
+    /// Open a recording scope for one thread. The scope owns its ring;
+    /// it deposits back here at join (or panic unwind).
+    pub fn scope(self: &Arc<Self>, role: Role, index: u32) -> TraceScope {
+        TraceScope {
+            enabled: true,
+            track: Track { role, index },
+            clock: self.clock,
+            flight: self.mode.is_flight(),
+            cap: self.mode.cap().max(1),
+            buf: Vec::with_capacity(self.mode.cap().max(1)),
+            head: 0,
+            dropped: 0,
+            wrapped: false,
+            deposited: false,
+            sink: Some(self.clone()),
+        }
+    }
+
+    pub fn deposit(&self, t: ThreadTrace) {
+        self.lock_deposits().push(t);
+    }
+
+    /// Snapshot the deposits so far, sorted by track (deterministic
+    /// order regardless of join interleaving).
+    pub fn report(&self) -> TraceReport {
+        let mut threads = self.lock_deposits().clone();
+        threads.sort_by(|a, b| a.track.cmp(&b.track));
+        TraceReport { threads }
+    }
+
+    /// Write the merged tail of everything deposited so far to the
+    /// sink's dump path as Chrome-trace JSON. Returns the path written,
+    /// `None` when the sink has no dump path or the write failed (the
+    /// error is reported, not propagated — this runs on fault paths).
+    pub fn dump_postmortem(&self) -> Option<PathBuf> {
+        let path = self.dump_path.clone()?;
+        let rep = self.report();
+        match export::write_chrome_trace(&path, &rep) {
+            Ok(()) => Some(path),
+            Err(e) => {
+                eprintln!("trace: post-mortem dump failed: {e:?}");
+                None
+            }
+        }
+    }
+
+    /// Survive lock poisoning: deposits are also taken on panic unwind,
+    /// where another thread may have died holding the lock. The guarded
+    /// data is a plain Vec — a poisoned snapshot is still well-formed.
+    fn lock_deposits(&self) -> MutexGuard<'_, Vec<ThreadTrace>> {
+        self.deposits
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// One thread's recorder. Disabled scopes (trace off) are inert: every
+/// record call returns on the bool before touching the clock or the
+/// ring, so instrumented code paths behave byte-identically either way.
+pub struct TraceScope {
+    enabled: bool,
+    track: Track,
+    clock: TraceClock,
+    flight: bool,
+    cap: usize,
+    buf: Vec<Event>,
+    /// Next overwrite slot once the flight ring is at capacity.
+    head: usize,
+    dropped: u64,
+    wrapped: bool,
+    deposited: bool,
+    sink: Option<Arc<TraceSink>>,
+}
+
+impl TraceScope {
+    /// The inert scope instrumented code holds when tracing is off.
+    pub fn disabled() -> TraceScope {
+        TraceScope {
+            enabled: false,
+            track: Track { role: Role::Worker, index: 0 },
+            clock: TraceClock::start(),
+            flight: false,
+            cap: 0,
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+            wrapped: false,
+            deposited: true,
+            sink: None,
+        }
+    }
+
+    /// A sink-less scope whose trace the owner collects by hand with
+    /// [`TraceScope::take_trace`] (the campaign scheduler track).
+    pub fn standalone(
+        clock: TraceClock,
+        mode: Mode,
+        role: Role,
+        index: u32,
+    ) -> TraceScope {
+        TraceScope {
+            enabled: true,
+            track: Track { role, index },
+            clock,
+            flight: mode.is_flight(),
+            cap: mode.cap().max(1),
+            buf: Vec::with_capacity(mode.cap().max(1)),
+            head: 0,
+            dropped: 0,
+            wrapped: false,
+            deposited: false,
+            sink: None,
+        }
+    }
+
+    /// Build from an optional sink: `Some` ⇒ a live scope, `None` ⇒
+    /// the inert disabled scope. The shape every instrumented
+    /// subsystem uses, mirroring `TelemetryScope::new(bool)`.
+    pub fn from_sink(
+        sink: Option<&Arc<TraceSink>>,
+        role: Role,
+        index: u32,
+    ) -> TraceScope {
+        match sink {
+            Some(s) => s.scope(role, index),
+            None => TraceScope::disabled(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn begin(&mut self, kind: Kind, arg: u32) {
+        self.record(kind, Ph::Begin, arg);
+    }
+
+    #[inline]
+    pub fn end(&mut self, kind: Kind, arg: u32) {
+        self.record(kind, Ph::End, arg);
+    }
+
+    #[inline]
+    pub fn mark(&mut self, kind: Kind, arg: u32) {
+        self.record(kind, Ph::Instant, arg);
+    }
+
+    /// The record path. Ring slots were preallocated at construction;
+    /// within the hotpath region below there is no allocation and no
+    /// lock (machine-checked: `hotpath-alloc`/`hotpath-lock`,
+    /// DESIGN.md §14), and a disabled scope returns before the clock.
+    // lint: hotpath(begin, trace ring record path: one branch + one slot write)
+    #[inline]
+    fn record(&mut self, kind: Kind, ph: Ph, arg: u32) {
+        if !self.enabled {
+            return;
+        }
+        let ev = Event { t_ns: self.clock.now_ns(), kind, ph, arg };
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else if self.flight {
+            self.buf[self.head] = ev;
+            self.head += 1;
+            if self.head == self.cap {
+                self.head = 0;
+            }
+            self.wrapped = true;
+        } else {
+            self.dropped += 1;
+        }
+    }
+    // lint: hotpath(end)
+
+    /// Finish recording: un-rotate a wrapped flight ring into
+    /// chronological order and hand the trace out. The scope stays
+    /// valid but inert (further records are dropped as deposited).
+    pub fn take_trace(&mut self) -> ThreadTrace {
+        self.enabled = false;
+        self.deposited = true;
+        let mut events = std::mem::take(&mut self.buf);
+        if self.wrapped && self.head > 0 {
+            events.rotate_left(self.head);
+        }
+        ThreadTrace {
+            track: self.track,
+            events,
+            dropped: self.dropped,
+            wrapped: self.wrapped,
+        }
+    }
+
+    /// Deposit this thread's trace into the sink (call at thread exit;
+    /// a no-op for disabled or already-deposited scopes).
+    pub fn deposit(&mut self) {
+        if !self.enabled || self.deposited {
+            return;
+        }
+        if let Some(sink) = self.sink.clone() {
+            sink.deposit(self.take_trace());
+        }
+    }
+}
+
+impl Drop for TraceScope {
+    /// The per-thread half of the flight recorder: a scope dropped by
+    /// a panic unwind deposits its tail and triggers the sink's
+    /// post-mortem dump, so the dying thread's last events land in the
+    /// dump file (the process-level panic hook runs *before* unwind
+    /// and cannot see them — DESIGN.md §15).
+    fn drop(&mut self) {
+        if self.enabled && !self.deposited && std::thread::panicking() {
+            self.mark(Kind::Panic, 0);
+            if let Some(sink) = self.sink.clone() {
+                sink.deposit(self.take_trace());
+                sink.dump_postmortem();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans(tr: &ThreadTrace) -> Vec<(&'static str, u32)> {
+        tr.events.iter().map(|e| (e.kind.name(), e.arg)).collect()
+    }
+
+    #[test]
+    fn disabled_scope_records_nothing() {
+        let mut tr = TraceScope::disabled();
+        tr.begin(Kind::Park, 0);
+        tr.end(Kind::Park, 0);
+        tr.mark(Kind::SlotDone, 3);
+        let t = tr.take_trace();
+        assert!(t.events.is_empty());
+        assert_eq!(t.dropped, 0);
+    }
+
+    #[test]
+    fn full_mode_keeps_head_and_counts_drops() {
+        let sink = TraceSink::new(Mode::Full { cap: 3 });
+        let mut tr = sink.scope(Role::Executor, 0);
+        for i in 0..5 {
+            tr.mark(Kind::SlotDone, i);
+        }
+        tr.deposit();
+        let rep = sink.report();
+        assert_eq!(rep.threads.len(), 1);
+        let t = &rep.threads[0];
+        assert_eq!(
+            spans(t),
+            vec![("slot_done", 0), ("slot_done", 1), ("slot_done", 2)]
+        );
+        assert_eq!(t.dropped, 2);
+        assert!(!t.wrapped);
+    }
+
+    #[test]
+    fn flight_mode_keeps_tail_in_order() {
+        let sink = TraceSink::new(Mode::Flight { cap: 3 });
+        let mut tr = sink.scope(Role::Actor, 1);
+        for i in 0..7 {
+            tr.mark(Kind::SlotDone, i);
+        }
+        tr.deposit();
+        let t = &sink.report().threads[0];
+        assert_eq!(
+            spans(t),
+            vec![("slot_done", 4), ("slot_done", 5), ("slot_done", 6)]
+        );
+        assert!(t.wrapped);
+        assert_eq!(t.dropped, 0);
+        // timestamps stay non-decreasing through the un-rotation
+        for w in t.events.windows(2) {
+            assert!(w[0].t_ns <= w[1].t_ns);
+        }
+    }
+
+    #[test]
+    fn report_sorts_tracks_deterministically() {
+        let sink = TraceSink::new(Mode::Full { cap: 8 });
+        for (role, idx) in [
+            (Role::Actor, 1),
+            (Role::Executor, 4),
+            (Role::Learner, 0),
+            (Role::Executor, 0),
+            (Role::Actor, 0),
+        ] {
+            let mut tr = sink.scope(role, idx);
+            tr.mark(Kind::SlotDone, idx);
+            tr.deposit();
+        }
+        let order: Vec<String> = sink
+            .report()
+            .threads
+            .iter()
+            .map(|t| t.track.label())
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                "learner-0",
+                "executor-0",
+                "executor-4",
+                "actor-0",
+                "actor-1"
+            ]
+        );
+    }
+
+    #[test]
+    fn double_deposit_is_single() {
+        let sink = TraceSink::new(Mode::Full { cap: 4 });
+        let mut tr = sink.scope(Role::Learner, 0);
+        tr.mark(Kind::Gather, 0);
+        tr.deposit();
+        tr.deposit();
+        drop(tr);
+        assert_eq!(sink.report().threads.len(), 1);
+    }
+}

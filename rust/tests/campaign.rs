@@ -358,9 +358,15 @@ fn campaign_telemetry_is_invisible_to_core_artifacts() {
 
     assert!(rep_off.telemetry_csv.is_none(), "no telemetry, no artifact");
     assert!(
+        rep_off.telemetry_md.is_none(),
+        "no telemetry, no markdown summary"
+    );
+    assert!(
         out_on.telemetry.iter().all(Option::is_some),
         "every instrumented job must attach a telemetry report"
     );
+    let tel_md = rep_on.telemetry_md.as_deref().expect("telemetry summary");
+    assert!(tel_md.starts_with("# Campaign "), "{tel_md}");
     let tel_csv = rep_on.telemetry_csv.expect("telemetry artifact");
     assert!(tel_csv.starts_with("spec,method,jobs,steps_total,"));
     // one merged row per (spec, method) group + header
@@ -554,6 +560,10 @@ fn assert_same_artifacts(
     assert_eq!(
         a.telemetry_csv, b.telemetry_csv,
         "{what}: telemetry CSV diverged"
+    );
+    assert_eq!(
+        a.telemetry_md, b.telemetry_md,
+        "{what}: telemetry markdown diverged"
     );
 }
 
@@ -944,7 +954,122 @@ fn dist_telemetry_invisible_to_core_artifacts() {
         "the telemetry fleet gains the fourth artifact"
     );
     assert!(
+        rep_off.telemetry_md.is_none() && rep_on.telemetry_md.is_some(),
+        "the markdown summary mirrors the CSV's presence"
+    );
+    assert!(
         outs[1].telemetry.iter().all(Option::is_some),
         "every journaled telemetry line re-paired with its job"
     );
+}
+
+// --- deterministic event tracing (ISSUE 10, DESIGN.md §15) --------------
+
+/// ISSUE 10 acceptance: `campaign --trace` is byte-invisible to every
+/// pinned campaign artifact — same fingerprint, same job records, same
+/// rendered reports — while each traced job additionally exports its own
+/// Chrome-trace JSON next to the curves, with the scheduler's span track
+/// merged in.
+#[test]
+fn campaign_trace_invisible_to_artifacts_and_exports_per_job() {
+    let cfg_off = team_cfg();
+    let plan = campaign::expand(&cfg_off).unwrap();
+    let out_off = campaign::run_campaign(
+        &cfg_off, &plan, &standin, None, &[], &[], None,
+    )
+    .unwrap();
+
+    let mut cfg_on = team_cfg();
+    cfg_on.trace = true;
+    // tracing is not part of the plan fingerprint: same jobs, same seeds
+    assert_eq!(cfg_off.fingerprint(), cfg_on.fingerprint());
+    let dir = tmp_dir("trace_on");
+    let out_on = campaign::run_campaign(
+        &cfg_on, &plan, &standin, None, &[], &[], Some(&dir),
+    )
+    .unwrap();
+    assert_eq!(
+        out_off.records, out_on.records,
+        "tracing moved a job record"
+    );
+    assert_same_artifacts(
+        &campaign::render(&cfg_off, &plan, &out_off),
+        &campaign::render(&cfg_on, &plan, &out_on),
+        "campaign --trace",
+    );
+
+    for (job, rec) in plan.jobs.iter().zip(&out_on.records) {
+        let rec = rec.as_ref().unwrap();
+        let path = dir.join(format!(
+            "trace_hts_{}_s{}.json",
+            hts_rl::metrics::report::sanitize_spec_name(&rec.spec),
+            job.seed_index
+        ));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(
+            text.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["),
+            "not a Chrome-trace export: {}",
+            path.display()
+        );
+        assert!(
+            text.contains("\"scheduler-"),
+            "scheduler track missing from the per-job trace"
+        );
+        assert!(
+            text.contains("\"executor-"),
+            "executor tracks missing from the per-job trace"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 10 flight-recorder satellite: a trace-armed worker that trips
+/// the `die_after_jobs` fault dumps its flight ring's tail to
+/// `postmortem_<worker>.json` before abandoning its lease; the
+/// coordinator still drives the campaign to completion and leaves the
+/// dump in place for post-mortem reading.
+#[test]
+fn dist_dying_trace_worker_leaves_postmortem_dump() {
+    let mut cfg = team_cfg();
+    cfg.trace = true;
+    let plan = campaign::expand(&cfg).unwrap();
+    let dir = tmp_dir("dist_postmortem");
+    let shared = SharedDir::new(&dir);
+    let meta = shared_meta(&cfg, &plan);
+    let mut oa = WorkerOpts::new("a");
+    oa.lease_ttl_s = 0.2;
+    oa.heartbeat_s = 0.05;
+    oa.die_after_jobs = Some(1);
+    let sa =
+        run_worker(&cfg, &plan, &standin, &meta, &shared, &oa, None).unwrap();
+    assert!(sa.died, "the fault hook must fire");
+    let pm = shared.postmortem_path("a");
+    let text = std::fs::read_to_string(&pm).unwrap_or_else(|e| {
+        panic!("dying trace worker left no dump at {}: {e}", pm.display())
+    });
+    assert!(
+        text.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["),
+        "the dump is a Chrome-trace export too: {text}"
+    );
+    assert!(text.contains("\"worker-0\""), "worker track named: {text}");
+    assert!(text.contains("\"panic\""), "fault instant recorded: {text}");
+    assert!(text.contains("\"job_run\""), "claim-loop spans kept: {text}");
+
+    let copts = CoordinatorOpts {
+        lease_ttl_s: 0.2,
+        poll_s: 0.02,
+        run_stragglers: true,
+    };
+    let outd = coordinate(&cfg, &plan, &standin, &meta, &shared, &copts, None)
+        .unwrap();
+    assert!(
+        outd.records.iter().all(Option::is_some),
+        "the fleet still finished every job"
+    );
+    assert!(
+        pm.exists(),
+        "the coordinator points at a dump, never removes it"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -35,6 +35,8 @@ const EXPECTED: &[(&str, usize, &str)] = &[
     ("torture_lexer.rs", 27, "thread-rng"),
     ("torture_lexer.rs", 31, "nan-cmp"),
     ("torture_lexer.rs", 45, "unsafe-safety"),
+    ("trace_ring.rs", 10, "wall-clock"),
+    ("trace_ring.rs", 16, "hotpath-alloc"),
     ("wire_hex.rs", 6, "hex-u64"),
     ("wire_hex.rs", 10, "hex-u64"),
 ];
@@ -157,4 +159,10 @@ fn committed_manifest_parses_and_zones_resolve() {
     assert!(!man.active("map-iteration", "buffers/double.rs"));
     assert!(man.active("hex-u64", "campaign/journal.rs"));
     assert!(!man.active("hex-u64", "util/json.rs"));
+    // ISSUE 10: only the trace clock may read wall time; the rest of
+    // the trace subsystem is policed like any other code, and its
+    // export path sits inside the artifact zone.
+    assert!(man.active("wall-clock", "trace/mod.rs"));
+    assert!(!man.active("wall-clock", "trace/clock.rs"));
+    assert!(man.active("map-iteration", "trace/export.rs"));
 }

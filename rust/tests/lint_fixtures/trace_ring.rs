@@ -1,0 +1,18 @@
+//! Seeded ISSUE 10 regression: a trace-ring recorder that reads the
+//! wall clock directly (only trace/clock.rs may) and allocates inside
+//! its marked record hotpath.
+
+struct Ring {
+    slots: Vec<u64>,
+}
+
+fn origin_ns() -> u64 {
+    let _t = std::time::Instant::now(); // <- fires wall-clock (line 10)
+    0
+}
+
+// lint: hotpath(begin, fixture trace record path)
+fn record(r: &mut Ring, t: u64) {
+    r.slots = vec![t]; // <- fires hotpath-alloc (line 16): vec!
+}
+// lint: hotpath(end)

@@ -23,6 +23,7 @@ use hts_rl::executor::{PoolShared, ReplicaPool};
 use hts_rl::metrics::report::{SpsMeter, Stopwatch};
 use hts_rl::rng::gumbel_argmax;
 use hts_rl::telemetry::{TelemetryReport, TelemetryScope};
+use hts_rl::trace::{attribute, Mode, Ph, TraceSink, DEFAULT_CAP};
 
 /// Deterministic stand-in policy: logits are a pure function of the
 /// observation, the sampled action a pure function of (logits, seed).
@@ -69,7 +70,9 @@ struct HarnessOut {
 /// Run `iters` full iterations of the executor/actor/swap machinery with
 /// `n_envs / k` pool threads of K replicas each, mirroring the HTS
 /// driver's protocol (including its shutdown sequence). Also merges and
-/// returns the run's telemetry (empty unless `telemetry` is on).
+/// returns the run's telemetry (empty unless `telemetry` is on); when a
+/// `trace` sink is supplied, every pool and actor thread records into it
+/// and the caller reads the merged report off the sink afterwards.
 #[allow(clippy::too_many_arguments)]
 fn run_harness_core(
     policy: StandInPolicy,
@@ -83,6 +86,7 @@ fn run_harness_core(
     iters: u64,
     seed: u64,
     telemetry: bool,
+    trace: Option<&Arc<TraceSink>>,
 ) -> (HarnessOut, TelemetryReport) {
     assert_eq!(n_envs % k, 0, "K must divide n_envs");
     let spec = EnvSpec::by_name(env)
@@ -102,7 +106,7 @@ fn run_harness_core(
     let watch = Stopwatch::new();
 
     let actor_handles = spawn_standin_actors(
-        n_actors, &state_buf, &act_buf, b_cols, &policy, telemetry,
+        n_actors, &state_buf, &act_buf, b_cols, &policy, telemetry, trace,
     );
 
     let mut pool_handles = Vec::new();
@@ -116,6 +120,7 @@ fn run_harness_core(
             watch,
             col_offset: 0,
             telemetry,
+            trace: trace.cloned(),
         };
         pool_handles.push(std::thread::spawn(move || {
             ReplicaPool::new(&spec, seed, alpha, t * k..(t + 1) * k, shared)
@@ -168,7 +173,7 @@ fn run_harness_with(
 ) -> HarnessOut {
     run_harness_core(
         policy, env, n_agents, steptime, n_envs, k, n_actors, alpha, iters,
-        seed, false,
+        seed, false, None,
     )
     .0
 }
@@ -455,10 +460,11 @@ fn telemetry_does_not_move_signatures() {
         let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
         let (off, off_tel) = run_harness_core(
             policy.clone(), "catch", 1, StepTimeModel::None, 8, k, 2, 5, 4,
-            42, false,
+            42, false, None,
         );
         let (on, on_tel) = run_harness_core(
             policy, "catch", 1, StepTimeModel::None, 8, k, 2, 5, 4, 42, true,
+            None,
         );
         assert_eq!(
             off.signature, on.signature,
@@ -485,6 +491,7 @@ fn telemetry_counters_are_structurally_consistent() {
     let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
     let (_, tel) = run_harness_core(
         policy, "catch", 1, StepTimeModel::None, 8, 4, 2, 5, 4, 42, true,
+        None,
     );
     let steps = tel.counter("steps_total");
     assert!(steps > 0, "no steps counted");
@@ -530,6 +537,7 @@ fn pool_parked_executor_wakes_on_close() {
         watch: Stopwatch::new(),
         col_offset: 0,
         telemetry: false,
+        trace: None,
     };
     let h = std::thread::spawn(move || {
         ReplicaPool::new(&spec, 3, 4, 0..2, shared).unwrap().run().unwrap()
@@ -540,4 +548,133 @@ fn pool_parked_executor_wakes_on_close() {
     swap.shutdown();
     let report = h.join().unwrap(); // would hang forever on a wakeup bug
     assert_eq!(report.episodes.len(), 0, "no step could have completed");
+}
+
+/// ISSUE 10 tentpole acceptance: arming the event tracer must not move a
+/// single bit of the run — same pinned signature, same gathered `[T, B]`
+/// bytes — across the solo (K = 1), multiplexed (K = 4), and lane-group
+/// (W = 8) executor paths, exactly like telemetry above. Recording is
+/// thread-owned and observation-only: no extra RNG draws, no reordered
+/// steps, no changed message sizes. The traced run must also actually
+/// *record*: a non-empty report whose spans are balanced per thread.
+#[test]
+fn tracing_does_not_move_signatures() {
+    for k in [1usize, 4, 8] {
+        let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
+        let (off, _) = run_harness_core(
+            policy.clone(), "catch", 1, StepTimeModel::None, 8, k, 2, 5, 4,
+            42, false, None,
+        );
+        let sink = TraceSink::new(Mode::Full { cap: DEFAULT_CAP });
+        let (on, _) = run_harness_core(
+            policy, "catch", 1, StepTimeModel::None, 8, k, 2, 5, 4, 42,
+            false, Some(&sink),
+        );
+        assert_eq!(
+            off.signature, on.signature,
+            "tracing moved the signature at K={k}"
+        );
+        assert_eq!(
+            off.batch_hashes, on.batch_hashes,
+            "tracing moved the gathered [T, B] bytes at K={k}"
+        );
+        // ... and against the absolute pin, not just each other.
+        assert_eq!(on.signature, 0xc9567d1a817f0564);
+        let rep = sink.report();
+        assert!(
+            rep.total_events() > 0,
+            "traced run deposited no events at K={k}"
+        );
+        // 8/k pool threads + 2 actor threads all deposited.
+        assert_eq!(rep.threads.len(), 8 / k + 2, "missing tracks at K={k}");
+        for t in &rep.threads {
+            let begins =
+                t.events.iter().filter(|e| e.ph == Ph::Begin).count();
+            let ends = t.events.iter().filter(|e| e.ph == Ph::End).count();
+            assert_eq!(
+                begins, ends,
+                "unbalanced spans on {} at K={k}",
+                t.track.label()
+            );
+            assert_eq!(t.dropped, 0, "events dropped at K={k}");
+        }
+    }
+}
+
+/// ISSUE 10 acceptance: barrier stall attribution on a delay-model pool
+/// names the injected straggler. Four K = 1 pools, replica 0 alone given
+/// a 2 ms constant engine delay — every iteration the other three
+/// executors arrive at the swap barrier and wait on it, so the ranked
+/// attribution must charge replica 0 first, in (nearly) every iteration.
+#[test]
+fn attribution_names_the_injected_straggler() {
+    let n_envs = 4usize;
+    let alpha = 3usize;
+    let iters = 4u64;
+    let policy: StandInPolicy = Arc::new(|_obs, seed| (seed % 3) as usize);
+    let sink = TraceSink::new(Mode::Full { cap: DEFAULT_CAP });
+    let base = EnvSpec::by_name("catch").unwrap().with_agents(1).unwrap();
+    let obs_dim = base.build().unwrap().obs_dim();
+    let b_cols = n_envs;
+    let swap = Arc::new(StripedSwap::with_parties(
+        alpha, b_cols, obs_dim, n_envs, n_envs,
+    ));
+    let state_buf = Arc::new(StateBuffer::new());
+    let act_buf = Arc::new(ActionBuffer::new(b_cols));
+    let sps = Arc::new(SpsMeter::new());
+    let watch = Stopwatch::new();
+    let actor_handles = spawn_standin_actors(
+        2, &state_buf, &act_buf, b_cols, &policy, false, Some(&sink),
+    );
+    let mut pool_handles = Vec::new();
+    for t in 0..n_envs {
+        // the straggler: pool 0 (owning replica 0) pays 2 ms per step
+        let st = if t == 0 {
+            StepTimeModel::Constant { us: 2000.0 }
+        } else {
+            StepTimeModel::None
+        };
+        let spec = base.clone().with_steptime(st);
+        let shared = PoolShared {
+            swap: swap.clone(),
+            state_buf: state_buf.clone(),
+            act_buf: act_buf.clone(),
+            sps: sps.clone(),
+            watch,
+            col_offset: 0,
+            telemetry: false,
+            trace: Some(sink.clone()),
+        };
+        pool_handles.push(std::thread::spawn(move || {
+            ReplicaPool::new(&spec, 42, alpha, t..t + 1, shared)
+                .unwrap()
+                .run()
+                .unwrap()
+        }));
+    }
+    let mut gathered = RolloutStorage::new(alpha, b_cols, obs_dim);
+    drive_learner_barrier(
+        &swap, &state_buf, &act_buf, &mut gathered, iters, |_| {},
+    );
+    for h in pool_handles {
+        h.join().unwrap();
+    }
+    for h in actor_handles {
+        h.join().unwrap();
+    }
+    let att = attribute::attribute(&sink.report());
+    assert!(att.iterations > 0, "no barrier iterations attributed");
+    let top = att.stalls.first().expect("no stall rows");
+    assert_eq!(
+        top.replica, 0,
+        "the injected straggler (replica 0, 2 ms/step) must top the \
+         stall ranking, got {:?}",
+        att.stalls
+    );
+    assert!(top.charged_ns > 0, "straggler charged zero wait");
+    assert!(
+        top.straggles >= att.iterations / 2,
+        "replica 0 should arrive last in most iterations: {:?}",
+        att
+    );
 }
